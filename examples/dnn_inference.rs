@@ -1,0 +1,107 @@
+//! Batched posit-DNN inference over the full three-layer stack.
+//!
+//! Starts the L3 server with two routes for the ISOLET MLP:
+//!   `isolet-plam`       — pure-Rust engine, PLAM multiplier (quire EMAC)
+//!   `isolet-plam-pjrt`  — the AOT-compiled L1/L2 artifact (Pallas PLAM
+//!                         kernel inside the JAX graph), via PJRT
+//! then sends the exported test set through both and reports agreement
+//! and accuracy. Requires `make artifacts` (weights + HLO present).
+//!
+//! Run: cargo run --release --example dnn_inference
+
+use std::path::Path;
+use std::sync::Arc;
+
+use plam::coordinator::{serve, BatcherConfig, Client, NnBackend, PjrtBackend, Router, ServerConfig};
+use plam::data::DatasetKind;
+use plam::experiments::load_exported_testset;
+use plam::nn::{loader, ArithMode, Model, ModelKind};
+use plam::posit::PositFormat;
+
+fn main() -> anyhow::Result<()> {
+    let weights = Path::new("artifacts/weights/isolet.ptw");
+    let testset = Path::new("artifacts/weights/isolet_test.ptw");
+    let artifact = Path::new("artifacts/mlp_isolet_plam_b8.hlo.txt");
+    for p in [weights, testset, artifact] {
+        if !p.exists() {
+            eprintln!("missing {p:?} — run `make artifacts` first");
+            std::process::exit(1);
+        }
+    }
+
+    // Rust-native backend with the trained weights.
+    let mut model = Model::new(ModelKind::MlpIsolet);
+    loader::apply_weights(&mut model, &loader::load_weights(weights)?)?;
+    let mut router = Router::new();
+    router.register(
+        "isolet-plam",
+        Arc::new(NnBackend::new(
+            model,
+            ArithMode::posit_plam(PositFormat::P16E1),
+        )),
+        BatcherConfig::default(),
+    );
+    // AOT artifact backend (batch-8 static shape).
+    let pjrt = PjrtBackend::load(artifact, 8, 617, 26)?;
+    println!("PJRT backend up on {}", pjrt.platform());
+    router.register("isolet-plam-pjrt", Arc::new(pjrt), BatcherConfig::default());
+
+    let handle = serve(
+        router,
+        &ServerConfig {
+            addr: "127.0.0.1:0".into(),
+        },
+    )?;
+    println!("server on {}\n", handle.addr);
+
+    let (xs, ys) = load_exported_testset(testset, DatasetKind::Isolet).unwrap();
+    let n = xs.len().min(200);
+    let mut client = Client::connect(handle.addr)?;
+
+    let mut agree = 0usize;
+    let mut correct_rust = 0usize;
+    let mut correct_pjrt = 0usize;
+    let t0 = std::time::Instant::now();
+    for (x, &y) in xs.iter().zip(ys.iter()).take(n) {
+        let rust_out = client.infer("isolet-plam", &x.data)?;
+        let pjrt_out = client.infer("isolet-plam-pjrt", &x.data)?;
+        let am = |v: &[f32]| {
+            v.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0
+        };
+        let (pr, pp) = (am(&rust_out), am(&pjrt_out));
+        agree += (pr == pp) as usize;
+        correct_rust += (pr == y) as usize;
+        correct_pjrt += (pp == y) as usize;
+    }
+    let dt = t0.elapsed();
+
+    println!("samples:                 {n}");
+    println!(
+        "rust-engine accuracy:    {:.4}",
+        correct_rust as f64 / n as f64
+    );
+    println!(
+        "pjrt-artifact accuracy:  {:.4}",
+        correct_pjrt as f64 / n as f64
+    );
+    println!(
+        "argmax agreement:        {:.4}",
+        agree as f64 / n as f64
+    );
+    println!(
+        "wall time:               {:.2?} ({:.1} inferences/s across both routes)",
+        dt,
+        2.0 * n as f64 / dt.as_secs_f64()
+    );
+    for name in handle.router().model_names() {
+        if let Ok(b) = handle.router().get(&name) {
+            println!("{name}: {}", b.metrics.summary());
+        }
+    }
+    handle.shutdown();
+    Ok(())
+}

@@ -1,0 +1,171 @@
+//! End-to-end driver (DESIGN.md E8): proves all layers compose on a
+//! real small workload.
+//!
+//!   1. TRAIN   — f32 SGD training of the Table I ISOLET MLP on the
+//!                synthetic corpus, logging the loss curve.
+//!   2. QUANT   — posit<16,1> weight quantisation (the Table II models).
+//!   3. SERVE   — L3 coordinator serves the model over TCP in three
+//!                arithmetic modes (+ the AOT PJRT artifact if built),
+//!                with dynamic batching.
+//!   4. DRIVE   — concurrent clients push the full test set through
+//!                every route; accuracy + latency/throughput reported.
+//!
+//! Run: cargo run --release --example end_to_end
+//! (The PJRT route appears when `make artifacts` has been run.)
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use plam::coordinator::{serve, BatcherConfig, Client, NnBackend, PjrtBackend, Router, ServerConfig};
+use plam::data::{Dataset, DatasetKind};
+use plam::nn::{loader, model::train_mlp, ArithMode, Model, ModelKind};
+use plam::posit::PositFormat;
+use plam::prng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // ---- 1. TRAIN -------------------------------------------------------
+    let mut rng = Rng::new(7);
+    println!("=== 1. train: mlp-isolet (617-128-64-26) on synthetic ISOLET ===");
+    let data = Dataset::generate(DatasetKind::Isolet, 2080, 520, 7);
+    let mut model = Model::init(ModelKind::MlpIsolet, &mut rng);
+    let t0 = Instant::now();
+    let losses = train_mlp(
+        &mut model,
+        &data.train_x,
+        &data.train_y,
+        12,
+        64,
+        0.05,
+        0.9,
+        &mut rng,
+    );
+    println!("loss curve ({} epochs, {:.1?}):", losses.len(), t0.elapsed());
+    for (e, l) in losses.iter().enumerate() {
+        let bar = "#".repeat((l * 40.0 / losses[0].max(1e-9)) as usize);
+        println!("  epoch {e:>2}  loss {l:.4}  {bar}");
+    }
+
+    // ---- 2. QUANT -------------------------------------------------------
+    println!("\n=== 2. quantise weights to posit<16,1> ===");
+    let mut pmodel = model.clone();
+    loader::quantize_weights(&mut pmodel, PositFormat::P16E1);
+    println!("model: {} parameters, {} MACs/inference", model.params(), model.macs());
+
+    // ---- 3. SERVE -------------------------------------------------------
+    println!("\n=== 3. serve via the L3 coordinator (dynamic batching) ===");
+    let mut router = Router::new();
+    let cfg = BatcherConfig {
+        max_batch: 16,
+        max_wait: std::time::Duration::from_millis(2),
+    };
+    router.register(
+        "isolet-f32",
+        Arc::new(NnBackend::new(model.clone(), ArithMode::float32())),
+        cfg,
+    );
+    router.register(
+        "isolet-posit",
+        Arc::new(NnBackend::new(
+            pmodel.clone(),
+            ArithMode::posit_exact(PositFormat::P16E1),
+        )),
+        cfg,
+    );
+    router.register(
+        "isolet-plam",
+        Arc::new(NnBackend::new(
+            pmodel.clone(),
+            ArithMode::posit_plam(PositFormat::P16E1),
+        )),
+        cfg,
+    );
+    let artifact = std::path::Path::new("artifacts/mlp_isolet_plam_b8.hlo.txt");
+    let mut routes = vec!["isolet-f32", "isolet-posit", "isolet-plam"];
+    if artifact.exists() {
+        match PjrtBackend::load(artifact, 8, 617, 26) {
+            Ok(be) => {
+                println!("PJRT artifact route up on {}", be.platform());
+                router.register("isolet-pjrt", Arc::new(be), cfg);
+                routes.push("isolet-pjrt");
+            }
+            Err(e) => println!("PJRT artifact skipped: {e:#}"),
+        }
+    } else {
+        println!("(no artifacts/ — PJRT route skipped; run `make artifacts`)");
+    }
+    println!("routing table:\n{}", router.table());
+    let handle = serve(
+        router,
+        &ServerConfig {
+            addr: "127.0.0.1:0".into(),
+        },
+    )?;
+    println!("listening on {}", handle.addr);
+
+    // ---- 4. DRIVE -------------------------------------------------------
+    println!("\n=== 4. drive: full test set through every route, 4 clients ===");
+    println!(
+        "note: the PJRT route serves the *python-trained* baked weights and is\n\
+         therefore evaluated on the python-exported test split; the nn routes\n\
+         serve the rust-trained model on the rust-generated split.\n"
+    );
+    // Python-exported split for the artifact route (its training data).
+    let py_testset = plam::experiments::load_exported_testset(
+        std::path::Path::new("artifacts/weights/isolet_test.ptw"),
+        DatasetKind::Isolet,
+    );
+    for route in &routes {
+        let addr = handle.addr;
+        let (xs, ys): (Vec<Vec<f32>>, Vec<usize>) = if *route == "isolet-pjrt" {
+            let (pxs, pys) = py_testset.clone().expect("exported test set present");
+            (pxs.into_iter().map(|t| t.data).collect(), pys)
+        } else {
+            (
+                data.test_x.iter().map(|t| t.data.clone()).collect(),
+                data.test_y.clone(),
+            )
+        };
+        let n = xs.len();
+        let t0 = Instant::now();
+        let clients = 4;
+        let chunk = n.div_ceil(clients);
+        let mut joins = vec![];
+        for c in 0..clients {
+            let xs = xs.clone();
+            let ys = ys.clone();
+            let route = route.to_string();
+            joins.push(std::thread::spawn(move || {
+                let mut client = Client::connect(addr).unwrap();
+                let mut correct = 0usize;
+                let lo = c * chunk;
+                let hi = ((c + 1) * chunk).min(xs.len());
+                for i in lo..hi {
+                    let out = client.infer(&route, &xs[i]).unwrap();
+                    let pred = out
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .unwrap()
+                        .0;
+                    correct += (pred == ys[i]) as usize;
+                }
+                correct
+            }));
+        }
+        let correct: usize = joins.into_iter().map(|j| j.join().unwrap()).sum();
+        let dt = t0.elapsed();
+        let b = handle.router().get(route)?;
+        println!(
+            "{route:<14} acc {:.4}  {:>7.1} req/s  p50 {:>6}µs  p99 {:>7}µs  mean batch {:.2}",
+            correct as f64 / n as f64,
+            n as f64 / dt.as_secs_f64(),
+            b.metrics.latency_percentile_us(0.5).unwrap_or(0),
+            b.metrics.latency_percentile_us(0.99).unwrap_or(0),
+            b.metrics.mean_batch_size(),
+        );
+    }
+
+    println!("\nend_to_end OK");
+    handle.shutdown();
+    Ok(())
+}

@@ -1,0 +1,32 @@
+//! Regenerates the paper's hardware evaluation: Table III, Fig. 1,
+//! Fig. 5, Fig. 6 and the headline reductions.
+//!
+//! Usage:
+//!   cargo run --release --example hardware_report            # everything
+//!   cargo run --release --example hardware_report -- --table3
+//!   cargo run --release --example hardware_report -- --fig1 --fig5
+//!   cargo run --release --example hardware_report -- --headline
+
+use plam::hardware;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let all = args.is_empty();
+    let has = |f: &str| all || args.iter().any(|a| a == f);
+
+    if has("--table3") {
+        println!("{}", hardware::render_table3());
+    }
+    if has("--fig1") {
+        println!("{}", hardware::render_fig1());
+    }
+    if has("--fig5") {
+        println!("{}", hardware::render_fig5());
+    }
+    if has("--fig6") {
+        println!("{}", hardware::render_fig6());
+    }
+    if has("--headline") {
+        println!("{}", hardware::render_headline());
+    }
+}

@@ -1,0 +1,79 @@
+//! Quickstart: the public API in two minutes.
+//!
+//! Run: cargo run --release --example quickstart
+
+use plam::hardware;
+use plam::posit::{PositFormat, Quire, P16E1, P32E2};
+
+fn main() {
+    // --- 1. Posit arithmetic --------------------------------------------
+    let a = P16E1::from_f64(1.5);
+    let b = P16E1::from_f64(2.25);
+    println!("posit<16,1> arithmetic:");
+    println!("  {a} + {b} = {}", a + b);
+    println!("  {a} × {b} = {}   (exact, Fig. 3 datapath)", a * b);
+    println!("  {a} ×̃ {b} = {}   (PLAM,  Fig. 4 datapath)", a.plam_mul(b));
+
+    // The Mitchell worst case: fractions 0.5 → 11.1 % error.
+    let w = P16E1::from_f64(1.5);
+    let exact = (w * w).to_f64();
+    let approx = w.plam_mul(w).to_f64();
+    println!(
+        "  worst case 1.5×1.5: exact {exact}, PLAM {approx} → rel err {:.2}% (bound 11.1%)",
+        (exact - approx) / exact * 100.0
+    );
+
+    // --- 2. Runtime-parameterised formats + quire ------------------------
+    let fmt = PositFormat::new(12, 1); // any <n, es> up to 32 bits
+    let x = plam::posit::from_f64(fmt, 3.14159);
+    println!("\ncustom Posit<12,1>: 3.14159 → {:#06x} → {}", x, plam::posit::to_f64(fmt, x));
+
+    let mut q = Quire::new(PositFormat::P16E1);
+    for i in 1..=100 {
+        let v = plam::posit::from_f64(PositFormat::P16E1, 1.0 / i as f64);
+        q.mul_add(v, v); // Σ 1/i² with a single final rounding
+    }
+    println!(
+        "quire Σ 1/i² (100 terms, one rounding): {} (π²/6 = {:.6})",
+        plam::posit::to_f64(PositFormat::P16E1, q.to_posit()),
+        std::f64::consts::PI * std::f64::consts::PI / 6.0
+    );
+
+    // --- 3. Hardware cost model ------------------------------------------
+    let h = hardware::headline();
+    println!("\nhardware model (32-bit PLAM vs exact posit multiplier [16]):");
+    println!(
+        "  area −{:.1}%   power −{:.1}%   (paper: −72.9% / −81.8%)",
+        h.area_reduction_32 * 100.0,
+        h.power_reduction_32 * 100.0
+    );
+    let plam32 = hardware::plam_multiplier("plam32", 32, 2).synth();
+    println!(
+        "  PLAM<32,2>: {} LUTs, {} DSPs, {:.0} µm², {:.3} mW, {:.3} ns",
+        plam32.luts as u32, plam32.dsps, plam32.area_um2, plam32.power_mw, plam32.delay_ns
+    );
+
+    // --- 4. DNN inference in three formats --------------------------------
+    let mut rng = plam::prng::Rng::new(1);
+    let model = plam::nn::Model::init(plam::nn::ModelKind::MlpIsolet, &mut rng);
+    let x = plam::nn::Tensor::from_vec(
+        &[617],
+        (0..617).map(|_| rng.normal() as f32 * 0.5).collect(),
+    );
+    println!("\nISOLET MLP ({} params) logits[0..4]:", model.params());
+    for mode in [
+        plam::nn::ArithMode::float32(),
+        plam::nn::ArithMode::posit_exact(PositFormat::P16E1),
+        plam::nn::ArithMode::posit_plam(PositFormat::P16E1),
+    ] {
+        let y = model.forward(&x, &mode);
+        println!(
+            "  {:<18} {:?}",
+            mode.name(),
+            &y.data[..4.min(y.data.len())]
+        );
+    }
+
+    let _ = P32E2::ONE; // the 32-bit type is there too
+    println!("\nquickstart OK — see examples/hardware_report.rs, dnn_inference.rs, end_to_end.rs");
+}

@@ -1,0 +1,134 @@
+"""AOT lowering: JAX/Pallas → HLO text artifacts for the Rust runtime.
+
+HLO *text* is the interchange format — jax >= 0.5 serialised protos use
+64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+reassigns ids (see /opt/xla-example/README.md). Lowered with
+return_tuple=True; the Rust side unpacks with `to_tuple`.
+
+Artifacts (all under artifacts/):
+  plam_matmul_8.hlo.txt        8×8×8 PLAM GEMM (runtime smoke + benches)
+  plam_matmul_64.hlo.txt       64×64×64 PLAM GEMM (serving-scale bench)
+  mlp_isolet_plam_b8.hlo.txt   batch-8 ISOLET MLP, PLAM kernels, baked
+                               weights (artifacts/weights/isolet.ptw if
+                               present, else deterministic init)
+  mlp_isolet_float_b8.hlo.txt  same graph in plain f32 (ablation)
+
+Usage: cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as L2
+from . import ptw
+from .kernels.plam_matmul import plam_matmul
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text (id-safe interchange).
+
+    print_large_constants=True is load-bearing: the default printer
+    elides big constants as `{...}`, which the text *parser* then reads
+    back as zeros — baked weights would silently vanish.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def write(path: str, text: str):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {len(text):>9} chars  {path}")
+
+
+def lower_matmul(size: int):
+    spec = jax.ShapeDtypeStruct((size, size), jnp.float32)
+
+    def fn(a, b):
+        return (plam_matmul(a, b, block_m=min(8, size), block_n=min(8, size)),)
+
+    return jax.jit(fn).lower(spec, spec)
+
+
+def lower_mlp(weights_dir: str, mul: str, batch: int = 8):
+    wpath = os.path.join(weights_dir, "isolet.ptw")
+    if os.path.exists(wpath):
+        params = ptw.load(wpath)
+        src = wpath
+    else:
+        params = L2.init_mlp_params("isolet", seed=0)
+        src = "deterministic-init(seed=0)"
+    print(f"mlp weights: {src}")
+    fn = L2.mlp_forward_fn(params, name="isolet", mul=mul)
+    spec = jax.ShapeDtypeStruct((batch, 617), jnp.float32)
+    return jax.jit(fn).lower(spec)
+
+
+def export_goldens(out_dir: str, weights_dir: str, skip_mlp: bool):
+    """Golden input/output pairs for the Rust integration tests: the
+    exact tensors the artifacts must reproduce bit-for-bit."""
+    import numpy as np
+
+    from . import ptw
+
+    gdir = os.path.join(out_dir, "golden")
+    os.makedirs(gdir, exist_ok=True)
+    rng = np.random.default_rng(123)
+
+    a = rng.standard_normal((8, 8)).astype(np.float32)
+    b = rng.standard_normal((8, 8)).astype(np.float32)
+    out = np.array(plam_matmul(a, b))
+    ptw.save(os.path.join(gdir, "matmul8.ptw"), {"a": a, "b": b, "out": out})
+    print(f"golden matmul8 → {gdir}")
+
+    if not skip_mlp:
+        wpath = os.path.join(weights_dir, "isolet.ptw")
+        params = ptw.load(wpath) if os.path.exists(wpath) else L2.init_mlp_params("isolet", seed=0)
+        x = rng.standard_normal((8, 617)).astype(np.float32) * 0.5
+        fn = L2.mlp_forward_fn(params, mul="plam")
+        out = np.array(jax.jit(fn)(x)[0])
+        ptw.save(os.path.join(gdir, "mlp_isolet_plam_b8.ptw"), {"x": x, "out": out})
+        print(f"golden mlp → {gdir}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--weights-dir", default="../artifacts/weights")
+    ap.add_argument(
+        "--skip-mlp", action="store_true", help="only the kernel artifacts (fast smoke)"
+    )
+    args = ap.parse_args()
+
+    write(
+        os.path.join(args.out_dir, "plam_matmul_8.hlo.txt"),
+        to_hlo_text(lower_matmul(8)),
+    )
+    write(
+        os.path.join(args.out_dir, "plam_matmul_64.hlo.txt"),
+        to_hlo_text(lower_matmul(64)),
+    )
+    if not args.skip_mlp:
+        write(
+            os.path.join(args.out_dir, "mlp_isolet_plam_b8.hlo.txt"),
+            to_hlo_text(lower_mlp(args.weights_dir, "plam")),
+        )
+        write(
+            os.path.join(args.out_dir, "mlp_isolet_float_b8.hlo.txt"),
+            to_hlo_text(lower_mlp(args.weights_dir, "float")),
+        )
+    export_goldens(args.out_dir, args.weights_dir, args.skip_mlp)
+    print("aot done")
+
+
+if __name__ == "__main__":
+    main()

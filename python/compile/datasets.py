@@ -1,0 +1,92 @@
+"""Synthetic datasets for the Python training pipeline — the same
+substitution as `rust/src/data/synth.rs` (DESIGN.md §5): matched shapes
+and class counts for ISOLET / UCI-HAR / MNIST / SVHN / CIFAR-10. The
+Rust and Python generators need not be bit-identical: the trained
+test-set is exported alongside the weights, so Rust evaluates exactly
+what Python trained on."""
+
+import numpy as np
+
+SPECS = {
+    # name: (input shape, classes, noise level)
+    "isolet": ((617,), 26, 1.7),
+    "har": ((561,), 6, 3.2),
+    "mnist": ((1, 28, 28), 10, 0.35),
+    "svhn": ((3, 32, 32), 10, 1.35),
+    "cifar10": ((3, 32, 32), 10, 1.45),
+}
+
+
+def generate(name, train_n, test_n, seed=7):
+    """→ (train_x, train_y, test_x, test_y) as float32/int arrays."""
+    shape, classes, noise = SPECS[name]
+    rng = np.random.default_rng(seed ^ 0xDA7A5E7)
+    if len(shape) == 1:
+        return _numeric(shape[0], classes, noise, train_n, test_n, rng)
+    return _images(shape, classes, noise, train_n, test_n, rng)
+
+
+def _numeric(dim, classes, noise, train_n, test_n, rng):
+    informative = dim // 3
+    protos = np.zeros((classes, dim), np.float32)
+    protos[:, :informative] = rng.standard_normal((classes, informative))
+    mixers = (rng.random((8, dim), np.float32) - 0.5) * 0.6
+
+    def split(n):
+        ys = np.arange(n) % classes
+        xs = protos[ys].copy()
+        z = rng.standard_normal((n, 8)).astype(np.float32)
+        xs += z @ mixers
+        xs += noise * rng.standard_normal((n, dim)).astype(np.float32)
+        return xs.astype(np.float32), ys.astype(np.int32)
+
+    tx, ty = split(train_n)
+    vx, vy = split(test_n)
+    return tx, ty, vx, vy
+
+
+def _images(shape, classes, noise, train_n, test_n, rng):
+    ch, hw, _ = shape
+
+    def render(cls):
+        cx = hw / 2 + rng.standard_normal() * 1.5
+        cy = hw / 2 + rng.standard_normal() * 1.5
+        scale = hw * (0.28 + 0.06 * np.clip(rng.standard_normal(), -1.5, 1.5))
+        angle = (cls % 5) * np.pi / 5 + rng.standard_normal() * 0.08
+        family = cls // 5
+        sa, ca = np.sin(angle), np.cos(angle)
+        hue = np.array(
+            [
+                0.65 + 0.35 * np.sin(cls * 0.7 + c * 2.1) + rng.standard_normal() * 0.05
+                for c in range(ch)
+            ]
+        )
+        yy, xx = np.mgrid[0:hw, 0:hw].astype(np.float64)
+        dx, dy = xx - cx, yy - cy
+        u = ca * dx + sa * dy
+        v = -sa * dx + ca * dy
+        r = np.sqrt(dx * dx + dy * dy)
+        if family == 0:
+            bar = np.exp(-((v / (scale * 0.18)) ** 2))
+            tick = np.exp(-((u / (scale * 0.15)) ** 2) - ((v - scale * 0.4) / (scale * 0.3)) ** 2)
+            inten = np.minimum(bar + 0.7 * tick, 1.0)
+        else:
+            ring = np.exp(-(((r - scale * 0.8) / (scale * 0.2)) ** 2))
+            grating = 0.5 + 0.5 * np.sin(u / scale * 6.0)
+            inten = np.minimum(0.8 * ring + 0.4 * grating * np.exp(-((r / scale / 1.4) ** 2)), 1.0)
+        img = np.stack(
+            [
+                np.clip(inten * hue[c] + noise * 0.5 * rng.standard_normal((hw, hw)), 0, 1)
+                for c in range(ch)
+            ]
+        )
+        return img.astype(np.float32)
+
+    def split(n):
+        ys = (np.arange(n) % classes).astype(np.int32)
+        xs = np.stack([render(int(c)) for c in ys])
+        return xs, ys
+
+    tx, ty = split(train_n)
+    vx, vy = split(test_n)
+    return tx, ty, vx, vy

@@ -1,0 +1,1 @@
+"""L1 kernels: the Pallas PLAM GEMM and its pure-Python oracle."""

@@ -1,0 +1,145 @@
+"""L1 — Pallas PLAM GEMM kernel.
+
+The paper's compute hot-spot: a matrix multiply whose scalar products
+are Posit<n,es> PLAM products (log-domain fraction adds, Eqs. 14-21)
+instead of exact multiplies. Layout per the TPU adaptation in DESIGN.md
+§4: the grid tiles M×N; each program decodes its A-row-block and
+B-col-block once (VPU integer work), forms the PLAM products in the log
+domain, reconstructs them and reduces over K.
+
+interpret=True everywhere: real-TPU lowering emits a Mosaic custom-call
+the CPU PJRT plugin cannot execute (see /opt/xla-example/README.md).
+
+Accumulation semantics: each PLAM product is rounded to the output
+posit grid (the hardware unit emits a correctly-rounded Posit<n,es>)
+and the rounded products are summed in f32 — the Johnson-style [7]
+"log product, linear accumulate" design. The Rust engine's quire path
+(`plam::nn`) is the stricter EMAC variant; `ref.py` mirrors *this*
+kernel's semantics.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..positjax import codec
+from ..positjax.codec import FRAC_W, SCALE_NAR, SCALE_ZERO
+
+
+def _plam_products(a_blk, b_blk, n: int, es: int):
+    """PLAM products of a_blk [bm,K] × b_blk [K,bn] → values [bm,K,bn].
+
+    Pure elementwise/broadcast integer ops (VPU work on TPU).
+    """
+    abits = codec.from_f32(a_blk, n, es)
+    bbits = codec.from_f32(b_blk, n, es)
+    sa, ka, fa = codec.decode(abits, n, es)
+    sb, kb, fb = codec.decode(bbits, n, es)
+
+    sa = sa[:, :, None]
+    ka = ka[:, :, None]
+    fa = fa[:, :, None]
+    sb = sb[None, :, :]
+    kb = kb[None, :, :]
+    fb = fb[None, :, :]
+
+    sign = sa ^ sb  # Eq. 14
+    scale = ka + kb  # Eqs. 15-16
+    fsum = fa + fb  # Eq. 17
+    carry = fsum >> FRAC_W  # Eqs. 20-21
+    frac = fsum & ((1 << FRAC_W) - 1)
+    scale = scale + carry
+
+    any_zero = jnp.logical_or(ka == SCALE_ZERO, kb == SCALE_ZERO)
+    any_nar = jnp.logical_or(ka == SCALE_NAR, kb == SCALE_NAR)
+
+    # Exact product reconstruction by IEEE-754 bit assembly (jnp.exp2 is
+    # inexact on f32 and breaks RNE ties); product scales of n ≤ 16
+    # posits stay within f32's exponent range (|scale| ≤ 2·max_scale).
+    val = codec.compose_f32(sign, jnp.clip(scale, -126, 127), frac)
+    val = jnp.where(any_zero, 0.0, val)
+    val = jnp.where(any_nar, jnp.nan, val)
+    # Round each product to the output posit grid — the hardware PLAM
+    # unit emits a correctly-rounded Posit<n,es> (paper §V). The
+    # reconstruction above is exact in f32, so this single quantisation
+    # step is the only rounding, matching `encode` in the scalar oracle.
+    return codec.quantize_f32(val, n, es)
+
+
+def _exact_products(a_blk, b_blk, n: int, es: int):
+    """Exact Posit<n,es> products (Fig. 3 datapath) — the in-kernel
+    baseline for the PLAM-vs-exact ablation."""
+    from ..positjax import plam as plam_ops
+
+    abits = codec.from_f32(a_blk, n, es)
+    bbits = codec.from_f32(b_blk, n, es)
+    prod_bits = plam_ops.exact_mul(
+        abits[:, :, None], bbits[None, :, :], n, es
+    )
+    return codec.to_f32(prod_bits, n, es)
+
+
+def _kernel(a_ref, b_ref, o_ref, *, n, es, mul):
+    if mul == "plam":
+        prods = _plam_products(a_ref[...], b_ref[...], n, es)
+    elif mul == "exact":
+        prods = _exact_products(a_ref[...], b_ref[...], n, es)
+    else:
+        raise ValueError(f"unknown mul {mul!r}")
+    o_ref[...] = jnp.sum(prods, axis=1)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n", "es", "block_m", "block_n", "mul")
+)
+def plam_matmul(
+    a, b, n: int = 16, es: int = 1, block_m: int = 8, block_n: int = 8, mul: str = "plam"
+):
+    """`a [M,K] ×̃ b [K,N] → [M,N]` with posit scalar products
+    (`mul='plam'` approximate, `mul='exact'` baseline).
+
+    M must be divisible by block_m and N by block_n (wrap with
+    `plam_matmul_padded` otherwise). K is unblocked: each program holds
+    one A-row-block and one B-col-block in VMEM.
+    """
+    m, k = a.shape
+    k2, nn = b.shape
+    assert k == k2, f"inner dims {k} != {k2}"
+    assert m % block_m == 0 and nn % block_n == 0, "pad M/N to block multiples"
+
+    grid = (m // block_m, nn // block_n)
+    return pl.pallas_call(
+        functools.partial(_kernel, n=n, es=es, mul=mul),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, block_n), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, nn), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+def plam_matmul_padded(
+    a, b, n: int = 16, es: int = 1, block_m: int = 8, block_n: int = 8, mul: str = "plam"
+):
+    """plam_matmul for arbitrary M/N: zero-pads to block multiples and
+    slices the result back. Zero rows/cols are PLAM-exact (0 ×̃ x = 0) so
+    padding never changes the valid region."""
+    m, k = a.shape
+    _, nn = b.shape
+    mp = (m + block_m - 1) // block_m * block_m
+    np_ = (nn + block_n - 1) // block_n * block_n
+    a_p = jnp.pad(a, ((0, mp - m), (0, 0)))
+    b_p = jnp.pad(b, ((0, 0), (0, np_ - nn)))
+    out = plam_matmul(a_p, b_p, n=n, es=es, block_m=block_m, block_n=block_n, mul=mul)
+    return out[:m, :nn]
+
+
+def posit_quantize(x, n: int = 16, es: int = 1):
+    """Elementwise posit quantisation (RNE round-trip) — used by the L2
+    model between layers so activations live on the posit grid."""
+    return codec.quantize_f32(x, n, es)

@@ -1,0 +1,164 @@
+"""Pure-Python posit/PLAM oracle — the correctness reference for the
+Pallas kernel and the positjax codec.
+
+Deliberately written with scalar Python ints and Fraction-free exact
+float math, structured like the SoftPosit reference implementation and
+*sharing no code* with positjax: agreement between the two is the
+correctness signal (plus cross-checks against the Rust substrate's
+doctest values).
+"""
+
+import math
+
+import numpy as np
+
+
+def _mask(n: int) -> int:
+    return (1 << n) - 1
+
+
+def decode(bits: int, n: int, es: int):
+    """bits → ('zero'|'nar'|'normal', sign, scale, frac, frac_bits)."""
+    bits &= _mask(n)
+    if bits == 0:
+        return ("zero", 0, 0, 0, 0)
+    if bits == 1 << (n - 1):
+        return ("nar", 0, 0, 0, 0)
+    sign = bits >> (n - 1)
+    absv = ((-bits) & _mask(n)) if sign else bits
+    # Regime run length.
+    rbit = (absv >> (n - 2)) & 1
+    run = 0
+    for i in range(n - 1):
+        if (absv >> (n - 2 - i)) & 1 == rbit:
+            run += 1
+        else:
+            break
+    k = run - 1 if rbit else -run
+    rem = max(n - (1 + run + 1), 0)
+    tail = absv & ((1 << rem) - 1)
+    e_bits = min(es, rem)
+    e = (tail >> (rem - e_bits)) << (es - e_bits) if e_bits else 0
+    frac_bits = rem - e_bits
+    frac = tail & ((1 << frac_bits) - 1)
+    return ("normal", sign, (k << es) + e, frac, frac_bits)
+
+
+def to_float(bits: int, n: int, es: int) -> float:
+    """Exact real value of a posit (NaR → nan)."""
+    cls, sign, scale, frac, fb = decode(bits, n, es)
+    if cls == "zero":
+        return 0.0
+    if cls == "nar":
+        return math.nan
+    v = (1 + frac / (1 << fb)) * 2.0**scale
+    return -v if sign else v
+
+
+def encode(sign: int, scale: int, frac: int, frac_bits: int, sticky: bool, n: int, es: int) -> int:
+    """RNE posit encode of (-1)^sign · 2^scale · (1 + frac/2^frac_bits)."""
+    avail = n - 1
+    k = scale >> es
+    e = scale - (k << es)
+    if k >= 0 and k + 2 > avail:
+        body = _mask(avail)  # maxpos
+    elif k < 0 and 1 - k > avail:
+        body = 1  # minpos
+    else:
+        rlen = k + 2 if k >= 0 else 1 - k
+        regime = (((1 << (k + 1)) - 1) << 1) if k >= 0 else 1
+        total = rlen + es + frac_bits
+        big = (regime << (es + frac_bits)) | (e << frac_bits) | frac
+        if total > avail:
+            shift = total - avail
+            kept = big >> shift
+            guard = (big >> (shift - 1)) & 1
+            below = big & ((1 << (shift - 1)) - 1)
+            st = sticky or below != 0
+            if guard and (st or (kept & 1)):
+                kept += 1
+            if kept >> avail:
+                kept = _mask(avail)
+            body = kept if kept else 1
+        else:
+            body = big << (avail - total)
+    return ((-body) & _mask(n)) if sign else body
+
+
+def from_float(x: float, n: int, es: int) -> int:
+    """Nearest posit to a float (RNE); nan/inf → NaR."""
+    if x == 0.0:
+        return 0
+    if not math.isfinite(x):
+        return 1 << (n - 1)
+    sign = 1 if x < 0 else 0
+    m, exp = math.frexp(abs(x))  # m in [0.5, 1)
+    scale = exp - 1
+    # 53-bit fraction of (2m - 1) ∈ [0, 1).
+    frac = int((2 * m - 1) * (1 << 52))
+    return encode(sign, scale, frac, 52, False, n, es)
+
+
+def plam_mul(a: int, b: int, n: int, es: int) -> int:
+    """Bit-level PLAM product (paper Eqs. 14-21) on scalar patterns."""
+    ca, sa, ka, fa, fba = decode(a, n, es)
+    cb, sb, kb, fb, fbb = decode(b, n, es)
+    if ca == "nar" or cb == "nar":
+        return 1 << (n - 1)
+    if ca == "zero" or cb == "zero":
+        return 0
+    width = 32
+    fa_al = fa << (width - fba)
+    fb_al = fb << (width - fbb)
+    fsum = fa_al + fb_al
+    carry = fsum >> width
+    frac = fsum & _mask(width)
+    return encode(sa ^ sb, ka + kb + carry, frac, width, False, n, es)
+
+
+def exact_mul(a: int, b: int, n: int, es: int) -> int:
+    """Bit-level exact posit product (paper Eqs. 3-10)."""
+    ca, sa, ka, fa, fba = decode(a, n, es)
+    cb, sb, kb, fb, fbb = decode(b, n, es)
+    if ca == "nar" or cb == "nar":
+        return 1 << (n - 1)
+    if ca == "zero" or cb == "zero":
+        return 0
+    siga = (1 << fba) | fa
+    sigb = (1 << fbb) | fb
+    prod = siga * sigb  # exact integer
+    hidden = fba + fbb  # hidden bit position if no overflow
+    scale = ka + kb
+    if prod >> (hidden + 1):
+        scale += 1
+        hidden += 1
+    frac = prod & ((1 << hidden) - 1)
+    return encode(sa ^ sb, scale, frac, hidden, False, n, es)
+
+
+def quantize(x: np.ndarray, n: int, es: int) -> np.ndarray:
+    """Round every element to its nearest posit value."""
+    flat = np.asarray(x, dtype=np.float64).ravel()
+    out = np.array([to_float(from_float(float(v), n, es), n, es) for v in flat])
+    return out.reshape(np.shape(x)).astype(np.float32)
+
+
+def plam_matmul_ref(a: np.ndarray, b: np.ndarray, n: int = 16, es: int = 1) -> np.ndarray:
+    """Reference semantics of the Pallas kernel: quantise inputs to
+    posits, take bit-level PLAM products, sum in float32 over K."""
+    a = np.asarray(a, dtype=np.float64)
+    b = np.asarray(b, dtype=np.float64)
+    m, k = a.shape
+    k2, nn = b.shape
+    assert k == k2
+    abits = [[from_float(float(a[i, p]), n, es) for p in range(k)] for i in range(m)]
+    bbits = [[from_float(float(b[p, j]), n, es) for j in range(nn)] for p in range(k)]
+    out = np.zeros((m, nn), dtype=np.float32)
+    for i in range(m):
+        for j in range(nn):
+            acc = np.float32(0)
+            for p in range(k):
+                prod = to_float(plam_mul(abits[i][p], bbits[p][j], n, es), n, es)
+                acc = np.float32(acc + np.float32(prod))
+            out[i, j] = acc
+    return out

@@ -1,0 +1,71 @@
+"""L2 — the paper's compute graphs in JAX, calling the L1 kernel.
+
+`mlp_forward` is the AOT-exported serving graph: a Table I MLP whose
+dense layers run through the Pallas PLAM GEMM (`mul='plam'`), the exact
+posit GEMM (`mul='exact'`), or plain f32 (`mul='float'`). Activations
+are re-quantised to the posit grid between layers, mirroring the Rust
+engine and Deep PeNSieve.
+
+The model topologies/parameter names match `rust/src/nn/model.rs` so
+PTW weight files round-trip across the boundary (layer{i}.w / layer{i}.b
+with i = the Rust `layers` index).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.plam_matmul import plam_matmul_padded, posit_quantize
+
+# Rust `Model::layers` indices of the Dense layers in each MLP topology.
+MLP_TOPOLOGY = {
+    "isolet": {"dims": [617, 128, 64, 26], "layer_idx": [0, 2, 4]},
+    "har": {"dims": [561, 512, 512, 6], "layer_idx": [0, 2, 4]},
+}
+
+
+def init_mlp_params(name, seed=0):
+    """He-uniform init, keyed like the Rust loader expects."""
+    spec = MLP_TOPOLOGY[name]
+    rng = np.random.default_rng(seed)
+    params = {}
+    for li, (i, o) in zip(spec["layer_idx"], zip(spec["dims"][:-1], spec["dims"][1:])):
+        bound = np.sqrt(6.0 / i)
+        params[f"layer{li}.w"] = rng.uniform(-bound, bound, (o, i)).astype(np.float32)
+        params[f"layer{li}.b"] = np.zeros((o,), np.float32)
+    return params
+
+
+def mlp_forward(params, x, name="isolet", n=16, es=1, mul="plam"):
+    """Batch forward: x [B, in] → logits [B, out].
+
+    Weights are stored Rust-style as [out, in]; the kernel computes
+    x · wᵀ. With `mul='float'` this is the plain f32 reference graph.
+    """
+    spec = MLP_TOPOLOGY[name]
+    h = x
+    last = spec["layer_idx"][-1]
+    for li in spec["layer_idx"]:
+        w = jnp.asarray(params[f"layer{li}.w"])  # [out, in]
+        b = jnp.asarray(params[f"layer{li}.b"])
+        if mul == "float":
+            h = h @ w.T + b
+        else:
+            h = posit_quantize(h, n, es)
+            wq = posit_quantize(w.T, n, es)
+            h = plam_matmul_padded(h, wq, n=n, es=es, mul=mul)
+            h = posit_quantize(h + b, n, es)
+        if li != last:
+            h = jax.nn.relu(h)
+    return h
+
+
+def mlp_forward_fn(params, name="isolet", n=16, es=1, mul="plam"):
+    """Close over baked parameters → a single-input serving function
+    (what aot.py lowers: rust feeds x, gets logits)."""
+    baked = {k: jnp.asarray(v) for k, v in params.items()}
+
+    def fn(x):
+        return (mlp_forward(baked, x, name=name, n=n, es=es, mul=mul),)
+
+    return fn

@@ -1,0 +1,38 @@
+"""positjax — vectorised posit emulation for JAX (build-time only).
+
+Implements the paper's Posit<n,es> encode/decode and the PLAM
+logarithm-approximate multiplier (Eqs. 14-21) as pure jnp integer ops, so
+they can live inside Pallas kernels and be AOT-lowered to HLO. Supports
+n <= 16 (the DNN experiments use Posit<16,1>, paper Table II).
+
+All functions are elementwise/vectorised over int32 bit-pattern arrays.
+"""
+
+from .codec import (
+    decode,
+    encode,
+    from_f32,
+    to_f32,
+    quantize_f32,
+    mask,
+    nar,
+    maxpos,
+    minpos,
+    FRAC_W,
+)
+from .plam import plam_mul, exact_mul
+
+__all__ = [
+    "decode",
+    "encode",
+    "from_f32",
+    "to_f32",
+    "quantize_f32",
+    "plam_mul",
+    "exact_mul",
+    "mask",
+    "nar",
+    "maxpos",
+    "minpos",
+    "FRAC_W",
+]

@@ -1,0 +1,204 @@
+"""Vectorised Posit<n,es> codec in pure jnp integer ops (n <= 16).
+
+Bit patterns live in int32 arrays (low n bits). The decoded form is
+(sign, scale, frac) with the fraction left-aligned to FRAC_W bits, the
+exact layout the PLAM kernel's log-domain adder wants (paper Eq. 12:
+a posit is the fixed-point number k‖e‖f in the log domain).
+
+Everything here must stay jit-/pallas-traceable: no data-dependent
+Python control flow, only elementwise lax/jnp ops.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+# Fraction alignment width. 13 bits hold the widest n<=16 fraction
+# (12 bits for Posit<16,1>) plus one guard position, and keeps every
+# intermediate (body = regime + es + FRAC_W bits) inside int32.
+FRAC_W = 13
+
+# Sentinel scales for specials (match rust/src/posit/tables.rs).
+SCALE_ZERO = -(2 ** 14)
+SCALE_NAR = 2 ** 14
+
+
+def mask(n: int) -> int:
+    """Low-n-bits mask."""
+    return (1 << n) - 1
+
+
+def nar(n: int) -> int:
+    """Not-a-Real pattern 100…0."""
+    return 1 << (n - 1)
+
+
+def maxpos(n: int) -> int:
+    """Largest positive pattern 011…1."""
+    return (1 << (n - 1)) - 1
+
+
+def minpos(n: int) -> int:
+    """Smallest positive pattern 000…1."""
+    return 1
+
+
+def decode(bits, n: int, es: int):
+    """bits(int32) → (sign, scale, frac) with frac aligned to FRAC_W.
+
+    sign is 0/1 int32; scale is int32 (2^es·k + e, or a sentinel for
+    zero/NaR); frac is int32 in [0, 2^FRAC_W).
+    """
+    bits = jnp.asarray(bits, jnp.int32) & mask(n)
+    is_zero = bits == 0
+    is_nar = bits == nar(n)
+
+    sign = (bits >> (n - 1)) & 1
+    absv = jnp.where(sign == 1, (-bits) & mask(n), bits)
+
+    # Regime run-length detection over the n-1 bits after the sign:
+    # normalise to "count leading ones" by inverting negative regimes.
+    rbit = (absv >> (n - 2)) & 1
+    body = jnp.where(rbit == 1, absv, (~absv) & mask(n - 1)) & mask(n - 1)
+    # run = number of leading ones of body within n-1 bits (static unroll).
+    run = jnp.zeros_like(bits)
+    alive = jnp.ones_like(bits, dtype=jnp.bool_)
+    for i in range(n - 1):
+        bit = (body >> (n - 2 - i)) & 1
+        alive = jnp.logical_and(alive, bit == 1)
+        run = run + alive.astype(jnp.int32)
+    k = jnp.where(rbit == 1, run - 1, -run)
+
+    # Remaining bits after sign + regime + terminator.
+    used = 1 + run + 1
+    rem = jnp.maximum(n - used, 0)
+    tail = absv & ((1 << rem) - 1)
+
+    e_bits = jnp.minimum(es, rem)
+    e = jnp.where(
+        e_bits > 0,
+        (tail >> (rem - e_bits)) << (es - e_bits),
+        0,
+    )
+    frac_bits = rem - e_bits
+    frac = tail & ((1 << frac_bits) - 1)
+    frac_aligned = frac << (FRAC_W - frac_bits)
+
+    scale = (k << es) + e
+    scale = jnp.where(is_zero, SCALE_ZERO, scale)
+    scale = jnp.where(is_nar, SCALE_NAR, scale)
+    frac_aligned = jnp.where(jnp.logical_or(is_zero, is_nar), 0, frac_aligned)
+    sign = jnp.where(jnp.logical_or(is_zero, is_nar), 0, sign)
+    return sign, scale, frac_aligned
+
+
+def encode(sign, scale, frac, sticky, n: int, es: int):
+    """(sign, scale, frac@FRAC_W, sticky) → posit bits, with RNE.
+
+    Handles the sentinel scales (zero/NaR pass through) and posit
+    saturation (never rounds to zero or NaR). All int32.
+    """
+    sign = jnp.asarray(sign, jnp.int32)
+    scale = jnp.asarray(scale, jnp.int32)
+    frac = jnp.asarray(frac, jnp.int32)
+    sticky = jnp.asarray(sticky, jnp.bool_)
+
+    avail = n - 1
+    k = scale >> es  # arithmetic shift = floor division
+    e = scale - (k << es)
+
+    # Regime construction. Clamp k to the representable window first so
+    # every later shift amount stays in [0, 31].
+    k_hi = avail - 2
+    k_lo = -(avail - 1)
+    sat_hi = k > k_hi
+    sat_lo = k < k_lo
+    kc = jnp.clip(k, k_lo, k_hi)
+
+    pos = kc >= 0
+    rlen = jnp.where(pos, kc + 2, 1 - kc)
+    regime = jnp.where(pos, ((1 << (jnp.where(pos, kc, 0) + 1)) - 1) << 1, 1)
+
+    total = rlen + es + FRAC_W
+    body = (regime << (es + FRAC_W)) | (e << FRAC_W) | frac
+
+    # total >= avail for every supported format; shift == 0 (no rounding)
+    # only for n=16, es=0 with a minimal regime.
+    shift = jnp.maximum(total - avail, 0)
+    sh1 = jnp.maximum(shift - 1, 0)
+    kept = body >> shift
+    guard = jnp.where(shift > 0, (body >> sh1) & 1, 0)
+    below = body & ((1 << sh1) - 1)
+    st = jnp.logical_or(sticky, below != 0)
+    round_up = jnp.logical_and(guard == 1, jnp.logical_or(st, (kept & 1) == 1))
+    kept = kept + round_up.astype(jnp.int32)
+
+    # Carry past maxpos clamps; zero clamps to minpos.
+    kept = jnp.where(kept >> avail != 0, maxpos(n), kept)
+    kept = jnp.where(kept == 0, minpos(n), kept)
+    kept = jnp.where(sat_hi, maxpos(n), kept)
+    kept = jnp.where(sat_lo, minpos(n), kept)
+
+    out = jnp.where(sign == 1, (-kept) & mask(n), kept)
+    out = jnp.where(scale == SCALE_ZERO, 0, out)
+    out = jnp.where(scale == SCALE_NAR, nar(n), out)
+    return out.astype(jnp.int32)
+
+
+def from_f32(x, n: int, es: int):
+    """f32 array → posit bits (RNE). NaN/Inf → NaR, ±0 → 0.
+
+    f32 subnormals (< 2^-126) are far below every n<=16 posit's minpos
+    and saturate to ±minpos, so their exact significand is irrelevant.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    bits = lax.bitcast_convert_type(x, jnp.int32)
+    sign = (bits >> 31) & 1
+    biased = (bits >> 23) & 0xFF
+    mant = bits & ((1 << 23) - 1)
+
+    is_zero = jnp.logical_and(biased == 0, mant == 0)
+    is_special = biased == 0xFF  # inf/nan
+    is_subnormal = jnp.logical_and(biased == 0, mant != 0)
+
+    scale = biased - 127
+    # Fold the 23-bit mantissa to FRAC_W bits + sticky (single rounding
+    # happens in encode).
+    drop = 23 - FRAC_W
+    frac = mant >> drop
+    sticky = (mant & ((1 << drop) - 1)) != 0
+
+    # Subnormals: treat as minimal normal; encode saturates to minpos.
+    scale = jnp.where(is_subnormal, -127, scale)
+    frac = jnp.where(is_subnormal, 0, frac)
+
+    scale = jnp.where(is_zero, SCALE_ZERO, scale)
+    scale = jnp.where(is_special, SCALE_NAR, scale)
+    return encode(sign, scale, frac, sticky, n, es)
+
+
+def compose_f32(sign, scale, frac):
+    """Exact f32 `(-1)^sign · 2^scale · (1 + frac/2^FRAC_W)` built by
+    direct IEEE-754 bit assembly. jnp.exp2 is NOT exact on f32 (e.g.
+    exp2(13) ≈ 8192.004), which silently breaks RNE ties downstream —
+    every value construction in positjax goes through here instead.
+    Requires scale ∈ [-126, 127] (true for every n ≤ 16 posit product).
+    """
+    fbits = ((jnp.asarray(sign, jnp.int32) & 1) << 31) \
+        | ((jnp.asarray(scale, jnp.int32) + 127) << 23) \
+        | (jnp.asarray(frac, jnp.int32) << (23 - FRAC_W))
+    return lax.bitcast_convert_type(fbits, jnp.float32)
+
+
+def to_f32(bits, n: int, es: int):
+    """Posit bits → exact f32 value (NaR → NaN)."""
+    sign, scale, frac = decode(bits, n, es)
+    safe_scale = jnp.clip(scale, -126, 127)
+    val = compose_f32(sign, safe_scale, frac)
+    val = jnp.where(scale == SCALE_ZERO, 0.0, val)
+    val = jnp.where(scale == SCALE_NAR, jnp.nan, val)
+    return val
+
+
+def quantize_f32(x, n: int, es: int):
+    """Round an f32 array to the nearest Posit<n,es> values (f32 out)."""
+    return to_f32(from_f32(x, n, es), n, es)

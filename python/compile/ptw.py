@@ -1,0 +1,43 @@
+"""PTW1 binary tensor format — the Python half of the Rust loader
+(`rust/src/nn/loader.rs`). Little-endian, see the Rust doc comment for
+the layout."""
+
+import struct
+
+import numpy as np
+
+MAGIC = b"PTW1"
+
+
+def save(path, tensors):
+    """Write a dict {name: np.ndarray(float32)} to a .ptw file."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name in sorted(tensors):
+            arr = np.ascontiguousarray(tensors[name], dtype=np.float32)
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<I", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<Q", d))
+            f.write(arr.tobytes())
+
+
+def load(path):
+    """Read a .ptw file into {name: np.ndarray(float32)}."""
+    out = {}
+    with open(path, "rb") as f:
+        if f.read(4) != MAGIC:
+            raise ValueError(f"{path}: bad magic")
+        (count,) = struct.unpack("<I", f.read(4))
+        for _ in range(count):
+            (nlen,) = struct.unpack("<I", f.read(4))
+            name = f.read(nlen).decode("utf-8")
+            (ndim,) = struct.unpack("<I", f.read(4))
+            shape = tuple(struct.unpack("<Q", f.read(8))[0] for _ in range(ndim))
+            n = int(np.prod(shape)) if shape else 1
+            data = np.frombuffer(f.read(n * 4), dtype="<f4").reshape(shape)
+            out[name] = data.astype(np.float32)
+    return out

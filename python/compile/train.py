@@ -1,0 +1,262 @@
+"""Training pipeline (build-time): trains the paper's Table I models on
+the synthetic datasets and exports weights + test splits as PTW files
+for the Rust inference engine (Table II) and the AOT serving graphs.
+
+Training runs in f32 JAX with hand-rolled Adam/SGD (per Table I's
+optimiser column; optax is unavailable offline). The posit columns of
+Table II evaluate the *posit-quantised* copies of these weights — the
+same train-in-f32 / infer-in-posit flow as the paper's Deep Positron
+lineage [8] (full in-posit training à la Deep PeNSieve is exercised at
+unit scale by the Rust quire tests).
+
+Usage:
+  cd python && python -m compile.train --out-dir ../artifacts/weights \
+      [--models isolet,har] [--epochs 20] [--train-n 2600]
+"""
+
+import argparse
+import functools
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import datasets, ptw
+
+# ----------------------------------------------------------------------
+# Model definitions (parameter names match rust/src/nn/model.rs indices).
+# ----------------------------------------------------------------------
+
+
+def init_params(model, rng):
+    """He-uniform initial parameters, keyed 'layer{i}.w|b'."""
+
+    def dense(i, o):
+        bound = np.sqrt(6.0 / i)
+        return (
+            rng.uniform(-bound, bound, (o, i)).astype(np.float32),
+            np.zeros((o,), np.float32),
+        )
+
+    def conv(oc, ic, k):
+        bound = np.sqrt(6.0 / (ic * k * k))
+        return (
+            rng.uniform(-bound, bound, (oc, ic, k, k)).astype(np.float32),
+            np.zeros((oc,), np.float32),
+        )
+
+    p = {}
+    if model == "isolet":
+        for li, (i, o) in zip([0, 2, 4], [(617, 128), (128, 64), (64, 26)]):
+            p[f"layer{li}.w"], p[f"layer{li}.b"] = dense(i, o)
+    elif model == "har":
+        for li, (i, o) in zip([0, 2, 4], [(561, 512), (512, 512), (512, 6)]):
+            p[f"layer{li}.w"], p[f"layer{li}.b"] = dense(i, o)
+    elif model in ("mnist", "svhn"):
+        ic = 1 if model == "mnist" else 3
+        p["layer0.w"], p["layer0.b"] = conv(6, ic, 5)
+        p["layer3.w"], p["layer3.b"] = conv(16, 6, 5)
+        for li, (i, o) in zip([7, 9, 11], [(400, 120), (120, 84), (84, 10)]):
+            p[f"layer{li}.w"], p[f"layer{li}.b"] = dense(i, o)
+    elif model == "cifar10":
+        p["layer0.w"], p["layer0.b"] = conv(64, 3, 5)
+        p["layer3.w"], p["layer3.b"] = conv(64, 64, 5)
+        for li, (i, o) in zip([7, 9, 11], [(64 * 8 * 8, 384), (384, 192), (192, 10)]):
+            p[f"layer{li}.w"], p[f"layer{li}.b"] = dense(i, o)
+    else:
+        raise ValueError(model)
+    return p
+
+
+def _conv(x, w, b, pad):
+    """NCHW conv, stride 1, symmetric padding — matches the Rust layer."""
+    out = jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(1, 1),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return out + b[None, :, None, None]
+
+
+def _maxpool(x, k=2, s=2):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 1, k, k), (1, 1, s, s), "VALID"
+    )
+
+
+def forward(model, params, x):
+    """Batch logits for any of the five models (f32 training graph)."""
+    relu = jax.nn.relu
+    if model in ("isolet", "har"):
+        h = x
+        for li in [0, 2, 4]:
+            h = h @ params[f"layer{li}.w"].T + params[f"layer{li}.b"]
+            if li != 4:
+                h = relu(h)
+        return h
+    if model in ("mnist", "svhn"):
+        pad = 2 if model == "mnist" else 0
+        h = relu(_conv(x, params["layer0.w"], params["layer0.b"], pad))
+        h = _maxpool(h)
+        h = relu(_conv(h, params["layer3.w"], params["layer3.b"], 0))
+        h = _maxpool(h)
+        h = h.reshape(h.shape[0], -1)
+        for li in [7, 9, 11]:
+            h = h @ params[f"layer{li}.w"].T + params[f"layer{li}.b"]
+            if li != 11:
+                h = relu(h)
+        return h
+    if model == "cifar10":
+        h = relu(_conv(x, params["layer0.w"], params["layer0.b"], 2))
+        h = _maxpool(h)
+        h = relu(_conv(h, params["layer3.w"], params["layer3.b"], 2))
+        h = _maxpool(h)
+        h = h.reshape(h.shape[0], -1)
+        for li in [7, 9, 11]:
+            h = h @ params[f"layer{li}.w"].T + params[f"layer{li}.b"]
+            if li != 11:
+                h = relu(h)
+        return h
+    raise ValueError(model)
+
+
+# ----------------------------------------------------------------------
+# Hand-rolled optimisers (Table I: SGD for ISOLET, Nesterov for HAR,
+# Adam for the image models).
+# ----------------------------------------------------------------------
+
+
+def make_optimizer(kind, lr):
+    """→ (init_state, update) for a params pytree."""
+    if kind in ("sgd", "nesterov"):
+        mu = 0.9 if kind == "nesterov" else 0.0
+
+        def init(params):
+            return jax.tree.map(jnp.zeros_like, params)
+
+        def update(grads, state, params, step):
+            new_v = jax.tree.map(lambda v, g: mu * v - lr * g, state, grads)
+            if kind == "nesterov":
+                new_p = jax.tree.map(
+                    lambda p, v, g: p + mu * v - lr * g, params, new_v, grads
+                )
+            else:
+                new_p = jax.tree.map(lambda p, v: p + v, params, new_v)
+            return new_p, new_v
+
+        return init, update
+
+    if kind == "adam":
+        b1, b2, eps = 0.9, 0.999, 1e-8
+
+        def init(params):
+            z = jax.tree.map(jnp.zeros_like, params)
+            return (z, jax.tree.map(jnp.zeros_like, params))
+
+        def update(grads, state, params, step):
+            m, v = state
+            m = jax.tree.map(lambda a, g: b1 * a + (1 - b1) * g, m, grads)
+            v = jax.tree.map(lambda a, g: b2 * a + (1 - b2) * g * g, v, grads)
+            t = step + 1
+            mhat = jax.tree.map(lambda a: a / (1 - b1**t), m)
+            vhat = jax.tree.map(lambda a: a / (1 - b2**t), v)
+            new_p = jax.tree.map(
+                lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps), params, mhat, vhat
+            )
+            return new_p, (m, v)
+
+        return init, update
+    raise ValueError(kind)
+
+
+# Table I hyperparameters (epochs are overridable; defaults scaled to
+# the synthetic corpus size).
+CONFIGS = {
+    "isolet": {"opt": "sgd", "lr": 0.05, "batch": 64},
+    "har": {"opt": "nesterov", "lr": 0.02, "batch": 32},
+    "mnist": {"opt": "adam", "lr": 1e-3, "batch": 128},
+    "svhn": {"opt": "adam", "lr": 1e-3, "batch": 128},
+    "cifar10": {"opt": "adam", "lr": 1e-3, "batch": 128},
+}
+
+
+def train_model(model, epochs, train_n, test_n, seed=7, log=print):
+    """Train one model; returns (params, test_x, test_y, history)."""
+    cfg = CONFIGS[model]
+    tx, ty, vx, vy = datasets.generate(model, train_n, test_n, seed)
+    rng = np.random.default_rng(seed)
+    params = init_params(model, rng)
+    init, update = make_optimizer(cfg["opt"], cfg["lr"])
+    state = init(params)
+
+    @jax.jit
+    def loss_fn(params, x, y):
+        logits = forward(model, params, x)
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(logp[jnp.arange(x.shape[0]), y])
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+
+    @jax.jit
+    def acc_fn(params, x, y):
+        return jnp.mean(jnp.argmax(forward(model, params, x), axis=1) == y)
+
+    history = []
+    step = 0
+    n = len(tx)
+    for epoch in range(epochs):
+        perm = rng.permutation(n)
+        ep_loss = 0.0
+        nb = 0
+        for s in range(0, n, cfg["batch"]):
+            idx = perm[s : s + cfg["batch"]]
+            loss, grads = grad_fn(params, tx[idx], ty[idx])
+            params, state = update(grads, state, params, step)
+            step += 1
+            ep_loss += float(loss)
+            nb += 1
+        acc = float(acc_fn(params, vx, vy))
+        history.append({"epoch": epoch, "loss": ep_loss / nb, "test_acc": acc})
+        log(f"[{model}] epoch {epoch:3d}  loss {ep_loss / nb:.4f}  test acc {acc:.4f}")
+    return params, vx, vy, history
+
+
+def export(model, params, vx, vy, out_dir):
+    os.makedirs(out_dir, exist_ok=True)
+    ptw.save(
+        os.path.join(out_dir, f"{model}.ptw"),
+        {k: np.asarray(v) for k, v in params.items()},
+    )
+    ptw.save(
+        os.path.join(out_dir, f"{model}_test.ptw"),
+        {"x": vx.reshape(len(vx), -1), "y": vy.astype(np.float32)},
+    )
+    print(f"exported {model} weights + {len(vx)}-sample test split → {out_dir}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts/weights")
+    ap.add_argument("--models", default="isolet,har")
+    ap.add_argument("--epochs", type=int, default=20)
+    ap.add_argument("--train-n", type=int, default=2600)
+    ap.add_argument("--test-n", type=int, default=520)
+    ap.add_argument("--seed", type=int, default=7)
+    args = ap.parse_args()
+
+    t0 = time.time()
+    for model in args.models.split(","):
+        model = model.strip()
+        params, vx, vy, hist = train_model(
+            model, args.epochs, args.train_n, args.test_n, args.seed
+        )
+        export(model, params, vx, vy, args.out_dir)
+    print(f"training pipeline done in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

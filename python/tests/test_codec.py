@@ -1,0 +1,99 @@
+"""positjax codec vs the pure-Python oracle (ref.py) — exhaustive for
+Posit<8,0>, hypothesis-driven for Posit<16,1>."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.positjax import codec
+
+N16, ES16 = 16, 1
+N8, ES8 = 8, 0
+
+
+def test_exhaustive_decode_p8():
+    bits = jnp.arange(256, dtype=jnp.int32)
+    vals = np.array(codec.to_f32(bits, N8, ES8))
+    for b in range(256):
+        want = ref.to_float(b, N8, ES8)
+        if b == 0x80:
+            assert np.isnan(vals[b])
+        else:
+            assert vals[b] == pytest.approx(want, rel=1e-6), f"bits={b:#x}"
+
+
+def test_exhaustive_round_trip_p8():
+    bits = jnp.arange(256, dtype=jnp.int32)
+    vals = codec.to_f32(bits, N8, ES8)
+    back = np.array(codec.from_f32(vals, N8, ES8))
+    for b in range(256):
+        if b == 0x80:
+            continue  # NaN → NaR
+        assert back[b] == b, f"bits={b:#x}"
+
+
+def test_exhaustive_round_trip_p16():
+    bits = jnp.arange(65536, dtype=jnp.int32)
+    vals = codec.to_f32(bits, N16, ES16)
+    back = np.array(codec.from_f32(vals, N16, ES16))
+    ok = back == np.arange(65536)
+    ok[0x8000] = True  # NaR → NaN → NaR handled below
+    assert np.array(codec.from_f32(jnp.array([np.nan], jnp.float32), N16, ES16))[0] == 0x8000
+    assert ok.all(), f"failures at {np.where(~ok)[0][:10]}"
+
+
+@settings(max_examples=300, deadline=None)
+@given(st.floats(allow_nan=False, allow_infinity=False, width=32))
+def test_from_f32_matches_oracle(x):
+    got = int(codec.from_f32(jnp.array([x], jnp.float32), N16, ES16)[0])
+    want = ref.from_float(float(np.float32(x)), N16, ES16)
+    assert got == want, f"x={x}"
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(0, 65535))
+def test_decode_matches_oracle_p16(bits):
+    cls, sign, scale, frac, fb = ref.decode(bits, N16, ES16)
+    s, sc, fr = codec.decode(jnp.array([bits]), N16, ES16)
+    if cls == "zero":
+        assert int(sc[0]) == codec.SCALE_ZERO
+    elif cls == "nar":
+        assert int(sc[0]) == codec.SCALE_NAR
+    else:
+        assert int(s[0]) == sign
+        assert int(sc[0]) == scale
+        assert int(fr[0]) == frac << (codec.FRAC_W - fb)
+
+
+def test_specials():
+    assert int(codec.from_f32(jnp.array([0.0], jnp.float32), N16, ES16)[0]) == 0
+    assert int(codec.from_f32(jnp.array([np.inf], jnp.float32), N16, ES16)[0]) == 0x8000
+    assert np.isnan(np.array(codec.to_f32(jnp.array([0x8000]), N16, ES16))[0])
+    assert np.array(codec.to_f32(jnp.array([0]), N16, ES16))[0] == 0.0
+
+
+def test_saturation():
+    big = codec.from_f32(jnp.array([1e30], jnp.float32), N16, ES16)
+    assert int(big[0]) == codec.maxpos(N16)
+    tiny = codec.from_f32(jnp.array([1e-30], jnp.float32), N16, ES16)
+    assert int(tiny[0]) == codec.minpos(N16)
+    # Negative saturation: two's complement of maxpos.
+    nbig = codec.from_f32(jnp.array([-1e30], jnp.float32), N16, ES16)
+    assert int(nbig[0]) == ((-codec.maxpos(N16)) & codec.mask(N16))
+
+
+def test_quantize_idempotent():
+    rng = np.random.default_rng(0)
+    x = (rng.standard_normal(512) * 10 ** rng.uniform(-6, 6, 512)).astype(np.float32)
+    q1 = np.array(codec.quantize_f32(x, N16, ES16))
+    q2 = np.array(codec.quantize_f32(q1, N16, ES16))
+    np.testing.assert_array_equal(q1, q2)
+
+
+def test_subnormal_inputs_saturate_to_minpos():
+    sub = np.float32(1e-40)  # f32 subnormal
+    got = int(codec.from_f32(jnp.array([sub], jnp.float32), N16, ES16)[0])
+    assert got == codec.minpos(N16)

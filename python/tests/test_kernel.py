@@ -1,0 +1,114 @@
+"""Pallas PLAM GEMM kernel vs the pure-Python oracle — the core L1
+correctness signal (DESIGN.md §7), with hypothesis sweeping shapes and
+value distributions."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels.plam_matmul import plam_matmul, plam_matmul_padded
+from compile.positjax import codec, plam
+
+
+def assert_matches_ref(a, b):
+    got = np.array(plam_matmul_padded(a, b))
+    want = ref.plam_matmul_ref(a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_small_identity():
+    eye = np.eye(8, dtype=np.float32)
+    out = np.array(plam_matmul(eye, eye))
+    np.testing.assert_array_equal(out, eye)  # powers of two are PLAM-exact
+
+
+def test_mitchell_worst_case():
+    # 1.5 × 1.5 → 2.0 under PLAM (the 11.1 % worst case).
+    a = np.full((8, 8), 1.5, np.float32)
+    out = np.array(plam_matmul(a, a))
+    np.testing.assert_allclose(out, np.full((8, 8), 8 * 2.0), rtol=1e-6)
+
+
+def test_zeros_and_signs():
+    a = np.zeros((8, 8), np.float32)
+    b = np.ones((8, 8), np.float32)
+    np.testing.assert_array_equal(np.array(plam_matmul(a, b)), a)
+    c = -np.eye(8, dtype=np.float32)
+    np.testing.assert_array_equal(np.array(plam_matmul(c, b)), -b)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    m=st.sampled_from([1, 3, 8]),
+    k=st.sampled_from([1, 5, 16]),
+    n=st.sampled_from([2, 8, 11]),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.sampled_from([0.1, 1.0, 100.0]),
+)
+def test_matches_oracle_random(m, k, n, seed, scale):
+    rng = np.random.default_rng(seed)
+    a = (rng.standard_normal((m, k)) * scale).astype(np.float32)
+    b = (rng.standard_normal((k, n)) * scale).astype(np.float32)
+    assert_matches_ref(a, b)
+
+
+def test_error_bound_against_exact_float():
+    # Relative error of each PLAM product vs the real product is ≤ 1/9;
+    # check through the kernel on a diagonal (products isolated).
+    rng = np.random.default_rng(3)
+    x = (rng.uniform(1.0, 2.0, 8)).astype(np.float32)
+    a = np.diag(x).astype(np.float32)
+    b = np.diag(x).astype(np.float32)
+    got = np.diag(np.array(plam_matmul(a, b)))
+    exact = x.astype(np.float64) ** 2
+    rel = np.abs(exact - got) / exact
+    assert rel.max() <= 1 / 9 + 1e-6
+
+
+def test_exact_mul_mode_matches_oracle():
+    rng = np.random.default_rng(5)
+    a = rng.standard_normal((8, 8)).astype(np.float32)
+    b = rng.standard_normal((8, 8)).astype(np.float32)
+    got = np.array(plam_matmul(a, b, mul="exact"))
+    # Oracle: quantise, exact posit products, f32 sum.
+    want = np.zeros((8, 8), np.float32)
+    abits = [[ref.from_float(float(a[i, p]), 16, 1) for p in range(8)] for i in range(8)]
+    bbits = [[ref.from_float(float(b[p, j]), 16, 1) for j in range(8)] for p in range(8)]
+    for i in range(8):
+        for j in range(8):
+            acc = np.float32(0)
+            for p in range(8):
+                prod = ref.to_float(ref.exact_mul(abits[i][p], bbits[p][j], 16, 1), 16, 1)
+                acc = np.float32(acc + np.float32(prod))
+            want[i, j] = acc
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(0, 65535), st.integers(0, 65535))
+def test_plam_mul_bitexact_vs_oracle(a, b):
+    got = int(plam.plam_mul(jnp.array([a]), jnp.array([b]), 16, 1)[0])
+    want = ref.plam_mul(a, b, 16, 1)
+    assert got == want, f"a={a:#x} b={b:#x}"
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(0, 65535), st.integers(0, 65535))
+def test_exact_mul_bitexact_vs_oracle(a, b):
+    got = int(plam.exact_mul(jnp.array([a]), jnp.array([b]), 16, 1)[0])
+    want = ref.exact_mul(a, b, 16, 1)
+    assert got == want, f"a={a:#x} b={b:#x}"
+
+
+def test_plam_underestimates_exact():
+    # |PLAM product| <= |exact product| always (log2(1+x) >= x).
+    rng = np.random.default_rng(11)
+    bits = rng.integers(1, 65536, size=(2, 500))
+    bits = bits[:, (bits[0] != 0x8000) & (bits[1] != 0x8000)]
+    a, b = jnp.array(bits[0]), jnp.array(bits[1])
+    pl_v = np.abs(np.array(codec.to_f32(plam.plam_mul(a, b, 16, 1), 16, 1)))
+    ex_v = np.abs(np.array(codec.to_f32(plam.exact_mul(a, b, 16, 1), 16, 1)))
+    assert (pl_v <= ex_v * (1 + 1e-6) + 1e-30).all()

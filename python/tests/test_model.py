@@ -1,0 +1,88 @@
+"""L2 model graphs: shapes, format parity, PTW round trip, AOT text."""
+
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import model as L2
+from compile import ptw, datasets
+
+
+def test_mlp_shapes():
+    params = L2.init_mlp_params("isolet", seed=0)
+    x = np.zeros((8, 617), np.float32)
+    for mul in ["float", "plam", "exact"]:
+        out = np.array(L2.mlp_forward(params, x, mul=mul))
+        assert out.shape == (8, 26), mul
+
+
+def test_har_topology():
+    params = L2.init_mlp_params("har", seed=1)
+    x = np.zeros((8, 561), np.float32)
+    out = np.array(L2.mlp_forward(params, x, name="har", mul="float"))
+    assert out.shape == (8, 6)
+
+
+def test_plam_close_to_float_on_trained_scale_weights():
+    rng = np.random.default_rng(2)
+    params = L2.init_mlp_params("isolet", seed=2)
+    x = rng.standard_normal((8, 617)).astype(np.float32) * 0.5
+    f = np.array(L2.mlp_forward(params, x, mul="float"))
+    p = np.array(L2.mlp_forward(params, x, mul="plam"))
+    e = np.array(L2.mlp_forward(params, x, mul="exact"))
+    # Same argmax for the large majority of rows (random init logits are
+    # close together, so demand 6/8 not 8/8).
+    assert (f.argmax(1) == p.argmax(1)).sum() >= 6
+    assert (e.argmax(1) == p.argmax(1)).sum() >= 6
+    # Magnitudes comparable.
+    assert np.abs(p).max() < np.abs(f).max() * 2 + 1.0
+
+
+def test_ptw_round_trip(tmp_path):
+    params = L2.init_mlp_params("isolet", seed=3)
+    path = os.path.join(tmp_path, "w.ptw")
+    ptw.save(path, params)
+    back = ptw.load(path)
+    assert set(back) == set(params)
+    for k in params:
+        np.testing.assert_array_equal(back[k], params[k])
+
+
+def test_datasets_shapes():
+    for name, (shape, classes, _) in datasets.SPECS.items():
+        if len(shape) == 3 and shape[-1] == 32:
+            n = 8  # keep image rendering cheap in unit tests
+        else:
+            n = 2 * classes
+        tx, ty, vx, vy = datasets.generate(name, n, 4, seed=1)
+        assert tx.shape == (n, *shape)
+        assert ty.shape == (n,)
+        assert vx.shape == (4, *shape)
+        assert (ty < classes).all()
+
+
+def test_aot_hlo_text_contains_full_constants():
+    # The print_large_constants regression: a baked-weight graph's HLO
+    # text must never elide constants as `{...}`.
+    from compile.aot import to_hlo_text
+
+    params = L2.init_mlp_params("isolet", seed=0)
+    fn = L2.mlp_forward_fn(params, mul="float")
+    low = jax.jit(fn).lower(jax.ShapeDtypeStruct((8, 617), jnp.float32))
+    text = to_hlo_text(low)
+    assert "{...}" not in text
+    assert "f32[617,128]" in text
+
+
+def test_training_one_epoch_reduces_loss():
+    from compile import train
+
+    params, vx, vy, hist = train.train_model(
+        "isolet", epochs=2, train_n=260, test_n=52, seed=3, log=lambda s: None
+    )
+    assert hist[-1]["loss"] < hist[0]["loss"] * 1.01
+    assert hist[-1]["test_acc"] > 1.0 / 26  # better than chance

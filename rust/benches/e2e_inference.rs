@@ -1,0 +1,130 @@
+//! Bench: end-to-end serving — latency/throughput of the L3 coordinator
+//! under open-loop concurrent load, per arithmetic mode and batching
+//! policy (the serving-side evaluation of DESIGN.md E8).
+//!
+//! Run: cargo bench --bench e2e_inference
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use plam::coordinator::{serve, BatcherConfig, Client, NnBackend, Router, ServerConfig};
+use plam::nn::{ArithMode, Model, ModelKind};
+use plam::posit::PositFormat;
+use plam::prng::Rng;
+
+fn drive(addr: std::net::SocketAddr, route: &str, clients: usize, per_client: usize) -> (f64, Duration) {
+    let t0 = Instant::now();
+    let mut joins = vec![];
+    for c in 0..clients {
+        let route = route.to_string();
+        joins.push(std::thread::spawn(move || {
+            let mut cl = Client::connect(addr).unwrap();
+            let mut rng = Rng::new(c as u64 + 1);
+            for _ in 0..per_client {
+                let x: Vec<f32> = (0..617).map(|_| rng.normal() as f32 * 0.5).collect();
+                cl.infer(&route, &x).unwrap();
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let dt = t0.elapsed();
+    ((clients * per_client) as f64 / dt.as_secs_f64(), dt)
+}
+
+fn main() {
+    let fast = std::env::var("PLAM_BENCH_FAST").is_ok();
+    let per_client = if fast { 8 } else { 64 };
+    let mut rng = Rng::new(42);
+    let model = Model::init(ModelKind::MlpIsolet, &mut rng);
+
+    println!("serving throughput (ISOLET MLP, 4 concurrent clients):");
+    println!(
+        "{:<16} {:>12} {:>10} {:>10} {:>11}",
+        "mode", "req/s", "p50 µs", "p99 µs", "mean batch"
+    );
+    for (name, mode) in [
+        ("float32", ArithMode::float32()),
+        ("posit16-exact", ArithMode::posit_exact(PositFormat::P16E1)),
+        ("posit16-plam", ArithMode::posit_plam(PositFormat::P16E1)),
+    ] {
+        let mut router = Router::new();
+        router.register(
+            "m",
+            Arc::new(NnBackend::new(model.clone(), mode)),
+            BatcherConfig {
+                max_batch: 16,
+                max_wait: Duration::from_millis(2),
+            },
+        );
+        let h = serve(
+            router,
+            &ServerConfig {
+                addr: "127.0.0.1:0".into(),
+            },
+        )
+        .unwrap();
+        let (rps, _) = drive(h.addr, "m", 4, per_client);
+        let b = h.router().get("m").unwrap();
+        println!(
+            "{:<16} {:>12.1} {:>10} {:>10} {:>11.2}",
+            name,
+            rps,
+            b.metrics.latency_percentile_us(0.5).unwrap_or(0),
+            b.metrics.latency_percentile_us(0.99).unwrap_or(0),
+            b.metrics.mean_batch_size(),
+        );
+        h.shutdown();
+    }
+
+    // Batching-policy ablation (PLAM mode): window size vs latency.
+    println!("\nbatching policy ablation (posit16-plam):");
+    println!(
+        "{:<26} {:>12} {:>10} {:>10} {:>11}",
+        "policy", "req/s", "p50 µs", "p99 µs", "mean batch"
+    );
+    for (label, max_batch, wait_ms) in [
+        ("no batching (1, 0ms)", 1usize, 0u64),
+        ("batch 8, 1ms", 8, 1),
+        ("batch 16, 2ms", 16, 2),
+        ("batch 32, 5ms", 32, 5),
+    ] {
+        let mut router = Router::new();
+        router.register(
+            "m",
+            Arc::new(NnBackend::new(
+                model.clone(),
+                ArithMode::posit_plam(PositFormat::P16E1),
+            )),
+            BatcherConfig {
+                max_batch,
+                max_wait: Duration::from_millis(wait_ms),
+            },
+        );
+        let h = serve(
+            router,
+            &ServerConfig {
+                addr: "127.0.0.1:0".into(),
+            },
+        )
+        .unwrap();
+        let (rps, _) = drive(h.addr, "m", 8, per_client);
+        let b = h.router().get("m").unwrap();
+        println!(
+            "{:<26} {:>12.1} {:>10} {:>10} {:>11.2}",
+            label,
+            rps,
+            b.metrics.latency_percentile_us(0.5).unwrap_or(0),
+            b.metrics.latency_percentile_us(0.99).unwrap_or(0),
+            b.metrics.mean_batch_size(),
+        );
+        assert_eq!(
+            b.metrics.failed.load(Ordering::Relaxed),
+            0,
+            "failures under load"
+        );
+        h.shutdown();
+    }
+}

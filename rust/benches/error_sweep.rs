@@ -1,0 +1,44 @@
+//! Bench: E1 — the §III.C error analysis at scale (analytic surface +
+//! bit-level measurement throughput across formats).
+//!
+//! Run: cargo bench --bench error_sweep
+
+use plam::bench::{black_box, Bench};
+use plam::experiments::{error_sweep, measured_error};
+use plam::posit::PositFormat;
+
+fn main() {
+    // The deliverable numbers.
+    let s = error_sweep(1024);
+    println!(
+        "analytic Eq.24 surface 1024²: max {:.6} ({:.4}%) at ({:.3},{:.3}), mean {:.4}%\n",
+        s.max,
+        s.max * 100.0,
+        s.argmax.0,
+        s.argmax.1,
+        s.mean * 100.0
+    );
+    for (fmt, name) in [
+        (PositFormat::P8E0, "posit<8,0>"),
+        (PositFormat::P16E1, "posit<16,1>"),
+        (PositFormat::P16E2, "posit<16,2>"),
+        (PositFormat::P32E2, "posit<32,2>"),
+    ] {
+        let m = measured_error(fmt, 300_000, 17);
+        println!(
+            "{name:<12} 300k random pairs: max {:.4}% mean {:.4}% (bound 11.1111%)",
+            m.max * 100.0,
+            m.mean * 100.0
+        );
+    }
+    println!();
+
+    // Timing.
+    let mut bench = Bench::new();
+    bench.run("error_sweep 256²", || {
+        black_box(error_sweep(256));
+    });
+    bench.run("measured_error p16e1 10k pairs", || {
+        black_box(measured_error(PositFormat::P16E1, 10_000, 3));
+    });
+}

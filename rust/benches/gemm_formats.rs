@@ -1,0 +1,120 @@
+//! Bench: GEMM throughput across arithmetic formats — the software-
+//! emulation ablation behind Table II's cost story (float32 vs exact
+//! posit vs PLAM, quire vs f32 accumulation), plus the AOT PJRT kernel
+//! when artifacts are present.
+//!
+//! Run: cargo bench --bench gemm_formats
+
+use plam::bench::{black_box, Bench};
+use plam::nn::{ArithMode, Layer, Tensor};
+use plam::posit::PositFormat;
+use plam::prng::Rng;
+
+fn random_tensor(shape: &[usize], rng: &mut Rng) -> Tensor {
+    Tensor::from_vec(
+        shape,
+        (0..shape.iter().product::<usize>())
+            .map(|_| rng.normal() as f32 * 0.5)
+            .collect(),
+    )
+}
+
+fn main() {
+    let mut bench = Bench::new();
+    let mut rng = Rng::new(5);
+
+    // Dense layer (out=128, in=256): one ISOLET-scale matvec per call.
+    let layer = Layer::Dense {
+        w: random_tensor(&[128, 256], &mut rng),
+        b: random_tensor(&[128], &mut rng),
+    };
+    let x = random_tensor(&[256], &mut rng);
+    let macs = 128 * 256;
+
+    let modes = [
+        ("float32", ArithMode::float32()),
+        ("posit16-exact", ArithMode::posit_exact(PositFormat::P16E1)),
+        ("posit16-plam", ArithMode::posit_plam(PositFormat::P16E1)),
+    ];
+    println!("dense 256→128 ({macs} MACs):");
+    let mut results = vec![];
+    for (name, mode) in &modes {
+        let r = bench
+            .run(&format!("dense {name}"), || {
+                black_box(layer.forward(&x, mode));
+            })
+            .clone();
+        results.push((name.to_string(), r));
+    }
+    println!("\nMAC throughput:");
+    for (name, r) in &results {
+        println!("  {:<16} {:>12.0} MAC/s", name, r.ops_per_sec(macs as f64));
+    }
+    let slowdown = |a: usize, b: usize| {
+        results[a].1.mean.as_secs_f64() / results[b].1.mean.as_secs_f64()
+    };
+    println!(
+        "  PLAM vs exact posit: {:.2}× faster (software analogue of the mult removal)",
+        slowdown(1, 2)
+    );
+
+    // Prepared-model ablation: weights pre-encoded once (perf pass) —
+    // measured on a single-Dense model so the series is comparable.
+    use plam::nn::{Model, PreparedModel};
+    let dense_model = Model {
+        name: "bench-dense".into(),
+        layers: vec![layer.clone()],
+        input_shape: vec![256],
+    };
+    for (name, mode) in &modes {
+        let prepared = PreparedModel::new(&dense_model, mode.clone());
+        let r = bench
+            .run(&format!("dense {name} (prepared)"), || {
+                black_box(prepared.forward(&x));
+            })
+            .clone();
+        println!(
+            "  {:<16} prepared: {:>12.0} MAC/s",
+            name,
+            r.ops_per_sec(macs as f64)
+        );
+    }
+
+    // Conv layer (LeNet C1 shape).
+    let conv = Layer::Conv2d {
+        w: random_tensor(&[6, 1, 5, 5], &mut rng),
+        b: random_tensor(&[6], &mut rng),
+        stride: 1,
+        pad: 2,
+    };
+    let img = random_tensor(&[1, 28, 28], &mut rng);
+    for (name, mode) in &modes {
+        bench.run(&format!("conv lenet-c1 {name}"), || {
+            black_box(conv.forward(&img, mode));
+        });
+    }
+
+    // PJRT kernel artifact (Pallas PLAM GEMM), if built.
+    let path = std::path::Path::new("artifacts/plam_matmul_64.hlo.txt");
+    if path.exists() {
+        match plam::runtime::Runtime::cpu() {
+            Ok(mut rt) => {
+                let exe = rt.load(path).unwrap();
+                let a: Vec<f32> = (0..64 * 64).map(|_| rng.normal() as f32).collect();
+                let b: Vec<f32> = (0..64 * 64).map(|_| rng.normal() as f32).collect();
+                let r = bench
+                    .run("pjrt pallas plam_matmul 64³", || {
+                        black_box(exe.run_f32(&[(&[64, 64], &a), (&[64, 64], &b)]).unwrap());
+                    })
+                    .clone();
+                println!(
+                    "  pjrt kernel: {:>12.0} MAC/s (interpret-mode Pallas — structure, not speed)",
+                    r.ops_per_sec((64 * 64 * 64) as f64)
+                );
+            }
+            Err(e) => println!("pjrt unavailable: {e:#}"),
+        }
+    } else {
+        println!("(artifacts missing — pjrt series skipped; run `make artifacts`)");
+    }
+}

@@ -1,0 +1,56 @@
+//! Bench: regenerate every hardware artifact of the paper's §V — Table
+//! III, Fig. 1, Fig. 5, Fig. 6, headline — and time the cost model
+//! itself (it must stay interactive for design-space sweeps).
+//!
+//! Run: cargo bench --bench hw_synthesis
+
+use plam::bench::{black_box, Bench};
+use plam::hardware;
+
+fn main() {
+    // The deliverable: print each table/figure once.
+    println!("{}", hardware::render_table3());
+    println!("{}", hardware::render_fig1());
+    println!("{}", hardware::render_fig5());
+    println!("{}", hardware::render_fig6());
+    println!("{}", hardware::render_headline());
+
+    // And a design-space sweep ablation: PLAM savings across <n, es>.
+    println!("PLAM savings sweep (area/power vs exact posit, min-delay corner):");
+    println!("{:>4} {:>3} {:>10} {:>10} {:>10}", "n", "es", "area", "power", "delay");
+    for n in [8u32, 16, 24, 32] {
+        for es in [0u32, 1, 2, 3] {
+            let e = hardware::exact_posit_multiplier(
+                "e", n, es, hardware::DecodeArch::LzdOnly, hardware::Rounding::Rne, false,
+            )
+            .synth();
+            let p = hardware::plam_multiplier("p", n, es).synth();
+            println!(
+                "{:>4} {:>3} {:>9.1}% {:>9.1}% {:>9.1}%",
+                n,
+                es,
+                (1.0 - p.area_um2 / e.area_um2) * 100.0,
+                (1.0 - p.power_mw / e.power_mw) * 100.0,
+                (1.0 - p.delay_ns / e.delay_ns) * 100.0
+            );
+        }
+    }
+    println!();
+
+    // Timing: full model regeneration speed.
+    let mut bench = Bench::new();
+    bench.run("table3 (12 syntheses)", || {
+        black_box(hardware::table3(16));
+        black_box(hardware::table3(32));
+    });
+    bench.run("fig5 (7 syntheses)", || {
+        black_box(hardware::fig5());
+    });
+    bench.run("fig6 (35 constrained syntheses)", || {
+        black_box(hardware::fig6(16, &hardware::fig6_default_constraints(16)));
+        black_box(hardware::fig6(32, &hardware::fig6_default_constraints(32)));
+    });
+    bench.run("headline", || {
+        black_box(hardware::headline());
+    });
+}

@@ -1,0 +1,118 @@
+//! Microbenchmarks of the posit substrate: decode/encode, exact mul,
+//! PLAM mul, quire MAC, conversions. The software-emulation analogue of
+//! the paper's per-unit synthesis numbers — the interesting ratio is
+//! PLAM vs exact (the fraction-multiplier removal shows up as fewer
+//! integer ops on the software path too).
+//!
+//! Run: cargo bench --bench posit_ops   (PLAM_BENCH_FAST=1 for smoke)
+
+use plam::bench::{black_box, Bench};
+use plam::posit::{self, tables::DecodeTable, PositFormat, Quire};
+use plam::prng::Rng;
+
+fn operands(fmt: PositFormat, n: usize, seed: u64) -> Vec<u64> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| loop {
+            let b = rng.next_u64() & fmt.mask();
+            if b != fmt.nar() {
+                break b;
+            }
+        })
+        .collect()
+}
+
+fn main() {
+    let mut bench = Bench::new();
+    const N: usize = 4096;
+
+    for fmt in [PositFormat::P8E0, PositFormat::P16E1, PositFormat::P32E2] {
+        let a = operands(fmt, N, 1);
+        let b = operands(fmt, N, 2);
+
+        let r = bench.run(&format!("decode {fmt} ×{N}"), || {
+            for &x in &a {
+                black_box(posit::decode(fmt, x));
+            }
+        });
+        let decode_ops = r.ops_per_sec(N as f64);
+
+        bench.run(&format!("exact mul {fmt} ×{N}"), || {
+            for i in 0..N {
+                black_box(posit::mul(fmt, a[i], b[i]));
+            }
+        });
+        bench.run(&format!("PLAM mul {fmt} ×{N}"), || {
+            for i in 0..N {
+                black_box(posit::plam_mul(fmt, a[i], b[i]));
+            }
+        });
+        bench.run(&format!("add {fmt} ×{N}"), || {
+            for i in 0..N {
+                black_box(posit::add(fmt, a[i], b[i]));
+            }
+        });
+        bench.run(&format!("from_f64 {fmt} ×{N}"), || {
+            for i in 0..N {
+                black_box(posit::from_f64(fmt, i as f64 * 0.37 - 700.0));
+            }
+        });
+        let _ = decode_ops;
+    }
+
+    // Quire MAC (the EMAC inner loop of the nn engine).
+    let fmt = PositFormat::P16E1;
+    let a = operands(fmt, N, 3);
+    let b = operands(fmt, N, 4);
+    let mut q = Quire::new(fmt);
+    bench.run(&format!("quire exact MAC {fmt} ×{N}"), || {
+        q.clear();
+        for i in 0..N {
+            q.mul_add(a[i], b[i]);
+        }
+        black_box(q.to_posit());
+    });
+    bench.run(&format!("quire PLAM MAC {fmt} ×{N}"), || {
+        q.clear();
+        for i in 0..N {
+            q.plam_mul_add(a[i], b[i]);
+        }
+        black_box(q.to_posit());
+    });
+
+    // FastQuire MAC from pre-decoded entries — the actual nn hot loop
+    // after the perf pass (decode table + u64 product + lazy limbs).
+    {
+        use plam::posit::FastQuire;
+        let table = DecodeTable::new(fmt);
+        let da: Vec<_> = a.iter().map(|&x| table.get(x)).collect();
+        let db: Vec<_> = b.iter().map(|&x| table.get(x)).collect();
+        let mut fq = FastQuire::new(fmt);
+        bench.run(&format!("fast-quire exact MAC {fmt} ×{N} (pre-decoded)"), || {
+            fq.clear();
+            for i in 0..N {
+                let (x, y) = (&da[i], &db[i]);
+                if x.is_zero() || y.is_zero() || x.is_nar() || y.is_nar() {
+                    continue;
+                }
+                let sig = (x.significand() as u64) * (y.significand() as u64);
+                let scale = x.scale as i32 + y.scale as i32 - 60;
+                fq.add_product64(sig, scale, x.sign ^ y.sign);
+            }
+            black_box(fq.to_posit());
+        });
+    }
+
+    // Table-driven decode (the inference hot path).
+    let table = DecodeTable::new(fmt);
+    bench.run(&format!("table decode {fmt} ×{N}"), || {
+        for &x in &a {
+            black_box(table.get(x));
+        }
+    });
+
+    println!("\n== summary (ops/s) ==");
+    for r in bench.results() {
+        println!("{:<44} {:>14.0}", r.name, r.ops_per_sec(N as f64));
+    }
+}

@@ -1,0 +1,160 @@
+//! Micro-benchmark harness (criterion is unavailable offline — see
+//! DESIGN.md §5). Provides warmup, calibrated iteration counts, and
+//! mean/p50/p99 reporting, which is all the paper's tables need.
+
+use std::hint::black_box as bb;
+use std::time::{Duration, Instant};
+
+/// Re-export of `std::hint::black_box` for benchmark bodies.
+pub fn black_box<T>(x: T) -> T {
+    bb(x)
+}
+
+/// One benchmark's statistics.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// Benchmark id.
+    pub name: String,
+    /// Mean wall time per iteration.
+    pub mean: Duration,
+    /// Median per-sample time.
+    pub p50: Duration,
+    /// 99th percentile per-sample time.
+    pub p99: Duration,
+    /// Iterations per sample used.
+    pub iters_per_sample: u64,
+    /// Number of samples.
+    pub samples: usize,
+}
+
+impl BenchResult {
+    /// Throughput in ops/s given `ops` operations per iteration.
+    pub fn ops_per_sec(&self, ops: f64) -> f64 {
+        ops / self.mean.as_secs_f64()
+    }
+}
+
+impl std::fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<44} mean {:>12?}  p50 {:>12?}  p99 {:>12?}  ({} samples × {} iters)",
+            self.name, self.mean, self.p50, self.p99, self.samples, self.iters_per_sample
+        )
+    }
+}
+
+/// Benchmark runner with a total time budget per benchmark.
+pub struct Bench {
+    /// Warmup duration before measurement.
+    pub warmup: Duration,
+    /// Measurement budget.
+    pub budget: Duration,
+    /// Number of samples to split the budget into.
+    pub samples: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Bench {
+    /// Default: 0.2 s warmup, 1 s measurement, 20 samples.
+    pub fn new() -> Self {
+        // Honor PLAM_BENCH_FAST=1 for CI-ish quick runs.
+        let fast = std::env::var("PLAM_BENCH_FAST").is_ok();
+        Bench {
+            warmup: Duration::from_millis(if fast { 20 } else { 200 }),
+            budget: Duration::from_millis(if fast { 100 } else { 1000 }),
+            samples: 20,
+            results: vec![],
+        }
+    }
+
+    /// Run one benchmark: `f` is the measured body.
+    pub fn run<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // Warmup + calibration: find iters such that one sample ≈
+        // budget/samples.
+        let mut iters = 1u64;
+        let warm_end = Instant::now() + self.warmup;
+        let mut t = Instant::now();
+        let mut one = Duration::from_nanos(1);
+        while Instant::now() < warm_end {
+            f();
+            one = t.elapsed().max(Duration::from_nanos(1));
+            t = Instant::now();
+        }
+        let per_sample = self.budget / self.samples as u32;
+        if one < per_sample {
+            iters = (per_sample.as_nanos() / one.as_nanos().max(1)) as u64;
+            iters = iters.clamp(1, 1_000_000_000);
+        }
+
+        // Measurement.
+        let mut sample_times = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            sample_times.push(t0.elapsed() / iters as u32);
+        }
+        sample_times.sort();
+        let mean_nanos: u128 =
+            sample_times.iter().map(|d| d.as_nanos()).sum::<u128>() / self.samples as u128;
+        let result = BenchResult {
+            name: name.to_string(),
+            mean: Duration::from_nanos(mean_nanos as u64),
+            p50: sample_times[self.samples / 2],
+            p99: sample_times[(self.samples - 1).min(self.samples * 99 / 100)],
+            iters_per_sample: iters,
+            samples: self.samples,
+        };
+        println!("{result}");
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    /// All results so far.
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_plausible() {
+        let mut b = Bench {
+            warmup: Duration::from_millis(5),
+            budget: Duration::from_millis(20),
+            samples: 5,
+            results: vec![],
+        };
+        let mut acc = 0u64;
+        let r = b.run("noop-ish", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(r.mean.as_nanos() > 0);
+        assert!(r.mean < Duration::from_millis(1));
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn ops_per_sec_scales() {
+        let r = BenchResult {
+            name: "x".into(),
+            mean: Duration::from_micros(10),
+            p50: Duration::from_micros(10),
+            p99: Duration::from_micros(12),
+            iters_per_sample: 1,
+            samples: 1,
+        };
+        assert!((r.ops_per_sec(100.0) - 1e7).abs() < 1.0);
+    }
+}

@@ -1,0 +1,187 @@
+//! Inference backends: where a batch of requests actually executes.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::nn::{ArithMode, Model, PreparedModel, Tensor};
+use crate::runtime::ThreadedExecutable;
+
+/// Anything that can run a batch of flat-f32 inputs to flat-f32 outputs.
+pub trait InferenceBackend: Send + Sync {
+    /// Flat input length of one sample.
+    fn input_len(&self) -> usize;
+    /// Flat output length of one sample.
+    fn output_len(&self) -> usize;
+    /// Largest batch the backend accepts at once.
+    fn max_batch(&self) -> usize;
+    /// Run a batch. `inputs.len() <= max_batch()`.
+    fn infer_batch(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>>;
+    /// Human-readable description (for logs and the router table).
+    fn describe(&self) -> String;
+}
+
+/// Pure-Rust posit inference engine backend (any arithmetic mode).
+/// Weights are pre-encoded once at registration (perf pass).
+pub struct NnBackend {
+    model: PreparedModel,
+    out_len: usize,
+}
+
+impl NnBackend {
+    /// Wrap a model + mode (weights encoded here, once).
+    pub fn new(model: Model, mode: ArithMode) -> Self {
+        let out_len = {
+            let x = Tensor::zeros(&model.input_shape);
+            model.forward(&x, &ArithMode::float32()).len()
+        };
+        NnBackend {
+            model: PreparedModel::new(&model, mode),
+            out_len,
+        }
+    }
+}
+
+impl InferenceBackend for NnBackend {
+    fn input_len(&self) -> usize {
+        self.model.input_shape.iter().product()
+    }
+
+    fn output_len(&self) -> usize {
+        self.out_len
+    }
+
+    fn max_batch(&self) -> usize {
+        64
+    }
+
+    fn infer_batch(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let mut out = Vec::with_capacity(inputs.len());
+        for data in inputs {
+            if data.len() != self.input_len() {
+                bail!(
+                    "input length {} != expected {}",
+                    data.len(),
+                    self.input_len()
+                );
+            }
+            let x = Tensor::from_vec(&self.model.input_shape, data.clone());
+            out.push(self.model.forward(&x).data);
+        }
+        Ok(out)
+    }
+
+    fn describe(&self) -> String {
+        format!("nn:{}", self.model.name)
+    }
+}
+
+/// PJRT backend: a fixed-batch AOT artifact (L1 Pallas kernel inside an
+/// L2 JAX graph). Partial batches are zero-padded to the artifact's
+/// static batch dimension. The PJRT stack is thread-confined inside
+/// [`ThreadedExecutable`], so this backend is freely `Send + Sync`.
+pub struct PjrtBackend {
+    exe: ThreadedExecutable,
+    batch: usize,
+    in_len: usize,
+    out_len: usize,
+    name: String,
+}
+
+impl PjrtBackend {
+    /// Load an artifact compiled for `[batch, in_len] → [batch, out_len]`.
+    pub fn load(path: &Path, batch: usize, in_len: usize, out_len: usize) -> Result<Self> {
+        let exe = ThreadedExecutable::spawn(path)?;
+        Ok(PjrtBackend {
+            exe,
+            batch,
+            in_len,
+            out_len,
+            name: path
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_else(|| "artifact".into()),
+        })
+    }
+
+    /// PJRT platform string (owner-thread report).
+    pub fn platform(&self) -> &str {
+        &self.exe.platform
+    }
+}
+
+impl InferenceBackend for PjrtBackend {
+    fn input_len(&self) -> usize {
+        self.in_len
+    }
+
+    fn output_len(&self) -> usize {
+        self.out_len
+    }
+
+    fn max_batch(&self) -> usize {
+        self.batch
+    }
+
+    fn infer_batch(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        if inputs.len() > self.batch {
+            bail!("batch {} > artifact batch {}", inputs.len(), self.batch);
+        }
+        // Zero-pad to the static batch dimension.
+        let mut flat = vec![0f32; self.batch * self.in_len];
+        for (i, x) in inputs.iter().enumerate() {
+            if x.len() != self.in_len {
+                bail!("input length {} != expected {}", x.len(), self.in_len);
+            }
+            flat[i * self.in_len..(i + 1) * self.in_len].copy_from_slice(x);
+        }
+        let outs = self
+            .exe
+            .run_f32(&[(&[self.batch, self.in_len], &flat)])?;
+        let y = &outs[0];
+        if y.len() != self.batch * self.out_len {
+            bail!(
+                "artifact output {} != batch {} × out {}",
+                y.len(),
+                self.batch,
+                self.out_len
+            );
+        }
+        Ok(inputs
+            .iter()
+            .enumerate()
+            .map(|(i, _)| y[i * self.out_len..(i + 1) * self.out_len].to_vec())
+            .collect())
+    }
+
+    fn describe(&self) -> String {
+        format!("pjrt:{}[batch={}]", self.name, self.batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::ModelKind;
+    use crate::prng::Rng;
+
+    #[test]
+    fn nn_backend_runs_batches() {
+        let mut rng = Rng::new(1);
+        let model = Model::init(ModelKind::MlpIsolet, &mut rng);
+        let be = NnBackend::new(model, ArithMode::float32());
+        assert_eq!(be.input_len(), 617);
+        assert_eq!(be.output_len(), 26);
+        let inputs: Vec<Vec<f32>> = (0..3).map(|i| vec![i as f32 * 0.01; 617]).collect();
+        let out = be.infer_batch(&inputs).unwrap();
+        assert_eq!(out.len(), 3);
+        assert!(out.iter().all(|o| o.len() == 26));
+    }
+
+    #[test]
+    fn nn_backend_rejects_bad_length() {
+        let model = Model::new(ModelKind::MlpIsolet);
+        let be = NnBackend::new(model, ArithMode::float32());
+        assert!(be.infer_batch(&[vec![0.0; 5]]).is_err());
+    }
+}

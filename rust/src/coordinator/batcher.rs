@@ -1,0 +1,270 @@
+//! Dynamic batcher: coalesce concurrent single-sample requests into
+//! backend batches under a size/deadline policy (the same policy shape
+//! as vLLM's router: fire when the batch is full OR the oldest request
+//! has waited `max_wait`).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::backend::InferenceBackend;
+use super::metrics::Metrics;
+
+/// Batching policy.
+#[derive(Debug, Clone, Copy)]
+pub struct BatcherConfig {
+    /// Fire a batch as soon as it reaches this many requests (clamped to
+    /// the backend's `max_batch`).
+    pub max_batch: usize,
+    /// Fire a non-empty batch once its oldest request has waited this
+    /// long.
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            max_batch: 16,
+            max_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+/// One queued request.
+struct Pending {
+    input: Vec<f32>,
+    enqueued: Instant,
+    reply: Sender<Result<Vec<f32>>>,
+}
+
+/// Handle for submitting requests to a batching worker.
+pub struct Batcher {
+    tx: Sender<Pending>,
+    shutdown: Arc<AtomicBool>,
+    worker: Mutex<Option<JoinHandle<()>>>,
+    /// Shared metrics (exported to the server's status endpoint).
+    pub metrics: Arc<Metrics>,
+}
+
+impl Batcher {
+    /// Spawn the batching worker for a backend.
+    pub fn spawn(backend: Arc<dyn InferenceBackend>, cfg: BatcherConfig) -> Arc<Self> {
+        let (tx, rx) = channel::<Pending>();
+        let metrics = Arc::new(Metrics::new());
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let worker = {
+            let metrics = metrics.clone();
+            let shutdown = shutdown.clone();
+            let max_batch = cfg.max_batch.min(backend.max_batch()).max(1);
+            std::thread::Builder::new()
+                .name("plam-batcher".into())
+                .spawn(move || worker_loop(rx, backend, max_batch, cfg.max_wait, metrics, shutdown))
+                .expect("spawn batcher")
+        };
+        Arc::new(Batcher {
+            tx,
+            shutdown,
+            worker: Mutex::new(Some(worker)),
+            metrics,
+        })
+    }
+
+    /// Submit one request and block for its result.
+    pub fn infer(&self, input: Vec<f32>) -> Result<Vec<f32>> {
+        let start = Instant::now();
+        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        let (rtx, rrx) = channel();
+        self.tx
+            .send(Pending {
+                input,
+                enqueued: start,
+                reply: rtx,
+            })
+            .map_err(|_| anyhow::anyhow!("batcher shut down"))?;
+        let out = rrx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("batcher dropped request"))?;
+        match &out {
+            Ok(_) => self.metrics.record_latency(start.elapsed()),
+            Err(_) => {
+                self.metrics.failed.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        out
+    }
+
+    /// Stop the worker (in-flight requests finish first).
+    pub fn shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(h) = self.worker.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(
+    rx: Receiver<Pending>,
+    backend: Arc<dyn InferenceBackend>,
+    max_batch: usize,
+    max_wait: Duration,
+    metrics: Arc<Metrics>,
+    shutdown: Arc<AtomicBool>,
+) {
+    let mut queue: Vec<Pending> = Vec::with_capacity(max_batch);
+    loop {
+        // Phase 1: block for the first request (with a shutdown poll).
+        if queue.is_empty() {
+            match rx.recv_timeout(Duration::from_millis(50)) {
+                Ok(p) => queue.push(p),
+                Err(RecvTimeoutError::Timeout) => {
+                    if shutdown.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    continue;
+                }
+                Err(RecvTimeoutError::Disconnected) => return,
+            }
+        }
+        // Phase 2: top up until full or the oldest request's deadline.
+        let deadline = queue[0].enqueued + max_wait;
+        while queue.len() < max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(p) => queue.push(p),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        // Phase 3: execute and scatter results.
+        let batch: Vec<Pending> = queue.drain(..).collect();
+        let inputs: Vec<Vec<f32>> = batch.iter().map(|p| p.input.clone()).collect();
+        metrics.record_batch(inputs.len());
+        match backend.infer_batch(&inputs) {
+            Ok(outputs) => {
+                for (p, out) in batch.into_iter().zip(outputs.into_iter()) {
+                    let _ = p.reply.send(Ok(out));
+                }
+            }
+            Err(e) => {
+                // Batch-level failure: retry each request alone so one
+                // malformed request cannot poison its batch peers.
+                for p in batch {
+                    let r = backend
+                        .infer_batch(std::slice::from_ref(&p.input))
+                        .map(|mut v| v.remove(0));
+                    let _ = p.reply.send(r.map_err(|se| se.context(e.to_string())));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use anyhow::bail;
+
+    /// Test double: records batch sizes, doubles each input.
+    struct EchoBackend {
+        fail_on_negative: bool,
+    }
+
+    impl InferenceBackend for EchoBackend {
+        fn input_len(&self) -> usize {
+            2
+        }
+        fn output_len(&self) -> usize {
+            2
+        }
+        fn max_batch(&self) -> usize {
+            8
+        }
+        fn infer_batch(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+            if self.fail_on_negative && inputs.iter().any(|x| x[0] < 0.0) {
+                bail!("negative input");
+            }
+            Ok(inputs
+                .iter()
+                .map(|x| x.iter().map(|v| v * 2.0).collect())
+                .collect())
+        }
+        fn describe(&self) -> String {
+            "echo".into()
+        }
+    }
+
+    #[test]
+    fn single_request_round_trips() {
+        let b = Batcher::spawn(
+            Arc::new(EchoBackend {
+                fail_on_negative: false,
+            }),
+            BatcherConfig::default(),
+        );
+        let out = b.infer(vec![1.0, 2.0]).unwrap();
+        assert_eq!(out, vec![2.0, 4.0]);
+        b.shutdown();
+    }
+
+    #[test]
+    fn concurrent_requests_get_batched() {
+        let b = Batcher::spawn(
+            Arc::new(EchoBackend {
+                fail_on_negative: false,
+            }),
+            BatcherConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(20),
+            },
+        );
+        let mut handles = vec![];
+        for i in 0..16 {
+            let b2 = b.clone();
+            handles.push(std::thread::spawn(move || {
+                b2.infer(vec![i as f32, 0.0]).unwrap()
+            }));
+        }
+        for (i, h) in handles.into_iter().enumerate() {
+            assert_eq!(h.join().unwrap()[0], i as f32 * 2.0);
+        }
+        // With 16 concurrent requests and a 20 ms window, far fewer than
+        // 16 batches should have fired.
+        let batches = b.metrics.batches.load(Ordering::Relaxed);
+        assert!(batches < 16, "batches={batches}");
+        assert!(b.metrics.mean_batch_size() > 1.0);
+        b.shutdown();
+    }
+
+    #[test]
+    fn failed_batch_degrades_per_request() {
+        let b = Batcher::spawn(
+            Arc::new(EchoBackend {
+                fail_on_negative: true,
+            }),
+            BatcherConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(30),
+            },
+        );
+        let good = {
+            let b = b.clone();
+            std::thread::spawn(move || b.infer(vec![1.0, 1.0]))
+        };
+        let bad = {
+            let b = b.clone();
+            std::thread::spawn(move || b.infer(vec![-1.0, 1.0]))
+        };
+        // The good request must still succeed even if batched with the
+        // poisoned one.
+        assert_eq!(good.join().unwrap().unwrap(), vec![2.0, 2.0]);
+        assert!(bad.join().unwrap().is_err());
+        b.shutdown();
+    }
+}

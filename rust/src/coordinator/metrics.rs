@@ -1,0 +1,117 @@
+//! Service metrics: request counters + latency reservoir.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Lock-light metrics registry shared across worker threads.
+#[derive(Default)]
+pub struct Metrics {
+    /// Requests accepted.
+    pub requests: AtomicU64,
+    /// Requests completed successfully.
+    pub completed: AtomicU64,
+    /// Requests failed.
+    pub failed: AtomicU64,
+    /// Batches executed.
+    pub batches: AtomicU64,
+    /// Total samples across all executed batches.
+    pub batched_samples: AtomicU64,
+    /// Latency samples (µs), bounded reservoir.
+    latencies_us: Mutex<Vec<u64>>,
+}
+
+/// Reservoir cap: keeps percentile math O(small) on long runs.
+const RESERVOIR: usize = 65_536;
+
+impl Metrics {
+    /// Fresh registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a completed request's end-to-end latency.
+    pub fn record_latency(&self, d: Duration) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        let mut l = self.latencies_us.lock().unwrap();
+        if l.len() >= RESERVOIR {
+            // Replace a pseudo-random slot (cheap decimation).
+            let idx = (d.as_micros() as usize).wrapping_mul(2654435761) % RESERVOIR;
+            l[idx] = d.as_micros() as u64;
+        } else {
+            l.push(d.as_micros() as u64);
+        }
+    }
+
+    /// Record an executed batch of `n` samples.
+    pub fn record_batch(&self, n: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_samples.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    /// Latency percentile in µs (0.0–1.0), or None if no samples.
+    pub fn latency_percentile_us(&self, p: f64) -> Option<u64> {
+        let mut l = self.latencies_us.lock().unwrap().clone();
+        if l.is_empty() {
+            return None;
+        }
+        l.sort_unstable();
+        let idx = ((l.len() - 1) as f64 * p.clamp(0.0, 1.0)).round() as usize;
+        Some(l[idx])
+    }
+
+    /// Mean executed batch size.
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            0.0
+        } else {
+            self.batched_samples.load(Ordering::Relaxed) as f64 / b as f64
+        }
+    }
+
+    /// One-line human-readable summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} completed={} failed={} batches={} mean_batch={:.2} p50={}µs p99={}µs",
+            self.requests.load(Ordering::Relaxed),
+            self.completed.load(Ordering::Relaxed),
+            self.failed.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.mean_batch_size(),
+            self.latency_percentile_us(0.5).unwrap_or(0),
+            self.latency_percentile_us(0.99).unwrap_or(0),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles() {
+        let m = Metrics::new();
+        for i in 1..=100u64 {
+            m.record_latency(Duration::from_micros(i));
+        }
+        assert_eq!(m.latency_percentile_us(0.0), Some(1));
+        assert_eq!(m.latency_percentile_us(1.0), Some(100));
+        let p50 = m.latency_percentile_us(0.5).unwrap();
+        assert!((49..=51).contains(&p50), "p50={p50}");
+    }
+
+    #[test]
+    fn batch_stats() {
+        let m = Metrics::new();
+        m.record_batch(4);
+        m.record_batch(8);
+        assert!((m.mean_batch_size() - 6.0).abs() < 1e-9);
+        assert!(m.summary().contains("mean_batch=6.00"));
+    }
+
+    #[test]
+    fn empty_percentile_is_none() {
+        assert_eq!(Metrics::new().latency_percentile_us(0.5), None);
+    }
+}

@@ -1,0 +1,24 @@
+//! L3 coordinator: a batched posit-DNN inference service.
+//!
+//! The paper's contribution lives in the numeric format (L1/L2), so the
+//! coordinator is deliberately thin but real: a request [`router`]
+//! dispatches named models to backends, a dynamic [`batcher`] coalesces
+//! concurrent requests up to a batch size / deadline (vLLM-router
+//! style), [`server`] exposes the service over TCP with a compact binary
+//! protocol, and [`metrics`] tracks throughput and latency percentiles.
+//! Backends are either the pure-Rust posit engine ([`backend::NnBackend`])
+//! or an AOT-compiled PJRT artifact ([`backend::PjrtBackend`]) — Python
+//! is never on the request path.
+
+pub mod backend;
+pub mod batcher;
+pub mod metrics;
+pub mod router;
+pub mod server;
+pub mod wire;
+
+pub use backend::{InferenceBackend, NnBackend, PjrtBackend};
+pub use batcher::{Batcher, BatcherConfig};
+pub use metrics::Metrics;
+pub use router::Router;
+pub use server::{serve, Client, ServerConfig};

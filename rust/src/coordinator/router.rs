@@ -1,0 +1,96 @@
+//! Model router: maps model names to batchers.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use super::backend::InferenceBackend;
+use super::batcher::{Batcher, BatcherConfig};
+
+/// Name → batcher registry. Each registered model gets its own batching
+/// worker, so e.g. `lenet5-plam` and `lenet5-exact` batch independently.
+pub struct Router {
+    routes: HashMap<String, Arc<Batcher>>,
+    descriptions: HashMap<String, String>,
+}
+
+impl Router {
+    /// Empty router.
+    pub fn new() -> Self {
+        Router {
+            routes: HashMap::new(),
+            descriptions: HashMap::new(),
+        }
+    }
+
+    /// Register a backend under a model name.
+    pub fn register(&mut self, name: &str, backend: Arc<dyn InferenceBackend>, cfg: BatcherConfig) {
+        self.descriptions.insert(name.into(), backend.describe());
+        self.routes.insert(name.into(), Batcher::spawn(backend, cfg));
+    }
+
+    /// Look up a model's batcher.
+    pub fn get(&self, name: &str) -> Result<&Arc<Batcher>> {
+        match self.routes.get(name) {
+            Some(b) => Ok(b),
+            None => bail!(
+                "unknown model '{name}' (registered: {})",
+                self.model_names().join(", ")
+            ),
+        }
+    }
+
+    /// Registered model names (sorted).
+    pub fn model_names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.routes.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Routing table for logs: name → backend description.
+    pub fn table(&self) -> String {
+        let mut s = String::new();
+        for name in self.model_names() {
+            s.push_str(&format!("  {name} -> {}\n", self.descriptions[&name]));
+        }
+        s
+    }
+
+    /// Shut down all batchers.
+    pub fn shutdown(&self) {
+        for b in self.routes.values() {
+            b.shutdown();
+        }
+    }
+}
+
+impl Default for Router {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::NnBackend;
+    use crate::nn::{ArithMode, Model, ModelKind};
+
+    #[test]
+    fn register_route_and_infer() {
+        let mut r = Router::new();
+        let model = Model::new(ModelKind::MlpIsolet);
+        r.register(
+            "isolet-f32",
+            Arc::new(NnBackend::new(model, ArithMode::float32())),
+            BatcherConfig::default(),
+        );
+        assert_eq!(r.model_names(), vec!["isolet-f32"]);
+        let out = r.get("isolet-f32").unwrap().infer(vec![0.0; 617]).unwrap();
+        assert_eq!(out.len(), 26);
+        assert!(r.get("nope").is_err());
+        assert!(r.table().contains("isolet-f32"));
+        r.shutdown();
+    }
+}

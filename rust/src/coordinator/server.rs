@@ -1,0 +1,212 @@
+//! TCP inference server + client: thread-per-connection over the
+//! [`super::wire`] protocol, requests funneled through the router's
+//! dynamic batchers. (std::net + threads — tokio is unavailable offline;
+//! see DESIGN.md §5 — and a thread pool is entirely adequate for the
+//! request rates the experiments drive.)
+
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::router::Router;
+use super::wire;
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Bind address, e.g. `127.0.0.1:7070`. Port 0 picks a free port.
+    pub addr: String,
+}
+
+/// Handle to a running server.
+pub struct ServerHandle {
+    /// The actually bound address (resolves port 0).
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+    router: Arc<Router>,
+}
+
+impl ServerHandle {
+    /// Request shutdown and join the acceptor.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Poke the acceptor loose from accept().
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+        self.router.shutdown();
+    }
+
+    /// The shared router (for metric inspection).
+    pub fn router(&self) -> &Arc<Router> {
+        &self.router
+    }
+}
+
+/// Start serving a router over TCP. Returns once the socket is bound.
+pub fn serve(router: Router, cfg: &ServerConfig) -> Result<ServerHandle> {
+    let listener = TcpListener::bind(&cfg.addr).with_context(|| format!("bind {}", cfg.addr))?;
+    let addr = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let router = Arc::new(router);
+
+    let accept_thread = {
+        let stop = stop.clone();
+        let router = router.clone();
+        std::thread::Builder::new()
+            .name("plam-accept".into())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    match conn {
+                        Ok(stream) => {
+                            let router = router.clone();
+                            let _ = std::thread::Builder::new()
+                                .name("plam-conn".into())
+                                .spawn(move || handle_connection(stream, router));
+                        }
+                        Err(_) => continue,
+                    }
+                }
+            })
+            .expect("spawn acceptor")
+    };
+
+    Ok(ServerHandle {
+        addr,
+        stop,
+        accept_thread: Some(accept_thread),
+        router,
+    })
+}
+
+/// Serve one connection: a stream of request/response pairs until EOF.
+fn handle_connection(mut stream: TcpStream, router: Arc<Router>) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+    loop {
+        let req = match wire::read_request(&mut stream) {
+            Ok(r) => r,
+            Err(_) => return, // EOF or garbage: close the connection
+        };
+        let result = router
+            .get(&req.model)
+            .and_then(|b| b.infer(req.input));
+        let ok = match result {
+            Ok(out) => wire::write_ok(&mut stream, &out),
+            Err(e) => wire::write_err(&mut stream, &format!("{e:#}")),
+        };
+        if ok.is_err() {
+            return;
+        }
+    }
+}
+
+/// Blocking client for the inference service.
+pub struct Client {
+    stream: TcpStream,
+}
+
+impl Client {
+    /// Connect to a server.
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<Self> {
+        let stream = TcpStream::connect(addr).context("connect")?;
+        stream.set_nodelay(true)?;
+        Ok(Client { stream })
+    }
+
+    /// One inference round trip.
+    pub fn infer(&mut self, model: &str, input: &[f32]) -> Result<Vec<f32>> {
+        wire::write_request(
+            &mut self.stream,
+            &wire::Request {
+                model: model.into(),
+                input: input.to_vec(),
+            },
+        )?;
+        match wire::read_response(&mut self.stream)? {
+            Ok(out) => Ok(out),
+            Err(msg) => anyhow::bail!("server error: {msg}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::NnBackend;
+    use crate::coordinator::batcher::BatcherConfig;
+    use crate::nn::{ArithMode, Model, ModelKind};
+
+    fn test_server() -> ServerHandle {
+        let mut router = Router::new();
+        router.register(
+            "isolet",
+            Arc::new(NnBackend::new(
+                Model::new(ModelKind::MlpIsolet),
+                ArithMode::float32(),
+            )),
+            BatcherConfig::default(),
+        );
+        serve(
+            router,
+            &ServerConfig {
+                addr: "127.0.0.1:0".into(),
+            },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn round_trip_over_tcp() {
+        let h = test_server();
+        let mut c = Client::connect(h.addr).unwrap();
+        let out = c.infer("isolet", &vec![0.1; 617]).unwrap();
+        assert_eq!(out.len(), 26);
+        // Second request on the same connection.
+        let out2 = c.infer("isolet", &vec![0.2; 617]).unwrap();
+        assert_eq!(out2.len(), 26);
+        h.shutdown();
+    }
+
+    #[test]
+    fn unknown_model_is_an_error_response() {
+        let h = test_server();
+        let mut c = Client::connect(h.addr).unwrap();
+        let err = c.infer("nope", &[0.0; 4]).unwrap_err();
+        assert!(err.to_string().contains("unknown model"), "{err}");
+        h.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let h = test_server();
+        let addr = h.addr;
+        let mut joins = vec![];
+        for _ in 0..8 {
+            joins.push(std::thread::spawn(move || {
+                let mut c = Client::connect(addr).unwrap();
+                for _ in 0..4 {
+                    let out = c.infer("isolet", &vec![0.05; 617]).unwrap();
+                    assert_eq!(out.len(), 26);
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        let m = &h.router().get("isolet").unwrap().metrics;
+        assert_eq!(
+            m.completed.load(std::sync::atomic::Ordering::Relaxed),
+            32
+        );
+        h.shutdown();
+    }
+}

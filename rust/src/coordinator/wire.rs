@@ -1,0 +1,162 @@
+//! Wire protocol for the inference service (little-endian binary).
+//!
+//! Request:  magic `PLRQ` | name_len u32 | name utf-8 | count u32 | f32×count
+//! Response: magic `PLRS` | status u32 (0 ok) | count u32 | payload
+//!           (f32×count on ok, utf-8 error message bytes on error)
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+/// Maximum accepted payload elements (sanity bound against garbage).
+const MAX_COUNT: u32 = 16 * 1024 * 1024;
+
+/// A parsed inference request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    pub model: String,
+    pub input: Vec<f32>,
+}
+
+/// Serialise a request.
+pub fn write_request(w: &mut impl Write, req: &Request) -> Result<()> {
+    w.write_all(b"PLRQ")?;
+    w.write_all(&(req.model.len() as u32).to_le_bytes())?;
+    w.write_all(req.model.as_bytes())?;
+    w.write_all(&(req.input.len() as u32).to_le_bytes())?;
+    for v in &req.input {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Parse a request.
+pub fn read_request(r: &mut impl Read) -> Result<Request> {
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic).context("read request magic")?;
+    if &magic != b"PLRQ" {
+        bail!("bad request magic {magic:?}");
+    }
+    let name_len = read_u32(r)?;
+    if name_len > 4096 {
+        bail!("model name too long: {name_len}");
+    }
+    let mut name = vec![0u8; name_len as usize];
+    r.read_exact(&mut name)?;
+    let model = String::from_utf8(name).context("model name utf-8")?;
+    let count = read_u32(r)?;
+    if count > MAX_COUNT {
+        bail!("input too large: {count}");
+    }
+    let input = read_f32s(r, count as usize)?;
+    Ok(Request { model, input })
+}
+
+/// Serialise a success response.
+pub fn write_ok(w: &mut impl Write, output: &[f32]) -> Result<()> {
+    w.write_all(b"PLRS")?;
+    w.write_all(&0u32.to_le_bytes())?;
+    w.write_all(&(output.len() as u32).to_le_bytes())?;
+    for v in output {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Serialise an error response.
+pub fn write_err(w: &mut impl Write, msg: &str) -> Result<()> {
+    w.write_all(b"PLRS")?;
+    w.write_all(&1u32.to_le_bytes())?;
+    w.write_all(&(msg.len() as u32).to_le_bytes())?;
+    w.write_all(msg.as_bytes())?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Parse a response into `Ok(outputs)` / `Err(server message)`.
+pub fn read_response(r: &mut impl Read) -> Result<std::result::Result<Vec<f32>, String>> {
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic).context("read response magic")?;
+    if &magic != b"PLRS" {
+        bail!("bad response magic {magic:?}");
+    }
+    let status = read_u32(r)?;
+    let count = read_u32(r)?;
+    if count > MAX_COUNT {
+        bail!("response too large: {count}");
+    }
+    if status == 0 {
+        Ok(Ok(read_f32s(r, count as usize)?))
+    } else {
+        let mut msg = vec![0u8; count as usize];
+        r.read_exact(&mut msg)?;
+        Ok(Err(String::from_utf8_lossy(&msg).into_owned()))
+    }
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_f32s(r: &mut impl Read, n: usize) -> Result<Vec<f32>> {
+    let mut buf = vec![0u8; n * 4];
+    r.read_exact(&mut buf)?;
+    Ok(buf
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_round_trip() {
+        let req = Request {
+            model: "lenet5-plam".into(),
+            input: vec![1.0, -2.5, 0.0],
+        };
+        let mut buf = vec![];
+        write_request(&mut buf, &req).unwrap();
+        let got = read_request(&mut buf.as_slice()).unwrap();
+        assert_eq!(got, req);
+    }
+
+    #[test]
+    fn ok_response_round_trip() {
+        let mut buf = vec![];
+        write_ok(&mut buf, &[0.25, 0.75]).unwrap();
+        let got = read_response(&mut buf.as_slice()).unwrap();
+        assert_eq!(got, Ok(vec![0.25, 0.75]));
+    }
+
+    #[test]
+    fn err_response_round_trip() {
+        let mut buf = vec![];
+        write_err(&mut buf, "unknown model").unwrap();
+        let got = read_response(&mut buf.as_slice()).unwrap();
+        assert_eq!(got, Err("unknown model".into()));
+    }
+
+    #[test]
+    fn rejects_garbage_magic() {
+        let buf = b"XXXX\x00\x00\x00\x00".to_vec();
+        assert!(read_request(&mut buf.as_slice()).is_err());
+        assert!(read_response(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn rejects_oversized_count() {
+        let mut buf = vec![];
+        buf.extend_from_slice(b"PLRQ");
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        buf.push(b'm');
+        buf.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(read_request(&mut buf.as_slice()).is_err());
+    }
+}

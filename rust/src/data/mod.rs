@@ -1,0 +1,6 @@
+//! Synthetic dataset generators (DESIGN.md §5 substitution for MNIST /
+//! SVHN / CIFAR-10 / ISOLET / UCI HAR).
+
+pub mod synth;
+
+pub use synth::{Dataset, DatasetKind};

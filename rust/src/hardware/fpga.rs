@@ -1,0 +1,105 @@
+//! FPGA synthesis model → the paper's Table III (Zynq-7000 stand-in).
+
+use super::designs::table3_designs;
+
+/// One Table III row: our model next to the paper's published numbers.
+#[derive(Debug, Clone)]
+pub struct Table3Row {
+    pub design: String,
+    pub model_luts: f64,
+    pub model_dsps: u32,
+    pub paper_luts: f64,
+    pub paper_dsps: u32,
+}
+
+/// Regenerate Table III for one bit-width (16 or 32).
+pub fn table3(bits: u32) -> Vec<Table3Row> {
+    table3_designs(bits)
+        .into_iter()
+        .map(|(netlist, paper_luts, paper_dsps)| {
+            let r = netlist.synth();
+            Table3Row {
+                design: netlist.name,
+                model_luts: r.luts,
+                model_dsps: r.dsps,
+                paper_luts,
+                paper_dsps,
+            }
+        })
+        .collect()
+}
+
+/// Format Table III as an aligned text table.
+pub fn render_table3() -> String {
+    let mut s = String::new();
+    s.push_str("Table III — FPGA resource utilization (model | paper)\n");
+    s.push_str(&format!(
+        "{:<22} {:>10} {:>5} | {:>10} {:>5}   {:>10} {:>5} | {:>10} {:>5}\n",
+        "design", "LUT16", "DSP", "paper", "DSP", "LUT32", "DSP", "paper", "DSP"
+    ));
+    let t16 = table3(16);
+    let t32 = table3(32);
+    for (a, b) in t16.iter().zip(t32.iter()) {
+        s.push_str(&format!(
+            "{:<22} {:>10.0} {:>5} | {:>10.0} {:>5}   {:>10.0} {:>5} | {:>10.0} {:>5}\n",
+            a.design,
+            a.model_luts,
+            a.model_dsps,
+            a.paper_luts,
+            a.paper_dsps,
+            b.model_luts,
+            b.model_dsps,
+            b.paper_luts,
+            b.paper_dsps,
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plam_row_has_fewest_luts_and_zero_dsps() {
+        for bits in [16, 32] {
+            let rows = table3(bits);
+            let plam = rows.iter().find(|r| r.design.contains("plam")).unwrap();
+            assert_eq!(plam.model_dsps, 0);
+            assert_eq!(plam.paper_dsps, 0);
+            for r in &rows {
+                if !r.design.contains("plam") {
+                    assert!(plam.model_luts < r.model_luts, "{}", r.design);
+                    assert!(r.model_dsps > 0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn model_luts_within_2x_of_paper() {
+        // The model is structural, not fitted; we require the right
+        // order of magnitude and ordering, not exact LUT counts.
+        for bits in [16, 32] {
+            for r in table3(bits) {
+                let ratio = r.model_luts / r.paper_luts;
+                assert!(
+                    (0.5..2.0).contains(&ratio),
+                    "{} {}-bit: model {} vs paper {}",
+                    r.design,
+                    bits,
+                    r.model_luts,
+                    r.paper_luts
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn render_contains_all_rows() {
+        let s = render_table3();
+        for name in ["posit-hdl", "chaurasiya", "pacogen", "uguen", "flopoco-posit", "plam"] {
+            assert!(s.contains(name), "missing {name} in:\n{s}");
+        }
+    }
+}

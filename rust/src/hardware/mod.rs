@@ -1,0 +1,30 @@
+//! Hardware cost model — the stand-in for the paper's synthesis flow.
+//!
+//! The paper's §V evaluates PLAM with Vivado 2020.1 (Zynq-7000, Table
+//! III) and Synopsys Design Compiler (TSMC 45 nm, Figs. 5–6). Neither
+//! tool can run here, so this module implements an analytical synthesis
+//! model (DESIGN.md §5): multiplier datapaths are built as component
+//! netlists ([`designs`]) from a parameterised primitive library
+//! ([`components`]) with structural FPGA-LUT / ASIC area-power-delay
+//! costs, then "synthesised" at the min-delay corner ([`netlist`],
+//! [`fpga`], [`asic`]) or against a max-delay constraint
+//! ([`asic::synth_constrained`]). The reproduced claims are relative
+//! (orderings and ratios), and they derive from structure — PLAM deletes
+//! the O(w²) partial-product array — not from fitted constants.
+
+pub mod asic;
+pub mod components;
+pub mod designs;
+pub mod fpga;
+pub mod netlist;
+pub mod report;
+
+pub use asic::{fig5, fig6, fig6_default_constraints, headline, synth_constrained, Headline, PAPER_HEADLINE};
+pub use components::Component;
+pub use designs::{
+    exact_posit_multiplier, fig5_designs, float_multiplier, plam_multiplier, table3_designs,
+    DecodeArch, Rounding,
+};
+pub use fpga::{render_table3, table3, Table3Row};
+pub use netlist::{Netlist, Stage, SynthReport};
+pub use report::{fig1_distribution, render_fig1, render_fig5, render_fig6, render_headline};

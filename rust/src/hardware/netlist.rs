@@ -1,0 +1,179 @@
+//! Netlists: named stages of components plus a critical path, with
+//! aggregate FPGA and ASIC cost reporting.
+
+use super::components::Component;
+
+/// A named pipeline stage (purely organisational — the designs are
+/// combinational, matching the paper's "without pipelining" synthesis).
+#[derive(Debug, Clone)]
+pub struct Stage {
+    /// Stage name as reported in Fig. 1-style breakdowns.
+    pub name: &'static str,
+    /// Components instantiated in this stage.
+    pub components: Vec<Component>,
+    /// Components (by index into `components`) on the design's critical
+    /// path. Stages are traversed in order; within a stage the critical
+    /// components are in series.
+    pub critical: Vec<usize>,
+}
+
+impl Stage {
+    /// New stage where `critical` indexes pick the series-delay elements.
+    pub fn new(name: &'static str, components: Vec<Component>, critical: Vec<usize>) -> Self {
+        for &i in &critical {
+            assert!(i < components.len(), "critical index out of range");
+        }
+        Stage {
+            name,
+            components,
+            critical,
+        }
+    }
+}
+
+/// A complete combinational design.
+#[derive(Debug, Clone)]
+pub struct Netlist {
+    /// Design name (used in reports).
+    pub name: String,
+    /// Ordered stages.
+    pub stages: Vec<Stage>,
+}
+
+/// Aggregate synthesis-model results for one design.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SynthReport {
+    /// FPGA LUT6 count.
+    pub luts: f64,
+    /// FPGA DSP48 slices.
+    pub dsps: u32,
+    /// ASIC cell area (µm², 45 nm).
+    pub area_um2: f64,
+    /// Dynamic power (mW at the fixed evaluation frequency).
+    pub power_mw: f64,
+    /// Critical-path delay (ns).
+    pub delay_ns: f64,
+}
+
+impl SynthReport {
+    /// Energy per operation (pJ): power × delay.
+    pub fn energy_pj(&self) -> f64 {
+        self.power_mw * self.delay_ns
+    }
+}
+
+/// Per-stage cost split (drives the Fig. 1 pie chart).
+#[derive(Debug, Clone)]
+pub struct StageCost {
+    pub name: &'static str,
+    pub luts: f64,
+    pub area_um2: f64,
+    pub power_mw: f64,
+}
+
+impl Netlist {
+    /// Total synthesis report (minimum-delay corner; see
+    /// [`super::asic::constrained`] for delay-constrained corners).
+    pub fn synth(&self) -> SynthReport {
+        let mut r = SynthReport {
+            luts: 0.0,
+            dsps: 0,
+            area_um2: 0.0,
+            power_mw: 0.0,
+            delay_ns: 0.0,
+        };
+        for s in &self.stages {
+            for c in &s.components {
+                r.luts += c.luts();
+                r.dsps += c.dsps();
+                r.area_um2 += c.area_um2();
+                r.power_mw += c.power_mw();
+            }
+            for &i in &s.critical {
+                r.delay_ns += s.components[i].delay_ns();
+            }
+        }
+        r
+    }
+
+    /// Per-stage breakdown (Fig. 1).
+    pub fn stage_costs(&self) -> Vec<StageCost> {
+        self.stages
+            .iter()
+            .map(|s| {
+                let mut c = StageCost {
+                    name: s.name,
+                    luts: 0.0,
+                    area_um2: 0.0,
+                    power_mw: 0.0,
+                };
+                for comp in &s.components {
+                    c.luts += comp.luts();
+                    c.area_um2 += comp.area_um2();
+                    c.power_mw += comp.power_mw();
+                }
+                c
+            })
+            .collect()
+    }
+
+    /// Total gate count (NAND2-equivalents).
+    pub fn gates(&self) -> f64 {
+        self.stages
+            .iter()
+            .flat_map(|s| s.components.iter())
+            .map(|c| c.gates())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Netlist {
+        Netlist {
+            name: "tiny".into(),
+            stages: vec![
+                Stage::new(
+                    "a",
+                    vec![Component::Adder { w: 8 }, Component::Mux2 { w: 8 }],
+                    vec![0],
+                ),
+                Stage::new("b", vec![Component::Lzd { w: 8 }], vec![0]),
+            ],
+        }
+    }
+
+    #[test]
+    fn totals_are_sums() {
+        let n = tiny();
+        let r = n.synth();
+        let want_luts =
+            Component::Adder { w: 8 }.luts() + Component::Mux2 { w: 8 }.luts() + Component::Lzd { w: 8 }.luts();
+        assert!((r.luts - want_luts).abs() < 1e-9);
+        let want_delay = Component::Adder { w: 8 }.delay_ns() + Component::Lzd { w: 8 }.delay_ns();
+        assert!((r.delay_ns - want_delay).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stage_costs_cover_all_stages() {
+        let n = tiny();
+        let sc = n.stage_costs();
+        assert_eq!(sc.len(), 2);
+        assert_eq!(sc[0].name, "a");
+        assert!(sc[0].luts > sc[1].luts);
+    }
+
+    #[test]
+    fn energy_is_power_times_delay() {
+        let r = tiny().synth();
+        assert!((r.energy_pj() - r.power_mw * r.delay_ns).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn critical_index_validated() {
+        Stage::new("bad", vec![Component::Mux2 { w: 4 }], vec![3]);
+    }
+}

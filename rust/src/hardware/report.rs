@@ -1,0 +1,139 @@
+//! Human-readable renderings of the hardware-model experiments
+//! (Fig. 1 breakdown, Fig. 5 bars, Fig. 6 sweeps, headline deltas).
+
+use super::asic::{fig5, fig6, fig6_default_constraints, headline, PAPER_HEADLINE};
+use super::designs::{exact_posit_multiplier, DecodeArch, Rounding};
+
+/// Fig. 1 — resource distribution of a Posit⟨32,2⟩ exact multiplier.
+/// Returns `(stage name, share of area)` summing to 1.0.
+pub fn fig1_distribution() -> Vec<(String, f64)> {
+    let d = exact_posit_multiplier("posit32-mult", 32, 2, DecodeArch::LzdOnly, Rounding::Rne, false);
+    let costs = d.stage_costs();
+    let total: f64 = costs.iter().map(|c| c.area_um2).sum();
+    // Merge the two operand decoders into one "decode" slice, as Fig. 1 does.
+    let mut merged: Vec<(String, f64)> = vec![];
+    for c in costs {
+        let name = if c.name.starts_with("decode") {
+            "decode".to_string()
+        } else {
+            c.name.to_string()
+        };
+        if let Some(e) = merged.iter_mut().find(|(n, _)| *n == name) {
+            e.1 += c.area_um2 / total;
+        } else {
+            merged.push((name, c.area_um2 / total));
+        }
+    }
+    merged
+}
+
+/// Render Fig. 1 as a text bar chart.
+pub fn render_fig1() -> String {
+    let mut s = String::from("Fig. 1 — Posit<32,2> exact multiplier resource distribution\n");
+    for (name, share) in fig1_distribution() {
+        let bar = "#".repeat((share * 60.0).round() as usize);
+        s.push_str(&format!("{:<22} {:>5.1}% {}\n", name, share * 100.0, bar));
+    }
+    s
+}
+
+/// Render Fig. 5 as a table.
+pub fn render_fig5() -> String {
+    let mut s = String::from("Fig. 5 — Posit<n,2> and float multipliers, 45 nm min-delay corner\n");
+    s.push_str(&format!(
+        "{:<6} {:<22} {:>12} {:>11} {:>10}\n",
+        "bits", "design", "area (µm²)", "power (mW)", "delay (ns)"
+    ));
+    for r in fig5() {
+        s.push_str(&format!(
+            "{:<6} {:<22} {:>12.1} {:>11.3} {:>10.3}\n",
+            r.bits, r.design, r.report.area_um2, r.report.power_mw, r.report.delay_ns
+        ));
+    }
+    s
+}
+
+/// Render Fig. 6 as a table ('*' marks constraint violations, as in the
+/// paper).
+pub fn render_fig6() -> String {
+    let mut s = String::from("Fig. 6 — time-constrained synthesis (45 nm model)\n");
+    for bits in [16u32, 32] {
+        s.push_str(&format!("  -- {bits}-bit designs --\n"));
+        s.push_str(&format!(
+            "{:<22} {:>9} {:>12} {:>11} {:>11}\n",
+            "design", "Tmax(ns)", "area (µm²)", "power (mW)", "energy (pJ)"
+        ));
+        for r in fig6(bits, &fig6_default_constraints(bits)) {
+            s.push_str(&format!(
+                "{:<22} {:>9.2} {:>12.1} {:>11.3} {:>11.3}{}\n",
+                r.design,
+                r.constraint_ns,
+                r.area_um2,
+                r.power_mw,
+                r.energy_pj,
+                if r.violates { " *" } else { "" }
+            ));
+        }
+    }
+    s
+}
+
+/// Render the headline model-vs-paper comparison.
+pub fn render_headline() -> String {
+    let h = headline();
+    let p = PAPER_HEADLINE;
+    let mut s = String::from("Headline reductions: PLAM vs exact posit [16] / float32 (model | paper)\n");
+    let rows = [
+        ("area  16-bit", h.area_reduction_16, p.area_reduction_16),
+        ("power 16-bit", h.power_reduction_16, p.power_reduction_16),
+        ("area  32-bit", h.area_reduction_32, p.area_reduction_32),
+        ("power 32-bit", h.power_reduction_32, p.power_reduction_32),
+        ("delay 32-bit (vs [12])", h.delay_reduction_32, p.delay_reduction_32),
+        ("area  vs float32", h.area_vs_float32, p.area_vs_float32),
+        ("power vs float32", h.power_vs_float32, p.power_vs_float32),
+    ];
+    for (name, model, paper) in rows {
+        s.push_str(&format!(
+            "{:<24} {:>7.2}% | {:>7.2}%\n",
+            name,
+            model * 100.0,
+            paper * 100.0
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1_shares_sum_to_one() {
+        let shares = fig1_distribution();
+        let total: f64 = shares.iter().map(|(_, s)| s).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fig1_fraction_multiplier_is_largest_slice() {
+        let shares = fig1_distribution();
+        let mult = shares
+            .iter()
+            .find(|(n, _)| n == "fraction_multiplier")
+            .unwrap()
+            .1;
+        for (n, s) in &shares {
+            if n != "fraction_multiplier" {
+                assert!(mult > *s, "{n} ({s}) >= mult ({mult})");
+            }
+        }
+    }
+
+    #[test]
+    fn renders_are_nonempty() {
+        assert!(render_fig1().contains("fraction_multiplier"));
+        assert!(render_fig5().contains("plam"));
+        assert!(render_fig6().contains("*") || !render_fig6().is_empty());
+        assert!(render_headline().contains("32-bit"));
+    }
+}

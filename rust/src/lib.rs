@@ -1,0 +1,40 @@
+//! # PLAM — Posit Logarithm-Approximate Multiplier: full-system reproduction
+//!
+//! Reproduction of Murillo et al., *"PLAM: a Posit Logarithm-Approximate
+//! Multiplier for Power Efficient Posit-based DNNs"* (IEEE TETC 2021),
+//! as a deployable library:
+//!
+//! * [`posit`] — bit-exact posit arithmetic (SoftPosit-equivalent) plus
+//!   the PLAM approximate multiplier and quire accumulation;
+//! * [`hardware`] — gate/LUT-level cost model standing in for the paper's
+//!   Vivado + Synopsys DC synthesis flow (Tables III, Figs. 1/5/6);
+//! * [`nn`] — posit DNN inference engine (dense/conv/pool layers, exact
+//!   and PLAM multiply paths) — the Deep-PeNSieve-equivalent substrate;
+//! * [`data`] — synthetic dataset generators standing in for MNIST /
+//!   SVHN / CIFAR-10 / ISOLET / UCI-HAR (see DESIGN.md §5);
+//! * [`coordinator`] — batching inference server (L3);
+//! * [`runtime`] — PJRT loader for the AOT-compiled JAX/Pallas artifacts;
+//! * [`bench`] — the micro-benchmark harness used by `cargo bench`
+//!   (criterion is unavailable offline; see DESIGN.md §5).
+//!
+//! Quickstart (`no_run`: rustdoc test binaries don't inherit the
+//! workspace rpath to libxla_extension's bundled libstdc++; the same
+//! assertions run in `posit::typed::tests` and `examples/quickstart.rs`):
+//! ```no_run
+//! use plam::posit::P16E1;
+//! let a = P16E1::from_f64(1.5);
+//! let b = P16E1::from_f64(2.25);
+//! assert_eq!((a * b).to_f64(), 3.375);           // exact posit multiply
+//! let approx = a.plam_mul(b);                     // PLAM (paper Eq. 14-21)
+//! assert!((approx.to_f64() - 3.375).abs() / 3.375 < 1.0 / 9.0);
+//! ```
+
+pub mod bench;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod hardware;
+pub mod nn;
+pub mod posit;
+pub mod prng;
+pub mod runtime;

@@ -1,0 +1,250 @@
+//! `plam` — CLI for the PLAM reproduction.
+//!
+//! Subcommands:
+//!   serve          start the batched inference server
+//!   table2         reproduce Table II (accuracy across formats)
+//!   hw-report      reproduce Table III / Fig. 1 / Fig. 5 / Fig. 6
+//!   error          reproduce the §III.C error analysis
+//!   selftest       quick end-to-end smoke of every subsystem
+//!
+//! (Hand-rolled argument parsing: clap is unavailable offline, and the
+//! surface is 5 subcommands with a handful of flags.)
+
+use std::sync::Arc;
+
+use plam::coordinator::{serve, BatcherConfig, NnBackend, PjrtBackend, Router, ServerConfig};
+use plam::experiments;
+use plam::nn::{ArithMode, Model};
+use plam::posit::PositFormat;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let rest = &args[1.min(args.len())..];
+    let code = match cmd {
+        "serve" => cmd_serve(rest),
+        "table2" => cmd_table2(rest),
+        "hw-report" => cmd_hw_report(rest),
+        "error" => cmd_error(),
+        "selftest" => cmd_selftest(),
+        "help" | "--help" | "-h" => {
+            print_help();
+            0
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n");
+            print_help();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_help() {
+    println!(
+        "plam — Posit Logarithm-Approximate Multiplier reproduction
+
+USAGE: plam <command> [flags]
+
+COMMANDS:
+  serve      [--addr HOST:PORT] [--artifact PATH --batch N --in N --out N]
+             Start the batched inference server. Registers the Table I
+             models in float32 / posit<16,1> / posit<16,1>+PLAM modes;
+             optionally also a PJRT artifact backend.
+  table2     [--quick | --full]
+             Reproduce Table II (inference accuracy across formats).
+  hw-report  [--table3] [--fig1] [--fig5] [--fig6] [--headline]
+             Reproduce the hardware evaluation (all when no flag given).
+  error      Reproduce the §III.C approximation-error analysis.
+  selftest   Smoke-test every subsystem.
+"
+    );
+}
+
+/// Parse `--flag value` pairs out of an argument list.
+fn flag_value<'a>(args: &'a [String], flag: &str) -> Option<&'a str> {
+    args.iter()
+        .position(|a| a == flag)
+        .and_then(|i| args.get(i + 1))
+        .map(String::as_str)
+}
+
+fn has_flag(args: &[String], flag: &str) -> bool {
+    args.iter().any(|a| a == flag)
+}
+
+fn cmd_serve(args: &[String]) -> i32 {
+    let addr = flag_value(args, "--addr").unwrap_or("127.0.0.1:7070");
+    let mut router = Router::new();
+    let cfg = BatcherConfig::default();
+
+    // Register the ISOLET MLP in all three arithmetic modes (weights are
+    // whatever artifacts provide; fall back to random init for a demo
+    // service — accuracy experiments use `table2`).
+    let mut rng = plam::prng::Rng::new(1);
+    let kinds = [
+        (plam::data::DatasetKind::Isolet, "isolet"),
+        (plam::data::DatasetKind::UciHar, "har"),
+    ];
+    for (kind, name) in kinds {
+        let mkind = experiments::model_for(kind);
+        let mut model = Model::init(mkind, &mut rng);
+        let wpath = std::path::Path::new("artifacts/weights").join(format!("{name}.ptw"));
+        if wpath.exists() {
+            if let Ok(w) = plam::nn::loader::load_weights(&wpath) {
+                let _ = plam::nn::loader::apply_weights(&mut model, &w);
+            }
+        }
+        router.register(
+            &format!("{name}-f32"),
+            Arc::new(NnBackend::new(model.clone(), ArithMode::float32())),
+            cfg,
+        );
+        router.register(
+            &format!("{name}-posit"),
+            Arc::new(NnBackend::new(
+                model.clone(),
+                ArithMode::posit_exact(PositFormat::P16E1),
+            )),
+            cfg,
+        );
+        router.register(
+            &format!("{name}-plam"),
+            Arc::new(NnBackend::new(
+                model,
+                ArithMode::posit_plam(PositFormat::P16E1),
+            )),
+            cfg,
+        );
+    }
+
+    // Optional PJRT artifact route (the L1/L2 compiled path).
+    if let Some(artifact) = flag_value(args, "--artifact") {
+        let batch: usize = flag_value(args, "--batch").unwrap_or("8").parse().unwrap_or(8);
+        let in_len: usize = flag_value(args, "--in").unwrap_or("64").parse().unwrap_or(64);
+        let out_len: usize = flag_value(args, "--out").unwrap_or("64").parse().unwrap_or(64);
+        match PjrtBackend::load(std::path::Path::new(artifact), batch, in_len, out_len) {
+            Ok(be) => {
+                println!("loaded PJRT artifact {artifact} on {}", be.platform());
+                router.register("pjrt", Arc::new(be), cfg);
+            }
+            Err(e) => {
+                eprintln!("failed to load artifact {artifact}: {e:#}");
+                return 1;
+            }
+        }
+    }
+
+    println!("routing table:\n{}", router.table());
+    match serve(router, &ServerConfig { addr: addr.into() }) {
+        Ok(h) => {
+            println!("plam server listening on {}", h.addr);
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(60));
+                for name in h.router().model_names() {
+                    if let Ok(b) = h.router().get(&name) {
+                        println!("{name}: {}", b.metrics.summary());
+                    }
+                }
+            }
+        }
+        Err(e) => {
+            eprintln!("serve failed: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_table2(args: &[String]) -> i32 {
+    let cfg = if has_flag(args, "--full") {
+        experiments::Table2Config::full()
+    } else {
+        experiments::Table2Config::quick()
+    };
+    let rows = experiments::table2(&cfg);
+    println!("{}", experiments::render_table2(&rows));
+    0
+}
+
+fn cmd_hw_report(args: &[String]) -> i32 {
+    let all = args.is_empty();
+    if all || has_flag(args, "--table3") {
+        println!("{}", plam::hardware::render_table3());
+    }
+    if all || has_flag(args, "--fig1") {
+        println!("{}", plam::hardware::render_fig1());
+    }
+    if all || has_flag(args, "--fig5") {
+        println!("{}", plam::hardware::render_fig5());
+    }
+    if all || has_flag(args, "--fig6") {
+        println!("{}", plam::hardware::render_fig6());
+    }
+    if all || has_flag(args, "--headline") {
+        println!("{}", plam::hardware::render_headline());
+    }
+    0
+}
+
+fn cmd_error() -> i32 {
+    println!("{}", experiments::render_error_analysis());
+    0
+}
+
+fn cmd_selftest() -> i32 {
+    use plam::posit::P16E1;
+    println!("posit arithmetic:");
+    let a = P16E1::from_f64(1.5);
+    let b = P16E1::from_f64(2.25);
+    println!("  1.5 × 2.25        = {} (exact)", a * b);
+    println!("  1.5 ×̃ 2.25        = {} (PLAM)", a.plam_mul(b));
+
+    println!("hardware model headline:");
+    let h = plam::hardware::headline();
+    println!(
+        "  area -{:.1}%  power -{:.1}%  delay -{:.1}% (32-bit vs exact posit)",
+        h.area_reduction_32 * 100.0,
+        h.power_reduction_32 * 100.0,
+        h.delay_reduction_32 * 100.0
+    );
+
+    println!("inference server:");
+    let mut router = Router::new();
+    router.register(
+        "demo",
+        Arc::new(NnBackend::new(
+            Model::new(plam::nn::ModelKind::MlpIsolet),
+            ArithMode::posit_plam(PositFormat::P16E1),
+        )),
+        BatcherConfig::default(),
+    );
+    match serve(
+        router,
+        &ServerConfig {
+            addr: "127.0.0.1:0".into(),
+        },
+    ) {
+        Ok(h) => {
+            let mut c = plam::coordinator::Client::connect(h.addr).unwrap();
+            let out = c.infer("demo", &vec![0.1; 617]).unwrap();
+            println!("  demo inference over TCP: {} logits ✓", out.len());
+            h.shutdown();
+        }
+        Err(e) => {
+            eprintln!("  server failed: {e:#}");
+            return 1;
+        }
+    }
+
+    println!("PJRT runtime:");
+    match plam::runtime::Runtime::cpu() {
+        Ok(rt) => println!("  platform: {} ✓", rt.platform()),
+        Err(e) => {
+            eprintln!("  unavailable: {e:#}");
+            return 1;
+        }
+    }
+    // (Runtime::cpu() is !Send; the serving path uses ThreadedExecutable.)
+    println!("selftest OK");
+    0
+}

@@ -1,0 +1,483 @@
+//! DNN layers with switchable arithmetic: float32, exact posit, or
+//! posit + PLAM — the engine behind the paper's Table II comparison.
+//!
+//! Posit layers follow the Deep PeNSieve / Deep Positron EMAC scheme:
+//! every multiply is a posit product (exact Fig. 3 datapath or PLAM
+//! Fig. 4 datapath), and dot products accumulate in a quire with a
+//! single rounding at the end. Activations/weights are stored as f32
+//! (exact for n ≤ 16 formats) and re-encoded at layer entry.
+
+use crate::posit::tables::{DecEntry, DecodeTable, FW};
+use crate::posit::{from_f32, to_f32, FastQuire, PositFormat};
+
+use super::tensor::Tensor;
+
+/// Which multiplier the posit datapath uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MulKind {
+    /// Exact fraction product (paper Fig. 3).
+    Exact,
+    /// Logarithm-approximate product (paper Fig. 4 — PLAM).
+    Plam,
+}
+
+/// Arithmetic mode of a forward pass.
+#[derive(Clone)]
+pub enum ArithMode {
+    /// IEEE-754 binary32 reference (the paper's "Float 32-bit" column).
+    Float32,
+    /// Posit arithmetic with the given format and multiplier.
+    Posit {
+        fmt: PositFormat,
+        mul: MulKind,
+        /// Shared decode table (n ≤ 16); built once per run.
+        table: std::sync::Arc<DecodeTable>,
+    },
+}
+
+impl ArithMode {
+    /// Float32 reference mode.
+    pub fn float32() -> Self {
+        ArithMode::Float32
+    }
+
+    /// Posit mode with an exact multiplier.
+    pub fn posit_exact(fmt: PositFormat) -> Self {
+        ArithMode::Posit {
+            fmt,
+            mul: MulKind::Exact,
+            table: std::sync::Arc::new(DecodeTable::new(fmt)),
+        }
+    }
+
+    /// Posit mode with the PLAM multiplier.
+    pub fn posit_plam(fmt: PositFormat) -> Self {
+        ArithMode::Posit {
+            fmt,
+            mul: MulKind::Plam,
+            table: std::sync::Arc::new(DecodeTable::new(fmt)),
+        }
+    }
+
+    /// Short display name (used in reports).
+    pub fn name(&self) -> String {
+        match self {
+            ArithMode::Float32 => "float32".into(),
+            ArithMode::Posit { fmt, mul, .. } => match mul {
+                MulKind::Exact => format!("posit<{},{}>", fmt.n, fmt.es),
+                MulKind::Plam => format!("posit<{},{}>+PLAM", fmt.n, fmt.es),
+            },
+        }
+    }
+}
+
+/// One network layer.
+#[derive(Debug, Clone)]
+pub enum Layer {
+    /// Fully connected: `y = W·x + b`, `W: [out, in]`, `b: [out]`.
+    Dense { w: Tensor, b: Tensor },
+    /// 2-D convolution, `w: [oc, ic, kh, kw]`, `b: [oc]`, valid padding
+    /// plus `pad` zeros on each side, stride `stride`.
+    Conv2d {
+        w: Tensor,
+        b: Tensor,
+        stride: usize,
+        pad: usize,
+    },
+    /// Max pooling `k × k`, stride `stride`.
+    MaxPool2d { k: usize, stride: usize },
+    /// ReLU (sign test — identical in every arithmetic).
+    Relu,
+    /// Flatten `[c,h,w] → [c·h·w]`.
+    Flatten,
+}
+
+/// A fused dot-product engine for one arithmetic mode.
+///
+/// Inputs are pre-encoded/pre-decoded once per layer; the MAC loop then
+/// runs entirely in the decoded domain (see `DotEngine::dot`).
+pub(crate) enum DotEngine {
+    Float,
+    Posit {
+        fmt: PositFormat,
+        mul: MulKind,
+        /// Carry-free accumulator (perf pass: see posit::fast_quire).
+        quire: FastQuire,
+    },
+}
+
+impl DotEngine {
+    pub(crate) fn new(mode: &ArithMode) -> Self {
+        match mode {
+            ArithMode::Float32 => DotEngine::Float,
+            ArithMode::Posit { fmt, mul, .. } => DotEngine::Posit {
+                fmt: *fmt,
+                mul: *mul,
+                quire: FastQuire::new(*fmt),
+            },
+        }
+    }
+}
+
+/// Pre-processed operand vector: f32 for float mode, decoded posit
+/// entries for posit mode.
+pub struct Encoded {
+    pub(crate) f32s: Vec<f32>,
+    pub(crate) dec: Vec<DecEntry>,
+}
+
+/// Encode a slice of reals into a mode's operand representation.
+pub(crate) fn encode_operands(mode: &ArithMode, xs: &[f32]) -> Encoded {
+    match mode {
+        ArithMode::Float32 => Encoded {
+            f32s: xs.to_vec(),
+            dec: vec![],
+        },
+        ArithMode::Posit { fmt, table, .. } => Encoded {
+            f32s: vec![],
+            dec: xs
+                .iter()
+                .map(|&v| table.get(from_f32(*fmt, v)))
+                .collect(),
+        },
+    }
+}
+
+impl DotEngine {
+    /// `Σ_i a[i]·b[i] (+ bias)`, with the mode's multiplier and a single
+    /// final rounding (quire EMAC) in posit mode.
+    pub(crate) fn dot(&mut self, a: &Encoded, astart: usize, b: &Encoded, bstart: usize, len: usize, bias: f32) -> f32 {
+        match self {
+            DotEngine::Float => {
+                let mut acc = bias;
+                for i in 0..len {
+                    acc += a.f32s[astart + i] * b.f32s[bstart + i];
+                }
+                acc
+            }
+            DotEngine::Posit {
+                fmt,
+                mul,
+                quire,
+                ..
+            } => {
+                quire.clear();
+                let av = &a.dec[astart..astart + len];
+                let bv = &b.dec[bstart..bstart + len];
+                match mul {
+                    MulKind::Exact => {
+                        for (x, y) in av.iter().zip(bv.iter()) {
+                            quire_mac_exact(quire, fmt, x, y);
+                        }
+                    }
+                    MulKind::Plam => {
+                        for (x, y) in av.iter().zip(bv.iter()) {
+                            quire_mac_plam(quire, fmt, x, y);
+                        }
+                    }
+                }
+                if bias != 0.0 {
+                    quire.add_posit(from_f32(*fmt, bias));
+                }
+                to_f32(*fmt, quire.to_posit())
+            }
+        }
+    }
+}
+
+/// Quire MAC from pre-decoded entries, exact product.
+#[inline]
+fn quire_mac_exact(q: &mut FastQuire, fmt: &PositFormat, a: &DecEntry, b: &DecEntry) {
+    let _ = fmt;
+    if a.is_zero() || b.is_zero() {
+        return;
+    }
+    if a.is_nar() || b.is_nar() {
+        q.set_nar();
+        return;
+    }
+    // Product of Q30 significands → ≤ 62-bit magnitude with combined
+    // scale (u64 fast path: two quire limb writes).
+    let sig = (a.significand() as u64) * (b.significand() as u64);
+    let scale = a.scale as i32 + b.scale as i32 - 2 * FW as i32;
+    q.add_product64(sig, scale, a.sign ^ b.sign);
+}
+
+/// Quire MAC from pre-decoded entries, PLAM product (Eq. 17: fraction
+/// addition in the log domain).
+#[inline]
+fn quire_mac_plam(q: &mut FastQuire, fmt: &PositFormat, a: &DecEntry, b: &DecEntry) {
+    let _ = fmt;
+    if a.is_zero() || b.is_zero() {
+        return;
+    }
+    if a.is_nar() || b.is_nar() {
+        q.set_nar();
+        return;
+    }
+    let fsum = a.frac as u64 + b.frac as u64; // Q30 fraction sum
+    let carry = (fsum >> FW) as i32; // Eq. 20/21 condition
+    let frac = fsum & ((1u64 << FW) - 1);
+    let sig = (1u64 << FW) | frac; // 1.F in Q30 (31 bits)
+    let scale = a.scale as i32 + b.scale as i32 + carry - FW as i32;
+    q.add_product64(sig, scale, a.sign ^ b.sign);
+}
+
+impl Layer {
+    /// Forward one sample through this layer.
+    pub fn forward(&self, x: &Tensor, mode: &ArithMode) -> Tensor {
+        match self {
+            Layer::Dense { w, b } => dense(x, w, b, mode),
+            Layer::Conv2d { w, b, stride, pad } => conv2d(x, w, b, *stride, *pad, mode),
+            Layer::MaxPool2d { k, stride } => maxpool2d(x, *k, *stride),
+            Layer::Relu => relu(x),
+            Layer::Flatten => x.clone().reshape(&[x.len()]),
+        }
+    }
+
+    /// Number of learnable parameters.
+    pub fn params(&self) -> usize {
+        match self {
+            Layer::Dense { w, b } | Layer::Conv2d { w, b, .. } => w.len() + b.len(),
+            _ => 0,
+        }
+    }
+
+    /// Multiply count for one forward sample given the input shape
+    /// (drives the energy model of the end-to-end example).
+    pub fn macs(&self, in_shape: &[usize]) -> usize {
+        match self {
+            Layer::Dense { w, .. } => w.len(),
+            Layer::Conv2d { w, pad, stride, .. } => {
+                let (ic, h, wdt) = (in_shape[0], in_shape[1], in_shape[2]);
+                let (oc, _ic, kh, kw) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+                let oh = (h + 2 * pad - kh) / stride + 1;
+                let ow = (wdt + 2 * pad - kw) / stride + 1;
+                oc * oh * ow * ic * kh * kw
+            }
+            _ => 0,
+        }
+    }
+}
+
+fn dense(x: &Tensor, w: &Tensor, b: &Tensor, mode: &ArithMode) -> Tensor {
+    let (out_dim, in_dim) = (w.shape[0], w.shape[1]);
+    assert_eq!(x.len(), in_dim, "dense input size");
+    let xe = encode_operands(mode, &x.data);
+    let we = encode_operands(mode, &w.data);
+    let mut eng = DotEngine::new(mode);
+    let mut out = Tensor::zeros(&[out_dim]);
+    for o in 0..out_dim {
+        out.data[o] = eng.dot(&we, o * in_dim, &xe, 0, in_dim, b.data[o]);
+    }
+    out
+}
+
+fn conv2d(x: &Tensor, w: &Tensor, b: &Tensor, stride: usize, pad: usize, mode: &ArithMode) -> Tensor {
+    assert_eq!(x.shape.len(), 3, "conv input must be [c,h,w]");
+    let (ic, h, wdt) = (x.shape[0], x.shape[1], x.shape[2]);
+    let (oc, ic2, kh, kw) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+    assert_eq!(ic, ic2, "conv channel mismatch");
+    let oh = (h + 2 * pad - kh) / stride + 1;
+    let ow = (wdt + 2 * pad - kw) / stride + 1;
+
+    // im2col: gather input patches so each output pixel is one dot
+    // product over a contiguous patch (decode once, reuse per filter).
+    let patch = ic * kh * kw;
+    let mut cols = vec![0f32; patch * oh * ow];
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let col = (oy * ow + ox) * patch;
+            let mut idx = 0;
+            for c in 0..ic {
+                for ky in 0..kh {
+                    for kx in 0..kw {
+                        let iy = oy * stride + ky;
+                        let ix = ox * stride + kx;
+                        let v = if iy < pad || ix < pad || iy - pad >= h || ix - pad >= wdt {
+                            0.0
+                        } else {
+                            x.at3(c, iy - pad, ix - pad)
+                        };
+                        cols[col + idx] = v;
+                        idx += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    let ce = encode_operands(mode, &cols);
+    let we = encode_operands(mode, &w.data);
+    let mut eng = DotEngine::new(mode);
+    let mut out = Tensor::zeros(&[oc, oh, ow]);
+    for o in 0..oc {
+        for p in 0..oh * ow {
+            let v = eng.dot(&we, o * patch, &ce, p * patch, patch, b.data[o]);
+            out.data[o * oh * ow + p] = v;
+        }
+    }
+    out
+}
+
+fn maxpool2d(x: &Tensor, k: usize, stride: usize) -> Tensor {
+    let (c, h, w) = (x.shape[0], x.shape[1], x.shape[2]);
+    let oh = (h - k) / stride + 1;
+    let ow = (w - k) / stride + 1;
+    let mut out = Tensor::zeros(&[c, oh, ow]);
+    for ch in 0..c {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut m = f32::NEG_INFINITY;
+                for ky in 0..k {
+                    for kx in 0..k {
+                        m = m.max(x.at3(ch, oy * stride + ky, ox * stride + kx));
+                    }
+                }
+                *out.at3_mut(ch, oy, ox) = m;
+            }
+        }
+    }
+    out
+}
+
+fn relu(x: &Tensor) -> Tensor {
+    // Max with zero is exact in every arithmetic (sign test only).
+    Tensor::from_vec(
+        &x.shape,
+        x.data.iter().map(|&v| v.max(0.0)).collect(),
+    )
+}
+
+/// Numerically stable softmax (probabilities; computed in f64 — the
+/// paper applies softmax only at the output layer, where it does not
+/// change the argmax used for accuracy).
+pub fn softmax(x: &Tensor) -> Tensor {
+    let m = x.data.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let exps: Vec<f64> = x.data.iter().map(|&v| ((v as f64) - m).exp()).collect();
+    let sum: f64 = exps.iter().sum();
+    Tensor::from_vec(&x.shape, exps.iter().map(|&e| (e / sum) as f32).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::posit::PositFormat;
+
+    fn dense_layer() -> Layer {
+        Layer::Dense {
+            w: Tensor::from_vec(&[2, 3], vec![1.0, 0.5, -1.0, 2.0, 0.25, 0.0]),
+            b: Tensor::from_vec(&[2], vec![0.5, -1.0]),
+        }
+    }
+
+    #[test]
+    fn dense_float() {
+        let x = Tensor::from_vec(&[3], vec![1.0, 2.0, 3.0]);
+        let y = dense_layer().forward(&x, &ArithMode::float32());
+        assert_eq!(y.data, vec![1.0 + 1.0 - 3.0 + 0.5, 2.0 + 0.5 - 1.0]);
+    }
+
+    #[test]
+    fn dense_posit_exact_matches_float_on_exact_values() {
+        // All values and intermediates are exactly representable in
+        // P16E1, so exact-posit output == float output.
+        let x = Tensor::from_vec(&[3], vec![1.0, 2.0, 3.0]);
+        let mode = ArithMode::posit_exact(PositFormat::P16E1);
+        let y = dense_layer().forward(&x, &mode);
+        assert_eq!(y.data, vec![-0.5, 1.5]);
+    }
+
+    #[test]
+    fn dense_plam_close_to_exact() {
+        let x = Tensor::from_vec(&[3], vec![0.3, -1.7, 2.9]);
+        let exact = dense_layer().forward(&x, &ArithMode::posit_exact(PositFormat::P16E1));
+        let plam = dense_layer().forward(&x, &ArithMode::posit_plam(PositFormat::P16E1));
+        for (e, p) in exact.data.iter().zip(plam.data.iter()) {
+            let denom = e.abs().max(0.25);
+            assert!(
+                ((e - p) / denom).abs() < 0.25,
+                "exact={e} plam={p} (PLAM per-product error ≤ 11.1 %)"
+            );
+        }
+    }
+
+    #[test]
+    fn conv_identity_kernel() {
+        // 1×1 conv with weight 1 is the identity.
+        let x = Tensor::from_vec(&[1, 2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let l = Layer::Conv2d {
+            w: Tensor::from_vec(&[1, 1, 1, 1], vec![1.0]),
+            b: Tensor::from_vec(&[1], vec![0.0]),
+            stride: 1,
+            pad: 0,
+        };
+        let y = l.forward(&x, &ArithMode::float32());
+        assert_eq!(y.data, x.data);
+        assert_eq!(y.shape, vec![1, 2, 2]);
+    }
+
+    #[test]
+    fn conv_shapes_with_padding() {
+        let x = Tensor::zeros(&[3, 8, 8]);
+        let l = Layer::Conv2d {
+            w: Tensor::zeros(&[4, 3, 3, 3]),
+            b: Tensor::zeros(&[4]),
+            stride: 1,
+            pad: 1,
+        };
+        let y = l.forward(&x, &ArithMode::float32());
+        assert_eq!(y.shape, vec![4, 8, 8]);
+    }
+
+    #[test]
+    fn conv_posit_sum_matches_hand_computed() {
+        // 2×2 input, 2×2 kernel of ones → sum of inputs.
+        let x = Tensor::from_vec(&[1, 2, 2], vec![0.5, 1.5, 2.5, 3.5]);
+        let l = Layer::Conv2d {
+            w: Tensor::from_vec(&[1, 1, 2, 2], vec![1.0; 4]),
+            b: Tensor::from_vec(&[1], vec![0.0]),
+            stride: 1,
+            pad: 0,
+        };
+        let y = l.forward(&x, &ArithMode::posit_exact(PositFormat::P16E1));
+        assert_eq!(y.data, vec![8.0]);
+    }
+
+    #[test]
+    fn maxpool() {
+        let x = Tensor::from_vec(&[1, 2, 2], vec![1.0, 5.0, 3.0, 2.0]);
+        let l = Layer::MaxPool2d { k: 2, stride: 2 };
+        let y = l.forward(&x, &ArithMode::float32());
+        assert_eq!(y.data, vec![5.0]);
+    }
+
+    #[test]
+    fn relu_clamps() {
+        let x = Tensor::from_vec(&[3], vec![-1.0, 0.0, 2.0]);
+        let y = Layer::Relu.forward(&x, &ArithMode::float32());
+        assert_eq!(y.data, vec![0.0, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn softmax_sums_to_one_and_preserves_argmax() {
+        let x = Tensor::from_vec(&[4], vec![1.0, 3.0, -2.0, 0.5]);
+        let p = softmax(&x);
+        let s: f32 = p.data.iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+        assert_eq!(p.argmax(), x.argmax());
+    }
+
+    #[test]
+    fn macs_counting() {
+        let l = dense_layer();
+        assert_eq!(l.macs(&[3]), 6);
+        let c = Layer::Conv2d {
+            w: Tensor::zeros(&[4, 3, 3, 3]),
+            b: Tensor::zeros(&[4]),
+            stride: 1,
+            pad: 1,
+        };
+        assert_eq!(c.macs(&[3, 8, 8]), 4 * 8 * 8 * 27);
+    }
+}

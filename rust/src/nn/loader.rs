@@ -1,0 +1,204 @@
+//! Weight (de)serialisation — the bridge from the Python training
+//! pipeline (`python/compile/train.py`) into the Rust inference engine.
+//!
+//! Format ("PTW1", little-endian):
+//! ```text
+//! magic  [u8;4] = b"PTW1"
+//! count  u32                      — number of named tensors
+//! repeat count times:
+//!   name_len u32, name [u8]       — utf-8 tensor name
+//!   ndim     u32, dims [u64]      — shape
+//!   data     [f32]                — row-major payload
+//! ```
+//! (serde is unavailable offline; a 40-line binary codec is also far
+//! easier to keep bit-identical across the Python/Rust boundary.)
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::layers::Layer;
+use super::model::Model;
+use super::tensor::Tensor;
+
+/// Named tensor map (BTreeMap for deterministic ordering on save).
+pub type Weights = BTreeMap<String, Tensor>;
+
+/// Write a weight map to a `.ptw` file.
+pub fn save_weights(path: &Path, weights: &Weights) -> Result<()> {
+    let mut f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+    f.write_all(b"PTW1")?;
+    f.write_all(&(weights.len() as u32).to_le_bytes())?;
+    for (name, t) in weights {
+        f.write_all(&(name.len() as u32).to_le_bytes())?;
+        f.write_all(name.as_bytes())?;
+        f.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+        for &d in &t.shape {
+            f.write_all(&(d as u64).to_le_bytes())?;
+        }
+        for &v in &t.data {
+            f.write_all(&v.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+/// Read a weight map from a `.ptw` file.
+pub fn load_weights(path: &Path) -> Result<Weights> {
+    let mut f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != b"PTW1" {
+        bail!("{path:?}: bad magic {magic:?}");
+    }
+    let count = read_u32(&mut f)?;
+    let mut weights = Weights::new();
+    for _ in 0..count {
+        let name_len = read_u32(&mut f)? as usize;
+        let mut name = vec![0u8; name_len];
+        f.read_exact(&mut name)?;
+        let name = String::from_utf8(name).context("tensor name utf-8")?;
+        let ndim = read_u32(&mut f)? as usize;
+        if ndim > 8 {
+            bail!("{name}: implausible ndim {ndim}");
+        }
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            let mut b = [0u8; 8];
+            f.read_exact(&mut b)?;
+            shape.push(u64::from_le_bytes(b) as usize);
+        }
+        let n: usize = shape.iter().product();
+        let mut buf = vec![0u8; n * 4];
+        f.read_exact(&mut buf)?;
+        let data: Vec<f32> = buf
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        weights.insert(name, Tensor::from_vec(&shape, data));
+    }
+    Ok(weights)
+}
+
+fn read_u32(f: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+/// Extract a model's parameters as a named map (`layer{i}.{w,b}`).
+pub fn model_weights(model: &Model) -> Weights {
+    let mut w = Weights::new();
+    for (i, l) in model.layers.iter().enumerate() {
+        match l {
+            Layer::Dense { w: wt, b } | Layer::Conv2d { w: wt, b, .. } => {
+                w.insert(format!("layer{i}.w"), wt.clone());
+                w.insert(format!("layer{i}.b"), b.clone());
+            }
+            _ => {}
+        }
+    }
+    w
+}
+
+/// Load parameters into a model (shapes must match exactly).
+pub fn apply_weights(model: &mut Model, weights: &Weights) -> Result<()> {
+    for (i, l) in model.layers.iter_mut().enumerate() {
+        match l {
+            Layer::Dense { w: wt, b } | Layer::Conv2d { w: wt, b, .. } => {
+                let wname = format!("layer{i}.w");
+                let bname = format!("layer{i}.b");
+                let nw = weights.get(&wname).with_context(|| format!("missing {wname}"))?;
+                let nb = weights.get(&bname).with_context(|| format!("missing {bname}"))?;
+                if nw.shape != wt.shape || nb.shape != b.shape {
+                    bail!(
+                        "{wname}: shape {:?}/{:?} != model {:?}/{:?}",
+                        nw.shape,
+                        nb.shape,
+                        wt.shape,
+                        b.shape
+                    );
+                }
+                *wt = nw.clone();
+                *b = nb.clone();
+            }
+            _ => {}
+        }
+    }
+    Ok(())
+}
+
+/// Quantise all parameters through a posit format (RNE round-trip) —
+/// this is the "trained posit model" weight set of Table II.
+pub fn quantize_weights(model: &mut Model, fmt: crate::posit::PositFormat) {
+    for l in model.layers.iter_mut() {
+        if let Layer::Dense { w, b } | Layer::Conv2d { w, b, .. } = l {
+            for v in w.data.iter_mut().chain(b.data.iter_mut()) {
+                *v = crate::posit::to_f32(fmt, crate::posit::from_f32(fmt, *v));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::model::ModelKind;
+    use crate::prng::Rng;
+
+    #[test]
+    fn weights_round_trip_through_file() {
+        let mut rng = Rng::new(3);
+        let model = Model::init(ModelKind::MlpIsolet, &mut rng);
+        let w = model_weights(&model);
+        let dir = std::env::temp_dir().join("plam_test_loader");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("w.ptw");
+        save_weights(&path, &w).unwrap();
+        let r = load_weights(&path).unwrap();
+        assert_eq!(w, r);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn apply_restores_parameters() {
+        let mut rng = Rng::new(4);
+        let trained = Model::init(ModelKind::MlpIsolet, &mut rng);
+        let w = model_weights(&trained);
+        let mut fresh = Model::new(ModelKind::MlpIsolet);
+        apply_weights(&mut fresh, &w).unwrap();
+        let w2 = model_weights(&fresh);
+        assert_eq!(w, w2);
+    }
+
+    #[test]
+    fn apply_rejects_wrong_shapes() {
+        let mut rng = Rng::new(5);
+        let trained = Model::init(ModelKind::MlpIsolet, &mut rng);
+        let w = model_weights(&trained);
+        let mut other = Model::new(ModelKind::MlpHar);
+        assert!(apply_weights(&mut other, &w).is_err());
+    }
+
+    #[test]
+    fn quantize_is_idempotent() {
+        let mut rng = Rng::new(6);
+        let mut m = Model::init(ModelKind::MlpIsolet, &mut rng);
+        quantize_weights(&mut m, crate::posit::PositFormat::P16E1);
+        let once = model_weights(&m);
+        quantize_weights(&mut m, crate::posit::PositFormat::P16E1);
+        assert_eq!(once, model_weights(&m));
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let dir = std::env::temp_dir().join("plam_test_loader2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ptw");
+        std::fs::write(&path, b"NOPE\x00\x00\x00\x00").unwrap();
+        assert!(load_weights(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,12 @@
+//! Posit DNN inference engine (Deep-PeNSieve-equivalent substrate).
+
+pub mod tensor;
+pub mod layers;
+pub mod model;
+pub mod loader;
+pub mod prepared;
+
+pub use layers::{ArithMode, Layer};
+pub use prepared::PreparedModel;
+pub use model::{Model, ModelKind};
+pub use tensor::Tensor;

@@ -1,0 +1,437 @@
+//! Network definitions (the paper's Table I topologies) and forward
+//! inference, plus a small f32 SGD trainer for the MLP workloads.
+
+use crate::prng::Rng;
+
+use super::layers::{softmax, ArithMode, Layer};
+use super::tensor::Tensor;
+
+/// The paper's Table I architectures.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelKind {
+    /// Fully connected `(617, 128, 64, 26)` — ISOLET.
+    MlpIsolet,
+    /// Fully connected `(561, 512, 512, 6)` — UCI HAR.
+    MlpHar,
+    /// LeNet-5 for 28×28×1 images (MNIST) or 32×32×3 (SVHN).
+    LeNet5 { in_ch: usize, in_hw: usize },
+    /// CifarNet for 32×32×3 images (CIFAR-10).
+    CifarNet,
+}
+
+/// A sequential model.
+#[derive(Debug, Clone)]
+pub struct Model {
+    /// Human-readable name.
+    pub name: String,
+    /// Ordered layers.
+    pub layers: Vec<Layer>,
+    /// Input shape of one sample.
+    pub input_shape: Vec<usize>,
+}
+
+impl Model {
+    /// Build an architecture with zero-initialised parameters.
+    pub fn new(kind: ModelKind) -> Self {
+        Self::build(kind, None)
+    }
+
+    /// Build with He-uniform random initialisation.
+    pub fn init(kind: ModelKind, rng: &mut Rng) -> Self {
+        Self::build(kind, Some(rng))
+    }
+
+    fn build(kind: ModelKind, mut rng: Option<&mut Rng>) -> Self {
+        // He-uniform init helpers (no-op when rng is None).
+        fn fill(w: &mut Tensor, fan_in: usize, rng: &mut Option<&mut Rng>) {
+            if let Some(r) = rng.as_deref_mut() {
+                let bound = (6.0 / fan_in as f64).sqrt() as f32;
+                for v in w.data.iter_mut() {
+                    *v = (r.f32() * 2.0 - 1.0) * bound;
+                }
+            }
+        }
+        fn mk_dense(out: usize, inp: usize, rng: &mut Option<&mut Rng>) -> Layer {
+            let mut w = Tensor::zeros(&[out, inp]);
+            fill(&mut w, inp, rng);
+            Layer::Dense {
+                w,
+                b: Tensor::zeros(&[out]),
+            }
+        }
+        fn mk_conv(oc: usize, ic: usize, k: usize, pad: usize, rng: &mut Option<&mut Rng>) -> Layer {
+            let mut w = Tensor::zeros(&[oc, ic, k, k]);
+            fill(&mut w, ic * k * k, rng);
+            Layer::Conv2d {
+                w,
+                b: Tensor::zeros(&[oc]),
+                stride: 1,
+                pad,
+            }
+        }
+        let rng = &mut rng;
+        let (name, layers, input_shape): (&str, Vec<Layer>, Vec<usize>) = match kind {
+            ModelKind::MlpIsolet => (
+                "mlp-isolet",
+                vec![
+                    mk_dense(128, 617, rng),
+                    Layer::Relu,
+                    mk_dense(64, 128, rng),
+                    Layer::Relu,
+                    mk_dense(26, 64, rng),
+                ],
+                vec![617],
+            ),
+            ModelKind::MlpHar => (
+                "mlp-har",
+                vec![
+                    mk_dense(512, 561, rng),
+                    Layer::Relu,
+                    mk_dense(512, 512, rng),
+                    Layer::Relu,
+                    mk_dense(6, 512, rng),
+                ],
+                vec![561],
+            ),
+            ModelKind::LeNet5 { in_ch, in_hw } => {
+                // Conv(6,5×5) → pool → Conv(16,5×5) → pool → FC 120/84/10.
+                // 28×28 inputs get 2 px padding on C1 (classic LeNet-5)
+                // so both input sizes reach the same 5×5×16 → FC400.
+                let c1 = mk_conv(6, in_ch, 5, if in_hw == 28 { 2 } else { 0 }, rng);
+                let c2 = mk_conv(16, 6, 5, 0, rng);
+                // Spatial sizes: 28(+2pad)→28→14→10→5 or 32→28→14→10→5.
+                let fc_in = 16 * 5 * 5;
+                (
+                    "lenet5",
+                    vec![
+                        c1,
+                        Layer::Relu,
+                        Layer::MaxPool2d { k: 2, stride: 2 },
+                        c2,
+                        Layer::Relu,
+                        Layer::MaxPool2d { k: 2, stride: 2 },
+                        Layer::Flatten,
+                        mk_dense(120, fc_in, rng),
+                        Layer::Relu,
+                        mk_dense(84, 120, rng),
+                        Layer::Relu,
+                        mk_dense(10, 84, rng),
+                    ],
+                    vec![in_ch, in_hw, in_hw],
+                )
+            }
+            ModelKind::CifarNet => {
+                // CifarNet (cuda-convnet tutorial topology, LRN omitted —
+                // see DESIGN.md §5): conv64-5×5 → pool → conv64-5×5 →
+                // pool → FC384 → FC192 → FC10.
+                let c1 = mk_conv(64, 3, 5, 2, rng);
+                let c2 = mk_conv(64, 64, 5, 2, rng);
+                (
+                    "cifarnet",
+                    vec![
+                        c1,
+                        Layer::Relu,
+                        Layer::MaxPool2d { k: 2, stride: 2 },
+                        c2,
+                        Layer::Relu,
+                        Layer::MaxPool2d { k: 2, stride: 2 },
+                        Layer::Flatten,
+                        mk_dense(384, 64 * 8 * 8, rng),
+                        Layer::Relu,
+                        mk_dense(192, 384, rng),
+                        Layer::Relu,
+                        mk_dense(10, 192, rng),
+                    ],
+                    vec![3, 32, 32],
+                )
+            }
+        };
+        Model {
+            name: name.to_string(),
+            layers,
+            input_shape,
+        }
+    }
+
+    /// Forward one sample → logits.
+    pub fn forward(&self, x: &Tensor, mode: &ArithMode) -> Tensor {
+        assert_eq!(x.shape, self.input_shape, "input shape mismatch");
+        let mut h = x.clone();
+        for l in &self.layers {
+            h = l.forward(&h, mode);
+        }
+        h
+    }
+
+    /// Forward → class probabilities.
+    pub fn predict_proba(&self, x: &Tensor, mode: &ArithMode) -> Tensor {
+        softmax(&self.forward(x, mode))
+    }
+
+    /// Forward → predicted class.
+    pub fn predict(&self, x: &Tensor, mode: &ArithMode) -> usize {
+        self.forward(x, mode).argmax()
+    }
+
+    /// Total learnable parameters.
+    pub fn params(&self) -> usize {
+        self.layers.iter().map(|l| l.params()).sum()
+    }
+
+    /// Total multiplies per forward sample (for the energy model).
+    pub fn macs(&self) -> usize {
+        let mut shape = self.input_shape.clone();
+        let mut total = 0;
+        for l in &self.layers {
+            total += l.macs(&shape);
+            // Track the shape through the network.
+            shape = match l {
+                Layer::Dense { w, .. } => vec![w.shape[0]],
+                Layer::Conv2d { w, stride, pad, .. } => {
+                    let oh = (shape[1] + 2 * pad - w.shape[2]) / stride + 1;
+                    let ow = (shape[2] + 2 * pad - w.shape[3]) / stride + 1;
+                    vec![w.shape[0], oh, ow]
+                }
+                Layer::MaxPool2d { k, stride } => {
+                    vec![
+                        shape[0],
+                        (shape[1] - k) / stride + 1,
+                        (shape[2] - k) / stride + 1,
+                    ]
+                }
+                Layer::Flatten => vec![shape.iter().product()],
+                Layer::Relu => shape,
+            };
+        }
+        total
+    }
+
+    /// Top-k accuracy over a labelled set in the given arithmetic mode.
+    pub fn evaluate_topk(&self, xs: &[Tensor], ys: &[usize], k: usize, mode: &ArithMode) -> f64 {
+        assert_eq!(xs.len(), ys.len());
+        let mut hits = 0usize;
+        for (x, &y) in xs.iter().zip(ys.iter()) {
+            let logits = self.forward(x, mode);
+            let mut idx: Vec<usize> = (0..logits.len()).collect();
+            idx.sort_by(|&a, &b| logits.data[b].partial_cmp(&logits.data[a]).unwrap());
+            if idx[..k.min(idx.len())].contains(&y) {
+                hits += 1;
+            }
+        }
+        hits as f64 / xs.len() as f64
+    }
+}
+
+// ---------------------------------------------------------------------
+// f32 trainer (SGD + momentum) for the dense workloads of Table I.
+// ---------------------------------------------------------------------
+
+/// Train a dense (MLP) model with SGD+momentum on cross-entropy loss.
+/// Only `Dense`/`Relu` layers are supported (the Table I MLPs). Returns
+/// per-epoch mean loss.
+pub fn train_mlp(
+    model: &mut Model,
+    xs: &[Tensor],
+    ys: &[usize],
+    epochs: usize,
+    batch: usize,
+    lr: f32,
+    momentum: f32,
+    rng: &mut Rng,
+) -> Vec<f64> {
+    // Momentum buffers mirroring each Dense layer.
+    let mut vel: Vec<Option<(Vec<f32>, Vec<f32>)>> = model
+        .layers
+        .iter()
+        .map(|l| match l {
+            Layer::Dense { w, b } => Some((vec![0.0; w.len()], vec![0.0; b.len()])),
+            _ => None,
+        })
+        .collect();
+
+    let mut order: Vec<usize> = (0..xs.len()).collect();
+    let mut losses = vec![];
+    for _epoch in 0..epochs {
+        rng.shuffle(&mut order);
+        let mut epoch_loss = 0.0f64;
+        let mut count = 0usize;
+        for chunk in order.chunks(batch) {
+            // Accumulate gradients over the minibatch.
+            let mut grads: Vec<Option<(Vec<f32>, Vec<f32>)>> = model
+                .layers
+                .iter()
+                .map(|l| match l {
+                    Layer::Dense { w, b } => Some((vec![0.0; w.len()], vec![0.0; b.len()])),
+                    _ => None,
+                })
+                .collect();
+            for &i in chunk {
+                epoch_loss += backprop_sample(model, &xs[i], ys[i], &mut grads);
+                count += 1;
+            }
+            let scale = lr / chunk.len() as f32;
+            for (li, l) in model.layers.iter_mut().enumerate() {
+                if let (Layer::Dense { w, b }, Some((gw, gb)), Some((vw, vb))) =
+                    (l, &grads[li], &mut vel[li])
+                {
+                    for (i, g) in gw.iter().enumerate() {
+                        vw[i] = momentum * vw[i] - scale * g;
+                        w.data[i] += vw[i];
+                    }
+                    for (i, g) in gb.iter().enumerate() {
+                        vb[i] = momentum * vb[i] - scale * g;
+                        b.data[i] += vb[i];
+                    }
+                }
+            }
+        }
+        losses.push(epoch_loss / count as f64);
+    }
+    losses
+}
+
+/// Backprop one sample through Dense/Relu layers; adds gradients into
+/// `grads` and returns the cross-entropy loss.
+fn backprop_sample(
+    model: &Model,
+    x: &Tensor,
+    y: usize,
+    grads: &mut [Option<(Vec<f32>, Vec<f32>)>],
+) -> f64 {
+    // Forward pass, caching activations.
+    let mode = ArithMode::float32();
+    let mut acts: Vec<Tensor> = vec![x.clone()];
+    for l in &model.layers {
+        let h = l.forward(acts.last().unwrap(), &mode);
+        acts.push(h);
+    }
+    let logits = acts.last().unwrap();
+    let probs = softmax(logits);
+    let loss = -((probs.data[y].max(1e-12)) as f64).ln();
+
+    // dL/dlogits = probs - onehot(y)
+    let mut delta: Vec<f32> = probs.data.clone();
+    delta[y] -= 1.0;
+
+    for li in (0..model.layers.len()).rev() {
+        match &model.layers[li] {
+            Layer::Dense { w, .. } => {
+                let input = &acts[li];
+                let (out_dim, in_dim) = (w.shape[0], w.shape[1]);
+                let (gw, gb) = grads[li].as_mut().unwrap();
+                let mut next = vec![0.0f32; in_dim];
+                for o in 0..out_dim {
+                    let d = delta[o];
+                    gb[o] += d;
+                    let row = o * in_dim;
+                    for i in 0..in_dim {
+                        gw[row + i] += d * input.data[i];
+                        next[i] += d * w.data[row + i];
+                    }
+                }
+                delta = next;
+            }
+            Layer::Relu => {
+                let input = &acts[li];
+                for (d, &v) in delta.iter_mut().zip(input.data.iter()) {
+                    if v <= 0.0 {
+                        *d = 0.0;
+                    }
+                }
+            }
+            other => panic!("train_mlp supports Dense/Relu only, found {other:?}"),
+        }
+    }
+    loss
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_flow_through_lenet() {
+        let m = Model::new(ModelKind::LeNet5 { in_ch: 1, in_hw: 28 });
+        let x = Tensor::zeros(&[1, 28, 28]);
+        let y = m.forward(&x, &ArithMode::float32());
+        assert_eq!(y.shape, vec![10]);
+        let m = Model::new(ModelKind::LeNet5 { in_ch: 3, in_hw: 32 });
+        let x = Tensor::zeros(&[3, 32, 32]);
+        assert_eq!(m.forward(&x, &ArithMode::float32()).shape, vec![10]);
+    }
+
+    #[test]
+    fn shapes_flow_through_cifarnet() {
+        let m = Model::new(ModelKind::CifarNet);
+        let x = Tensor::zeros(&[3, 32, 32]);
+        assert_eq!(m.forward(&x, &ArithMode::float32()).shape, vec![10]);
+    }
+
+    #[test]
+    fn param_counts_match_table1_topologies() {
+        let m = Model::new(ModelKind::MlpIsolet);
+        assert_eq!(
+            m.params(),
+            617 * 128 + 128 + 128 * 64 + 64 + 64 * 26 + 26
+        );
+        let m = Model::new(ModelKind::MlpHar);
+        assert_eq!(
+            m.params(),
+            561 * 512 + 512 + 512 * 512 + 512 + 512 * 6 + 6
+        );
+    }
+
+    #[test]
+    fn macs_positive_and_conv_dominated_for_lenet() {
+        let m = Model::new(ModelKind::LeNet5 { in_ch: 1, in_hw: 28 });
+        let total = m.macs();
+        assert!(total > 100_000, "LeNet-5 should be >100 k MACs: {total}");
+    }
+
+    #[test]
+    fn training_reduces_loss_on_toy_problem() {
+        // Tiny separable problem: 2 Gaussian blobs in 8-D.
+        let mut rng = Rng::new(1);
+        let mut xs = vec![];
+        let mut ys = vec![];
+        for i in 0..200 {
+            let class = i % 2;
+            let centre = if class == 0 { -1.0 } else { 1.0 };
+            let data: Vec<f32> = (0..8)
+                .map(|_| centre + 0.3 * rng.normal() as f32)
+                .collect();
+            xs.push(Tensor::from_vec(&[8], data));
+            ys.push(class);
+        }
+        let mut m = Model {
+            name: "toy".into(),
+            layers: vec![
+                Layer::Dense {
+                    w: Tensor::zeros(&[16, 8]),
+                    b: Tensor::zeros(&[16]),
+                },
+                Layer::Relu,
+                Layer::Dense {
+                    w: Tensor::zeros(&[2, 16]),
+                    b: Tensor::zeros(&[2]),
+                },
+            ],
+            input_shape: vec![8],
+        };
+        // Random init.
+        for l in m.layers.iter_mut() {
+            if let Layer::Dense { w, .. } = l {
+                for v in w.data.iter_mut() {
+                    *v = (rng.f32() - 0.5) * 0.5;
+                }
+            }
+        }
+        let losses = train_mlp(&mut m, &xs, &ys, 10, 16, 0.1, 0.9, &mut rng);
+        assert!(
+            losses.last().unwrap() < &(losses[0] * 0.5),
+            "loss should halve: {losses:?}"
+        );
+        let acc = m.evaluate_topk(&xs, &ys, 1, &ArithMode::float32());
+        assert!(acc > 0.95, "toy accuracy {acc}");
+    }
+}

@@ -1,0 +1,240 @@
+//! PreparedModel — a model bound to one arithmetic mode with weights
+//! pre-encoded once (perf pass, EXPERIMENTS.md §Perf).
+//!
+//! `Model::forward` re-encodes every weight tensor on every sample; for
+//! the ISOLET MLP that is ~90 k `from_f32` + table lookups per
+//! inference, comparable to the MAC work itself. Preparing the model
+//! hoists that to construction time; activations are still encoded per
+//! layer (they change per sample).
+
+use crate::nn::layers::{encode_operands, ArithMode, DotEngine, Encoded, Layer};
+use crate::nn::model::Model;
+use crate::nn::tensor::Tensor;
+
+/// Per-layer prepared state.
+enum Prepared {
+    Dense {
+        w: Encoded,
+        b: Vec<f32>,
+        out_dim: usize,
+        in_dim: usize,
+    },
+    Conv2d {
+        w: Encoded,
+        b: Vec<f32>,
+        oc: usize,
+        ic: usize,
+        kh: usize,
+        kw: usize,
+        stride: usize,
+        pad: usize,
+    },
+    MaxPool2d {
+        k: usize,
+        stride: usize,
+    },
+    Relu,
+    Flatten,
+}
+
+/// A model fixed to one arithmetic mode, weights encoded once.
+pub struct PreparedModel {
+    /// Display name (`<model>[<mode>]`).
+    pub name: String,
+    /// Input shape of one sample.
+    pub input_shape: Vec<usize>,
+    mode: ArithMode,
+    layers: Vec<Prepared>,
+}
+
+impl PreparedModel {
+    /// Encode a model's parameters for a mode.
+    pub fn new(model: &Model, mode: ArithMode) -> Self {
+        let layers = model
+            .layers
+            .iter()
+            .map(|l| match l {
+                Layer::Dense { w, b } => Prepared::Dense {
+                    w: encode_operands(&mode, &w.data),
+                    b: b.data.clone(),
+                    out_dim: w.shape[0],
+                    in_dim: w.shape[1],
+                },
+                Layer::Conv2d { w, b, stride, pad } => Prepared::Conv2d {
+                    w: encode_operands(&mode, &w.data),
+                    b: b.data.clone(),
+                    oc: w.shape[0],
+                    ic: w.shape[1],
+                    kh: w.shape[2],
+                    kw: w.shape[3],
+                    stride: *stride,
+                    pad: *pad,
+                },
+                Layer::MaxPool2d { k, stride } => Prepared::MaxPool2d {
+                    k: *k,
+                    stride: *stride,
+                },
+                Layer::Relu => Prepared::Relu,
+                Layer::Flatten => Prepared::Flatten,
+            })
+            .collect();
+        PreparedModel {
+            name: format!("{}[{}]", model.name, mode.name()),
+            input_shape: model.input_shape.clone(),
+            mode,
+            layers,
+        }
+    }
+
+    /// Forward one sample → logits.
+    pub fn forward(&self, x: &Tensor) -> Tensor {
+        assert_eq!(x.shape, self.input_shape, "input shape mismatch");
+        let mut h = x.clone();
+        for l in &self.layers {
+            h = self.forward_layer(l, &h);
+        }
+        h
+    }
+
+    fn forward_layer(&self, l: &Prepared, x: &Tensor) -> Tensor {
+        match l {
+            Prepared::Dense {
+                w,
+                b,
+                out_dim,
+                in_dim,
+            } => {
+                assert_eq!(x.len(), *in_dim);
+                let xe = encode_operands(&self.mode, &x.data);
+                let mut eng = DotEngine::new(&self.mode);
+                let mut out = Tensor::zeros(&[*out_dim]);
+                for o in 0..*out_dim {
+                    out.data[o] = eng.dot(w, o * in_dim, &xe, 0, *in_dim, b[o]);
+                }
+                out
+            }
+            Prepared::Conv2d {
+                w,
+                b,
+                oc,
+                ic,
+                kh,
+                kw,
+                stride,
+                pad,
+            } => {
+                let (h, wdt) = (x.shape[1], x.shape[2]);
+                let oh = (h + 2 * pad - kh) / stride + 1;
+                let ow = (wdt + 2 * pad - kw) / stride + 1;
+                let patch = ic * kh * kw;
+                // im2col (same layout as Layer::forward).
+                let mut cols = vec![0f32; patch * oh * ow];
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        let col = (oy * ow + ox) * patch;
+                        let mut idx = 0;
+                        for c in 0..*ic {
+                            for ky in 0..*kh {
+                                for kx in 0..*kw {
+                                    let iy = oy * stride + ky;
+                                    let ix = ox * stride + kx;
+                                    cols[col + idx] = if iy < *pad
+                                        || ix < *pad
+                                        || iy - pad >= h
+                                        || ix - pad >= wdt
+                                    {
+                                        0.0
+                                    } else {
+                                        x.at3(c, iy - pad, ix - pad)
+                                    };
+                                    idx += 1;
+                                }
+                            }
+                        }
+                    }
+                }
+                let ce = encode_operands(&self.mode, &cols);
+                let mut eng = DotEngine::new(&self.mode);
+                let mut out = Tensor::zeros(&[*oc, oh, ow]);
+                for o in 0..*oc {
+                    for p in 0..oh * ow {
+                        out.data[o * oh * ow + p] =
+                            eng.dot(w, o * patch, &ce, p * patch, patch, b[o]);
+                    }
+                }
+                out
+            }
+            Prepared::MaxPool2d { k, stride } => {
+                Layer::MaxPool2d {
+                    k: *k,
+                    stride: *stride,
+                }
+                .forward(x, &ArithMode::float32())
+            }
+            Prepared::Relu => Layer::Relu.forward(x, &ArithMode::float32()),
+            Prepared::Flatten => x.clone().reshape(&[x.len()]),
+        }
+    }
+
+    /// Predicted class.
+    pub fn predict(&self, x: &Tensor) -> usize {
+        self.forward(x).argmax()
+    }
+
+    /// Top-k accuracy over a labelled set.
+    pub fn evaluate_topk(&self, xs: &[Tensor], ys: &[usize], k: usize) -> f64 {
+        assert_eq!(xs.len(), ys.len());
+        let mut hits = 0usize;
+        for (x, &y) in xs.iter().zip(ys.iter()) {
+            let logits = self.forward(x);
+            let mut idx: Vec<usize> = (0..logits.len()).collect();
+            idx.sort_by(|&a, &b| logits.data[b].partial_cmp(&logits.data[a]).unwrap());
+            if idx[..k.min(idx.len())].contains(&y) {
+                hits += 1;
+            }
+        }
+        hits as f64 / xs.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::model::ModelKind;
+    use crate::posit::PositFormat;
+    use crate::prng::Rng;
+
+    #[test]
+    fn prepared_matches_unprepared_all_modes() {
+        let mut rng = Rng::new(21);
+        let model = Model::init(ModelKind::MlpIsolet, &mut rng);
+        let x = Tensor::from_vec(
+            &[617],
+            (0..617).map(|_| rng.normal() as f32 * 0.5).collect(),
+        );
+        for mode in [
+            ArithMode::float32(),
+            ArithMode::posit_exact(PositFormat::P16E1),
+            ArithMode::posit_plam(PositFormat::P16E1),
+        ] {
+            let want = model.forward(&x, &mode);
+            let prepared = PreparedModel::new(&model, mode);
+            let got = prepared.forward(&x);
+            assert_eq!(got.data, want.data, "{}", prepared.name);
+        }
+    }
+
+    #[test]
+    fn prepared_conv_matches_unprepared() {
+        let mut rng = Rng::new(22);
+        let model = Model::init(ModelKind::LeNet5 { in_ch: 1, in_hw: 28 }, &mut rng);
+        let x = Tensor::from_vec(
+            &[1, 28, 28],
+            (0..784).map(|_| rng.f32()).collect(),
+        );
+        let mode = ArithMode::posit_plam(PositFormat::P16E1);
+        let want = model.forward(&x, &mode);
+        let got = PreparedModel::new(&model, mode).forward(&x);
+        assert_eq!(got.data, want.data);
+    }
+}

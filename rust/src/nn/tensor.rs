@@ -1,0 +1,148 @@
+//! Minimal dense tensor (row-major f32) for the inference engine.
+//!
+//! f32 is the *storage* type only: every supported posit format with
+//! n ≤ 16 round-trips exactly through f32, so posit-valued tensors are
+//! stored as their exact real values and re-encoded on entry to each
+//! posit layer (see `nn::layers`). P⟨32,2⟩ tensors would need f64
+//! storage; the DNN experiments (paper Table II) use ⟨16,1⟩.
+
+/// Dense row-major tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    /// Dimension sizes, outermost first.
+    pub shape: Vec<usize>,
+    /// Row-major data; `len == shape.iter().product()`.
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    /// All-zeros tensor.
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; shape.iter().product()],
+        }
+    }
+
+    /// Build from parts, validating the element count.
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape/data mismatch"
+        );
+        Tensor {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    /// Total element count.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Reshape in place (element count must match).
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// 2-D index (row-major).
+    #[inline]
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.shape.len(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    /// 3-D index `[c][h][w]`.
+    #[inline]
+    pub fn at3(&self, c: usize, h: usize, w: usize) -> f32 {
+        debug_assert_eq!(self.shape.len(), 3);
+        self.data[(c * self.shape[1] + h) * self.shape[2] + w]
+    }
+
+    /// Mutable 3-D index.
+    #[inline]
+    pub fn at3_mut(&mut self, c: usize, h: usize, w: usize) -> &mut f32 {
+        debug_assert_eq!(self.shape.len(), 3);
+        &mut self.data[(c * self.shape[1] + h) * self.shape[2] + w]
+    }
+
+    /// Index of the maximum element (argmax over the flattened tensor).
+    pub fn argmax(&self) -> usize {
+        let mut best = 0;
+        for (i, &v) in self.data.iter().enumerate() {
+            if v > self.data[best] {
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// f32 matrix multiply: `self [m,k] × rhs [k,n] → [m,n]`.
+    pub fn matmul(&self, rhs: &Tensor) -> Tensor {
+        assert_eq!(self.shape.len(), 2);
+        assert_eq!(rhs.shape.len(), 2);
+        let (m, k) = (self.shape[0], self.shape[1]);
+        let (k2, n) = (rhs.shape[0], rhs.shape[1]);
+        assert_eq!(k, k2, "inner dims");
+        let mut out = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            for p in 0..k {
+                let a = self.data[i * k + p];
+                if a == 0.0 {
+                    continue;
+                }
+                let row = &rhs.data[p * n..(p + 1) * n];
+                let orow = &mut out.data[i * n..(i + 1) * n];
+                for j in 0..n {
+                    orow[j] += a * row[j];
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_indexing() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.at2(0, 2), 3.0);
+        assert_eq!(t.at2(1, 0), 4.0);
+        let t3 = t.clone().reshape(&[1, 2, 3]);
+        assert_eq!(t3.at3(0, 1, 1), 5.0);
+    }
+
+    #[test]
+    fn argmax_picks_first_max() {
+        let t = Tensor::from_vec(&[4], vec![0.5, 3.0, -1.0, 3.0]);
+        assert_eq!(t.argmax(), 1);
+    }
+
+    #[test]
+    fn matmul_small() {
+        let a = Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]);
+        let b = Tensor::from_vec(&[2, 2], vec![5., 6., 7., 8.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![19., 22., 43., 50.]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn matmul_dim_check() {
+        let a = Tensor::zeros(&[2, 3]);
+        let b = Tensor::zeros(&[2, 3]);
+        let _ = a.matmul(&b);
+    }
+}

@@ -1,0 +1,163 @@
+//! Conversions between posits and IEEE-754 doubles/floats.
+//!
+//! `from_f64` applies posit round-to-nearest-even; `to_f64` is exact for
+//! every supported format (n ≤ 32 posits carry ≤ 29 fraction bits and
+//! scales within ±240, all exactly representable in binary64).
+
+use super::decode::{decode, DecodeResult};
+use super::encode::encode;
+use super::format::PositFormat;
+
+/// Convert an `f64` to the nearest posit (RNE). `NaN` and `±∞` map to NaR;
+/// `±0` maps to posit zero.
+pub fn from_f64(fmt: PositFormat, x: f64) -> u64 {
+    if x == 0.0 {
+        return 0;
+    }
+    if !x.is_finite() {
+        return fmt.nar();
+    }
+    let bits = x.to_bits();
+    let sign = bits >> 63 == 1;
+    let biased_exp = ((bits >> 52) & 0x7FF) as i32;
+    let mantissa = bits & ((1u64 << 52) - 1);
+
+    let (scale, frac, frac_bits) = if biased_exp == 0 {
+        // Subnormal double: normalise the mantissa.
+        let msb = 63 - mantissa.leading_zeros(); // mantissa != 0 here
+        let scale = -1022 - 52 + msb as i32;
+        let frac = mantissa & ((1u64 << msb) - 1);
+        (scale, frac, msb)
+    } else {
+        (biased_exp - 1023, mantissa, 52)
+    };
+    encode(fmt, sign, scale, frac as u128, frac_bits, false)
+}
+
+/// Convert an `f32` to the nearest posit (RNE).
+#[inline]
+pub fn from_f32(fmt: PositFormat, x: f32) -> u64 {
+    from_f64(fmt, x as f64)
+}
+
+/// Convert a posit to `f64`. Exact for all supported formats. NaR maps to
+/// `f64::NAN`.
+pub fn to_f64(fmt: PositFormat, bits: u64) -> f64 {
+    match decode(fmt, bits) {
+        DecodeResult::Zero => 0.0,
+        DecodeResult::NaR => f64::NAN,
+        DecodeResult::Normal(d) => d.to_f64(),
+    }
+}
+
+/// Convert a posit to `f32` (may round; exact for n ≤ 16 formats whose
+/// values all fit in binary32).
+#[inline]
+pub fn to_f32(fmt: PositFormat, bits: u64) -> f32 {
+    to_f64(fmt, bits) as f32
+}
+
+/// Convert between two posit formats with correct (single) rounding.
+pub fn convert(src: PositFormat, dst: PositFormat, bits: u64) -> u64 {
+    match decode(src, bits) {
+        DecodeResult::Zero => 0,
+        DecodeResult::NaR => dst.nar(),
+        DecodeResult::Normal(d) => {
+            encode(dst, d.sign, d.scale, d.frac as u128, d.frac_bits, false)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const P16: PositFormat = PositFormat::P16E1;
+    const P8: PositFormat = PositFormat::P8E0;
+    const P32: PositFormat = PositFormat::P32E2;
+
+    #[test]
+    fn simple_values() {
+        assert_eq!(from_f64(P16, 1.0), 0x4000);
+        assert_eq!(from_f64(P16, -1.0), 0xC000);
+        assert_eq!(from_f64(P16, 0.0), 0);
+        assert_eq!(from_f64(P16, f64::NAN), P16.nar());
+        assert_eq!(from_f64(P16, f64::INFINITY), P16.nar());
+        assert_eq!(to_f64(P16, 0x4000), 1.0);
+        assert!(to_f64(P16, P16.nar()).is_nan());
+    }
+
+    #[test]
+    fn round_trip_all_p8() {
+        for bits in 0u64..256 {
+            if bits == 0x80 {
+                continue;
+            }
+            assert_eq!(from_f64(P8, to_f64(P8, bits)), bits, "bits={bits:#x}");
+        }
+    }
+
+    #[test]
+    fn round_trip_all_p16() {
+        for bits in 0u64..65536 {
+            if bits == 0x8000 {
+                continue;
+            }
+            assert_eq!(from_f64(P16, to_f64(P16, bits)), bits, "bits={bits:#x}");
+        }
+    }
+
+    #[test]
+    fn round_trip_sampled_p32() {
+        // Stride through the 32-bit space (exhaustive is 4G patterns).
+        let mut state = 0x9E3779B97F4A7C15u64;
+        for _ in 0..200_000 {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let bits = state >> 32;
+            if bits == 0 || bits == P32.nar() {
+                continue;
+            }
+            assert_eq!(from_f64(P32, to_f64(P32, bits)), bits, "bits={bits:#x}");
+        }
+    }
+
+    #[test]
+    fn saturation_from_f64() {
+        assert_eq!(from_f64(P16, 1e30), P16.maxpos());
+        assert_eq!(from_f64(P16, -1e30), P16.negate(P16.maxpos()));
+        assert_eq!(from_f64(P16, 1e-30), P16.minpos());
+    }
+
+    #[test]
+    fn subnormal_doubles() {
+        let tiny = f64::from_bits(1); // smallest subnormal, 2^-1074
+        assert_eq!(from_f64(P16, tiny), P16.minpos());
+        assert_eq!(from_f64(P16, -tiny), P16.negate(P16.minpos()));
+    }
+
+    #[test]
+    fn format_conversion() {
+        let one16 = from_f64(P16, 1.0);
+        assert_eq!(convert(P16, P8, one16), from_f64(P8, 1.0));
+        // Round trip through a wider format is lossless.
+        for bits in (0u64..65536).step_by(7) {
+            if bits == 0x8000 {
+                continue;
+            }
+            let wide = convert(P16, P32, bits);
+            assert_eq!(convert(P32, P16, wide), bits);
+        }
+    }
+
+    #[test]
+    fn rne_on_conversion() {
+        // Halfway between two P8E0 posits: 1 + 1/64 is exactly between
+        // 1.0 (frac 00000) and 1+1/32 (frac 00001) → ties to even (1.0).
+        assert_eq!(from_f64(P8, 1.0 + 1.0 / 64.0), from_f64(P8, 1.0));
+        // Just above the tie rounds up.
+        assert_eq!(
+            from_f64(P8, 1.0 + 1.0 / 64.0 + 1e-9),
+            from_f64(P8, 1.0 + 1.0 / 32.0)
+        );
+    }
+}

@@ -1,0 +1,287 @@
+//! FastQuire — carry-free exact accumulator for n ≤ 16 formats.
+//!
+//! Perf-pass replacement for [`super::quire::Quire`] on the inference
+//! hot path (EXPERIMENTS.md §Perf). Same semantics (exact accumulation,
+//! single rounding at read-out), different representation: six *lazy*
+//! `i128` limbs, each accumulating signed 64-bit chunks at weight
+//! `2^(64·i − QFRAC)`. Additions never propagate carries — an `i128`
+//! absorbs 2^63 worst-case chunks before overflow, far beyond any layer
+//! fan-in — so the per-MAC cost is three indexed `i128` adds. Carries
+//! are normalised once, in `to_posit`.
+
+use super::encode::encode;
+use super::format::PositFormat;
+
+/// Bit position of weight 2^0 (radix point). Chosen so the smallest
+/// n ≤ 16 product chunk (scale ≥ −2·56 − 60) stays non-negative.
+const QFRAC: i32 = 192;
+// Top product bit: QFRAC + 2·max_scale(=112) + sig width(≤62) < 7·64.
+const LIMBS: usize = 7;
+
+/// Exact fixed-point accumulator for n ≤ 16 posit dot products.
+#[derive(Clone)]
+pub struct FastQuire {
+    fmt: PositFormat,
+    /// Lazy limbs: value = Σ limbs[i] · 2^(64·i − QFRAC).
+    limbs: [i128; LIMBS],
+    nar: bool,
+}
+
+impl FastQuire {
+    /// Fresh zero accumulator.
+    pub fn new(fmt: PositFormat) -> Self {
+        assert!(fmt.n <= 16, "FastQuire supports n <= 16 (use Quire)");
+        FastQuire {
+            fmt,
+            limbs: [0; LIMBS],
+            nar: false,
+        }
+    }
+
+    /// Reset to zero.
+    #[inline]
+    pub fn clear(&mut self) {
+        self.limbs = [0; LIMBS];
+        self.nar = false;
+    }
+
+    /// Poison with NaR.
+    #[inline]
+    pub fn set_nar(&mut self) {
+        self.nar = true;
+    }
+
+    /// Add `±sig · 2^scale` (integer magnitude `sig` < 2^126).
+    #[inline]
+    pub fn add_product(&mut self, sig: u128, scale: i32, negative: bool) {
+        if sig == 0 {
+            return;
+        }
+        let pos = QFRAC + scale;
+        debug_assert!(pos >= 0, "product below the fixed-point grid");
+        let limb = (pos >> 6) as usize;
+        let off = (pos & 63) as u32;
+        let (lo, mid, hi) = if off == 0 {
+            (sig as u64, (sig >> 64) as u64, 0u64)
+        } else {
+            (
+                (sig << off) as u64,
+                (sig >> (64 - off)) as u64,
+                (sig >> 64 >> (64 - off)) as u64,
+            )
+        };
+        debug_assert!(limb + 2 < LIMBS);
+        if negative {
+            self.limbs[limb] -= lo as i128;
+            self.limbs[limb + 1] -= mid as i128;
+            self.limbs[limb + 2] -= hi as i128;
+        } else {
+            self.limbs[limb] += lo as i128;
+            self.limbs[limb + 1] += mid as i128;
+            self.limbs[limb + 2] += hi as i128;
+        }
+    }
+
+    /// Add `±sig · 2^scale` for `sig < 2^64` (the common case: products
+    /// of two Q30 significands are ≤ 62 bits). Two limb writes instead
+    /// of three — the MAC inner loop uses this.
+    #[inline(always)]
+    pub fn add_product64(&mut self, sig: u64, scale: i32, negative: bool) {
+        let pos = QFRAC + scale;
+        debug_assert!(pos >= 0, "product below the fixed-point grid");
+        let limb = (pos >> 6) as usize;
+        let off = (pos & 63) as u32;
+        let wide = (sig as u128) << off; // ≤ 62 + 63 bits, fits u128
+        let lo = wide as u64;
+        let hi = (wide >> 64) as u64;
+        debug_assert!(limb + 1 < LIMBS);
+        if negative {
+            self.limbs[limb] -= lo as i128;
+            self.limbs[limb + 1] -= hi as i128;
+        } else {
+            self.limbs[limb] += lo as i128;
+            self.limbs[limb + 1] += hi as i128;
+        }
+    }
+
+    /// Add a single posit value.
+    pub fn add_posit(&mut self, bits: u64) {
+        use super::decode::{decode, DecodeResult};
+        match decode(self.fmt, bits) {
+            DecodeResult::NaR => self.nar = true,
+            DecodeResult::Zero => {}
+            DecodeResult::Normal(d) => {
+                let sig = ((1u64 << d.frac_bits) | d.frac) as u128;
+                self.add_product(sig, d.scale - d.frac_bits as i32, d.sign);
+            }
+        }
+    }
+
+    /// Normalise the lazy limbs into plain two's-complement u64 limbs.
+    fn normalized(&self) -> [u64; LIMBS] {
+        let mut out = [0u64; LIMBS];
+        let mut carry: i128 = 0;
+        for i in 0..LIMBS {
+            let v = self.limbs[i] + carry;
+            out[i] = v as u64; // low 64 bits
+            carry = v >> 64; // arithmetic shift keeps the sign
+        }
+        // Residual carry beyond the top limb can only be sign extension
+        // (headroom guarantees no true overflow).
+        out
+    }
+
+    /// Round to the nearest posit (single RNE).
+    pub fn to_posit(&self) -> u64 {
+        if self.nar {
+            return self.fmt.nar();
+        }
+        let norm = self.normalized();
+        let negative = norm[LIMBS - 1] >> 63 == 1;
+        let mag = if negative {
+            let mut m = [0u64; LIMBS];
+            let mut carry = 1u64;
+            for i in 0..LIMBS {
+                let (v, c) = (!norm[i]).overflowing_add(carry);
+                m[i] = v;
+                carry = c as u64;
+            }
+            m
+        } else {
+            norm
+        };
+        let mut msb: i32 = -1;
+        for i in (0..LIMBS).rev() {
+            if mag[i] != 0 {
+                msb = i as i32 * 64 + 63 - mag[i].leading_zeros() as i32;
+                break;
+            }
+        }
+        if msb < 0 {
+            return 0;
+        }
+        let scale = msb - QFRAC;
+        let frac_width = 64u32.min(msb as u32);
+        let mut frac: u128 = 0;
+        for i in 0..frac_width {
+            let bit = msb as u32 - 1 - i;
+            let b = (mag[(bit >> 6) as usize] >> (bit & 63)) & 1;
+            frac = (frac << 1) | b as u128;
+        }
+        let mut sticky = false;
+        if msb as u32 > frac_width {
+            let low_bits = msb as u32 - frac_width;
+            for i in 0..LIMBS {
+                let base = i as u32 * 64;
+                if base >= low_bits {
+                    break;
+                }
+                let top = (low_bits - base).min(64);
+                let m = if top == 64 { u64::MAX } else { (1u64 << top) - 1 };
+                if mag[i] & m != 0 {
+                    sticky = true;
+                    break;
+                }
+            }
+        }
+        encode(self.fmt, negative, scale, frac, frac_width, sticky)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::posit::convert::from_f64;
+    use crate::posit::decode::{decode, DecodeResult};
+    use crate::posit::quire::Quire;
+    use crate::prng::Rng;
+
+    const P16: PositFormat = PositFormat::P16E1;
+
+    fn mac_both(pairs: &[(u64, u64)]) -> (u64, u64) {
+        let mut fast = FastQuire::new(P16);
+        let mut slow = Quire::new(P16);
+        for &(a, b) in pairs {
+            slow.mul_add(a, b);
+            // Fast path: decode + product, like the nn engine does.
+            match (decode(P16, a), decode(P16, b)) {
+                (DecodeResult::Normal(da), DecodeResult::Normal(db)) => {
+                    let sig = (((1u64 << da.frac_bits) | da.frac) as u128)
+                        * (((1u64 << db.frac_bits) | db.frac) as u128);
+                    let scale =
+                        da.scale + db.scale - da.frac_bits as i32 - db.frac_bits as i32;
+                    fast.add_product(sig, scale, da.sign ^ db.sign);
+                }
+                (DecodeResult::Zero, _) | (_, DecodeResult::Zero) => {}
+                _ => fast.set_nar(),
+            }
+        }
+        (fast.to_posit(), slow.to_posit())
+    }
+
+    #[test]
+    fn agrees_with_reference_quire_on_random_dots() {
+        let mut rng = Rng::new(0xFA57);
+        for case in 0..2_000 {
+            let len = 1 + (rng.below(64) as usize);
+            let pairs: Vec<(u64, u64)> = (0..len)
+                .map(|_| {
+                    let mut p = || loop {
+                        let b = rng.next_u64() & P16.mask();
+                        if b != P16.nar() {
+                            break b;
+                        }
+                    };
+                    (p(), p())
+                })
+                .collect();
+            let (f, s) = mac_both(&pairs);
+            assert_eq!(f, s, "case {case}: fast {f:#x} vs quire {s:#x}");
+        }
+    }
+
+    #[test]
+    fn cancellation_and_zero() {
+        let one = from_f64(P16, 1.0);
+        let mone = from_f64(P16, -1.0);
+        let (f, s) = mac_both(&[(one, one), (mone, one)]);
+        assert_eq!(f, 0);
+        assert_eq!(s, 0);
+    }
+
+    #[test]
+    fn nar_poisons() {
+        let mut q = FastQuire::new(P16);
+        q.set_nar();
+        assert_eq!(q.to_posit(), P16.nar());
+    }
+
+    #[test]
+    fn add_posit_matches_quire() {
+        let mut rng = Rng::new(9);
+        let mut fast = FastQuire::new(P16);
+        let mut slow = Quire::new(P16);
+        for _ in 0..200 {
+            let b = rng.next_u64() & P16.mask();
+            if b == P16.nar() {
+                continue;
+            }
+            fast.add_posit(b);
+            slow.add_posit(b);
+        }
+        assert_eq!(fast.to_posit(), slow.to_posit());
+    }
+
+    #[test]
+    fn large_fan_in_no_overflow() {
+        // 100k max-magnitude products: headroom must hold.
+        let maxpos = P16.maxpos();
+        let mut fast = FastQuire::new(P16);
+        let d = decode(P16, maxpos).unwrap_normal();
+        let sig = (((1u64 << d.frac_bits) | d.frac) as u128).pow(2);
+        for _ in 0..100_000 {
+            fast.add_product(sig, 2 * (d.scale - d.frac_bits as i32), false);
+        }
+        assert_eq!(fast.to_posit(), maxpos); // saturates, no wrap
+    }
+}

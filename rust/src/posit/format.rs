@@ -1,0 +1,171 @@
+//! Posit format descriptor `⟨n, es⟩` and derived constants.
+//!
+//! A posit format is fully specified by its total bit-width `n` and the
+//! maximum exponent-field width `es` (Gustafson & Yonemoto, 2017). This
+//! module is runtime-parameterised so the hardware cost model and the
+//! accuracy sweeps can iterate over arbitrary formats; the typed wrappers
+//! in [`crate::posit::typed`] pin `⟨n, es⟩` at compile time.
+
+/// A posit format `⟨n, es⟩`.
+///
+/// Invariants: `2 <= n <= 32`, `es <= 4`. All bit patterns are stored in
+/// the low `n` bits of a `u64`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PositFormat {
+    /// Total bit-width `n`.
+    pub n: u32,
+    /// Maximum exponent field width `es`.
+    pub es: u32,
+}
+
+impl PositFormat {
+    /// Create a new format. Panics on out-of-range parameters.
+    pub const fn new(n: u32, es: u32) -> Self {
+        assert!(n >= 2 && n <= 32, "posit width must be in 2..=32");
+        assert!(es <= 4, "es must be <= 4");
+        PositFormat { n, es }
+    }
+
+    /// `Posit⟨8,0⟩` — common low-precision inference format.
+    pub const P8E0: PositFormat = PositFormat::new(8, 0);
+    /// `Posit⟨8,2⟩` — the 2022-standard 8-bit posit.
+    pub const P8E2: PositFormat = PositFormat::new(8, 2);
+    /// `Posit⟨16,1⟩` — the format used throughout the paper's Table II.
+    pub const P16E1: PositFormat = PositFormat::new(16, 1);
+    /// `Posit⟨16,2⟩` — the 2022-standard 16-bit posit.
+    pub const P16E2: PositFormat = PositFormat::new(16, 2);
+    /// `Posit⟨32,2⟩` — the format of the paper's Fig. 1 / 32-bit synthesis.
+    pub const P32E2: PositFormat = PositFormat::new(32, 2);
+
+    /// Mask selecting the low `n` bits.
+    #[inline(always)]
+    pub const fn mask(&self) -> u64 {
+        if self.n == 64 { u64::MAX } else { (1u64 << self.n) - 1 }
+    }
+
+    /// The sign bit of an `n`-bit pattern.
+    #[inline(always)]
+    pub const fn sign_bit(&self) -> u64 {
+        1u64 << (self.n - 1)
+    }
+
+    /// Bit pattern of Not-a-Real (`100…0`).
+    #[inline(always)]
+    pub const fn nar(&self) -> u64 {
+        self.sign_bit()
+    }
+
+    /// Bit pattern of the largest positive posit (`011…1`).
+    #[inline(always)]
+    pub const fn maxpos(&self) -> u64 {
+        self.sign_bit() - 1
+    }
+
+    /// Bit pattern of the smallest positive posit (`000…01`).
+    #[inline(always)]
+    pub const fn minpos(&self) -> u64 {
+        1
+    }
+
+    /// `useed = 2^(2^es)`, the regime scaling base.
+    #[inline(always)]
+    pub const fn useed_log2(&self) -> i32 {
+        1 << self.es
+    }
+
+    /// Maximum (positive) scale: `(n-2) * 2^es`, reached by `maxpos`.
+    #[inline(always)]
+    pub const fn max_scale(&self) -> i32 {
+        (self.n as i32 - 2) * self.useed_log2()
+    }
+
+    /// Minimum scale, reached by `minpos` (`= -max_scale`).
+    #[inline(always)]
+    pub const fn min_scale(&self) -> i32 {
+        -self.max_scale()
+    }
+
+    /// Maximum number of fraction bits a value of this format can carry:
+    /// `n - 3 - es` (sign + 2-bit regime minimum), saturating at 0.
+    #[inline(always)]
+    pub const fn max_frac_bits(&self) -> u32 {
+        let avail = self.n as i32 - 3 - self.es as i32;
+        if avail < 0 { 0 } else { avail as u32 }
+    }
+
+    /// Number of distinct bit patterns (`2^n`).
+    #[inline(always)]
+    pub const fn cardinality(&self) -> u64 {
+        1u64 << self.n
+    }
+
+    /// Interpret an `n`-bit pattern as a signed integer (posit total order).
+    #[inline(always)]
+    pub const fn as_signed(&self, bits: u64) -> i64 {
+        let shift = 64 - self.n;
+        ((bits << shift) as i64) >> shift
+    }
+
+    /// Two's-complement negate an `n`-bit pattern (posit negation).
+    #[inline(always)]
+    pub const fn negate(&self, bits: u64) -> u64 {
+        bits.wrapping_neg() & self.mask()
+    }
+}
+
+impl core::fmt::Display for PositFormat {
+    fn fmt(&self, f: &mut core::fmt::Formatter<'_>) -> core::fmt::Result {
+        write!(f, "Posit<{},{}>", self.n, self.es)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constants_p16e1() {
+        let f = PositFormat::P16E1;
+        assert_eq!(f.mask(), 0xFFFF);
+        assert_eq!(f.nar(), 0x8000);
+        assert_eq!(f.maxpos(), 0x7FFF);
+        assert_eq!(f.minpos(), 1);
+        assert_eq!(f.useed_log2(), 2);
+        assert_eq!(f.max_scale(), 28);
+        assert_eq!(f.max_frac_bits(), 12);
+    }
+
+    #[test]
+    fn constants_p32e2() {
+        let f = PositFormat::P32E2;
+        assert_eq!(f.max_scale(), 120);
+        assert_eq!(f.max_frac_bits(), 27);
+        assert_eq!(f.mask(), 0xFFFF_FFFF);
+    }
+
+    #[test]
+    fn constants_p8e0() {
+        let f = PositFormat::P8E0;
+        assert_eq!(f.max_scale(), 6);
+        assert_eq!(f.max_frac_bits(), 5);
+    }
+
+    #[test]
+    fn signed_order_matches_bit_order() {
+        let f = PositFormat::P8E0;
+        // NaR is the most negative signed value; maxpos the most positive.
+        assert!(f.as_signed(f.nar()) < f.as_signed(0xFF)); // -minpos
+        assert!(f.as_signed(0xFF) < 0);
+        assert!(f.as_signed(f.maxpos()) > f.as_signed(1));
+    }
+
+    #[test]
+    fn negate_round_trips() {
+        let f = PositFormat::P16E1;
+        for bits in [1u64, 0x1234, 0x7FFF, 0x4000] {
+            assert_eq!(f.negate(f.negate(bits)), bits);
+        }
+        assert_eq!(f.negate(0), 0);
+        assert_eq!(f.negate(f.nar()), f.nar()); // NaR is its own negation
+    }
+}

@@ -1,0 +1,79 @@
+//! Posit number system substrate (software model of SoftPosit + the
+//! paper's PLAM extension).
+//!
+//! The Posit Number System (Gustafson & Yonemoto 2017) encodes reals as
+//! `(-1)^s · useed^k · 2^e · (1+f)` with `useed = 2^2^es` (paper Eq. 1).
+//! This module provides, all bit-exact and from scratch:
+//!
+//! * [`format`] — the `⟨n, es⟩` descriptor and derived constants;
+//! * [`decode`] / [`encode`] — field extraction and RNE packing, the
+//!   software twins of the hardware decode/encode stages (Figs. 3–4);
+//! * [`exact`] — exact add/sub/mul/div/compare (Eqs. 3–10 for mul);
+//! * [`plam`] — the paper's logarithm-approximate multiplier (Eqs. 14–24);
+//! * [`quire`] — the exact fixed-point accumulator (EMAC support);
+//! * [`convert`] — IEEE-754 ⇄ posit and posit ⇄ posit conversions;
+//! * [`typed`] — `Posit<N, ES>` value types with operator overloading;
+//! * [`tables`] — precomputed decode tables for the hot inference path.
+
+pub mod convert;
+pub mod decode;
+pub mod encode;
+pub mod exact;
+pub mod fast_quire;
+pub mod format;
+pub mod plam;
+pub mod quire;
+pub mod tables;
+pub mod typed;
+
+pub use convert::{convert as convert_format, from_f32, from_f64, to_f32, to_f64};
+pub use decode::{classify, decode, DecodeResult, Decoded, PositClass};
+pub use encode::encode;
+pub use exact::{abs, add, cmp, div, mul, neg, sub};
+pub use format::PositFormat;
+pub use fast_quire::FastQuire;
+pub use plam::{plam_mul, plam_relative_error, plam_value_f64, PLAM_MAX_RELATIVE_ERROR};
+pub use quire::Quire;
+pub use typed::{Posit, P16E1, P16E2, P32E2, P8E0};
+
+/// Next representable posit above `bits` in the total order (saturating:
+/// maxpos maps to itself; NaR maps to NaR).
+pub fn as_signed_succ(fmt: PositFormat, bits: u64) -> u64 {
+    if bits == fmt.maxpos() || bits == fmt.nar() {
+        return bits;
+    }
+    bits.wrapping_add(1) & fmt.mask()
+}
+
+/// Previous representable posit below `bits` (saturating at NaR's
+/// neighbour; NaR maps to NaR).
+pub fn as_signed_pred(fmt: PositFormat, bits: u64) -> u64 {
+    if bits == fmt.nar() {
+        return bits;
+    }
+    let prev = bits.wrapping_sub(1) & fmt.mask();
+    if prev == fmt.nar() {
+        return bits; // don't step onto NaR
+    }
+    prev
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn succ_pred_are_inverse_away_from_ends() {
+        let f = PositFormat::P16E1;
+        for bits in [1u64, 0x4000, 0x7FFE, 0x8001, 0xC000, 0xFFFF] {
+            let s = as_signed_succ(f, bits);
+            assert_eq!(as_signed_pred(f, s), bits, "bits={bits:#x}");
+        }
+    }
+
+    #[test]
+    fn succ_saturates_at_maxpos() {
+        let f = PositFormat::P16E1;
+        assert_eq!(as_signed_succ(f, f.maxpos()), f.maxpos());
+    }
+}

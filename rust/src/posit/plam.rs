@@ -1,0 +1,252 @@
+//! PLAM — the Posit Logarithm-Approximate Multiplier (paper §III.B).
+//!
+//! The paper's contribution: replace the exact significand product
+//! `(1+f_A)(1+f_B)` of Eq. 6 by the *sum* `f_A + f_B` of Eq. 17, justified
+//! by Mitchell's log approximation `log2(1+x) ≈ x` (Eq. 13). In the
+//! log-domain view of Eq. 12, a posit is the fixed-point number
+//! `k‖e‖f` (regime and exponent concatenated, fraction below the binary
+//! point); multiplication becomes one fixed-point addition. The carry out
+//! of the fraction addition (`F ≥ 1`, Eq. 20–21) bumps the exponent, and
+//! the carry out of the exponent addition bumps the regime (Eq. 19) —
+//! in hardware both are free carry propagations (Fig. 4).
+//!
+//! This module is the bit-exact software model of that datapath,
+//! including the final round-to-nearest-even ("support for correct
+//! rounding", paper §V).
+
+use super::decode::{decode, DecodeResult};
+use super::encode::encode;
+use super::format::PositFormat;
+
+/// Fixed-point width used for the log-domain fraction addition. Wide
+/// enough that two ≤ 29-bit fractions align exactly (no pre-rounding).
+const W: u32 = 62;
+
+/// PLAM approximate posit multiplication `a ×̃ b` (Eqs. 14–21).
+///
+/// Sign and special-case behaviour are identical to the exact multiplier:
+/// `NaR ×̃ x = NaR`, `0 ×̃ x = 0`, and the sign is `s_A ⊕ s_B`. Only the
+/// significand path differs.
+pub fn plam_mul(fmt: PositFormat, a: u64, b: u64) -> u64 {
+    let (da, db) = match (decode(fmt, a), decode(fmt, b)) {
+        (DecodeResult::NaR, _) | (_, DecodeResult::NaR) => return fmt.nar(),
+        (DecodeResult::Zero, _) | (_, DecodeResult::Zero) => return 0,
+        (DecodeResult::Normal(da), DecodeResult::Normal(db)) => (da, db),
+    };
+
+    let sign = da.sign ^ db.sign; // Eq. 14
+    // Eqs. 15–16: the regime/exponent path is the same fixed-point adder
+    // as the exact multiplier (k‖e concatenated = the combined scale).
+    let scale = da.scale + db.scale;
+    // Eq. 17: F = f_A + f_B as fixed-point fractions in [0, 1).
+    let fsum = da.frac_aligned(W) + db.frac_aligned(W);
+    // Eqs. 20–21: carry out of the fraction addition (F ≥ 1) increments
+    // the scale (which may ripple from exponent into regime — Eq. 19 —
+    // handled uniformly by `encode` via the combined scale).
+    let carry = (fsum >> W) as i32;
+    let frac = fsum & ((1u64 << W) - 1);
+    encode(fmt, sign, scale + carry, frac as u128, W, false)
+}
+
+/// Closed-form value of the PLAM product (paper Eq. 23), computed in
+/// `f64`. Used as the oracle in tests: for positive `A = s_A(1+f_A)`,
+/// `B = s_B(1+f_B)`:
+///
+/// ```text
+/// C_PLAM = s_A·s_B·(1 + f_A + f_B)      if f_A + f_B < 1
+///        = 2·s_A·s_B·(f_A + f_B)        otherwise
+/// ```
+///
+/// (the second case equals `s_A·s_B·2·(1 + (f_A+f_B−1))`, i.e. the
+/// carried form of Eqs. 20–21). The result is then a *real* number; the
+/// hardware additionally rounds it to the output format.
+pub fn plam_value_f64(fmt: PositFormat, a: u64, b: u64) -> f64 {
+    let (da, db) = match (decode(fmt, a), decode(fmt, b)) {
+        (DecodeResult::NaR, _) | (_, DecodeResult::NaR) => return f64::NAN,
+        (DecodeResult::Zero, _) | (_, DecodeResult::Zero) => return 0.0,
+        (DecodeResult::Normal(da), DecodeResult::Normal(db)) => (da, db),
+    };
+    let fa = da.frac as f64 / (1u64 << da.frac_bits) as f64;
+    let fb = db.frac as f64 / (1u64 << db.frac_bits) as f64;
+    let s = ((da.scale + db.scale) as f64).exp2();
+    let mag = if fa + fb < 1.0 {
+        s * (1.0 + fa + fb)
+    } else {
+        2.0 * s * (fa + fb - 1.0 + 1.0)
+    };
+    if da.sign ^ db.sign {
+        -mag
+    } else {
+        mag
+    }
+}
+
+/// Relative error of the PLAM approximation for fraction values
+/// `fa, fb ∈ [0, 1)` (paper Eq. 24). Independent of regime/exponent.
+pub fn plam_relative_error(fa: f64, fb: f64) -> f64 {
+    debug_assert!((0.0..1.0).contains(&fa) && (0.0..1.0).contains(&fb));
+    if fa + fb < 1.0 {
+        (fa * fb) / ((1.0 + fa) * (1.0 + fb))
+    } else {
+        ((1.0 - fa) * (1.0 - fb)) / ((1.0 + fa) * (1.0 + fb))
+    }
+}
+
+/// The paper's stated error bound: 1/9 ≈ 11.1 %, attained at
+/// `f_A = f_B = 0.5` (Mitchell, 1962).
+pub const PLAM_MAX_RELATIVE_ERROR: f64 = 1.0 / 9.0;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::posit::convert::{from_f64, to_f64};
+    use crate::posit::exact;
+
+    const P16: PositFormat = PositFormat::P16E1;
+    const P8: PositFormat = PositFormat::P8E0;
+
+    fn p16(x: f64) -> u64 {
+        from_f64(P16, x)
+    }
+
+    #[test]
+    fn exact_when_either_fraction_zero() {
+        // Powers of two have f = 0 → log approximation is exact.
+        for (a, b) in [(2.0, 3.5), (0.5, 1.75), (4.0, 8.0), (1.0, 0.3125)] {
+            let pa = p16(a);
+            let pb = p16(b);
+            assert_eq!(
+                plam_mul(P16, pa, pb),
+                exact::mul(P16, pa, pb),
+                "a={a} b={b}"
+            );
+        }
+    }
+
+    #[test]
+    fn worst_case_error_at_half_half() {
+        // 1.5 × 1.5 = 2.25 exactly; PLAM gives 2·(0.5+0.5) = 2.0.
+        let r = plam_mul(P16, p16(1.5), p16(1.5));
+        assert_eq!(to_f64(P16, r), 2.0);
+        let exact_v = 2.25;
+        let rel = (exact_v - 2.0) / exact_v;
+        assert!((rel - PLAM_MAX_RELATIVE_ERROR).abs() < 1e-12);
+    }
+
+    #[test]
+    fn specials_match_exact_multiplier() {
+        assert_eq!(plam_mul(P16, 0, p16(3.0)), 0);
+        assert_eq!(plam_mul(P16, p16(3.0), 0), 0);
+        assert_eq!(plam_mul(P16, P16.nar(), p16(3.0)), P16.nar());
+        assert_eq!(plam_mul(P16, 0, P16.nar()), P16.nar());
+    }
+
+    #[test]
+    fn sign_handling_matches_exact() {
+        for (a, b) in [(1.5, 2.5), (-1.5, 2.5), (1.5, -2.5), (-1.5, -2.5)] {
+            let got = to_f64(P16, plam_mul(P16, p16(a), p16(b)));
+            assert_eq!(got.signum(), (a * b).signum(), "a={a} b={b}");
+        }
+    }
+
+    #[test]
+    fn matches_closed_form_exhaustive_p8() {
+        // For every pair of 8-bit posits, the bit-level PLAM result must
+        // equal the RNE encoding of the Eq. 23 closed form.
+        for a in 0u64..256 {
+            for b in 0u64..256 {
+                if a == 0x80 || b == 0x80 {
+                    continue;
+                }
+                let got = plam_mul(P8, a, b);
+                let want = from_f64(P8, plam_value_f64(P8, a, b));
+                assert_eq!(got, want, "a={a:#04x} b={b:#04x}");
+            }
+        }
+    }
+
+    #[test]
+    fn error_bound_exhaustive_p8() {
+        // Relative error vs the *real* product is ≤ 1/9 for all inputs
+        // (before output rounding; with rounding allow one output ulp).
+        for a in 1u64..256 {
+            for b in 1u64..256 {
+                if a == 0x80 || b == 0x80 {
+                    continue;
+                }
+                let real = to_f64(P8, a) * to_f64(P8, b);
+                let approx = plam_value_f64(P8, a, b);
+                let rel = ((real - approx) / real).abs();
+                assert!(
+                    rel <= PLAM_MAX_RELATIVE_ERROR + 1e-12,
+                    "a={a:#x} b={b:#x} rel={rel}"
+                );
+                // PLAM always under-approximates in magnitude
+                // (log2(1+x) ≥ x on [0,1]).
+                assert!(approx.abs() <= real.abs() + 1e-12 * real.abs());
+            }
+        }
+    }
+
+    #[test]
+    fn error_formula_matches_measurement() {
+        // Eq. 24 agrees with direct measurement on a fraction grid.
+        for i in 0..32 {
+            for j in 0..32 {
+                let fa = i as f64 / 32.0;
+                let fb = j as f64 / 32.0;
+                let exact_v = (1.0 + fa) * (1.0 + fb);
+                let plam_v = if fa + fb < 1.0 {
+                    1.0 + fa + fb
+                } else {
+                    2.0 * (fa + fb)
+                };
+                let rel = (exact_v - plam_v) / exact_v;
+                assert!((rel - plam_relative_error(fa, fb)).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn error_peaks_at_half() {
+        let peak = plam_relative_error(0.5, 0.5);
+        assert!((peak - 1.0 / 9.0).abs() < 1e-15);
+        for i in 0..=16 {
+            for j in 0..=16 {
+                let fa = i as f64 / 16.0 * 0.999;
+                let fb = j as f64 / 16.0 * 0.999;
+                assert!(plam_relative_error(fa, fb) <= peak + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn regime_exponent_do_not_affect_error() {
+        // Same fractions at wildly different scales → same relative error
+        // (paper: "neither the exponents nor the regime fields affect the
+        // error value").
+        let pairs = [(1.5, 1.5), (3.0, 3.0), (1.5, 96.0), (0.09375, 1.5)];
+        let mut errs = vec![];
+        for (a, b) in pairs {
+            let pa = p16(a);
+            let pb = p16(b);
+            let real = to_f64(P16, pa) * to_f64(P16, pb);
+            let approx = plam_value_f64(P16, pa, pb);
+            errs.push(((real - approx) / real).abs());
+        }
+        for e in &errs {
+            assert!((e - errs[0]).abs() < 1e-12, "errs={errs:?}");
+        }
+    }
+
+    #[test]
+    fn plam_commutes() {
+        let mut state = 12345u64;
+        for _ in 0..2000 {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1);
+            let a = (state >> 16) & 0xFFFF;
+            let b = (state >> 32) & 0xFFFF;
+            assert_eq!(plam_mul(P16, a, b), plam_mul(P16, b, a));
+        }
+    }
+}

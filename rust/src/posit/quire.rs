@@ -1,0 +1,338 @@
+//! Quire: the exact fixed-point accumulator of the posit standard.
+//!
+//! Dot products accumulated in a quire incur a *single* rounding at the
+//! final quire→posit conversion — this is the "exact multiply-and-
+//! accumulate" (EMAC) that posit DNN accelerators (Deep Positron [8],
+//! Deep PeNSieve [4]) build their dense/conv layers on. Our DNN engine
+//! (`crate::nn`) uses it for the exact-posit inference path, and swaps
+//! the product generator for PLAM in the approximate path.
+//!
+//! Layout: a 1024-bit two's-complement fixed-point register (16 × u64
+//! limbs). Bit `QFRAC` has weight 2^0. The supported formats need at most
+//! `2·max_scale + 62` bits on either side of the point (P⟨32,2⟩:
+//! 2·120+62 = 302), so 1024 bits leaves > 400 bits of carry headroom —
+//! enough for ≥ 2^100 accumulations without overflow.
+
+use super::decode::{decode, DecodeResult};
+use super::encode::encode;
+use super::format::PositFormat;
+
+const LIMBS: usize = 16;
+const BITS: u32 = 64 * LIMBS as u32;
+/// Weight of bit QFRAC is 2^0 (the binary point sits below it).
+const QFRAC: u32 = 480;
+
+/// Exact fixed-point accumulator for posit dot products.
+#[derive(Clone)]
+pub struct Quire {
+    fmt: PositFormat,
+    /// Two's-complement little-endian limbs.
+    limbs: [u64; LIMBS],
+    /// Sticky NaR: once poisoned, the quire stays NaR.
+    nar: bool,
+}
+
+impl Quire {
+    /// Fresh zero quire for the given format.
+    pub fn new(fmt: PositFormat) -> Self {
+        Quire {
+            fmt,
+            limbs: [0; LIMBS],
+            nar: false,
+        }
+    }
+
+    /// Reset to zero (reusing the allocation).
+    pub fn clear(&mut self) {
+        self.limbs = [0; LIMBS];
+        self.nar = false;
+    }
+
+    /// Add the *exact* product `a · b` into the quire (fused MAC, Eq. 6
+    /// product with no intermediate rounding).
+    pub fn mul_add(&mut self, a: u64, b: u64) {
+        let (da, db) = match (decode(self.fmt, a), decode(self.fmt, b)) {
+            (DecodeResult::NaR, _) | (_, DecodeResult::NaR) => {
+                self.nar = true;
+                return;
+            }
+            (DecodeResult::Zero, _) | (_, DecodeResult::Zero) => return,
+            (DecodeResult::Normal(da), DecodeResult::Normal(db)) => (da, db),
+        };
+        // Exact product of significands: hidden bits at fa+fb bit offsets.
+        let sig = (((1u64 << da.frac_bits) | da.frac) as u128)
+            * (((1u64 << db.frac_bits) | db.frac) as u128);
+        // sig has weight 2^(scale_sum - fa_bits - fb_bits) per unit.
+        let scale = da.scale + db.scale - da.frac_bits as i32 - db.frac_bits as i32;
+        self.add_shifted(sig, QFRAC as i32 + scale, da.sign ^ db.sign);
+    }
+
+    /// Add the PLAM *approximate* product into the quire (the nn engine's
+    /// approximate path: PLAM product, exact accumulation).
+    pub fn plam_mul_add(&mut self, a: u64, b: u64) {
+        let (da, db) = match (decode(self.fmt, a), decode(self.fmt, b)) {
+            (DecodeResult::NaR, _) | (_, DecodeResult::NaR) => {
+                self.nar = true;
+                return;
+            }
+            (DecodeResult::Zero, _) | (_, DecodeResult::Zero) => return,
+            (DecodeResult::Normal(da), DecodeResult::Normal(db)) => (da, db),
+        };
+        const W: u32 = 60;
+        let fsum = da.frac_aligned(W) + db.frac_aligned(W);
+        let carry = (fsum >> W) as i32;
+        let frac = fsum & ((1u64 << W) - 1);
+        // Value = 2^(scale+carry) · (1 + frac/2^W)
+        let sig = ((1u128 << W) | frac as u128) as u128;
+        let scale = da.scale + db.scale + carry - W as i32;
+        self.add_shifted(sig, QFRAC as i32 + scale, da.sign ^ db.sign);
+    }
+
+    /// Add `±sig · 2^scale` (integer magnitude `sig`, ≤ 128 bits) into
+    /// the quire. Building block for pre-decoded MAC loops (`crate::nn`).
+    #[inline]
+    pub fn add_product(&mut self, sig: u128, scale: i32, negative: bool) {
+        if sig == 0 {
+            return;
+        }
+        self.add_shifted(sig, QFRAC as i32 + scale, negative);
+    }
+
+    /// Add a single posit value into the quire.
+    pub fn add_posit(&mut self, a: u64) {
+        match decode(self.fmt, a) {
+            DecodeResult::NaR => self.nar = true,
+            DecodeResult::Zero => {}
+            DecodeResult::Normal(d) => {
+                let sig = ((1u64 << d.frac_bits) | d.frac) as u128;
+                let scale = d.scale - d.frac_bits as i32;
+                self.add_shifted(sig, QFRAC as i32 + scale, d.sign);
+            }
+        }
+    }
+
+    /// Core primitive: add `±mag · 2^(pos - QFRAC)` where `mag` is placed
+    /// with its LSB at absolute bit `pos` of the register.
+    fn add_shifted(&mut self, mag: u128, pos: i32, negative: bool) {
+        debug_assert!(pos >= 0 && (pos as u32) + 128 < BITS, "quire shift out of range");
+        let pos = pos as u32;
+        let limb = (pos / 64) as usize;
+        let off = pos % 64;
+        // Spread the (≤128-bit) magnitude over up to 3 limbs.
+        let (lo, mid, hi) = if off == 0 {
+            (mag as u64, (mag >> 64) as u64, 0u64)
+        } else {
+            (
+                (mag << off) as u64,
+                (mag >> (64 - off)) as u64,
+                (mag >> 64 >> (64 - off)) as u64,
+            )
+        };
+        if negative {
+            self.sub_at(limb, lo);
+            self.sub_at(limb + 1, mid);
+            self.sub_at(limb + 2, hi);
+        } else {
+            self.add_at(limb, lo);
+            self.add_at(limb + 1, mid);
+            self.add_at(limb + 2, hi);
+        }
+    }
+
+    fn add_at(&mut self, mut limb: usize, val: u64) {
+        if val == 0 {
+            return;
+        }
+        let (s, mut carry) = self.limbs[limb].overflowing_add(val);
+        self.limbs[limb] = s;
+        while carry {
+            limb += 1;
+            if limb >= LIMBS {
+                break; // two's complement wrap (only on true overflow)
+            }
+            let (s, c) = self.limbs[limb].overflowing_add(1);
+            self.limbs[limb] = s;
+            carry = c;
+        }
+    }
+
+    fn sub_at(&mut self, mut limb: usize, val: u64) {
+        if val == 0 {
+            return;
+        }
+        let (s, mut borrow) = self.limbs[limb].overflowing_sub(val);
+        self.limbs[limb] = s;
+        while borrow {
+            limb += 1;
+            if limb >= LIMBS {
+                break;
+            }
+            let (s, b) = self.limbs[limb].overflowing_sub(1);
+            self.limbs[limb] = s;
+            borrow = b;
+        }
+    }
+
+    /// True if the accumulated value is exactly zero.
+    pub fn is_zero(&self) -> bool {
+        !self.nar && self.limbs.iter().all(|&l| l == 0)
+    }
+
+    /// Round the accumulated value to the nearest posit (single RNE).
+    pub fn to_posit(&self) -> u64 {
+        if self.nar {
+            return self.fmt.nar();
+        }
+        // Sign: top bit of the two's-complement register.
+        let negative = self.limbs[LIMBS - 1] >> 63 == 1;
+        let mag = if negative { self.negated_limbs() } else { self.limbs };
+        // Find MSB.
+        let mut msb: i32 = -1;
+        for i in (0..LIMBS).rev() {
+            if mag[i] != 0 {
+                msb = i as i32 * 64 + 63 - mag[i].leading_zeros() as i32;
+                break;
+            }
+        }
+        if msb < 0 {
+            return 0;
+        }
+        let scale = msb - QFRAC as i32;
+        // Extract up to 64 fraction bits below the MSB + sticky of the rest.
+        let frac_width = 64u32.min(msb as u32);
+        let mut frac: u128 = 0;
+        for i in 0..frac_width {
+            let bit = msb as u32 - 1 - i; // from MSB-1 downward
+            let b = (mag[(bit / 64) as usize] >> (bit % 64)) & 1;
+            frac = (frac << 1) | b as u128;
+        }
+        let mut sticky = false;
+        if msb as u32 > frac_width {
+            let low_bits = msb as u32 - frac_width;
+            'outer: for i in 0..LIMBS {
+                let base = i as u32 * 64;
+                if base >= low_bits {
+                    break;
+                }
+                let top = (low_bits - base).min(64);
+                let m = if top == 64 { u64::MAX } else { (1u64 << top) - 1 };
+                if mag[i] & m != 0 {
+                    sticky = true;
+                    break 'outer;
+                }
+            }
+        }
+        encode(self.fmt, negative, scale, frac, frac_width, sticky)
+    }
+
+    fn negated_limbs(&self) -> [u64; LIMBS] {
+        let mut out = [0u64; LIMBS];
+        let mut carry = 1u64;
+        for i in 0..LIMBS {
+            let (v, c) = (!self.limbs[i]).overflowing_add(carry);
+            out[i] = v;
+            carry = c as u64;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::posit::convert::{from_f64, to_f64};
+    use crate::posit::exact;
+
+    const P16: PositFormat = PositFormat::P16E1;
+
+    fn p16(x: f64) -> u64 {
+        from_f64(P16, x)
+    }
+
+    #[test]
+    fn single_product_matches_mul() {
+        for (a, b) in [(1.5, 2.75), (-3.0, 0.125), (96.0, 96.0), (0.007, -12.0)] {
+            let pa = p16(a);
+            let pb = p16(b);
+            let mut q = Quire::new(P16);
+            q.mul_add(pa, pb);
+            assert_eq!(q.to_posit(), exact::mul(P16, pa, pb), "a={a} b={b}");
+        }
+    }
+
+    #[test]
+    fn accumulation_is_exact() {
+        // Σ of values that would each round away in posit chain addition:
+        // 1024 + 1/1024 … repeated; quire keeps all bits.
+        let mut q = Quire::new(P16);
+        q.add_posit(p16(1024.0));
+        for _ in 0..8 {
+            q.add_posit(p16(1.0 / 1024.0));
+        }
+        // Exact sum = 1024 + 8/1024 = 1024.0078125; nearest P16E1:
+        let want = from_f64(P16, 1024.0 + 8.0 / 1024.0);
+        assert_eq!(q.to_posit(), want);
+    }
+
+    #[test]
+    fn cancellation_to_zero() {
+        let mut q = Quire::new(P16);
+        q.mul_add(p16(3.5), p16(2.0));
+        q.mul_add(p16(-3.5), p16(2.0));
+        assert!(q.is_zero());
+        assert_eq!(q.to_posit(), 0);
+    }
+
+    #[test]
+    fn negative_accumulation() {
+        let mut q = Quire::new(P16);
+        q.mul_add(p16(-1.5), p16(2.0)); // -3
+        q.mul_add(p16(1.0), p16(1.0)); // +1
+        assert_eq!(to_f64(P16, q.to_posit()), -2.0);
+    }
+
+    #[test]
+    fn nar_poisons() {
+        let mut q = Quire::new(P16);
+        q.mul_add(p16(1.0), P16.nar());
+        q.mul_add(p16(1.0), p16(1.0));
+        assert_eq!(q.to_posit(), P16.nar());
+    }
+
+    #[test]
+    fn dot_product_vs_f64_oracle() {
+        // Random-ish dot product: quire result == RNE(posit-exact f64 dot)
+        // because every P16E1 value and product is exact in f64 and the
+        // sum of 64 such products (≤ 2^62 dynamic range here) stays exact.
+        let mut q = Quire::new(P16);
+        let mut acc = 0f64;
+        let mut state = 99u64;
+        for _ in 0..64 {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1);
+            let a = ((state >> 20) & 0xFFFF) as u64;
+            let b = ((state >> 40) & 0xFFFF) as u64;
+            if a == 0x8000 || b == 0x8000 {
+                continue;
+            }
+            // Keep magnitudes moderate so the f64 oracle stays exact.
+            let av = to_f64(P16, a).clamp(-64.0, 64.0);
+            let bv = to_f64(P16, b).clamp(-64.0, 64.0);
+            let (a, b) = (p16(av), p16(bv));
+            q.mul_add(a, b);
+            acc += to_f64(P16, a) * to_f64(P16, b);
+        }
+        assert_eq!(q.to_posit(), from_f64(P16, acc));
+    }
+
+    #[test]
+    fn plam_mul_add_single_matches_plam_mul() {
+        use crate::posit::plam::plam_mul;
+        for (a, b) in [(1.5, 1.5), (2.75, 3.25), (-1.25, 7.0)] {
+            let pa = p16(a);
+            let pb = p16(b);
+            let mut q = Quire::new(P16);
+            q.plam_mul_add(pa, pb);
+            assert_eq!(q.to_posit(), plam_mul(P16, pa, pb), "a={a} b={b}");
+        }
+    }
+}

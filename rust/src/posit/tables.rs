@@ -1,0 +1,143 @@
+//! Precomputed decode tables for hot loops (n ≤ 16 formats).
+//!
+//! Software posit emulation spends most of its time in the decode stage
+//! (run-length regime detection). For inference workloads the same 16-bit
+//! patterns are decoded millions of times, so a one-off 64 K-entry table
+//! (512 KiB, fits L2) amortises that cost; this is the software analogue
+//! of the paper's observation that decode hardware is cheap compared to
+//! the fraction multiplier.
+
+use super::decode::{decode, DecodeResult};
+use super::format::PositFormat;
+
+/// Fixed fraction alignment used by table entries: fractions are
+/// left-aligned to 30 bits so significands fit `u32` and products fit
+/// `u64`.
+pub const FW: u32 = 30;
+
+/// One decoded pattern, fraction pre-aligned to [`FW`] bits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DecEntry {
+    /// Combined scale `2^es·k + e`; `i16::MIN` marks zero, `i16::MAX`
+    /// marks NaR (so hot loops branch once on the scale).
+    pub scale: i16,
+    /// Sign (true = negative). Meaningless for specials.
+    pub sign: bool,
+    /// Fraction left-aligned to `FW` bits (no hidden bit).
+    pub frac: u32,
+}
+
+/// Sentinel scale for posit zero.
+pub const SCALE_ZERO: i16 = i16::MIN;
+/// Sentinel scale for NaR.
+pub const SCALE_NAR: i16 = i16::MAX;
+
+impl DecEntry {
+    /// True if this entry is posit zero.
+    #[inline(always)]
+    pub fn is_zero(&self) -> bool {
+        self.scale == SCALE_ZERO
+    }
+
+    /// True if this entry is NaR.
+    #[inline(always)]
+    pub fn is_nar(&self) -> bool {
+        self.scale == SCALE_NAR
+    }
+
+    /// Significand `1.f` in Q30 (`[2^30, 2^31)`).
+    #[inline(always)]
+    pub fn significand(&self) -> u32 {
+        (1u32 << FW) | self.frac
+    }
+}
+
+/// Full decode table for a format with `n <= 16`.
+pub struct DecodeTable {
+    /// The format this table was built for.
+    pub fmt: PositFormat,
+    entries: Vec<DecEntry>,
+}
+
+impl DecodeTable {
+    /// Build the table (2^n entries).
+    pub fn new(fmt: PositFormat) -> Self {
+        assert!(fmt.n <= 16, "decode tables are for n <= 16 formats");
+        let card = fmt.cardinality() as usize;
+        let mut entries = Vec::with_capacity(card);
+        for bits in 0..card as u64 {
+            let e = match decode(fmt, bits) {
+                DecodeResult::Zero => DecEntry {
+                    scale: SCALE_ZERO,
+                    sign: false,
+                    frac: 0,
+                },
+                DecodeResult::NaR => DecEntry {
+                    scale: SCALE_NAR,
+                    sign: true,
+                    frac: 0,
+                },
+                DecodeResult::Normal(d) => DecEntry {
+                    scale: d.scale as i16,
+                    sign: d.sign,
+                    frac: (d.frac << (FW - d.frac_bits)) as u32,
+                },
+            };
+            entries.push(e);
+        }
+        DecodeTable { fmt, entries }
+    }
+
+    /// Decode via table lookup.
+    #[inline(always)]
+    pub fn get(&self, bits: u64) -> DecEntry {
+        self.entries[(bits & self.fmt.mask()) as usize]
+    }
+
+    /// Decode a whole slice into a pre-aligned buffer.
+    pub fn decode_slice(&self, bits: &[u16], out: &mut Vec<DecEntry>) {
+        out.clear();
+        out.extend(bits.iter().map(|&b| self.get(b as u64)));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::posit::decode::decode;
+
+    #[test]
+    fn table_matches_decode_p16e1() {
+        let fmt = PositFormat::P16E1;
+        let t = DecodeTable::new(fmt);
+        for bits in 0u64..65536 {
+            let e = t.get(bits);
+            match decode(fmt, bits) {
+                DecodeResult::Zero => assert!(e.is_zero()),
+                DecodeResult::NaR => assert!(e.is_nar()),
+                DecodeResult::Normal(d) => {
+                    assert_eq!(e.scale as i32, d.scale, "bits={bits:#x}");
+                    assert_eq!(e.sign, d.sign);
+                    assert_eq!(e.frac as u64, d.frac << (FW - d.frac_bits));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn table_matches_decode_p8e0() {
+        let fmt = PositFormat::P8E0;
+        let t = DecodeTable::new(fmt);
+        for bits in 0u64..256 {
+            let e = t.get(bits);
+            match decode(fmt, bits) {
+                DecodeResult::Zero => assert!(e.is_zero()),
+                DecodeResult::NaR => assert!(e.is_nar()),
+                DecodeResult::Normal(d) => {
+                    assert_eq!(e.scale as i32, d.scale);
+                    assert_eq!(e.frac as u64, d.frac << (FW - d.frac_bits));
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,208 @@
+//! Compile-time-typed posit values with operator overloading.
+//!
+//! `Posit<N, ES>` wraps an n-bit pattern and pins the format in the type,
+//! giving ergonomic arithmetic (`+ - * /`), ordering, and conversions.
+//! The aliases [`P8E0`], [`P16E1`], [`P32E2`] cover the formats the paper
+//! evaluates. `a.plam_mul(b)` is the approximate product.
+
+use core::cmp::Ordering;
+use core::ops::{Add, Div, Mul, Neg, Sub};
+
+use super::convert;
+use super::exact;
+use super::format::PositFormat;
+use super::plam;
+
+/// An `⟨N, ES⟩` posit value (bit pattern in the low `N` bits).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Posit<const N: u32, const ES: u32>(pub u64);
+
+/// `Posit⟨8,0⟩`.
+pub type P8E0 = Posit<8, 0>;
+/// `Posit⟨16,1⟩` — the paper's Table II format.
+pub type P16E1 = Posit<16, 1>;
+/// `Posit⟨16,2⟩` (2022 standard).
+pub type P16E2 = Posit<16, 2>;
+/// `Posit⟨32,2⟩` — the paper's Fig. 1 / 32-bit synthesis format.
+pub type P32E2 = Posit<32, 2>;
+
+impl<const N: u32, const ES: u32> Posit<N, ES> {
+    /// The format descriptor of this type.
+    pub const FORMAT: PositFormat = PositFormat::new(N, ES);
+
+    /// Posit zero.
+    pub const ZERO: Self = Posit(0);
+    /// Not-a-Real.
+    pub const NAR: Self = Posit(Self::FORMAT.nar());
+    /// Largest positive value.
+    pub const MAXPOS: Self = Posit(Self::FORMAT.maxpos());
+    /// Smallest positive value.
+    pub const MINPOS: Self = Posit(Self::FORMAT.minpos());
+    /// One (`0b0100…0`).
+    pub const ONE: Self = Posit(1u64 << (N - 2));
+
+    /// Wrap a raw bit pattern (masked to N bits).
+    #[inline]
+    pub fn from_bits(bits: u64) -> Self {
+        Posit(bits & Self::FORMAT.mask())
+    }
+
+    /// The raw bit pattern.
+    #[inline]
+    pub fn bits(self) -> u64 {
+        self.0
+    }
+
+    /// Nearest posit to an `f64` (RNE).
+    #[inline]
+    pub fn from_f64(x: f64) -> Self {
+        Posit(convert::from_f64(Self::FORMAT, x))
+    }
+
+    /// Exact `f64` value (NaR → NaN).
+    #[inline]
+    pub fn to_f64(self) -> f64 {
+        convert::to_f64(Self::FORMAT, self.0)
+    }
+
+    /// True if this is the NaR pattern.
+    #[inline]
+    pub fn is_nar(self) -> bool {
+        self.0 == Self::FORMAT.nar()
+    }
+
+    /// True if this is posit zero.
+    #[inline]
+    pub fn is_zero(self) -> bool {
+        self.0 == 0
+    }
+
+    /// PLAM approximate product (paper Eqs. 14–21).
+    #[inline]
+    pub fn plam_mul(self, rhs: Self) -> Self {
+        Posit(plam::plam_mul(Self::FORMAT, self.0, rhs.0))
+    }
+
+    /// Absolute value.
+    #[inline]
+    pub fn abs(self) -> Self {
+        Posit(exact::abs(Self::FORMAT, self.0))
+    }
+}
+
+impl<const N: u32, const ES: u32> Add for Posit<N, ES> {
+    type Output = Self;
+    #[inline]
+    fn add(self, rhs: Self) -> Self {
+        Posit(exact::add(Self::FORMAT, self.0, rhs.0))
+    }
+}
+
+impl<const N: u32, const ES: u32> Sub for Posit<N, ES> {
+    type Output = Self;
+    #[inline]
+    fn sub(self, rhs: Self) -> Self {
+        Posit(exact::sub(Self::FORMAT, self.0, rhs.0))
+    }
+}
+
+impl<const N: u32, const ES: u32> Mul for Posit<N, ES> {
+    type Output = Self;
+    #[inline]
+    fn mul(self, rhs: Self) -> Self {
+        Posit(exact::mul(Self::FORMAT, self.0, rhs.0))
+    }
+}
+
+impl<const N: u32, const ES: u32> Div for Posit<N, ES> {
+    type Output = Self;
+    #[inline]
+    fn div(self, rhs: Self) -> Self {
+        Posit(exact::div(Self::FORMAT, self.0, rhs.0))
+    }
+}
+
+impl<const N: u32, const ES: u32> Neg for Posit<N, ES> {
+    type Output = Self;
+    #[inline]
+    fn neg(self) -> Self {
+        Posit(exact::neg(Self::FORMAT, self.0))
+    }
+}
+
+impl<const N: u32, const ES: u32> PartialOrd for Posit<N, ES> {
+    #[inline]
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(exact::cmp(Self::FORMAT, self.0, other.0))
+    }
+}
+
+impl<const N: u32, const ES: u32> From<f64> for Posit<N, ES> {
+    #[inline]
+    fn from(x: f64) -> Self {
+        Self::from_f64(x)
+    }
+}
+
+impl<const N: u32, const ES: u32> From<Posit<N, ES>> for f64 {
+    #[inline]
+    fn from(p: Posit<N, ES>) -> f64 {
+        p.to_f64()
+    }
+}
+
+impl<const N: u32, const ES: u32> core::fmt::Display for Posit<N, ES> {
+    fn fmt(&self, f: &mut core::fmt::Formatter<'_>) -> core::fmt::Result {
+        if self.is_nar() {
+            write!(f, "NaR")
+        } else {
+            write!(f, "{}", self.to_f64())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn operators() {
+        let a = P16E1::from_f64(1.5);
+        let b = P16E1::from_f64(2.5);
+        assert_eq!((a + b).to_f64(), 4.0);
+        assert_eq!((a * b).to_f64(), 3.75);
+        assert_eq!((b - a).to_f64(), 1.0);
+        assert_eq!(
+            (b / a),
+            P16E1::from_f64(2.5 / 1.5) // correctly rounded quotient
+        );
+        assert_eq!((-a).to_f64(), -1.5);
+        assert!(a < b);
+    }
+
+    #[test]
+    fn constants() {
+        assert_eq!(P16E1::ONE.to_f64(), 1.0);
+        assert_eq!(P8E0::ONE.to_f64(), 1.0);
+        assert_eq!(P32E2::ONE.to_f64(), 1.0);
+        assert!(P16E1::NAR.is_nar());
+        assert_eq!(P16E1::MAXPOS.bits(), 0x7FFF);
+    }
+
+    #[test]
+    fn plam_method() {
+        let a = P16E1::from_f64(1.5);
+        assert_eq!(a.plam_mul(a).to_f64(), 2.0); // Mitchell worst case
+    }
+
+    #[test]
+    fn div_rounding() {
+        // 2.5/1.5 = 1.666…: check the typed result equals module-level div.
+        let a = P16E1::from_f64(2.5);
+        let b = P16E1::from_f64(1.5);
+        assert_eq!(
+            (a / b).bits(),
+            crate::posit::exact::div(PositFormat::P16E1, a.bits(), b.bits())
+        );
+    }
+}

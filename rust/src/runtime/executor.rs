@@ -1,0 +1,232 @@
+//! PJRT CPU client wrapper: compile-once, execute-many.
+//!
+//! The `xla` crate's client/executable types are `!Send` (they hold
+//! `Rc`s over FFI handles), so multi-threaded callers use
+//! [`ThreadedExecutable`], which confines the whole PJRT stack to one
+//! owner thread and speaks over channels.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::{channel, Sender};
+
+use anyhow::{Context, Result};
+
+/// A compiled HLO module ready for execution (single-threaded use).
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    /// Artifact path (for logs/metrics).
+    pub path: PathBuf,
+}
+
+impl Executable {
+    /// Execute with f32 buffer inputs; returns flattened f32 outputs, one
+    /// `Vec` per result in the computation's output tuple.
+    ///
+    /// Inputs are `(shape, data)` pairs; the shape product must match the
+    /// data length.
+    pub fn run_f32(&self, inputs: &[(&[usize], &[f32])]) -> Result<Vec<Vec<f32>>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (shape, data) in inputs {
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data).reshape(&dims)?;
+            literals.push(lit);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unpack the tuple.
+        let tuple = result.to_tuple()?;
+        let mut out = Vec::with_capacity(tuple.len());
+        for lit in tuple {
+            out.push(lit.to_vec::<f32>()?);
+        }
+        Ok(out)
+    }
+}
+
+/// PJRT CPU runtime with an executable cache keyed by artifact path.
+/// Single-threaded (`!Send`); see [`ThreadedExecutable`] for the
+/// coordinator's thread-safe path.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: HashMap<PathBuf, std::rc::Rc<Executable>>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            cache: HashMap::new(),
+        })
+    }
+
+    /// Platform description (for startup logs).
+    pub fn platform(&self) -> String {
+        format!(
+            "{} ({} devices)",
+            self.client.platform_name(),
+            self.client.device_count()
+        )
+    }
+
+    /// Load and compile an HLO-text artifact (cached by path).
+    pub fn load(&mut self, path: &Path) -> Result<std::rc::Rc<Executable>> {
+        if let Some(e) = self.cache.get(path) {
+            return Ok(e.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().context("utf-8 path")?)
+            .with_context(|| format!("parse HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {path:?}"))?;
+        let rc = std::rc::Rc::new(Executable {
+            exe,
+            path: path.to_path_buf(),
+        });
+        self.cache.insert(path.to_path_buf(), rc.clone());
+        Ok(rc)
+    }
+}
+
+/// One queued execution request for the owner thread.
+type RunMsg = (
+    Vec<(Vec<usize>, Vec<f32>)>,
+    Sender<Result<Vec<Vec<f32>>>>,
+);
+
+/// Thread-confined PJRT executable: `Send + Sync` handle whose owner
+/// thread holds the `!Send` client + executable and serves requests over
+/// a channel. Used by the coordinator's PJRT backend.
+pub struct ThreadedExecutable {
+    tx: Sender<RunMsg>,
+    /// Artifact path.
+    pub path: PathBuf,
+    /// Platform string reported by the owner thread.
+    pub platform: String,
+}
+
+impl ThreadedExecutable {
+    /// Spawn the owner thread, create the client, and compile `path`.
+    /// Returns after compilation succeeds (or fails) on the owner.
+    pub fn spawn(path: &Path) -> Result<Self> {
+        let (tx, rx) = channel::<RunMsg>();
+        let (ready_tx, ready_rx) = channel::<Result<String>>();
+        let p = path.to_path_buf();
+        std::thread::Builder::new()
+            .name("plam-pjrt".into())
+            .spawn(move || {
+                let mut rt = match Runtime::cpu() {
+                    Ok(rt) => rt,
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                let exe = match rt.load(&p) {
+                    Ok(exe) => exe,
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                let _ = ready_tx.send(Ok(rt.platform()));
+                // Serve until every sender is dropped.
+                while let Ok((inputs, reply)) = rx.recv() {
+                    let borrowed: Vec<(&[usize], &[f32])> = inputs
+                        .iter()
+                        .map(|(s, d)| (s.as_slice(), d.as_slice()))
+                        .collect();
+                    let _ = reply.send(exe.run_f32(&borrowed));
+                }
+            })
+            .context("spawn pjrt owner thread")?;
+        let platform = ready_rx
+            .recv()
+            .context("pjrt owner thread died during startup")??;
+        Ok(ThreadedExecutable {
+            tx,
+            path: path.to_path_buf(),
+            platform,
+        })
+    }
+
+    /// Execute on the owner thread (blocking).
+    pub fn run_f32(&self, inputs: &[(&[usize], &[f32])]) -> Result<Vec<Vec<f32>>> {
+        let owned: Vec<(Vec<usize>, Vec<f32>)> = inputs
+            .iter()
+            .map(|(s, d)| (s.to_vec(), d.to_vec()))
+            .collect();
+        let (rtx, rrx) = channel();
+        self.tx
+            .send((owned, rtx))
+            .map_err(|_| anyhow::anyhow!("pjrt owner thread gone"))?;
+        rrx.recv()
+            .map_err(|_| anyhow::anyhow!("pjrt owner thread dropped request"))?
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Integration smoke — requires `make artifacts` to have produced
+    /// the kernel artifact; skipped otherwise so unit runs stay hermetic.
+    #[test]
+    fn load_and_run_artifact_if_present() {
+        let path = Path::new("artifacts/plam_matmul_8.hlo.txt");
+        if !path.exists() {
+            eprintln!("skipping: {path:?} not built (run `make artifacts`)");
+            return;
+        }
+        let mut rt = Runtime::cpu().unwrap();
+        let exe = rt.load(path).unwrap();
+        // 8×8 PLAM matmul: identity × identity = identity (power-of-two
+        // values make PLAM exact).
+        let mut eye = vec![0f32; 64];
+        for i in 0..8 {
+            eye[i * 8 + i] = 1.0;
+        }
+        let out = exe.run_f32(&[(&[8, 8], &eye), (&[8, 8], &eye)]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0], eye);
+        // Cache hit returns the same executable.
+        let again = rt.load(path).unwrap();
+        assert!(std::rc::Rc::ptr_eq(&exe, &again));
+    }
+
+    #[test]
+    fn threaded_executable_if_present() {
+        let path = Path::new("artifacts/plam_matmul_8.hlo.txt");
+        if !path.exists() {
+            eprintln!("skipping: {path:?} not built (run `make artifacts`)");
+            return;
+        }
+        let exe = ThreadedExecutable::spawn(path).unwrap();
+        let mut eye = vec![0f32; 64];
+        for i in 0..8 {
+            eye[i * 8 + i] = 1.0;
+        }
+        // Drive it from several threads at once.
+        let exe = std::sync::Arc::new(exe);
+        let mut joins = vec![];
+        for _ in 0..4 {
+            let exe = exe.clone();
+            let eye = eye.clone();
+            joins.push(std::thread::spawn(move || {
+                let out = exe.run_f32(&[(&[8, 8], &eye), (&[8, 8], &eye)]).unwrap();
+                assert_eq!(out[0], eye);
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn spawn_fails_cleanly_on_missing_artifact() {
+        let err = ThreadedExecutable::spawn(Path::new("artifacts/definitely_missing.hlo.txt"));
+        assert!(err.is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! PJRT runtime: load the AOT-compiled JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`) and execute them from Rust.
+//!
+//! Python runs once at build time (`make artifacts`); this module is the
+//! only thing that touches the compiled computation afterwards, so the
+//! request path is pure Rust. Interchange is HLO *text* — jax ≥ 0.5
+//! serialised protos use 64-bit instruction ids that xla_extension 0.5.1
+//! rejects, while the text parser reassigns ids (see
+//! /opt/xla-example/README.md).
+
+pub mod executor;
+
+pub use executor::{Executable, Runtime, ThreadedExecutable};

@@ -1,0 +1,85 @@
+//! Integration: AOT artifacts vs Python goldens — the cross-language
+//! correctness signal for the three-layer stack. Each test skips itself
+//! when `make artifacts` has not been run (hermetic `cargo test`).
+
+use std::path::Path;
+
+use plam::nn::loader::load_weights;
+use plam::runtime::Runtime;
+
+fn goldens(name: &str) -> Option<plam::nn::loader::Weights> {
+    let p = Path::new("artifacts/golden").join(name);
+    if !p.exists() {
+        eprintln!("skipping: {p:?} missing (run `make artifacts`)");
+        return None;
+    }
+    Some(load_weights(&p).expect("golden file parses"))
+}
+
+#[test]
+fn plam_matmul_artifact_matches_python_golden() {
+    let Some(g) = goldens("matmul8.ptw") else { return };
+    let path = Path::new("artifacts/plam_matmul_8.hlo.txt");
+    if !path.exists() {
+        eprintln!("skipping: artifact missing");
+        return;
+    }
+    let mut rt = Runtime::cpu().unwrap();
+    let exe = rt.load(path).unwrap();
+    let out = exe
+        .run_f32(&[(&[8, 8], &g["a"].data), (&[8, 8], &g["b"].data)])
+        .unwrap();
+    assert_eq!(out[0].len(), 64);
+    for (i, (got, want)) in out[0].iter().zip(g["out"].data.iter()).enumerate() {
+        assert!(
+            (got - want).abs() <= 1e-6 * want.abs().max(1.0),
+            "elem {i}: got {got}, python golden {want}"
+        );
+    }
+}
+
+#[test]
+fn mlp_artifact_matches_python_golden() {
+    let Some(g) = goldens("mlp_isolet_plam_b8.ptw") else { return };
+    let path = Path::new("artifacts/mlp_isolet_plam_b8.hlo.txt");
+    if !path.exists() {
+        eprintln!("skipping: artifact missing");
+        return;
+    }
+    let mut rt = Runtime::cpu().unwrap();
+    let exe = rt.load(path).unwrap();
+    let out = exe.run_f32(&[(&[8, 617], &g["x"].data)]).unwrap();
+    assert_eq!(out[0].len(), 8 * 26);
+    for (i, (got, want)) in out[0].iter().zip(g["out"].data.iter()).enumerate() {
+        assert!(
+            (got - want).abs() <= 1e-5 * want.abs().max(1.0),
+            "elem {i}: got {got}, python golden {want}"
+        );
+    }
+}
+
+#[test]
+fn rust_plam_engine_agrees_with_kernel_on_matmul() {
+    // The Rust posit engine (bit-level PLAM, f32 accumulation to match
+    // the kernel's semantics) must agree with the Pallas kernel's golden
+    // output exactly: both round each PLAM product to Posit<16,1>.
+    let Some(g) = goldens("matmul8.ptw") else { return };
+    use plam::posit::{from_f32, plam_mul, to_f32, PositFormat};
+    let fmt = PositFormat::P16E1;
+    let (a, b, want) = (&g["a"], &g["b"], &g["out"]);
+    for i in 0..8 {
+        for j in 0..8 {
+            let mut acc = 0f32;
+            for k in 0..8 {
+                let pa = from_f32(fmt, a.data[i * 8 + k]);
+                let pb = from_f32(fmt, b.data[k * 8 + j]);
+                acc += to_f32(fmt, plam_mul(fmt, pa, pb));
+            }
+            let w = want.data[i * 8 + j];
+            assert!(
+                (acc - w).abs() <= 1e-6 * w.abs().max(1.0),
+                "({i},{j}): rust {acc} vs kernel {w}"
+            );
+        }
+    }
+}

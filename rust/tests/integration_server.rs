@@ -1,0 +1,181 @@
+//! Integration: the L3 coordinator end to end — router + batcher +
+//! TCP server + wire protocol + Rust posit backends, under concurrency
+//! and fault injection.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use plam::coordinator::{
+    serve, BatcherConfig, Client, InferenceBackend, NnBackend, Router, ServerConfig,
+};
+use plam::nn::{ArithMode, Model, ModelKind};
+use plam::posit::PositFormat;
+use plam::prng::Rng;
+
+fn make_router() -> Router {
+    let mut rng = Rng::new(42);
+    let model = Model::init(ModelKind::MlpIsolet, &mut rng);
+    let mut router = Router::new();
+    for (name, mode) in [
+        ("isolet-f32", ArithMode::float32()),
+        ("isolet-posit", ArithMode::posit_exact(PositFormat::P16E1)),
+        ("isolet-plam", ArithMode::posit_plam(PositFormat::P16E1)),
+    ] {
+        router.register(
+            name,
+            Arc::new(NnBackend::new(model.clone(), mode)),
+            BatcherConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(4),
+            },
+        );
+    }
+    router
+}
+
+#[test]
+fn all_three_formats_serve_and_agree_on_argmax_mostly() {
+    let h = serve(
+        make_router(),
+        &ServerConfig {
+            addr: "127.0.0.1:0".into(),
+        },
+    )
+    .unwrap();
+    let mut c = Client::connect(h.addr).unwrap();
+    let mut rng = Rng::new(7);
+    let mut agree_pe = 0;
+    let mut agree_pp = 0;
+    let total = 20;
+    for _ in 0..total {
+        let x: Vec<f32> = (0..617).map(|_| rng.normal() as f32 * 0.5).collect();
+        let f = c.infer("isolet-f32", &x).unwrap();
+        let p = c.infer("isolet-posit", &x).unwrap();
+        let l = c.infer("isolet-plam", &x).unwrap();
+        let am = |v: &[f32]| {
+            v.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0
+        };
+        agree_pe += (am(&f) == am(&p)) as usize;
+        agree_pp += (am(&p) == am(&l)) as usize;
+    }
+    // Random-init logits are tightly clustered, so demand strong but
+    // not perfect agreement.
+    assert!(agree_pe >= total - 3, "float vs posit agree {agree_pe}/{total}");
+    assert!(agree_pp >= total - 3, "posit vs plam agree {agree_pp}/{total}");
+    h.shutdown();
+}
+
+#[test]
+fn concurrent_load_batches_and_counts() {
+    let h = serve(
+        make_router(),
+        &ServerConfig {
+            addr: "127.0.0.1:0".into(),
+        },
+    )
+    .unwrap();
+    let addr = h.addr;
+    let threads = 8;
+    let per = 6;
+    let mut joins = vec![];
+    for t in 0..threads {
+        joins.push(std::thread::spawn(move || {
+            let mut c = Client::connect(addr).unwrap();
+            let mut rng = Rng::new(t as u64);
+            for _ in 0..per {
+                let x: Vec<f32> = (0..617).map(|_| rng.f32() - 0.5).collect();
+                let out = c.infer("isolet-plam", &x).unwrap();
+                assert_eq!(out.len(), 26);
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let b = h.router().get("isolet-plam").unwrap();
+    let total = threads * per;
+    assert_eq!(b.metrics.completed.load(Ordering::Relaxed), total as u64);
+    // Batching must have coalesced at least some requests.
+    assert!(
+        (b.metrics.batches.load(Ordering::Relaxed) as usize) < total,
+        "no batching happened"
+    );
+    assert!(b.metrics.latency_percentile_us(0.5).is_some());
+    h.shutdown();
+}
+
+#[test]
+fn malformed_requests_do_not_kill_the_server() {
+    let h = serve(
+        make_router(),
+        &ServerConfig {
+            addr: "127.0.0.1:0".into(),
+        },
+    )
+    .unwrap();
+    // Garbage connection.
+    {
+        use std::io::Write;
+        let mut s = std::net::TcpStream::connect(h.addr).unwrap();
+        s.write_all(b"GET / HTTP/1.1\r\n\r\n").unwrap();
+        // Server closes it; no panic.
+    }
+    // Wrong input length → error response, connection stays usable.
+    let mut c = Client::connect(h.addr).unwrap();
+    let err = c.infer("isolet-f32", &[1.0, 2.0]).unwrap_err();
+    assert!(err.to_string().contains("input length"), "{err}");
+    let ok = c.infer("isolet-f32", &vec![0.0; 617]).unwrap();
+    assert_eq!(ok.len(), 26);
+    // Unknown model → error, still usable.
+    assert!(c.infer("missing", &vec![0.0; 617]).is_err());
+    let ok = c.infer("isolet-plam", &vec![0.1; 617]).unwrap();
+    assert_eq!(ok.len(), 26);
+    h.shutdown();
+}
+
+/// Failure injection: a backend that errors on demand.
+struct FlakyBackend;
+
+impl InferenceBackend for FlakyBackend {
+    fn input_len(&self) -> usize {
+        4
+    }
+    fn output_len(&self) -> usize {
+        1
+    }
+    fn max_batch(&self) -> usize {
+        4
+    }
+    fn infer_batch(&self, inputs: &[Vec<f32>]) -> anyhow::Result<Vec<Vec<f32>>> {
+        if inputs.iter().any(|x| x[0] > 0.5) {
+            anyhow::bail!("injected failure");
+        }
+        Ok(inputs.iter().map(|x| vec![x.iter().sum()]).collect())
+    }
+    fn describe(&self) -> String {
+        "flaky".into()
+    }
+}
+
+#[test]
+fn failing_backend_reports_errors_but_server_survives() {
+    let mut router = Router::new();
+    router.register("flaky", Arc::new(FlakyBackend), BatcherConfig::default());
+    let h = serve(
+        router,
+        &ServerConfig {
+            addr: "127.0.0.1:0".into(),
+        },
+    )
+    .unwrap();
+    let mut c = Client::connect(h.addr).unwrap();
+    assert!(c.infer("flaky", &[0.9, 0.0, 0.0, 0.0]).is_err());
+    let ok = c.infer("flaky", &[0.1, 0.2, 0.3, 0.4]).unwrap();
+    assert!((ok[0] - 1.0).abs() < 1e-6);
+    h.shutdown();
+}

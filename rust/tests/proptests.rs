@@ -1,0 +1,305 @@
+//! Property-based tests over the posit substrate and coordinator
+//! invariants (DESIGN.md §7). The `proptest` crate is unavailable
+//! offline, so properties are driven by a seeded xoshiro PRNG with
+//! shrink-free random sampling — each property runs thousands of cases
+//! and prints the failing case on assertion, which is enough to
+//! reproduce deterministically.
+
+use plam::posit::{
+    self, decode, encode, from_f64, plam_mul, plam_value_f64, to_f64, DecodeResult, PositFormat,
+    Quire, PLAM_MAX_RELATIVE_ERROR,
+};
+use plam::prng::Rng;
+
+const FORMATS: [PositFormat; 5] = [
+    PositFormat::P8E0,
+    PositFormat::P8E2,
+    PositFormat::P16E1,
+    PositFormat::P16E2,
+    PositFormat::P32E2,
+];
+
+fn random_bits(rng: &mut Rng, fmt: PositFormat) -> u64 {
+    rng.next_u64() & fmt.mask()
+}
+
+fn random_real(rng: &mut Rng, fmt: PositFormat) -> u64 {
+    loop {
+        let b = random_bits(rng, fmt);
+        if b != 0 && b != fmt.nar() {
+            return b;
+        }
+    }
+}
+
+#[test]
+fn prop_decode_encode_identity() {
+    // decode ∘ encode = id for every real pattern, all formats.
+    let mut rng = Rng::new(0xDEC0DE);
+    for fmt in FORMATS {
+        for case in 0..20_000 {
+            let bits = random_real(&mut rng, fmt);
+            if let DecodeResult::Normal(d) = decode(fmt, bits) {
+                let re = encode(fmt, d.sign, d.scale, d.frac as u128, d.frac_bits, false);
+                assert_eq!(re, bits, "{fmt} case {case} bits {bits:#x}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_f64_round_trip() {
+    // to_f64 is exact, so from_f64(to_f64(p)) == p.
+    let mut rng = Rng::new(0xF64);
+    for fmt in FORMATS {
+        for case in 0..20_000 {
+            let bits = random_real(&mut rng, fmt);
+            assert_eq!(
+                from_f64(fmt, to_f64(fmt, bits)),
+                bits,
+                "{fmt} case {case} bits {bits:#x}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_mul_commutative_and_sign_correct() {
+    let mut rng = Rng::new(0xAB);
+    for fmt in FORMATS {
+        for _ in 0..10_000 {
+            let a = random_real(&mut rng, fmt);
+            let b = random_real(&mut rng, fmt);
+            let ab = posit::mul(fmt, a, b);
+            assert_eq!(ab, posit::mul(fmt, b, a));
+            let (va, vb, vab) = (to_f64(fmt, a), to_f64(fmt, b), to_f64(fmt, ab));
+            if vab != 0.0 {
+                assert_eq!((va * vb).signum(), vab.signum(), "{fmt} {a:#x}×{b:#x}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_mul_matches_f64_oracle_when_exact() {
+    // For formats whose products fit f64 exactly (n ≤ 16), the posit
+    // product equals RNE(f64 product).
+    let mut rng = Rng::new(0xE1);
+    for fmt in [PositFormat::P8E0, PositFormat::P16E1, PositFormat::P16E2] {
+        for case in 0..20_000 {
+            let a = random_real(&mut rng, fmt);
+            let b = random_real(&mut rng, fmt);
+            let got = posit::mul(fmt, a, b);
+            let want = from_f64(fmt, to_f64(fmt, a) * to_f64(fmt, b));
+            assert_eq!(got, want, "{fmt} case {case}: {a:#x} × {b:#x}");
+        }
+    }
+}
+
+#[test]
+fn prop_add_matches_f64_oracle_when_exact() {
+    let mut rng = Rng::new(0xADD);
+    for fmt in [PositFormat::P8E0, PositFormat::P16E1, PositFormat::P16E2] {
+        for case in 0..20_000 {
+            let a = random_real(&mut rng, fmt);
+            let b = random_real(&mut rng, fmt);
+            let got = posit::add(fmt, a, b);
+            let want = from_f64(fmt, to_f64(fmt, a) + to_f64(fmt, b));
+            assert_eq!(got, want, "{fmt} case {case}: {a:#x} + {b:#x}");
+        }
+    }
+}
+
+#[test]
+fn prop_plam_error_bounded_and_underestimating() {
+    // PLAM vs real product: |rel error| ≤ 1/9, and |PLAM| ≤ |exact|.
+    let mut rng = Rng::new(0x11);
+    for fmt in FORMATS {
+        for _ in 0..10_000 {
+            let a = random_real(&mut rng, fmt);
+            let b = random_real(&mut rng, fmt);
+            let real = to_f64(fmt, a) * to_f64(fmt, b);
+            if real == 0.0 || !real.is_finite() {
+                continue;
+            }
+            let approx = plam_value_f64(fmt, a, b);
+            let rel = ((real - approx) / real).abs();
+            assert!(
+                rel <= PLAM_MAX_RELATIVE_ERROR + 1e-12,
+                "{fmt} {a:#x}×{b:#x} rel {rel}"
+            );
+            assert!(approx.abs() <= real.abs() * (1.0 + 1e-12));
+        }
+    }
+}
+
+#[test]
+fn prop_plam_specials_and_commutativity() {
+    let mut rng = Rng::new(0x22);
+    for fmt in FORMATS {
+        for _ in 0..5_000 {
+            let a = random_bits(&mut rng, fmt);
+            let b = random_bits(&mut rng, fmt);
+            let ab = plam_mul(fmt, a, b);
+            assert_eq!(ab, plam_mul(fmt, b, a));
+            if a == fmt.nar() || b == fmt.nar() {
+                assert_eq!(ab, fmt.nar());
+            } else if (a & fmt.mask()) == 0 || (b & fmt.mask()) == 0 {
+                assert_eq!(ab, 0);
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_plam_equals_exact_when_either_fraction_zero() {
+    // Powers of two have f = 0: the log approximation is exact there.
+    let mut rng = Rng::new(0x33);
+    let fmt = PositFormat::P16E1;
+    for _ in 0..5_000 {
+        let a = random_real(&mut rng, fmt);
+        // Force b to a power of two within range.
+        let exp = (rng.below(40) as i32) - 20;
+        let b = from_f64(fmt, (exp as f64).exp2());
+        if let DecodeResult::Normal(d) = decode(fmt, b) {
+            if d.frac != 0 {
+                continue; // saturated encode may carry fraction
+            }
+        }
+        assert_eq!(
+            plam_mul(fmt, a, b),
+            posit::mul(fmt, a, b),
+            "a={a:#x} b=2^{exp}"
+        );
+    }
+}
+
+#[test]
+fn prop_quire_single_product_equals_mul() {
+    let mut rng = Rng::new(0x44);
+    for fmt in [PositFormat::P8E0, PositFormat::P16E1, PositFormat::P32E2] {
+        for case in 0..5_000 {
+            let a = random_real(&mut rng, fmt);
+            let b = random_real(&mut rng, fmt);
+            let mut q = Quire::new(fmt);
+            q.mul_add(a, b);
+            assert_eq!(
+                q.to_posit(),
+                posit::mul(fmt, a, b),
+                "{fmt} case {case}: {a:#x}×{b:#x}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_quire_order_independent() {
+    // Quire accumulation is exact → permutation invariant, unlike
+    // floating point.
+    let mut rng = Rng::new(0x55);
+    let fmt = PositFormat::P16E1;
+    for _ in 0..500 {
+        let pairs: Vec<(u64, u64)> = (0..16)
+            .map(|_| (random_real(&mut rng, fmt), random_real(&mut rng, fmt)))
+            .collect();
+        let mut fwd = Quire::new(fmt);
+        for &(a, b) in &pairs {
+            fwd.mul_add(a, b);
+        }
+        let mut rev = Quire::new(fmt);
+        for &(a, b) in pairs.iter().rev() {
+            rev.mul_add(a, b);
+        }
+        assert_eq!(fwd.to_posit(), rev.to_posit());
+    }
+}
+
+#[test]
+fn prop_total_order_matches_value_order() {
+    let mut rng = Rng::new(0x66);
+    for fmt in FORMATS {
+        for _ in 0..10_000 {
+            let a = random_real(&mut rng, fmt);
+            let b = random_real(&mut rng, fmt);
+            let by_bits = posit::cmp(fmt, a, b);
+            let by_val = to_f64(fmt, a).partial_cmp(&to_f64(fmt, b)).unwrap();
+            assert_eq!(by_bits, by_val, "{fmt} {a:#x} vs {b:#x}");
+        }
+    }
+}
+
+#[test]
+fn prop_format_conversion_widening_is_lossless() {
+    let mut rng = Rng::new(0x77);
+    let narrow = PositFormat::P16E1;
+    let wide = PositFormat::P32E2;
+    for _ in 0..10_000 {
+        let bits = random_real(&mut rng, narrow);
+        let w = posit::convert_format(narrow, wide, bits);
+        assert_eq!(to_f64(wide, w), to_f64(narrow, bits));
+        assert_eq!(posit::convert_format(wide, narrow, w), bits);
+    }
+}
+
+#[test]
+fn prop_neg_is_involution_and_matches_value() {
+    let mut rng = Rng::new(0x88);
+    for fmt in FORMATS {
+        for _ in 0..10_000 {
+            let a = random_real(&mut rng, fmt);
+            let n = posit::neg(fmt, a);
+            assert_eq!(posit::neg(fmt, n), a);
+            assert_eq!(to_f64(fmt, n), -to_f64(fmt, a));
+        }
+    }
+}
+
+#[test]
+fn prop_div_brackets_true_quotient() {
+    // The rounded quotient q is within one representable step of the
+    // true quotient: pred(q) < a/b < succ(q). (A q-then-mul round trip
+    // can legitimately drift 2 steps — two roundings — so bracketing
+    // the *quotient* is the sound property.)
+    let mut rng = Rng::new(0x99);
+    let fmt = PositFormat::P16E1;
+    for _ in 0..10_000 {
+        let a = random_real(&mut rng, fmt);
+        let b = random_real(&mut rng, fmt);
+        let q = posit::div(fmt, a, b);
+        if q == fmt.nar() || q == fmt.maxpos() || q == fmt.minpos()
+            || q == fmt.negate(fmt.maxpos()) || q == fmt.negate(fmt.minpos())
+        {
+            continue; // saturated results bracket trivially
+        }
+        let truth = to_f64(fmt, a) / to_f64(fmt, b);
+        let lo = to_f64(fmt, posit::as_signed_pred(fmt, q));
+        let hi = to_f64(fmt, posit::as_signed_succ(fmt, q));
+        let eps = truth.abs() * 1e-12;
+        assert!(
+            lo <= truth + eps && truth - eps <= hi,
+            "a={a:#x} b={b:#x} q={q:#x}: {lo} !<= {truth} !<= {hi}"
+        );
+    }
+}
+
+#[test]
+fn prop_hardware_costs_monotone_in_width() {
+    // Cost model sanity: every design's area/power grow with n, and
+    // PLAM stays strictly cheaper at every width.
+    use plam::hardware::{exact_posit_multiplier, plam_multiplier, DecodeArch, Rounding, SynthReport};
+    let mut prev_exact: Option<SynthReport> = None;
+    let mut prev_plam: Option<SynthReport> = None;
+    for n in [8u32, 12, 16, 20, 24, 28, 32] {
+        let e = exact_posit_multiplier("e", n, 2, DecodeArch::LzdOnly, Rounding::Rne, false).synth();
+        let p = plam_multiplier("p", n, 2).synth();
+        if let Some(pe) = prev_exact {
+            assert!(e.area_um2 > pe.area_um2 && e.power_mw > pe.power_mw, "n={n}");
+        }
+        if let Some(pp) = prev_plam {
+            assert!(p.area_um2 > pp.area_um2, "n={n}");
+        }
+        assert!(p.area_um2 < e.area_um2, "n={n}");
+        prev_exact = Some(e);
+        prev_plam = Some(p);
+    }
+}
