@@ -16,7 +16,7 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use plam::coordinator::{serve, BatcherConfig, Client, NnBackend, PjrtBackend, Router, ServerConfig};
+use plam::coordinator::{serve, BatcherConfig, Client, NnBackend, Router, ServerConfig};
 use plam::data::{Dataset, DatasetKind};
 use plam::nn::{loader, model::train_mlp, ArithMode, Model, ModelKind};
 use plam::posit::PositFormat;
@@ -79,19 +79,27 @@ fn main() -> anyhow::Result<()> {
         )),
         cfg,
     );
-    let artifact = std::path::Path::new("artifacts/mlp_isolet_plam_b8.hlo.txt");
+    #[allow(unused_mut)] // mutated only when the pjrt feature is on
     let mut routes = vec!["isolet-f32", "isolet-posit", "isolet-plam"];
-    if artifact.exists() {
-        match PjrtBackend::load(artifact, 8, 617, 26) {
-            Ok(be) => {
-                println!("PJRT artifact route up on {}", be.platform());
-                router.register("isolet-pjrt", Arc::new(be), cfg);
-                routes.push("isolet-pjrt");
+    #[cfg(feature = "pjrt")]
+    {
+        let artifact = std::path::Path::new("artifacts/mlp_isolet_plam_b8.hlo.txt");
+        if artifact.exists() {
+            match plam::coordinator::PjrtBackend::load(artifact, 8, 617, 26) {
+                Ok(be) => {
+                    println!("PJRT artifact route up on {}", be.platform());
+                    router.register("isolet-pjrt", Arc::new(be), cfg);
+                    routes.push("isolet-pjrt");
+                }
+                Err(e) => println!("PJRT artifact skipped: {e:#}"),
             }
-            Err(e) => println!("PJRT artifact skipped: {e:#}"),
+        } else {
+            println!("(no artifacts/ — PJRT route skipped; run `make artifacts`)");
         }
-    } else {
-        println!("(no artifacts/ — PJRT route skipped; run `make artifacts`)");
+    }
+    #[cfg(not(feature = "pjrt"))]
+    {
+        println!("(built without `--features pjrt` — PJRT route skipped)");
     }
     println!("routing table:\n{}", router.table());
     let handle = serve(

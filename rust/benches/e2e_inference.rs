@@ -8,6 +8,7 @@ use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use plam::bench::Bench;
 use plam::coordinator::{serve, BatcherConfig, Client, NnBackend, Router, ServerConfig};
 use plam::nn::{ArithMode, Model, ModelKind};
 use plam::posit::PositFormat;
@@ -39,6 +40,9 @@ fn main() {
     let per_client = if fast { 8 } else { 64 };
     let mut rng = Rng::new(42);
     let model = Model::init(ModelKind::MlpIsolet, &mut rng);
+    // Open-loop driving doesn't fit Bench::run's closed-loop
+    // calibration, so per-request means are recorded directly.
+    let mut bench = Bench::new();
 
     println!("serving throughput (ISOLET MLP, 4 concurrent clients):");
     println!(
@@ -66,7 +70,7 @@ fn main() {
             },
         )
         .unwrap();
-        let (rps, _) = drive(h.addr, "m", 4, per_client);
+        let (rps, dt) = drive(h.addr, "m", 4, per_client);
         let b = h.router().get("m").unwrap();
         println!(
             "{:<16} {:>12.1} {:>10} {:>10} {:>11.2}",
@@ -75,6 +79,13 @@ fn main() {
             b.metrics.latency_percentile_us(0.5).unwrap_or(0),
             b.metrics.latency_percentile_us(0.99).unwrap_or(0),
             b.metrics.mean_batch_size(),
+        );
+        // Inverse throughput (wall time per completed request across 4
+        // concurrent clients) — NOT per-request latency; the latency
+        // percentiles live in b.metrics above.
+        bench.record(
+            &format!("serve {name} inverse-throughput (4 clients)"),
+            dt / (4 * per_client) as u32,
         );
         h.shutdown();
     }
@@ -110,7 +121,7 @@ fn main() {
             },
         )
         .unwrap();
-        let (rps, _) = drive(h.addr, "m", 8, per_client);
+        let (rps, dt) = drive(h.addr, "m", 8, per_client);
         let b = h.router().get("m").unwrap();
         println!(
             "{:<26} {:>12.1} {:>10} {:>10} {:>11.2}",
@@ -120,6 +131,10 @@ fn main() {
             b.metrics.latency_percentile_us(0.99).unwrap_or(0),
             b.metrics.mean_batch_size(),
         );
+        bench.record(
+            &format!("policy {label} inverse-throughput (8 clients)"),
+            dt / (8 * per_client) as u32,
+        );
         assert_eq!(
             b.metrics.failed.load(Ordering::Relaxed),
             0,
@@ -127,4 +142,8 @@ fn main() {
         );
         h.shutdown();
     }
+
+    bench
+        .write_json("e2e_inference")
+        .expect("write BENCH_e2e_inference.json");
 }

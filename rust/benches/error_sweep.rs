@@ -41,4 +41,8 @@ fn main() {
     bench.run("measured_error p16e1 10k pairs", || {
         black_box(measured_error(PositFormat::P16E1, 10_000, 3));
     });
+
+    bench
+        .write_json("error_sweep")
+        .expect("write BENCH_error_sweep.json");
 }

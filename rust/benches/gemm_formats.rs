@@ -1,11 +1,13 @@
 //! Bench: GEMM throughput across arithmetic formats — the software-
 //! emulation ablation behind Table II's cost story (float32 vs exact
-//! posit vs PLAM, quire vs f32 accumulation), plus the AOT PJRT kernel
-//! when artifacts are present.
+//! posit vs PLAM, quire vs f32 accumulation), the scalar-dot vs
+//! batched-GEMM comparison across P8E0/P16E1/P32E2, plus the AOT PJRT
+//! kernel when artifacts are present.
 //!
-//! Run: cargo bench --bench gemm_formats
+//! Run: cargo bench --bench gemm_formats   (PLAM_BENCH_FAST=1 for smoke)
 
 use plam::bench::{black_box, Bench};
+use plam::nn::gemm::{encode_matrix, gemm_bt};
 use plam::nn::{ArithMode, Layer, Tensor};
 use plam::posit::PositFormat;
 use plam::prng::Rng;
@@ -94,27 +96,130 @@ fn main() {
         });
     }
 
-    // PJRT kernel artifact (Pallas PLAM GEMM), if built.
-    let path = std::path::Path::new("artifacts/plam_matmul_64.hlo.txt");
-    if path.exists() {
-        match plam::runtime::Runtime::cpu() {
-            Ok(mut rt) => {
-                let exe = rt.load(path).unwrap();
-                let a: Vec<f32> = (0..64 * 64).map(|_| rng.normal() as f32).collect();
-                let b: Vec<f32> = (0..64 * 64).map(|_| rng.normal() as f32).collect();
-                let r = bench
-                    .run("pjrt pallas plam_matmul 64³", || {
-                        black_box(exe.run_f32(&[(&[64, 64], &a), (&[64, 64], &b)]).unwrap());
-                    })
-                    .clone();
-                println!(
-                    "  pjrt kernel: {:>12.0} MAC/s (interpret-mode Pallas — structure, not speed)",
-                    r.ops_per_sec((64 * 64 * 64) as f64)
-                );
-            }
-            Err(e) => println!("pjrt unavailable: {e:#}"),
-        }
-    } else {
-        println!("(artifacts missing — pjrt series skipped; run `make artifacts`)");
+    // -----------------------------------------------------------------
+    // Scalar-dot vs batched GEMM, per format: the decode-once payoff.
+    //
+    // The scalar path is the per-sample layer engine (re-encodes the
+    // weight matrix for every sample, one dot product per output); the
+    // GEMM path pre-encodes the weight plane once (as PreparedModel /
+    // the serving batcher do) and runs the whole batch as one
+    // cache-blocked [batch, k] × [n, k]ᵀ GEMM.
+    // -----------------------------------------------------------------
+    println!("\nscalar-dot vs batched GEMM (dense 256→256, batch 8, PLAM):");
+    let formats = [
+        ("p8e0", PositFormat::P8E0),
+        ("p16e1", PositFormat::P16E1),
+        ("p32e2", PositFormat::P32E2),
+    ];
+    let (k_dim, n_dim, batch) = (256usize, 256usize, 8usize);
+    let wt = random_tensor(&[n_dim, k_dim], &mut rng);
+    let bt = random_tensor(&[n_dim], &mut rng);
+    let xs: Vec<Tensor> = (0..batch)
+        .map(|_| random_tensor(&[k_dim], &mut rng))
+        .collect();
+    let flat: Vec<f32> = xs.iter().flat_map(|t| t.data.iter().copied()).collect();
+    let batch_macs = (batch * k_dim * n_dim) as f64;
+    for (fname, fmt) in formats {
+        let mode = ArithMode::posit_plam(fmt);
+        let layer = Layer::Dense {
+            w: wt.clone(),
+            b: bt.clone(),
+        };
+        let scalar = bench
+            .run(&format!("scalar-dot plam {fname} 256x256 batch{batch}"), || {
+                for x in &xs {
+                    black_box(layer.forward(x, &mode));
+                }
+            })
+            .clone();
+        let we = encode_matrix(&mode, n_dim, k_dim, &wt.data); // decode once
+        let mut y = vec![0f32; batch * n_dim];
+        let gemm = bench
+            .run(&format!("gemm plam {fname} 256x256 batch{batch}"), || {
+                let xe = encode_matrix(&mode, batch, k_dim, &flat);
+                gemm_bt(&mode, &xe, &we, Some(&bt.data), &mut y);
+                black_box(&y);
+            })
+            .clone();
+        println!(
+            "  {fname:<7} scalar {:>12.0} MAC/s   gemm {:>12.0} MAC/s   speedup {:.2}×",
+            scalar.ops_per_sec(batch_macs),
+            gemm.ops_per_sec(batch_macs),
+            scalar.mean.as_secs_f64() / gemm.mean.as_secs_f64()
+        );
     }
+
+    // Acceptance series: full 256×256×256 P16E1 PLAM matmul (batch =
+    // 256 samples through a 256→256 dense layer), scalar vs GEMM.
+    println!("\n256×256×256 P16E1 PLAM matmul (batch 256):");
+    {
+        let mode = ArithMode::posit_plam(PositFormat::P16E1);
+        let m_dim = 256usize;
+        let xs256: Vec<Tensor> = (0..m_dim)
+            .map(|_| random_tensor(&[k_dim], &mut rng))
+            .collect();
+        let flat256: Vec<f32> = xs256.iter().flat_map(|t| t.data.iter().copied()).collect();
+        let layer = Layer::Dense {
+            w: wt.clone(),
+            b: bt.clone(),
+        };
+        let macs = (m_dim * k_dim * n_dim) as f64;
+        let scalar = bench
+            .run("scalar-dot plam p16e1 256^3", || {
+                for x in &xs256 {
+                    black_box(layer.forward(x, &mode));
+                }
+            })
+            .clone();
+        let we = encode_matrix(&mode, n_dim, k_dim, &wt.data);
+        let mut y = vec![0f32; m_dim * n_dim];
+        let gemm = bench
+            .run("gemm plam p16e1 256^3", || {
+                let xe = encode_matrix(&mode, m_dim, k_dim, &flat256);
+                gemm_bt(&mode, &xe, &we, Some(&bt.data), &mut y);
+                black_box(&y);
+            })
+            .clone();
+        let speedup = scalar.mean.as_secs_f64() / gemm.mean.as_secs_f64();
+        println!(
+            "  scalar {:>12.0} MAC/s   gemm {:>12.0} MAC/s   speedup {speedup:.2}× (target ≥ 2×)",
+            scalar.ops_per_sec(macs),
+            gemm.ops_per_sec(macs),
+        );
+    }
+
+    // PJRT kernel artifact (Pallas PLAM GEMM), if built.
+    #[cfg(feature = "pjrt")]
+    {
+        let path = std::path::Path::new("artifacts/plam_matmul_64.hlo.txt");
+        if path.exists() {
+            match plam::runtime::Runtime::cpu() {
+                Ok(mut rt) => {
+                    let exe = rt.load(path).unwrap();
+                    let a: Vec<f32> = (0..64 * 64).map(|_| rng.normal() as f32).collect();
+                    let b: Vec<f32> = (0..64 * 64).map(|_| rng.normal() as f32).collect();
+                    let r = bench
+                        .run("pjrt pallas plam_matmul 64³", || {
+                            black_box(exe.run_f32(&[(&[64, 64], &a), (&[64, 64], &b)]).unwrap());
+                        })
+                        .clone();
+                    println!(
+                        "  pjrt kernel: {:>12.0} MAC/s (interpret-mode Pallas — structure, not speed)",
+                        r.ops_per_sec((64 * 64 * 64) as f64)
+                    );
+                }
+                Err(e) => println!("pjrt unavailable: {e:#}"),
+            }
+        } else {
+            println!("(artifacts missing — pjrt series skipped; run `make artifacts`)");
+        }
+    }
+    #[cfg(not(feature = "pjrt"))]
+    {
+        println!("(built without `--features pjrt` — pjrt series skipped)");
+    }
+
+    bench
+        .write_json("gemm_formats")
+        .expect("write BENCH_gemm_formats.json");
 }

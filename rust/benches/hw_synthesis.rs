@@ -53,4 +53,8 @@ fn main() {
     bench.run("headline", || {
         black_box(hardware::headline());
     });
+
+    bench
+        .write_json("hw_synthesis")
+        .expect("write BENCH_hw_synthesis.json");
 }

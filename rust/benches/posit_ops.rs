@@ -115,4 +115,8 @@ fn main() {
     for r in bench.results() {
         println!("{:<44} {:>14.0}", r.name, r.ops_per_sec(N as f64));
     }
+
+    bench
+        .write_json("posit_ops")
+        .expect("write BENCH_posit_ops.json");
 }

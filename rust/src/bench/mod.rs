@@ -58,12 +58,13 @@ pub struct Bench {
 impl Bench {
     /// Default: 0.2 s warmup, 1 s measurement, 20 samples.
     pub fn new() -> Self {
-        // Honor PLAM_BENCH_FAST=1 for CI-ish quick runs.
+        // Honor PLAM_BENCH_FAST=1 for CI-ish quick runs (fewer samples
+        // too, so slow single-iteration bodies stay bounded).
         let fast = std::env::var("PLAM_BENCH_FAST").is_ok();
         Bench {
             warmup: Duration::from_millis(if fast { 20 } else { 200 }),
             budget: Duration::from_millis(if fast { 100 } else { 1000 }),
-            samples: 20,
+            samples: if fast { 5 } else { 20 },
             results: vec![],
         }
     }
@@ -112,10 +113,77 @@ impl Bench {
         self.results.last().unwrap()
     }
 
+    /// Record an externally measured result (open-loop drivers that
+    /// cannot use [`Bench::run`]'s closed-loop calibration).
+    pub fn record(&mut self, name: &str, mean: Duration) -> &BenchResult {
+        let result = BenchResult {
+            name: name.to_string(),
+            mean,
+            p50: mean,
+            p99: mean,
+            iters_per_sample: 1,
+            samples: 1,
+        };
+        println!("{result}");
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
     /// All results so far.
     pub fn results(&self) -> &[BenchResult] {
         &self.results
     }
+
+    /// Write every recorded result as `BENCH_<tag>.json` in the current
+    /// directory (or `$PLAM_BENCH_DIR`), so CI can archive the perf
+    /// trajectory. Hand-rolled JSON — serde is unavailable offline.
+    pub fn write_json(&self, tag: &str) -> std::io::Result<std::path::PathBuf> {
+        let dir = std::env::var("PLAM_BENCH_DIR").unwrap_or_else(|_| ".".to_string());
+        self.write_json_to(std::path::Path::new(&dir), tag)
+    }
+
+    /// [`Bench::write_json`] with an explicit target directory.
+    pub fn write_json_to(
+        &self,
+        dir: &std::path::Path,
+        tag: &str,
+    ) -> std::io::Result<std::path::PathBuf> {
+        let path = dir.join(format!("BENCH_{tag}.json"));
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str(&format!("  \"bench\": \"{}\",\n", json_escape(tag)));
+        s.push_str("  \"results\": [\n");
+        for (i, r) in self.results.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"name\": \"{}\", \"mean_ns\": {}, \"p50_ns\": {}, \"p99_ns\": {}, \
+                 \"iters_per_sample\": {}, \"samples\": {}}}{}\n",
+                json_escape(&r.name),
+                r.mean.as_nanos(),
+                r.p50.as_nanos(),
+                r.p99.as_nanos(),
+                r.iters_per_sample,
+                r.samples,
+                if i + 1 < self.results.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        std::fs::write(&path, s)?;
+        Ok(path)
+    }
+}
+
+/// Minimal JSON string escaping (quotes, backslashes, control chars).
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
 }
 
 impl Default for Bench {
@@ -143,6 +211,31 @@ mod tests {
         assert!(r.mean.as_nanos() > 0);
         assert!(r.mean < Duration::from_millis(1));
         assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn json_export_is_well_formed() {
+        let mut b = Bench {
+            warmup: Duration::from_millis(1),
+            budget: Duration::from_millis(2),
+            samples: 2,
+            results: vec![],
+        };
+        b.record("series \"a\"", Duration::from_micros(5));
+        b.record("series b", Duration::from_micros(7));
+        let dir = std::env::temp_dir().join(format!("plam_bench_json_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        // write_json_to, not write_json: mutating PLAM_BENCH_DIR via
+        // set_var would race concurrently running tests.
+        let path = b.write_json_to(&dir, "unit").unwrap();
+        let s = std::fs::read_to_string(&path).unwrap();
+        assert!(s.contains("\"bench\": \"unit\""));
+        assert!(s.contains("\\\"a\\\""), "{s}");
+        assert!(s.contains("\"mean_ns\": 5000"));
+        // Balanced braces/brackets, no trailing comma before the close.
+        assert_eq!(s.matches('{').count(), s.matches('}').count());
+        assert!(!s.contains(",\n  ]"));
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -1,10 +1,13 @@
 //! Inference backends: where a batch of requests actually executes.
 
-use std::path::Path;
-
 use anyhow::{bail, Result};
 
 use crate::nn::{ArithMode, Model, PreparedModel, Tensor};
+
+#[cfg(feature = "pjrt")]
+use std::path::Path;
+
+#[cfg(feature = "pjrt")]
 use crate::runtime::ThreadedExecutable;
 
 /// Anything that can run a batch of flat-f32 inputs to flat-f32 outputs.
@@ -56,7 +59,7 @@ impl InferenceBackend for NnBackend {
     }
 
     fn infer_batch(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
-        let mut out = Vec::with_capacity(inputs.len());
+        let mut xs = Vec::with_capacity(inputs.len());
         for data in inputs {
             if data.len() != self.input_len() {
                 bail!(
@@ -65,10 +68,16 @@ impl InferenceBackend for NnBackend {
                     self.input_len()
                 );
             }
-            let x = Tensor::from_vec(&self.model.input_shape, data.clone());
-            out.push(self.model.forward(&x).data);
+            xs.push(Tensor::from_vec(&self.model.input_shape, data.clone()));
         }
-        Ok(out)
+        // One batched GEMM per dense layer: the prepared weight planes
+        // are decoded once and reused across the whole batch.
+        Ok(self
+            .model
+            .forward_batch(&xs)
+            .into_iter()
+            .map(|t| t.data)
+            .collect())
     }
 
     fn describe(&self) -> String {
@@ -80,6 +89,8 @@ impl InferenceBackend for NnBackend {
 /// L2 JAX graph). Partial batches are zero-padded to the artifact's
 /// static batch dimension. The PJRT stack is thread-confined inside
 /// [`ThreadedExecutable`], so this backend is freely `Send + Sync`.
+/// Only available with the `pjrt` cargo feature.
+#[cfg(feature = "pjrt")]
 pub struct PjrtBackend {
     exe: ThreadedExecutable,
     batch: usize,
@@ -88,6 +99,7 @@ pub struct PjrtBackend {
     name: String,
 }
 
+#[cfg(feature = "pjrt")]
 impl PjrtBackend {
     /// Load an artifact compiled for `[batch, in_len] → [batch, out_len]`.
     pub fn load(path: &Path, batch: usize, in_len: usize, out_len: usize) -> Result<Self> {
@@ -110,6 +122,7 @@ impl PjrtBackend {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl InferenceBackend for PjrtBackend {
     fn input_len(&self) -> usize {
         self.in_len

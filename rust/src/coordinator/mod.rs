@@ -17,8 +17,11 @@ pub mod router;
 pub mod server;
 pub mod wire;
 
-pub use backend::{InferenceBackend, NnBackend, PjrtBackend};
+pub use backend::{InferenceBackend, NnBackend};
 pub use batcher::{Batcher, BatcherConfig};
 pub use metrics::Metrics;
 pub use router::Router;
 pub use server::{serve, Client, ServerConfig};
+
+#[cfg(feature = "pjrt")]
+pub use backend::PjrtBackend;

@@ -13,7 +13,9 @@
 //! * [`data`] — synthetic dataset generators standing in for MNIST /
 //!   SVHN / CIFAR-10 / ISOLET / UCI-HAR (see DESIGN.md §5);
 //! * [`coordinator`] — batching inference server (L3);
-//! * [`runtime`] — PJRT loader for the AOT-compiled JAX/Pallas artifacts;
+//! * `runtime` — PJRT loader for the AOT-compiled JAX/Pallas artifacts
+//!   (behind the `pjrt` cargo feature; the default build has zero
+//!   native dependencies);
 //! * [`bench`] — the micro-benchmark harness used by `cargo bench`
 //!   (criterion is unavailable offline; see DESIGN.md §5).
 //!
@@ -37,4 +39,5 @@ pub mod hardware;
 pub mod nn;
 pub mod posit;
 pub mod prng;
+#[cfg(feature = "pjrt")]
 pub mod runtime;

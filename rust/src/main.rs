@@ -12,7 +12,7 @@
 
 use std::sync::Arc;
 
-use plam::coordinator::{serve, BatcherConfig, NnBackend, PjrtBackend, Router, ServerConfig};
+use plam::coordinator::{serve, BatcherConfig, NnBackend, Router, ServerConfig};
 use plam::experiments;
 use plam::nn::{ArithMode, Model};
 use plam::posit::PositFormat;
@@ -50,7 +50,7 @@ COMMANDS:
   serve      [--addr HOST:PORT] [--artifact PATH --batch N --in N --out N]
              Start the batched inference server. Registers the Table I
              models in float32 / posit<16,1> / posit<16,1>+PLAM modes;
-             optionally also a PJRT artifact backend.
+             optionally also a PJRT artifact backend (--features pjrt).
   table2     [--quick | --full]
              Reproduce Table II (inference accuracy across formats).
   hw-report  [--table3] [--fig1] [--fig5] [--fig6] [--headline]
@@ -119,19 +119,38 @@ fn cmd_serve(args: &[String]) -> i32 {
     }
 
     // Optional PJRT artifact route (the L1/L2 compiled path).
-    if let Some(artifact) = flag_value(args, "--artifact") {
-        let batch: usize = flag_value(args, "--batch").unwrap_or("8").parse().unwrap_or(8);
-        let in_len: usize = flag_value(args, "--in").unwrap_or("64").parse().unwrap_or(64);
-        let out_len: usize = flag_value(args, "--out").unwrap_or("64").parse().unwrap_or(64);
-        match PjrtBackend::load(std::path::Path::new(artifact), batch, in_len, out_len) {
-            Ok(be) => {
-                println!("loaded PJRT artifact {artifact} on {}", be.platform());
-                router.register("pjrt", Arc::new(be), cfg);
+    #[cfg(feature = "pjrt")]
+    {
+        if let Some(artifact) = flag_value(args, "--artifact") {
+            let batch: usize = flag_value(args, "--batch").unwrap_or("8").parse().unwrap_or(8);
+            let in_len: usize = flag_value(args, "--in").unwrap_or("64").parse().unwrap_or(64);
+            let out_len: usize = flag_value(args, "--out").unwrap_or("64").parse().unwrap_or(64);
+            let loaded = plam::coordinator::PjrtBackend::load(
+                std::path::Path::new(artifact),
+                batch,
+                in_len,
+                out_len,
+            );
+            match loaded {
+                Ok(be) => {
+                    println!("loaded PJRT artifact {artifact} on {}", be.platform());
+                    router.register("pjrt", Arc::new(be), cfg);
+                }
+                Err(e) => {
+                    eprintln!("failed to load artifact {artifact}: {e:#}");
+                    return 1;
+                }
             }
-            Err(e) => {
-                eprintln!("failed to load artifact {artifact}: {e:#}");
-                return 1;
-            }
+        }
+    }
+    #[cfg(not(feature = "pjrt"))]
+    {
+        // Fail fast, matching the pjrt build's behavior when an
+        // artifact cannot be loaded: a server silently missing the
+        // requested route helps nobody.
+        if flag_value(args, "--artifact").is_some() {
+            eprintln!("--artifact requires a build with `--features pjrt`");
+            return 1;
         }
     }
 
@@ -236,15 +255,23 @@ fn cmd_selftest() -> i32 {
         }
     }
 
-    println!("PJRT runtime:");
-    match plam::runtime::Runtime::cpu() {
-        Ok(rt) => println!("  platform: {} ✓", rt.platform()),
-        Err(e) => {
-            eprintln!("  unavailable: {e:#}");
-            return 1;
+    #[cfg(feature = "pjrt")]
+    {
+        println!("PJRT runtime:");
+        match plam::runtime::Runtime::cpu() {
+            Ok(rt) => println!("  platform: {} ✓", rt.platform()),
+            Err(e) => {
+                eprintln!("  unavailable: {e:#}");
+                return 1;
+            }
         }
+        // (Runtime::cpu() is !Send; the serving path uses
+        // ThreadedExecutable.)
     }
-    // (Runtime::cpu() is !Send; the serving path uses ThreadedExecutable.)
+    #[cfg(not(feature = "pjrt"))]
+    {
+        println!("PJRT runtime: skipped (build with `--features pjrt`)");
+    }
     println!("selftest OK");
     0
 }

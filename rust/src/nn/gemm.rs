@@ -1,0 +1,479 @@
+//! Table-driven batched posit GEMM — the decode-once, reuse-many hot
+//! path behind every dense/conv layer and the batching server.
+//!
+//! The scalar engine this replaces decoded both operand vectors per dot
+//! product; for a batch of B samples through a `[N, K]` weight matrix
+//! that re-encoded the same N·K weights B times, which rivalled the MAC
+//! work itself. Here each matrix is pre-encoded *once* into a plane of
+//! [`DecEntry`]s (via the 64 K decode tables for n ≤ 16 formats, or
+//! [`decode_entry`] directly for wider ones, following the template
+//! reuse idea of Murillo et al.'s Template-Based Posit Multiplication)
+//! and the inner loop runs cache-blocked over `MB × NB` output tiles
+//! with per-output [`FastQuire`] accumulation — exact EMAC semantics,
+//! one rounding per output, with either the exact (paper Fig. 3) or the
+//! PLAM (paper Fig. 4, Eq. 17) product rule.
+//!
+//! Orientation: `gemm_bt` computes `Y[M, N] = X[M, K] · Wᵀ + bias`
+//! with `W` stored row-major `[N, K]`, so both operands stream
+//! contiguously along `K` — the natural layout for `[out, in]` weight
+//! matrices and for im2col patch matrices alike.
+
+use crate::posit::tables::{decode_entry, DecEntry, FW};
+use crate::posit::{from_f32, to_f32, FastQuire, PositFormat};
+
+use super::layers::{ArithMode, MulKind};
+use super::tensor::Tensor;
+
+/// Output-tile rows (batch direction).
+const MB: usize = 8;
+/// Output-tile columns (weight-row direction).
+const NB: usize = 32;
+/// K-blocking depth: one `NB × KB` weight panel (~128 KiB of entries)
+/// stays cache-resident while every tile row streams over it.
+const KB: usize = 512;
+
+/// A matrix pre-encoded for one arithmetic mode: f32 copy for the
+/// float path, pre-aligned decode planes for the posit paths.
+pub struct EncodedMatrix {
+    /// Row count.
+    pub rows: usize,
+    /// Column count (the contraction length in [`gemm_bt`]).
+    pub cols: usize,
+    f32s: Vec<f32>,
+    dec: Vec<DecEntry>,
+}
+
+/// Encode a row-major `rows × cols` matrix for a mode. This is the
+/// decode-once step: do it per weight matrix at model-preparation time
+/// and per activation batch at the layer boundary.
+pub fn encode_matrix(mode: &ArithMode, rows: usize, cols: usize, data: &[f32]) -> EncodedMatrix {
+    assert_eq!(rows * cols, data.len(), "matrix shape/data mismatch");
+    match mode {
+        ArithMode::Float32 => EncodedMatrix {
+            rows,
+            cols,
+            f32s: data.to_vec(),
+            dec: Vec::new(),
+        },
+        ArithMode::Posit { fmt, table, .. } => {
+            let dec = match table {
+                Some(t) => data.iter().map(|&v| t.get(from_f32(*fmt, v))).collect(),
+                None => data
+                    .iter()
+                    .map(|&v| decode_entry(*fmt, from_f32(*fmt, v)))
+                    .collect(),
+            };
+            EncodedMatrix {
+                rows,
+                cols,
+                f32s: Vec::new(),
+                dec,
+            }
+        }
+    }
+}
+
+/// `Y[M, N] = X[M, K] · Wᵀ (+ bias)`, `W` row-major `[N, K]`, `bias`
+/// broadcast over rows (one value per output column). `y` must hold
+/// `M · N` elements, row-major.
+///
+/// Posit modes accumulate each output in a [`FastQuire`] (single
+/// rounding, NaR-poisoning); the float mode reproduces the scalar
+/// engine's ascending-`k` f32 summation order bit-for-bit.
+pub fn gemm_bt(
+    mode: &ArithMode,
+    x: &EncodedMatrix,
+    w: &EncodedMatrix,
+    bias: Option<&[f32]>,
+    y: &mut [f32],
+) {
+    let (m_dim, k_dim, n_dim) = (x.rows, x.cols, w.rows);
+    assert_eq!(w.cols, k_dim, "gemm contraction length mismatch");
+    assert_eq!(y.len(), m_dim * n_dim, "gemm output length mismatch");
+    if let Some(b) = bias {
+        assert_eq!(b.len(), n_dim, "gemm bias length mismatch");
+    }
+    match mode {
+        ArithMode::Float32 => gemm_float(x, w, bias, y, m_dim, k_dim, n_dim),
+        ArithMode::Posit { fmt, mul, .. } => {
+            gemm_posit(*fmt, *mul, x, w, bias, y, m_dim, k_dim, n_dim)
+        }
+    }
+}
+
+fn gemm_float(
+    x: &EncodedMatrix,
+    w: &EncodedMatrix,
+    bias: Option<&[f32]>,
+    y: &mut [f32],
+    m_dim: usize,
+    k_dim: usize,
+    n_dim: usize,
+) {
+    let mut acc = vec![0f32; m_dim.min(MB) * NB];
+    for m0 in (0..m_dim).step_by(MB) {
+        let mh = (m_dim - m0).min(MB);
+        for n0 in (0..n_dim).step_by(NB) {
+            let nw = (n_dim - n0).min(NB);
+            for mi in 0..mh {
+                for ni in 0..nw {
+                    acc[mi * NB + ni] = bias.map_or(0.0, |b| b[n0 + ni]);
+                }
+            }
+            for k0 in (0..k_dim).step_by(KB) {
+                let kw = (k_dim - k0).min(KB);
+                for mi in 0..mh {
+                    let xrow = &x.f32s[(m0 + mi) * k_dim + k0..(m0 + mi) * k_dim + k0 + kw];
+                    for ni in 0..nw {
+                        let wrow = &w.f32s[(n0 + ni) * k_dim + k0..(n0 + ni) * k_dim + k0 + kw];
+                        let mut s = acc[mi * NB + ni];
+                        for k in 0..kw {
+                            s += xrow[k] * wrow[k];
+                        }
+                        acc[mi * NB + ni] = s;
+                    }
+                }
+            }
+            for mi in 0..mh {
+                for ni in 0..nw {
+                    y[(m0 + mi) * n_dim + n0 + ni] = acc[mi * NB + ni];
+                }
+            }
+        }
+    }
+}
+
+fn gemm_posit(
+    fmt: PositFormat,
+    mul: MulKind,
+    x: &EncodedMatrix,
+    w: &EncodedMatrix,
+    bias: Option<&[f32]>,
+    y: &mut [f32],
+    m_dim: usize,
+    k_dim: usize,
+    n_dim: usize,
+) {
+    // Bias encoded once per call (not per output row).
+    let bias_bits: Option<Vec<u64>> =
+        bias.map(|b| b.iter().map(|&v| from_f32(fmt, v)).collect());
+    // Scratch sized to the rows actually used: an M=1 per-sample call
+    // touches one tile row, not the full MB×NB panel.
+    let scratch = m_dim.min(MB) * NB;
+    let mut quires: Vec<FastQuire> = (0..scratch).map(|_| FastQuire::new(fmt)).collect();
+    for m0 in (0..m_dim).step_by(MB) {
+        let mh = (m_dim - m0).min(MB);
+        for n0 in (0..n_dim).step_by(NB) {
+            let nw = (n_dim - n0).min(NB);
+            for mi in 0..mh {
+                for ni in 0..nw {
+                    quires[mi * NB + ni].clear();
+                }
+            }
+            for k0 in (0..k_dim).step_by(KB) {
+                let kw = (k_dim - k0).min(KB);
+                for mi in 0..mh {
+                    let xrow = &x.dec[(m0 + mi) * k_dim + k0..(m0 + mi) * k_dim + k0 + kw];
+                    for ni in 0..nw {
+                        let wrow = &w.dec[(n0 + ni) * k_dim + k0..(n0 + ni) * k_dim + k0 + kw];
+                        let q = &mut quires[mi * NB + ni];
+                        match mul {
+                            MulKind::Exact => {
+                                for (a, b) in xrow.iter().zip(wrow.iter()) {
+                                    quire_mac_exact(q, a, b);
+                                }
+                            }
+                            MulKind::Plam => {
+                                for (a, b) in xrow.iter().zip(wrow.iter()) {
+                                    quire_mac_plam(q, a, b);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            for mi in 0..mh {
+                for ni in 0..nw {
+                    let q = &mut quires[mi * NB + ni];
+                    if let Some(bb) = &bias_bits {
+                        q.add_posit(bb[n0 + ni]);
+                    }
+                    y[(m0 + mi) * n_dim + n0 + ni] = to_f32(fmt, q.to_posit());
+                }
+            }
+        }
+    }
+}
+
+/// Quire MAC from pre-decoded entries, exact product (paper Fig. 3).
+#[inline(always)]
+fn quire_mac_exact(q: &mut FastQuire, a: &DecEntry, b: &DecEntry) {
+    if a.is_zero() || b.is_zero() {
+        return;
+    }
+    if a.is_nar() || b.is_nar() {
+        q.set_nar();
+        return;
+    }
+    // Product of Q30 significands → ≤ 62-bit magnitude with combined
+    // scale (u64 fast path: two quire limb writes).
+    let sig = (a.significand() as u64) * (b.significand() as u64);
+    let scale = a.scale as i32 + b.scale as i32 - 2 * FW as i32;
+    q.add_product64(sig, scale, a.sign ^ b.sign);
+}
+
+/// Quire MAC from pre-decoded entries, PLAM product (paper Fig. 4,
+/// Eq. 17: fraction addition in the log domain; the Eq. 20/21 carry
+/// bumps the scale).
+#[inline(always)]
+fn quire_mac_plam(q: &mut FastQuire, a: &DecEntry, b: &DecEntry) {
+    if a.is_zero() || b.is_zero() {
+        return;
+    }
+    if a.is_nar() || b.is_nar() {
+        q.set_nar();
+        return;
+    }
+    let fsum = a.frac as u64 + b.frac as u64; // Q30 fraction sum
+    let carry = (fsum >> FW) as i32; // Eq. 20/21 condition
+    let frac = fsum & ((1u64 << FW) - 1);
+    let sig = (1u64 << FW) | frac; // 1.F in Q30 (31 bits)
+    let scale = a.scale as i32 + b.scale as i32 + carry - FW as i32;
+    q.add_product64(sig, scale, a.sign ^ b.sign);
+}
+
+/// im2col: gather `[ic, h, w]` input patches into a row-major
+/// `[oh·ow, ic·kh·kw]` patch matrix so each output pixel is one GEMM
+/// row. Returns `(cols, oh, ow)`.
+pub fn im2col(
+    x: &Tensor,
+    ic: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+) -> (Vec<f32>, usize, usize) {
+    let (h, wdt) = (x.shape[1], x.shape[2]);
+    let oh = (h + 2 * pad - kh) / stride + 1;
+    let ow = (wdt + 2 * pad - kw) / stride + 1;
+    let patch = ic * kh * kw;
+    let mut cols = vec![0f32; patch * oh * ow];
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let col = (oy * ow + ox) * patch;
+            let mut idx = 0;
+            for c in 0..ic {
+                for ky in 0..kh {
+                    for kx in 0..kw {
+                        let iy = oy * stride + ky;
+                        let ix = ox * stride + kx;
+                        let v = if iy < pad || ix < pad || iy - pad >= h || ix - pad >= wdt {
+                            0.0
+                        } else {
+                            x.at3(c, iy - pad, ix - pad)
+                        };
+                        cols[col + idx] = v;
+                        idx += 1;
+                    }
+                }
+            }
+        }
+    }
+    (cols, oh, ow)
+}
+
+/// Full conv2d forward through the GEMM engine: im2col the input, run
+/// one `[oh·ow, patch] × [oc, patch]ᵀ` GEMM against the pre-encoded
+/// filter plane, then scatter the position-major result into the
+/// channel-major `[oc, oh, ow]` output tensor.
+pub fn conv2d_gemm(
+    mode: &ArithMode,
+    x: &Tensor,
+    we: &EncodedMatrix,
+    bias: &[f32],
+    ic: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+) -> Tensor {
+    let (cols, oh, ow) = im2col(x, ic, kh, kw, stride, pad);
+    let patch = ic * kh * kw;
+    let oc = we.rows;
+    let ce = encode_matrix(mode, oh * ow, patch, &cols);
+    let mut y = vec![0f32; oh * ow * oc];
+    gemm_bt(mode, &ce, we, Some(bias), &mut y);
+    let hw = oh * ow;
+    let mut out = Tensor::zeros(&[oc, oh, ow]);
+    for p in 0..hw {
+        for o in 0..oc {
+            out.data[o * hw + p] = y[p * oc + o];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::posit::PositFormat;
+    use crate::prng::Rng;
+
+    fn random_matrix(rng: &mut Rng, rows: usize, cols: usize) -> Vec<f32> {
+        (0..rows * cols).map(|_| rng.normal() as f32 * 0.5).collect()
+    }
+
+    /// Reference scalar engine: one dot product per output, encoded
+    /// per element (no tables, no blocking).
+    fn naive_bt(
+        mode: &ArithMode,
+        x: &[f32],
+        w: &[f32],
+        bias: &[f32],
+        m: usize,
+        k: usize,
+        n: usize,
+    ) -> Vec<f32> {
+        let mut y = vec![0f32; m * n];
+        match mode {
+            ArithMode::Float32 => {
+                for mi in 0..m {
+                    for ni in 0..n {
+                        let mut s = bias[ni];
+                        for ki in 0..k {
+                            s += x[mi * k + ki] * w[ni * k + ki];
+                        }
+                        y[mi * n + ni] = s;
+                    }
+                }
+            }
+            ArithMode::Posit { fmt, mul, .. } => {
+                for mi in 0..m {
+                    for ni in 0..n {
+                        let mut q = FastQuire::new(*fmt);
+                        for ki in 0..k {
+                            let a = decode_entry(*fmt, from_f32(*fmt, x[mi * k + ki]));
+                            let b = decode_entry(*fmt, from_f32(*fmt, w[ni * k + ki]));
+                            match mul {
+                                MulKind::Exact => quire_mac_exact(&mut q, &a, &b),
+                                MulKind::Plam => quire_mac_plam(&mut q, &a, &b),
+                            }
+                        }
+                        q.add_posit(from_f32(*fmt, bias[ni]));
+                        y[mi * n + ni] = to_f32(*fmt, q.to_posit());
+                    }
+                }
+            }
+        }
+        y
+    }
+
+    fn run_both(mode: &ArithMode, m: usize, k: usize, n: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let x = random_matrix(&mut rng, m, k);
+        let w = random_matrix(&mut rng, n, k);
+        let bias: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 0.1).collect();
+        let xe = encode_matrix(mode, m, k, &x);
+        let we = encode_matrix(mode, n, k, &w);
+        let mut y = vec![0f32; m * n];
+        gemm_bt(mode, &xe, &we, Some(&bias), &mut y);
+        (y, naive_bt(mode, &x, &w, &bias, m, k, n))
+    }
+
+    #[test]
+    fn matches_naive_all_modes_odd_shapes() {
+        // Shapes chosen to exercise partial tiles in every direction
+        // (m % MB, n % NB, k % KB all nonzero) and multi-tile paths.
+        for mode in [
+            ArithMode::float32(),
+            ArithMode::posit_exact(PositFormat::P16E1),
+            ArithMode::posit_plam(PositFormat::P16E1),
+            ArithMode::posit_exact(PositFormat::P8E0),
+            ArithMode::posit_plam(PositFormat::P8E0),
+        ] {
+            for (m, k, n) in [(1, 7, 3), (3, 40, 33), (9, 130, 37), (17, 5, 65), (2, 600, 3)] {
+                let (got, want) = run_both(&mode, m, k, n, 42 + m as u64);
+                assert_eq!(got, want, "{} m={m} k={k} n={n}", mode.name());
+            }
+        }
+    }
+
+    #[test]
+    fn wide_format_tableless_path_matches_naive() {
+        // P⟨32,2⟩ has no decode table; the per-element decode path must
+        // produce identical planes and results.
+        for mul in [MulKind::Exact, MulKind::Plam] {
+            let mode = match mul {
+                MulKind::Exact => ArithMode::posit_exact(PositFormat::P32E2),
+                MulKind::Plam => ArithMode::posit_plam(PositFormat::P32E2),
+            };
+            let (got, want) = run_both(&mode, 5, 33, 9, 7);
+            assert_eq!(got, want, "{}", mode.name());
+        }
+    }
+
+    #[test]
+    fn batch_rows_match_single_row_calls() {
+        // Batching must not change any individual row: the quire is
+        // exact and the float path keeps ascending-k order, so results
+        // are bit-identical to M=1 calls.
+        for mode in [
+            ArithMode::float32(),
+            ArithMode::posit_plam(PositFormat::P16E1),
+        ] {
+            let mut rng = Rng::new(11);
+            let (m, k, n) = (13, 70, 41);
+            let x = random_matrix(&mut rng, m, k);
+            let w = random_matrix(&mut rng, n, k);
+            let bias: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 0.1).collect();
+            let we = encode_matrix(&mode, n, k, &w);
+            let xe = encode_matrix(&mode, m, k, &x);
+            let mut batched = vec![0f32; m * n];
+            gemm_bt(&mode, &xe, &we, Some(&bias), &mut batched);
+            for mi in 0..m {
+                let re = encode_matrix(&mode, 1, k, &x[mi * k..(mi + 1) * k]);
+                let mut row = vec![0f32; n];
+                gemm_bt(&mode, &re, &we, Some(&bias), &mut row);
+                assert_eq!(row, batched[mi * n..(mi + 1) * n], "row {mi}");
+            }
+        }
+    }
+
+    #[test]
+    fn exact_posit_matches_float_on_exact_values() {
+        // Small integers and halves are exactly representable in
+        // P⟨16,1⟩ and their dot products fit the quire exactly.
+        let mode = ArithMode::posit_exact(PositFormat::P16E1);
+        let x = [1.0f32, 0.5, -2.0, 3.0];
+        let w = [2.0f32, 4.0, 0.25, -1.0, 1.5, 0.0, 8.0, -0.5];
+        let bias = [0.5f32, -1.0];
+        let xe = encode_matrix(&mode, 1, 4, &x);
+        let we = encode_matrix(&mode, 2, 4, &w);
+        let mut y = vec![0f32; 2];
+        gemm_bt(&mode, &xe, &we, Some(&bias), &mut y);
+        let want0 = 1.0 * 2.0 + 0.5 * 4.0 - 2.0 * 0.25 - 3.0 + 0.5;
+        let want1 = 1.5 - 16.0 - 1.5 - 1.0;
+        assert_eq!(y, vec![want0, want1]);
+    }
+
+    #[test]
+    fn nar_poisons_only_its_row() {
+        let mode = ArithMode::posit_plam(PositFormat::P16E1);
+        let x = [1.0f32, f32::NAN, 1.0, 2.0]; // row 0 contains NaR
+        let w = [1.0f32, 1.0];
+        let xe = encode_matrix(&mode, 2, 2, &x);
+        let we = encode_matrix(&mode, 1, 2, &w);
+        let mut y = vec![0f32; 2];
+        gemm_bt(&mode, &xe, &we, None, &mut y);
+        assert!(y[0].is_nan(), "NaR row must round to NaR/NaN");
+        assert_eq!(y[1], 3.0);
+    }
+
+    #[test]
+    fn im2col_identity_patch() {
+        let x = Tensor::from_vec(&[1, 2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let (cols, oh, ow) = im2col(&x, 1, 1, 1, 1, 0);
+        assert_eq!((oh, ow), (2, 2));
+        assert_eq!(cols, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+}

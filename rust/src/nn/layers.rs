@@ -6,10 +6,18 @@
 //! Fig. 4 datapath), and dot products accumulate in a quire with a
 //! single rounding at the end. Activations/weights are stored as f32
 //! (exact for n ≤ 16 formats) and re-encoded at layer entry.
+//!
+//! All dense/conv arithmetic routes through the batched GEMM engine in
+//! [`super::gemm`]: operands are encoded into decode planes once per
+//! matrix, and the MAC loops run cache-blocked over output tiles. For
+//! weight reuse across whole batches, see [`super::prepared`].
 
-use crate::posit::tables::{DecEntry, DecodeTable, FW};
-use crate::posit::{from_f32, to_f32, FastQuire, PositFormat};
+use std::sync::Arc;
 
+use crate::posit::tables::DecodeTable;
+use crate::posit::PositFormat;
+
+use super::gemm::{conv2d_gemm, encode_matrix, gemm_bt};
 use super::tensor::Tensor;
 
 /// Which multiplier the posit datapath uses.
@@ -30,8 +38,9 @@ pub enum ArithMode {
     Posit {
         fmt: PositFormat,
         mul: MulKind,
-        /// Shared decode table (n ≤ 16); built once per run.
-        table: std::sync::Arc<DecodeTable>,
+        /// Shared decode table, built once per run. `None` for wide
+        /// formats (n > 16), which decode per element instead.
+        table: Option<Arc<DecodeTable>>,
     },
 }
 
@@ -46,7 +55,7 @@ impl ArithMode {
         ArithMode::Posit {
             fmt,
             mul: MulKind::Exact,
-            table: std::sync::Arc::new(DecodeTable::new(fmt)),
+            table: Self::table_for(fmt),
         }
     }
 
@@ -55,8 +64,12 @@ impl ArithMode {
         ArithMode::Posit {
             fmt,
             mul: MulKind::Plam,
-            table: std::sync::Arc::new(DecodeTable::new(fmt)),
+            table: Self::table_for(fmt),
         }
+    }
+
+    fn table_for(fmt: PositFormat) -> Option<Arc<DecodeTable>> {
+        (fmt.n <= 16).then(|| Arc::new(DecodeTable::new(fmt)))
     }
 
     /// Short display name (used in reports).
@@ -90,137 +103,6 @@ pub enum Layer {
     Relu,
     /// Flatten `[c,h,w] → [c·h·w]`.
     Flatten,
-}
-
-/// A fused dot-product engine for one arithmetic mode.
-///
-/// Inputs are pre-encoded/pre-decoded once per layer; the MAC loop then
-/// runs entirely in the decoded domain (see `DotEngine::dot`).
-pub(crate) enum DotEngine {
-    Float,
-    Posit {
-        fmt: PositFormat,
-        mul: MulKind,
-        /// Carry-free accumulator (perf pass: see posit::fast_quire).
-        quire: FastQuire,
-    },
-}
-
-impl DotEngine {
-    pub(crate) fn new(mode: &ArithMode) -> Self {
-        match mode {
-            ArithMode::Float32 => DotEngine::Float,
-            ArithMode::Posit { fmt, mul, .. } => DotEngine::Posit {
-                fmt: *fmt,
-                mul: *mul,
-                quire: FastQuire::new(*fmt),
-            },
-        }
-    }
-}
-
-/// Pre-processed operand vector: f32 for float mode, decoded posit
-/// entries for posit mode.
-pub struct Encoded {
-    pub(crate) f32s: Vec<f32>,
-    pub(crate) dec: Vec<DecEntry>,
-}
-
-/// Encode a slice of reals into a mode's operand representation.
-pub(crate) fn encode_operands(mode: &ArithMode, xs: &[f32]) -> Encoded {
-    match mode {
-        ArithMode::Float32 => Encoded {
-            f32s: xs.to_vec(),
-            dec: vec![],
-        },
-        ArithMode::Posit { fmt, table, .. } => Encoded {
-            f32s: vec![],
-            dec: xs
-                .iter()
-                .map(|&v| table.get(from_f32(*fmt, v)))
-                .collect(),
-        },
-    }
-}
-
-impl DotEngine {
-    /// `Σ_i a[i]·b[i] (+ bias)`, with the mode's multiplier and a single
-    /// final rounding (quire EMAC) in posit mode.
-    pub(crate) fn dot(&mut self, a: &Encoded, astart: usize, b: &Encoded, bstart: usize, len: usize, bias: f32) -> f32 {
-        match self {
-            DotEngine::Float => {
-                let mut acc = bias;
-                for i in 0..len {
-                    acc += a.f32s[astart + i] * b.f32s[bstart + i];
-                }
-                acc
-            }
-            DotEngine::Posit {
-                fmt,
-                mul,
-                quire,
-                ..
-            } => {
-                quire.clear();
-                let av = &a.dec[astart..astart + len];
-                let bv = &b.dec[bstart..bstart + len];
-                match mul {
-                    MulKind::Exact => {
-                        for (x, y) in av.iter().zip(bv.iter()) {
-                            quire_mac_exact(quire, fmt, x, y);
-                        }
-                    }
-                    MulKind::Plam => {
-                        for (x, y) in av.iter().zip(bv.iter()) {
-                            quire_mac_plam(quire, fmt, x, y);
-                        }
-                    }
-                }
-                if bias != 0.0 {
-                    quire.add_posit(from_f32(*fmt, bias));
-                }
-                to_f32(*fmt, quire.to_posit())
-            }
-        }
-    }
-}
-
-/// Quire MAC from pre-decoded entries, exact product.
-#[inline]
-fn quire_mac_exact(q: &mut FastQuire, fmt: &PositFormat, a: &DecEntry, b: &DecEntry) {
-    let _ = fmt;
-    if a.is_zero() || b.is_zero() {
-        return;
-    }
-    if a.is_nar() || b.is_nar() {
-        q.set_nar();
-        return;
-    }
-    // Product of Q30 significands → ≤ 62-bit magnitude with combined
-    // scale (u64 fast path: two quire limb writes).
-    let sig = (a.significand() as u64) * (b.significand() as u64);
-    let scale = a.scale as i32 + b.scale as i32 - 2 * FW as i32;
-    q.add_product64(sig, scale, a.sign ^ b.sign);
-}
-
-/// Quire MAC from pre-decoded entries, PLAM product (Eq. 17: fraction
-/// addition in the log domain).
-#[inline]
-fn quire_mac_plam(q: &mut FastQuire, fmt: &PositFormat, a: &DecEntry, b: &DecEntry) {
-    let _ = fmt;
-    if a.is_zero() || b.is_zero() {
-        return;
-    }
-    if a.is_nar() || b.is_nar() {
-        q.set_nar();
-        return;
-    }
-    let fsum = a.frac as u64 + b.frac as u64; // Q30 fraction sum
-    let carry = (fsum >> FW) as i32; // Eq. 20/21 condition
-    let frac = fsum & ((1u64 << FW) - 1);
-    let sig = (1u64 << FW) | frac; // 1.F in Q30 (31 bits)
-    let scale = a.scale as i32 + b.scale as i32 + carry - FW as i32;
-    q.add_product64(sig, scale, a.sign ^ b.sign);
 }
 
 impl Layer {
@@ -263,61 +145,26 @@ impl Layer {
 fn dense(x: &Tensor, w: &Tensor, b: &Tensor, mode: &ArithMode) -> Tensor {
     let (out_dim, in_dim) = (w.shape[0], w.shape[1]);
     assert_eq!(x.len(), in_dim, "dense input size");
-    let xe = encode_operands(mode, &x.data);
-    let we = encode_operands(mode, &w.data);
-    let mut eng = DotEngine::new(mode);
+    let xe = encode_matrix(mode, 1, in_dim, &x.data);
+    let we = encode_matrix(mode, out_dim, in_dim, &w.data);
     let mut out = Tensor::zeros(&[out_dim]);
-    for o in 0..out_dim {
-        out.data[o] = eng.dot(&we, o * in_dim, &xe, 0, in_dim, b.data[o]);
-    }
+    gemm_bt(mode, &xe, &we, Some(&b.data), &mut out.data);
     out
 }
 
-fn conv2d(x: &Tensor, w: &Tensor, b: &Tensor, stride: usize, pad: usize, mode: &ArithMode) -> Tensor {
+fn conv2d(
+    x: &Tensor,
+    w: &Tensor,
+    b: &Tensor,
+    stride: usize,
+    pad: usize,
+    mode: &ArithMode,
+) -> Tensor {
     assert_eq!(x.shape.len(), 3, "conv input must be [c,h,w]");
-    let (ic, h, wdt) = (x.shape[0], x.shape[1], x.shape[2]);
-    let (oc, ic2, kh, kw) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
-    assert_eq!(ic, ic2, "conv channel mismatch");
-    let oh = (h + 2 * pad - kh) / stride + 1;
-    let ow = (wdt + 2 * pad - kw) / stride + 1;
-
-    // im2col: gather input patches so each output pixel is one dot
-    // product over a contiguous patch (decode once, reuse per filter).
-    let patch = ic * kh * kw;
-    let mut cols = vec![0f32; patch * oh * ow];
-    for oy in 0..oh {
-        for ox in 0..ow {
-            let col = (oy * ow + ox) * patch;
-            let mut idx = 0;
-            for c in 0..ic {
-                for ky in 0..kh {
-                    for kx in 0..kw {
-                        let iy = oy * stride + ky;
-                        let ix = ox * stride + kx;
-                        let v = if iy < pad || ix < pad || iy - pad >= h || ix - pad >= wdt {
-                            0.0
-                        } else {
-                            x.at3(c, iy - pad, ix - pad)
-                        };
-                        cols[col + idx] = v;
-                        idx += 1;
-                    }
-                }
-            }
-        }
-    }
-
-    let ce = encode_operands(mode, &cols);
-    let we = encode_operands(mode, &w.data);
-    let mut eng = DotEngine::new(mode);
-    let mut out = Tensor::zeros(&[oc, oh, ow]);
-    for o in 0..oc {
-        for p in 0..oh * ow {
-            let v = eng.dot(&we, o * patch, &ce, p * patch, patch, b.data[o]);
-            out.data[o * oh * ow + p] = v;
-        }
-    }
-    out
+    let (oc, ic, kh, kw) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+    assert_eq!(x.shape[0], ic, "conv channel mismatch");
+    let we = encode_matrix(mode, oc, ic * kh * kw, &w.data);
+    conv2d_gemm(mode, x, &we, &b.data, ic, kh, kw, stride, pad)
 }
 
 fn maxpool2d(x: &Tensor, k: usize, stride: usize) -> Tensor {

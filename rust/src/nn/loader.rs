@@ -148,18 +148,32 @@ mod tests {
     use crate::nn::model::ModelKind;
     use crate::prng::Rng;
 
+    /// Unique scratch directory per test invocation: parallel
+    /// `cargo test` processes (and CI re-runs on shared runners) must
+    /// never collide on a fixed temp path.
+    fn unique_test_dir(tag: &str) -> std::path::PathBuf {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static COUNTER: AtomicU64 = AtomicU64::new(0);
+        let dir = std::env::temp_dir().join(format!(
+            "plam_test_{tag}_{}_{}",
+            std::process::id(),
+            COUNTER.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
     #[test]
     fn weights_round_trip_through_file() {
         let mut rng = Rng::new(3);
         let model = Model::init(ModelKind::MlpIsolet, &mut rng);
         let w = model_weights(&model);
-        let dir = std::env::temp_dir().join("plam_test_loader");
-        std::fs::create_dir_all(&dir).unwrap();
+        let dir = unique_test_dir("loader");
         let path = dir.join("w.ptw");
         save_weights(&path, &w).unwrap();
         let r = load_weights(&path).unwrap();
         assert_eq!(w, r);
-        std::fs::remove_file(&path).ok();
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]
@@ -194,11 +208,10 @@ mod tests {
 
     #[test]
     fn bad_magic_rejected() {
-        let dir = std::env::temp_dir().join("plam_test_loader2");
-        std::fs::create_dir_all(&dir).unwrap();
+        let dir = unique_test_dir("loader_magic");
         let path = dir.join("bad.ptw");
         std::fs::write(&path, b"NOPE\x00\x00\x00\x00").unwrap();
         assert!(load_weights(&path).is_err());
-        std::fs::remove_file(&path).ok();
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

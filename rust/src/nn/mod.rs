@@ -1,12 +1,18 @@
 //! Posit DNN inference engine (Deep-PeNSieve-equivalent substrate).
+//!
+//! The arithmetic hot path lives in [`gemm`]: a table-driven,
+//! cache-blocked batched GEMM that every dense/conv layer routes
+//! through (decode weights once, reuse across the whole batch).
 
+pub mod gemm;
 pub mod tensor;
 pub mod layers;
 pub mod model;
 pub mod loader;
 pub mod prepared;
 
-pub use layers::{ArithMode, Layer};
+pub use gemm::{encode_matrix, gemm_bt, EncodedMatrix};
+pub use layers::{ArithMode, Layer, MulKind};
 pub use prepared::PreparedModel;
 pub use model::{Model, ModelKind};
 pub use tensor::Tensor;

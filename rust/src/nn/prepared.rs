@@ -1,28 +1,31 @@
 //! PreparedModel — a model bound to one arithmetic mode with weights
-//! pre-encoded once (perf pass, EXPERIMENTS.md §Perf).
+//! pre-encoded once into GEMM decode planes (perf pass,
+//! EXPERIMENTS.md §Perf).
 //!
 //! `Model::forward` re-encodes every weight tensor on every sample; for
 //! the ISOLET MLP that is ~90 k `from_f32` + table lookups per
 //! inference, comparable to the MAC work itself. Preparing the model
-//! hoists that to construction time; activations are still encoded per
-//! layer (they change per sample).
+//! hoists that to construction time, and [`PreparedModel::forward_batch`]
+//! amortises the per-layer activation encode over a whole batch by
+//! running each dense layer as one `[batch, in] × [out, in]ᵀ` GEMM —
+//! this is what makes server throughput scale with batch size.
 
-use crate::nn::layers::{encode_operands, ArithMode, DotEngine, Encoded, Layer};
+use crate::nn::gemm::{conv2d_gemm, encode_matrix, gemm_bt, EncodedMatrix};
+use crate::nn::layers::{ArithMode, Layer};
 use crate::nn::model::Model;
 use crate::nn::tensor::Tensor;
 
-/// Per-layer prepared state.
+/// Per-layer prepared state (weights already encoded for the mode).
 enum Prepared {
     Dense {
-        w: Encoded,
+        /// `[out, in]` weight plane.
+        w: EncodedMatrix,
         b: Vec<f32>,
-        out_dim: usize,
-        in_dim: usize,
     },
     Conv2d {
-        w: Encoded,
+        /// `[oc, ic·kh·kw]` filter plane.
+        w: EncodedMatrix,
         b: Vec<f32>,
-        oc: usize,
         ic: usize,
         kh: usize,
         kw: usize,
@@ -55,15 +58,17 @@ impl PreparedModel {
             .iter()
             .map(|l| match l {
                 Layer::Dense { w, b } => Prepared::Dense {
-                    w: encode_operands(&mode, &w.data),
+                    w: encode_matrix(&mode, w.shape[0], w.shape[1], &w.data),
                     b: b.data.clone(),
-                    out_dim: w.shape[0],
-                    in_dim: w.shape[1],
                 },
                 Layer::Conv2d { w, b, stride, pad } => Prepared::Conv2d {
-                    w: encode_operands(&mode, &w.data),
+                    w: encode_matrix(
+                        &mode,
+                        w.shape[0],
+                        w.shape[1] * w.shape[2] * w.shape[3],
+                        &w.data,
+                    ),
                     b: b.data.clone(),
-                    oc: w.shape[0],
                     ic: w.shape[1],
                     kh: w.shape[2],
                     kw: w.shape[3],
@@ -88,91 +93,79 @@ impl PreparedModel {
 
     /// Forward one sample → logits.
     pub fn forward(&self, x: &Tensor) -> Tensor {
-        assert_eq!(x.shape, self.input_shape, "input shape mismatch");
-        let mut h = x.clone();
-        for l in &self.layers {
-            h = self.forward_layer(l, &h);
-        }
-        h
+        self.forward_batch(std::slice::from_ref(x))
+            .pop()
+            .expect("forward_batch returns one output per input")
     }
 
-    fn forward_layer(&self, l: &Prepared, x: &Tensor) -> Tensor {
+    /// Forward a whole batch → one logit tensor per sample.
+    ///
+    /// Dense layers run as a single `[batch, in] × [out, in]ᵀ` GEMM so
+    /// the weight planes (decoded once at construction) are reused
+    /// across every sample; elementwise/pool/conv layers process
+    /// samples independently. Results are bit-identical to per-sample
+    /// [`PreparedModel::forward`] calls: posit outputs round once from
+    /// an exact quire, and the float path keeps ascending-k order.
+    pub fn forward_batch(&self, xs: &[Tensor]) -> Vec<Tensor> {
+        for x in xs {
+            assert_eq!(x.shape, self.input_shape, "input shape mismatch");
+        }
+        let mut hs: Vec<Tensor> = xs.to_vec();
+        for l in &self.layers {
+            hs = self.forward_layer_batch(l, hs);
+        }
+        hs
+    }
+
+    fn forward_layer_batch(&self, l: &Prepared, hs: Vec<Tensor>) -> Vec<Tensor> {
         match l {
-            Prepared::Dense {
-                w,
-                b,
-                out_dim,
-                in_dim,
-            } => {
-                assert_eq!(x.len(), *in_dim);
-                let xe = encode_operands(&self.mode, &x.data);
-                let mut eng = DotEngine::new(&self.mode);
-                let mut out = Tensor::zeros(&[*out_dim]);
-                for o in 0..*out_dim {
-                    out.data[o] = eng.dot(w, o * in_dim, &xe, 0, *in_dim, b[o]);
+            Prepared::Dense { w, b } => {
+                let (out_dim, in_dim) = (w.rows, w.cols);
+                let batch = hs.len();
+                let mut flat = Vec::with_capacity(batch * in_dim);
+                for h in &hs {
+                    assert_eq!(h.len(), in_dim, "dense input size");
+                    flat.extend_from_slice(&h.data);
                 }
-                out
+                let xe = encode_matrix(&self.mode, batch, in_dim, &flat);
+                let mut y = vec![0f32; batch * out_dim];
+                gemm_bt(&self.mode, &xe, w, Some(b), &mut y);
+                (0..batch)
+                    .map(|i| {
+                        Tensor::from_vec(&[out_dim], y[i * out_dim..(i + 1) * out_dim].to_vec())
+                    })
+                    .collect()
             }
             Prepared::Conv2d {
                 w,
                 b,
-                oc,
                 ic,
                 kh,
                 kw,
                 stride,
                 pad,
-            } => {
-                let (h, wdt) = (x.shape[1], x.shape[2]);
-                let oh = (h + 2 * pad - kh) / stride + 1;
-                let ow = (wdt + 2 * pad - kw) / stride + 1;
-                let patch = ic * kh * kw;
-                // im2col (same layout as Layer::forward).
-                let mut cols = vec![0f32; patch * oh * ow];
-                for oy in 0..oh {
-                    for ox in 0..ow {
-                        let col = (oy * ow + ox) * patch;
-                        let mut idx = 0;
-                        for c in 0..*ic {
-                            for ky in 0..*kh {
-                                for kx in 0..*kw {
-                                    let iy = oy * stride + ky;
-                                    let ix = ox * stride + kx;
-                                    cols[col + idx] = if iy < *pad
-                                        || ix < *pad
-                                        || iy - pad >= h
-                                        || ix - pad >= wdt
-                                    {
-                                        0.0
-                                    } else {
-                                        x.at3(c, iy - pad, ix - pad)
-                                    };
-                                    idx += 1;
-                                }
-                            }
-                        }
-                    }
-                }
-                let ce = encode_operands(&self.mode, &cols);
-                let mut eng = DotEngine::new(&self.mode);
-                let mut out = Tensor::zeros(&[*oc, oh, ow]);
-                for o in 0..*oc {
-                    for p in 0..oh * ow {
-                        out.data[o * oh * ow + p] =
-                            eng.dot(w, o * patch, &ce, p * patch, patch, b[o]);
-                    }
-                }
-                out
-            }
+            } => hs
+                .iter()
+                .map(|h| conv2d_gemm(&self.mode, h, w, b, *ic, *kh, *kw, *stride, *pad))
+                .collect(),
             Prepared::MaxPool2d { k, stride } => {
-                Layer::MaxPool2d {
+                let l = Layer::MaxPool2d {
                     k: *k,
                     stride: *stride,
-                }
-                .forward(x, &ArithMode::float32())
+                };
+                hs.iter().map(|h| l.forward(h, &ArithMode::float32())).collect()
             }
-            Prepared::Relu => Layer::Relu.forward(x, &ArithMode::float32()),
-            Prepared::Flatten => x.clone().reshape(&[x.len()]),
+            Prepared::Relu => hs
+                .iter()
+                .map(|h| Layer::Relu.forward(h, &ArithMode::float32()))
+                .collect(),
+            Prepared::Flatten => hs
+                .into_iter()
+                .map(|h| {
+                    let len = h.len();
+                    h.reshape(&[len])
+                })
+                .collect(),
         }
     }
 
@@ -236,5 +229,42 @@ mod tests {
         let want = model.forward(&x, &mode);
         let got = PreparedModel::new(&model, mode).forward(&x);
         assert_eq!(got.data, want.data);
+    }
+
+    #[test]
+    fn forward_batch_matches_per_sample_forward() {
+        // The batched GEMM path must be bit-identical to per-sample
+        // inference in every arithmetic mode (exact quire + stable
+        // float ordering), across batch sizes that straddle the GEMM
+        // tile boundaries.
+        let mut rng = Rng::new(23);
+        let model = Model::init(ModelKind::MlpIsolet, &mut rng);
+        for mode in [
+            ArithMode::float32(),
+            ArithMode::posit_exact(PositFormat::P16E1),
+            ArithMode::posit_plam(PositFormat::P16E1),
+        ] {
+            let prepared = PreparedModel::new(&model, mode);
+            for batch in [1usize, 3, 8, 11] {
+                let xs: Vec<Tensor> = (0..batch)
+                    .map(|_| {
+                        Tensor::from_vec(
+                            &[617],
+                            (0..617).map(|_| rng.normal() as f32 * 0.5).collect(),
+                        )
+                    })
+                    .collect();
+                let got = prepared.forward_batch(&xs);
+                assert_eq!(got.len(), batch);
+                for (i, x) in xs.iter().enumerate() {
+                    assert_eq!(
+                        got[i].data,
+                        prepared.forward(x).data,
+                        "{} batch={batch} sample={i}",
+                        prepared.name
+                    );
+                }
+            }
+        }
     }
 }

@@ -1,8 +1,8 @@
-//! FastQuire — carry-free exact accumulator for n ≤ 16 formats.
+//! FastQuire — carry-free exact accumulator for n ≤ 32 formats.
 //!
 //! Perf-pass replacement for [`super::quire::Quire`] on the inference
 //! hot path (EXPERIMENTS.md §Perf). Same semantics (exact accumulation,
-//! single rounding at read-out), different representation: six *lazy*
+//! single rounding at read-out), different representation: *lazy*
 //! `i128` limbs, each accumulating signed 64-bit chunks at weight
 //! `2^(64·i − QFRAC)`. Additions never propagate carries — an `i128`
 //! absorbs 2^63 worst-case chunks before overflow, far beyond any layer
@@ -13,12 +13,15 @@ use super::encode::encode;
 use super::format::PositFormat;
 
 /// Bit position of weight 2^0 (radix point). Chosen so the smallest
-/// n ≤ 16 product chunk (scale ≥ −2·56 − 60) stays non-negative.
-const QFRAC: i32 = 192;
-// Top product bit: QFRAC + 2·max_scale(=112) + sig width(≤62) < 7·64.
-const LIMBS: usize = 7;
+/// n ≤ 32 product chunk (scale ≥ −2·120 − 60 for P⟨32,2⟩ products of
+/// FW-aligned significands) stays non-negative.
+const QFRAC: i32 = 320;
+// Top bit of the widest supported chunk: QFRAC + 2·max_scale(=240) +
+// sig width(≤126) < 11·64, so `add_product`'s three limb writes stay
+// in bounds even for saturating 128-bit magnitudes.
+const LIMBS: usize = 11;
 
-/// Exact fixed-point accumulator for n ≤ 16 posit dot products.
+/// Exact fixed-point accumulator for n ≤ 32 posit dot products.
 #[derive(Clone)]
 pub struct FastQuire {
     fmt: PositFormat,
@@ -30,7 +33,7 @@ pub struct FastQuire {
 impl FastQuire {
     /// Fresh zero accumulator.
     pub fn new(fmt: PositFormat) -> Self {
-        assert!(fmt.n <= 16, "FastQuire supports n <= 16 (use Quire)");
+        assert!(fmt.n <= 32, "FastQuire supports n <= 32 (use Quire)");
         FastQuire {
             fmt,
             limbs: [0; LIMBS],
@@ -237,6 +240,42 @@ mod tests {
                 .collect();
             let (f, s) = mac_both(&pairs);
             assert_eq!(f, s, "case {case}: fast {f:#x} vs quire {s:#x}");
+        }
+    }
+
+    #[test]
+    fn p32e2_dot_agrees_with_reference_quire() {
+        // The widened limb layout must stay exact for the widest
+        // supported format (P⟨32,2⟩ scales reach ±120).
+        let fmt = PositFormat::P32E2;
+        let mut rng = Rng::new(0x32E2);
+        for case in 0..300 {
+            let len = 1 + rng.below(32) as usize;
+            let mut fast = FastQuire::new(fmt);
+            let mut slow = Quire::new(fmt);
+            let draw = |rng: &mut Rng| loop {
+                let b = rng.next_u64() & fmt.mask();
+                if b != fmt.nar() {
+                    break b;
+                }
+            };
+            for _ in 0..len {
+                let a = draw(&mut rng);
+                let b = draw(&mut rng);
+                slow.mul_add(a, b);
+                match (decode(fmt, a), decode(fmt, b)) {
+                    (DecodeResult::Normal(da), DecodeResult::Normal(db)) => {
+                        let sig = (((1u64 << da.frac_bits) | da.frac) as u128)
+                            * (((1u64 << db.frac_bits) | db.frac) as u128);
+                        let scale =
+                            da.scale + db.scale - da.frac_bits as i32 - db.frac_bits as i32;
+                        fast.add_product(sig, scale, da.sign ^ db.sign);
+                    }
+                    (DecodeResult::Zero, _) | (_, DecodeResult::Zero) => {}
+                    _ => fast.set_nar(),
+                }
+            }
+            assert_eq!(fast.to_posit(), slow.to_posit(), "case {case}");
         }
     }
 

@@ -52,6 +52,34 @@ impl DecEntry {
     }
 }
 
+/// Decode one bit pattern into a pre-aligned [`DecEntry`] without a
+/// table. This is the table builder's kernel, exposed so wide formats
+/// (`n > 16`, where a 2^n table is impractical) can still pre-decode
+/// whole matrices once and reuse the planes across a batch (the GEMM
+/// engine's decode-once path).
+pub fn decode_entry(fmt: PositFormat, bits: u64) -> DecEntry {
+    match decode(fmt, bits) {
+        DecodeResult::Zero => DecEntry {
+            scale: SCALE_ZERO,
+            sign: false,
+            frac: 0,
+        },
+        DecodeResult::NaR => DecEntry {
+            scale: SCALE_NAR,
+            sign: true,
+            frac: 0,
+        },
+        DecodeResult::Normal(d) => {
+            debug_assert!(d.frac_bits <= FW, "fraction wider than the FW alignment");
+            DecEntry {
+                scale: d.scale as i16,
+                sign: d.sign,
+                frac: (d.frac << (FW - d.frac_bits)) as u32,
+            }
+        }
+    }
+}
+
 /// Full decode table for a format with `n <= 16`.
 pub struct DecodeTable {
     /// The format this table was built for.
@@ -66,24 +94,7 @@ impl DecodeTable {
         let card = fmt.cardinality() as usize;
         let mut entries = Vec::with_capacity(card);
         for bits in 0..card as u64 {
-            let e = match decode(fmt, bits) {
-                DecodeResult::Zero => DecEntry {
-                    scale: SCALE_ZERO,
-                    sign: false,
-                    frac: 0,
-                },
-                DecodeResult::NaR => DecEntry {
-                    scale: SCALE_NAR,
-                    sign: true,
-                    frac: 0,
-                },
-                DecodeResult::Normal(d) => DecEntry {
-                    scale: d.scale as i16,
-                    sign: d.sign,
-                    frac: (d.frac << (FW - d.frac_bits)) as u32,
-                },
-            };
-            entries.push(e);
+            entries.push(decode_entry(fmt, bits));
         }
         DecodeTable { fmt, entries }
     }
@@ -112,6 +123,30 @@ mod tests {
         let t = DecodeTable::new(fmt);
         for bits in 0u64..65536 {
             let e = t.get(bits);
+            match decode(fmt, bits) {
+                DecodeResult::Zero => assert!(e.is_zero()),
+                DecodeResult::NaR => assert!(e.is_nar()),
+                DecodeResult::Normal(d) => {
+                    assert_eq!(e.scale as i32, d.scale, "bits={bits:#x}");
+                    assert_eq!(e.sign, d.sign);
+                    assert_eq!(e.frac as u64, d.frac << (FW - d.frac_bits));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn decode_entry_handles_wide_formats() {
+        // P32E2 has no table (2^32 entries), but decode_entry must still
+        // produce correctly aligned planes for the GEMM decode-once path.
+        let fmt = PositFormat::P32E2;
+        let mut state = 0x9E3779B97F4A7C15u64;
+        for _ in 0..20_000 {
+            state = state
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(1442695040888963407);
+            let bits = (state >> 32) & fmt.mask();
+            let e = decode_entry(fmt, bits);
             match decode(fmt, bits) {
                 DecodeResult::Zero => assert!(e.is_zero()),
                 DecodeResult::NaR => assert!(e.is_nar()),

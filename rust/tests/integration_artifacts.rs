@@ -1,6 +1,9 @@
 //! Integration: AOT artifacts vs Python goldens — the cross-language
 //! correctness signal for the three-layer stack. Each test skips itself
 //! when `make artifacts` has not been run (hermetic `cargo test`).
+//! The whole suite needs the PJRT loader, so it only exists with the
+//! `pjrt` cargo feature.
+#![cfg(feature = "pjrt")]
 
 use std::path::Path;
 

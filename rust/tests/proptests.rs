@@ -134,6 +134,57 @@ fn prop_plam_error_bounded_and_underestimating() {
 }
 
 #[test]
+fn prop_plam_matches_eq23_closed_form_oracle() {
+    // The bit-level PLAM datapath must equal the RNE encoding of the
+    // paper's Eq. 23 closed form in all three standard formats:
+    //   C = s·2^(scale)·(1 + f_A + f_B)      if f_A + f_B < 1
+    //     = s·2^(scale+1)·(f_A + f_B)        otherwise (Eq. 20/21 carry)
+    // including NaR/zero operands. plam_value_f64 is exact in f64 for
+    // n ≤ 32 (≤ 28-bit fraction sums, scales within ±240), so a single
+    // rounding happens on either side.
+    let mut rng = Rng::new(0x2323);
+    let formats = [PositFormat::P8E0, PositFormat::P16E1, PositFormat::P32E2];
+    for fmt in formats {
+        for case in 0..20_000 {
+            // random_bits includes zero and NaR patterns.
+            let a = random_bits(&mut rng, fmt);
+            let b = random_bits(&mut rng, fmt);
+            let got = plam_mul(fmt, a, b);
+            let want = if a == fmt.nar() || b == fmt.nar() {
+                fmt.nar()
+            } else if a == 0 || b == 0 {
+                0
+            } else {
+                from_f64(fmt, plam_value_f64(fmt, a, b))
+            };
+            assert_eq!(got, want, "{fmt} case {case}: {a:#x} ×̃ {b:#x}");
+        }
+        // Carry-out stress (f_A + f_B ≥ 1): operands drawn from
+        // [1.5, 2) scaled by powers of two keep both fractions ≥ 0.5.
+        for case in 0..5_000 {
+            let operand = |rng: &mut Rng| {
+                let mag = (1.5 + 0.499 * rng.f64()) * ((rng.below(17) as i32 - 8) as f64).exp2();
+                from_f64(fmt, if rng.below(2) == 0 { mag } else { -mag })
+            };
+            let a = operand(&mut rng);
+            let b = operand(&mut rng);
+            let got = plam_mul(fmt, a, b);
+            let want = from_f64(fmt, plam_value_f64(fmt, a, b));
+            assert_eq!(got, want, "{fmt} carry case {case}: {a:#x} ×̃ {b:#x}");
+        }
+    }
+    // Explicit special-value matrix (NaR dominates, zero annihilates).
+    for fmt in formats {
+        let x = from_f64(fmt, 1.5);
+        assert_eq!(plam_mul(fmt, fmt.nar(), x), fmt.nar());
+        assert_eq!(plam_mul(fmt, x, fmt.nar()), fmt.nar());
+        assert_eq!(plam_mul(fmt, fmt.nar(), 0), fmt.nar());
+        assert_eq!(plam_mul(fmt, 0, x), 0);
+        assert_eq!(plam_mul(fmt, x, 0), 0);
+    }
+}
+
+#[test]
 fn prop_plam_specials_and_commutativity() {
     let mut rng = Rng::new(0x22);
     for fmt in FORMATS {

@@ -1,0 +1,185 @@
+//! Offline stub of the `xla` crate (xla-rs PJRT bindings).
+//!
+//! The PLAM `runtime` module is written against the real xla-rs API
+//! (`PjRtClient`, `PjRtLoadedExecutable`, `Literal`, HLO-text loading).
+//! The real crate links `libxla_extension`, a multi-gigabyte native
+//! library that is not available in offline or CI environments, so this
+//! stub provides the same API surface with a client constructor that
+//! fails cleanly at runtime. That keeps `--features pjrt` compiling
+//! (and its tests green — they skip when no artifacts are present)
+//! without any native toolchain.
+//!
+//! To run real artifacts, point the `xla` dependency in `rust/Cargo.toml`
+//! at the xla-rs checkout (or a `[patch]` entry) and set
+//! `XLA_EXTENSION_DIR`; no source change in `runtime/` is needed.
+
+use std::fmt;
+
+/// Error type mirroring `xla::Error` (string-carrying).
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Result alias mirroring `xla::Result`.
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn stub_unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: the `xla` dependency is the offline stub — link the real \
+         xla-rs bindings (see rust/vendor/xla/src/lib.rs) to execute PJRT \
+         artifacts"
+    ))
+}
+
+/// Host literal: a shaped f32 buffer.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    dims: Vec<i64>,
+    data: Vec<f32>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal {
+            dims: vec![data.len() as i64],
+            data: data.to_vec(),
+        }
+    }
+
+    /// Reinterpret with new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let count: i64 = dims.iter().product();
+        if count != self.data.len() as i64 {
+            return Err(Error(format!(
+                "reshape {:?} -> {dims:?}: element count mismatch",
+                self.dims
+            )));
+        }
+        Ok(Literal {
+            dims: dims.to_vec(),
+            data: self.data.clone(),
+        })
+    }
+
+    /// Decompose a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(stub_unavailable("Literal::to_tuple"))
+    }
+
+    /// Copy out the flat element buffer.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Ok(T::from_f32_slice(&self.data))
+    }
+}
+
+/// Element types a [`Literal`] can be read back as.
+pub trait NativeType: Sized {
+    fn from_f32_slice(data: &[f32]) -> Vec<Self>;
+}
+
+impl NativeType for f32 {
+    fn from_f32_slice(data: &[f32]) -> Vec<f32> {
+        data.to_vec()
+    }
+}
+
+/// Device buffer handle.
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    /// Copy the buffer back to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(stub_unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Compiled executable handle.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given arguments; one buffer row per device.
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(stub_unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// PJRT client handle.
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// Create a CPU client. Always fails in the stub: there is no
+    /// PJRT plugin to load.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(stub_unavailable("PjRtClient::cpu"))
+    }
+
+    /// Platform name reported by the plugin.
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Number of addressable devices.
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    /// Compile a computation for this client.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(stub_unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Parsed HLO module proto.
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// Parse an HLO-text file.
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(stub_unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation ready for compilation.
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    /// Wrap a module proto.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_creation_fails_cleanly() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("offline stub"), "{err}");
+    }
+
+    #[test]
+    fn literal_reshape_checks_counts() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[2, 2]).is_ok());
+        assert!(l.reshape(&[3, 2]).is_err());
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+}
