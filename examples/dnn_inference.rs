@@ -49,7 +49,8 @@ fn main() -> anyhow::Result<()> {
     let handle = serve(
         router,
         &ServerConfig {
-            addr: "127.0.0.1:0".into(),
+            workers: 2,
+            ..ServerConfig::default()
         },
     )?;
     println!("server on {}\n", handle.addr);

@@ -105,7 +105,10 @@ fn main() -> anyhow::Result<()> {
     let handle = serve(
         router,
         &ServerConfig {
-            addr: "127.0.0.1:0".into(),
+            // Two pool workers: enough to demonstrate sharded GEMM
+            // batches without assuming a big machine.
+            workers: 2,
+            ..ServerConfig::default()
         },
     )?;
     println!("listening on {}", handle.addr);

@@ -65,9 +65,7 @@ fn main() {
         );
         let h = serve(
             router,
-            &ServerConfig {
-                addr: "127.0.0.1:0".into(),
-            },
+            &ServerConfig::default(),
         )
         .unwrap();
         let (rps, dt) = drive(h.addr, "m", 4, per_client);
@@ -116,9 +114,7 @@ fn main() {
         );
         let h = serve(
             router,
-            &ServerConfig {
-                addr: "127.0.0.1:0".into(),
-            },
+            &ServerConfig::default(),
         )
         .unwrap();
         let (rps, dt) = drive(h.addr, "m", 8, per_client);

@@ -7,8 +7,8 @@
 //! Run: cargo bench --bench gemm_formats   (PLAM_BENCH_FAST=1 for smoke)
 
 use plam::bench::{black_box, Bench};
-use plam::nn::gemm::{encode_matrix, gemm_bt};
-use plam::nn::{ArithMode, Layer, Tensor};
+use plam::nn::gemm::{encode_matrix, gemm_bt, gemm_bt_pool};
+use plam::nn::{ArithMode, Layer, Tensor, WorkerPool};
 use plam::posit::PositFormat;
 use plam::prng::Rng;
 
@@ -186,6 +186,49 @@ fn main() {
             scalar.ops_per_sec(macs),
             gemm.ops_per_sec(macs),
         );
+    }
+
+    // -----------------------------------------------------------------
+    // Worker-pool scaling series: the same 256×256×256 P16E1 PLAM GEMM
+    // sharded across 1/2/4/8 pool workers. Operands are pre-encoded so
+    // the series isolates MAC scaling; workers=1 routes through the
+    // sequential kernel (a 1-worker pool degrades to inline execution),
+    // making it the honest single-thread baseline. Acceptance: ≥ 2.5×
+    // at 4 workers on a 4-core runner.
+    // -----------------------------------------------------------------
+    println!("\nworker-pool scaling (256×256×256 P16E1 PLAM GEMM):");
+    {
+        let mode = ArithMode::posit_plam(PositFormat::P16E1);
+        let m_dim = 256usize;
+        let xs: Vec<Tensor> = (0..m_dim)
+            .map(|_| random_tensor(&[k_dim], &mut rng))
+            .collect();
+        let flat: Vec<f32> = xs.iter().flat_map(|t| t.data.iter().copied()).collect();
+        let xe = encode_matrix(&mode, m_dim, k_dim, &flat);
+        let we = encode_matrix(&mode, n_dim, k_dim, &wt.data);
+        let mut y = vec![0f32; m_dim * n_dim];
+        let macs = (m_dim * k_dim * n_dim) as f64;
+        let series_name = |w: usize| format!("gemm plam p16e1 256^3 workers={w}");
+        for workers in [1usize, 2, 4, 8] {
+            let pool = WorkerPool::new(workers);
+            let r = bench
+                .run(&series_name(workers), || {
+                    gemm_bt_pool(&mode, &xe, &we, Some(&bt.data), &mut y, &pool);
+                    black_box(&y);
+                })
+                .clone();
+            let speedup = bench
+                .speedup(&series_name(1), &series_name(workers))
+                .unwrap_or(1.0);
+            println!(
+                "  workers={workers}  {:>12.0} MAC/s   speedup vs 1 worker {speedup:.2}×",
+                r.ops_per_sec(macs),
+            );
+            pool.shutdown();
+        }
+        if let Some(s4) = bench.speedup(&series_name(1), &series_name(4)) {
+            println!("  4-worker speedup {s4:.2}× (target ≥ 2.5×)");
+        }
     }
 
     // PJRT kernel artifact (Pallas PLAM GEMM), if built.

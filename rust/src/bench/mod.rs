@@ -134,6 +134,16 @@ impl Bench {
         &self.results
     }
 
+    /// Mean-time ratio `base / other` between two recorded results
+    /// (how many times faster `other` is than `base`), or `None` if
+    /// either name is missing. Used by scaling series to report
+    /// speedups without re-deriving them from raw JSON.
+    pub fn speedup(&self, base: &str, other: &str) -> Option<f64> {
+        let find = |n: &str| self.results.iter().find(|r| r.name == n);
+        let (b, o) = (find(base)?, find(other)?);
+        Some(b.mean.as_secs_f64() / o.mean.as_secs_f64())
+    }
+
     /// Write every recorded result as `BENCH_<tag>.json` in the current
     /// directory (or `$PLAM_BENCH_DIR`), so CI can archive the perf
     /// trajectory. Hand-rolled JSON — serde is unavailable offline.
@@ -236,6 +246,20 @@ mod tests {
         assert_eq!(s.matches('{').count(), s.matches('}').count());
         assert!(!s.contains(",\n  ]"));
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn speedup_ratio() {
+        let mut b = Bench {
+            warmup: Duration::from_millis(1),
+            budget: Duration::from_millis(2),
+            samples: 2,
+            results: vec![],
+        };
+        b.record("slow", Duration::from_micros(40));
+        b.record("fast", Duration::from_micros(10));
+        assert!((b.speedup("slow", "fast").unwrap() - 4.0).abs() < 1e-9);
+        assert!(b.speedup("slow", "missing").is_none());
     }
 
     #[test]

@@ -2,6 +2,7 @@
 
 use anyhow::{bail, Result};
 
+use crate::nn::pool::WorkerPool;
 use crate::nn::{ArithMode, Model, PreparedModel, Tensor};
 
 #[cfg(feature = "pjrt")]
@@ -20,6 +21,18 @@ pub trait InferenceBackend: Send + Sync {
     fn max_batch(&self) -> usize;
     /// Run a batch. `inputs.len() <= max_batch()`.
     fn infer_batch(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>>;
+    /// Run a batch with the compute optionally sharded across `pool`.
+    /// Backends that cannot use a pool (e.g. PJRT artifacts, which are
+    /// thread-confined) fall back to the sequential path; results must
+    /// be identical either way.
+    fn infer_batch_pooled(
+        &self,
+        inputs: &[Vec<f32>],
+        pool: Option<&WorkerPool>,
+    ) -> Result<Vec<Vec<f32>>> {
+        let _ = pool;
+        self.infer_batch(inputs)
+    }
     /// Human-readable description (for logs and the router table).
     fn describe(&self) -> String;
 }
@@ -59,6 +72,14 @@ impl InferenceBackend for NnBackend {
     }
 
     fn infer_batch(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        self.infer_batch_pooled(inputs, None)
+    }
+
+    fn infer_batch_pooled(
+        &self,
+        inputs: &[Vec<f32>],
+        pool: Option<&WorkerPool>,
+    ) -> Result<Vec<Vec<f32>>> {
         let mut xs = Vec::with_capacity(inputs.len());
         for data in inputs {
             if data.len() != self.input_len() {
@@ -71,10 +92,12 @@ impl InferenceBackend for NnBackend {
             xs.push(Tensor::from_vec(&self.model.input_shape, data.clone()));
         }
         // One batched GEMM per dense layer: the prepared weight planes
-        // are decoded once and reused across the whole batch.
+        // are decoded once and reused across the whole batch. With a
+        // pool, the GEMM row bands fan out across its workers —
+        // bit-identical results (rows are independent).
         Ok(self
             .model
-            .forward_batch(&xs)
+            .forward_batch_pooled(&xs, pool)
             .into_iter()
             .map(|t| t.data)
             .collect())

@@ -13,6 +13,11 @@ use anyhow::Result;
 
 use super::backend::InferenceBackend;
 use super::metrics::Metrics;
+use crate::nn::pool::WorkerPool;
+
+/// Runtime-swappable pool slot shared with the batching worker: the
+/// server installs its GEMM pool here after the batchers are spawned.
+type PoolSlot = Arc<Mutex<Option<Arc<WorkerPool>>>>;
 
 /// Batching policy.
 #[derive(Debug, Clone, Copy)]
@@ -46,6 +51,7 @@ pub struct Batcher {
     tx: Sender<Pending>,
     shutdown: Arc<AtomicBool>,
     worker: Mutex<Option<JoinHandle<()>>>,
+    pool: PoolSlot,
     /// Shared metrics (exported to the server's status endpoint).
     pub metrics: Arc<Metrics>,
 }
@@ -56,21 +62,32 @@ impl Batcher {
         let (tx, rx) = channel::<Pending>();
         let metrics = Arc::new(Metrics::new());
         let shutdown = Arc::new(AtomicBool::new(false));
+        let pool: PoolSlot = Arc::new(Mutex::new(None));
         let worker = {
             let metrics = metrics.clone();
             let shutdown = shutdown.clone();
+            let pool = pool.clone();
             let max_batch = cfg.max_batch.min(backend.max_batch()).max(1);
             std::thread::Builder::new()
                 .name("plam-batcher".into())
-                .spawn(move || worker_loop(rx, backend, max_batch, cfg.max_wait, metrics, shutdown))
+                .spawn(move || {
+                    worker_loop(rx, backend, max_batch, cfg.max_wait, metrics, shutdown, pool)
+                })
                 .expect("spawn batcher")
         };
         Arc::new(Batcher {
             tx,
             shutdown,
             worker: Mutex::new(Some(worker)),
+            pool,
             metrics,
         })
+    }
+
+    /// Install (or remove) the GEMM worker pool this batcher hands its
+    /// batches to. Takes effect from the next batch.
+    pub fn set_pool(&self, pool: Option<Arc<WorkerPool>>) {
+        *self.pool.lock().unwrap() = pool;
     }
 
     /// Submit one request and block for its result.
@@ -106,6 +123,17 @@ impl Batcher {
     }
 }
 
+/// Non-blocking sweep: move every request already sitting in the
+/// channel into `queue`, up to `max_batch`.
+fn drain_ready(rx: &Receiver<Pending>, queue: &mut Vec<Pending>, max_batch: usize) {
+    while queue.len() < max_batch {
+        match rx.try_recv() {
+            Ok(p) => queue.push(p),
+            Err(_) => break,
+        }
+    }
+}
+
 fn worker_loop(
     rx: Receiver<Pending>,
     backend: Arc<dyn InferenceBackend>,
@@ -113,6 +141,7 @@ fn worker_loop(
     max_wait: Duration,
     metrics: Arc<Metrics>,
     shutdown: Arc<AtomicBool>,
+    pool: PoolSlot,
 ) {
     let mut queue: Vec<Pending> = Vec::with_capacity(max_batch);
     loop {
@@ -142,11 +171,17 @@ fn worker_loop(
                 Err(RecvTimeoutError::Disconnected) => break,
             }
         }
+        // Deadline-boundary sweep: recv_timeout may report Timeout in
+        // the same instant a request lands in the channel; without this
+        // re-check that request would miss the batch it raced with and
+        // sit stranded until the next tick.
+        drain_ready(&rx, &mut queue, max_batch);
         // Phase 3: execute and scatter results.
         let batch: Vec<Pending> = queue.drain(..).collect();
         let inputs: Vec<Vec<f32>> = batch.iter().map(|p| p.input.clone()).collect();
         metrics.record_batch(inputs.len());
-        match backend.infer_batch(&inputs) {
+        let pool = pool.lock().unwrap().clone();
+        match backend.infer_batch_pooled(&inputs, pool.as_deref()) {
             Ok(outputs) => {
                 for (p, out) in batch.into_iter().zip(outputs.into_iter()) {
                     let _ = p.reply.send(Ok(out));
@@ -157,12 +192,26 @@ fn worker_loop(
                 // malformed request cannot poison its batch peers.
                 for p in batch {
                     let r = backend
-                        .infer_batch(std::slice::from_ref(&p.input))
+                        .infer_batch_pooled(std::slice::from_ref(&p.input), pool.as_deref())
                         .map(|mut v| v.remove(0));
                     let _ = p.reply.send(r.map_err(|se| se.context(e.to_string())));
                 }
             }
         }
+        if let Some(p) = &pool {
+            let st = p.stats();
+            metrics.set_pool_gauges(
+                st.workers as u64,
+                st.queue_depth_peak as u64,
+                st.active_peak as u64,
+            );
+        }
+        // Post-flush sweep: requests that arrived while the backend ran
+        // are already waiting with aged timestamps. Seed the next batch
+        // with them now so they coalesce into one immediate batch
+        // instead of being re-discovered one by one through Phase 1 and
+        // fired as singleton batches.
+        drain_ready(&rx, &mut queue, max_batch);
     }
 }
 
@@ -240,6 +289,99 @@ mod tests {
         assert!(batches < 16, "batches={batches}");
         assert!(b.metrics.mean_batch_size() > 1.0);
         b.shutdown();
+    }
+
+    /// Slow echo backend: holds every batch for `delay`, recording
+    /// batch sizes implicitly via the shared metrics.
+    struct SlowEcho {
+        delay: Duration,
+    }
+
+    impl InferenceBackend for SlowEcho {
+        fn input_len(&self) -> usize {
+            1
+        }
+        fn output_len(&self) -> usize {
+            1
+        }
+        fn max_batch(&self) -> usize {
+            8
+        }
+        fn infer_batch(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+            std::thread::sleep(self.delay);
+            Ok(inputs.to_vec())
+        }
+        fn describe(&self) -> String {
+            "slow-echo".into()
+        }
+    }
+
+    #[test]
+    fn requests_arriving_during_execution_coalesce_after_flush() {
+        // Regression test for deadline-boundary stranding: requests
+        // that land while a slow batch executes have long overshot
+        // their own deadline by flush time. The post-flush sweep must
+        // pull all of them into ONE immediate batch; the pre-fix loop
+        // re-discovered them one at a time (each past its deadline) and
+        // fired singleton batches.
+        let b = Batcher::spawn(
+            Arc::new(SlowEcho {
+                delay: Duration::from_millis(200),
+            }),
+            BatcherConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(1),
+            },
+        );
+        // First request: occupies the backend for ~200 ms.
+        let first = {
+            let b = b.clone();
+            std::thread::spawn(move || b.infer(vec![1.0]))
+        };
+        // Let the first batch start executing, then pile up three more.
+        std::thread::sleep(Duration::from_millis(60));
+        let mut late = vec![];
+        for i in 0..3 {
+            let b = b.clone();
+            late.push(std::thread::spawn(move || b.infer(vec![10.0 + i as f32])));
+        }
+        assert_eq!(first.join().unwrap().unwrap(), vec![1.0]);
+        for (i, h) in late.into_iter().enumerate() {
+            assert_eq!(h.join().unwrap().unwrap(), vec![10.0 + i as f32]);
+        }
+        let batches = b.metrics.batches.load(Ordering::Relaxed);
+        // Ideally 2 (first + one coalesced batch). Allow 3 in case a
+        // late client thread is descheduled past the post-flush sweep
+        // on a loaded CI runner; the pre-fix loop always produced 4
+        // (first + three singletons rediscovered one at a time).
+        assert!(
+            (2..=3).contains(&batches),
+            "late requests must coalesce after the flush (batches={batches})"
+        );
+        b.shutdown();
+    }
+
+    #[test]
+    fn pooled_batcher_matches_unpooled() {
+        use crate::coordinator::backend::NnBackend;
+        use crate::nn::{ArithMode, Model, ModelKind, WorkerPool};
+        use crate::posit::PositFormat;
+        use crate::prng::Rng;
+
+        let mut rng = Rng::new(77);
+        let model = Model::init(ModelKind::MlpIsolet, &mut rng);
+        let backend = Arc::new(NnBackend::new(model, ArithMode::posit_plam(PositFormat::P16E1)));
+        let want = backend
+            .infer_batch(&[vec![0.25; 617], vec![-0.5; 617]])
+            .unwrap();
+
+        let b = Batcher::spawn(backend, BatcherConfig::default());
+        let pool = Arc::new(WorkerPool::new(2));
+        b.set_pool(Some(pool.clone()));
+        assert_eq!(b.infer(vec![0.25; 617]).unwrap(), want[0]);
+        assert_eq!(b.infer(vec![-0.5; 617]).unwrap(), want[1]);
+        b.shutdown();
+        pool.shutdown();
     }
 
     #[test]

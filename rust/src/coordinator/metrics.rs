@@ -17,6 +17,15 @@ pub struct Metrics {
     pub batches: AtomicU64,
     /// Total samples across all executed batches.
     pub batched_samples: AtomicU64,
+    /// GEMM worker-pool size serving this batcher (0 = unpooled).
+    pub pool_workers: AtomicU64,
+    /// Pool-lifetime high-water mark of queued shards. The pool is
+    /// shared across every batcher on the server, so this reflects the
+    /// combined load of all models, not this batcher alone.
+    pub pool_queue_depth_peak: AtomicU64,
+    /// Pool-lifetime high-water mark of concurrently busy workers
+    /// (shared across batchers, like `pool_queue_depth_peak`).
+    pub pool_active_peak: AtomicU64,
     /// Latency samples (µs), bounded reservoir.
     latencies_us: Mutex<Vec<u64>>,
 }
@@ -60,6 +69,27 @@ impl Metrics {
         Some(l[idx])
     }
 
+    /// Record the worker pool's gauges (refreshed after each pooled
+    /// batch; the peaks are the shared pool's lifetime high-water
+    /// marks, not per-batch or per-model samples).
+    pub fn set_pool_gauges(&self, workers: u64, queue_depth_peak: u64, active_peak: u64) {
+        self.pool_workers.store(workers, Ordering::Relaxed);
+        self.pool_queue_depth_peak
+            .store(queue_depth_peak, Ordering::Relaxed);
+        self.pool_active_peak.store(active_peak, Ordering::Relaxed);
+    }
+
+    /// Peak pool utilization in `[0, 1]` (busy workers / pool size), or
+    /// 0 when no pool serves this batcher.
+    pub fn pool_utilization(&self) -> f64 {
+        let w = self.pool_workers.load(Ordering::Relaxed);
+        if w == 0 {
+            0.0
+        } else {
+            self.pool_active_peak.load(Ordering::Relaxed) as f64 / w as f64
+        }
+    }
+
     /// Mean executed batch size.
     pub fn mean_batch_size(&self) -> f64 {
         let b = self.batches.load(Ordering::Relaxed);
@@ -72,7 +102,7 @@ impl Metrics {
 
     /// One-line human-readable summary.
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "requests={} completed={} failed={} batches={} mean_batch={:.2} p50={}µs p99={}µs",
             self.requests.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
@@ -81,7 +111,17 @@ impl Metrics {
             self.mean_batch_size(),
             self.latency_percentile_us(0.5).unwrap_or(0),
             self.latency_percentile_us(0.99).unwrap_or(0),
-        )
+        );
+        let workers = self.pool_workers.load(Ordering::Relaxed);
+        if workers > 0 {
+            s.push_str(&format!(
+                " pool[workers={} queue_peak={} util_peak={:.0}%]",
+                workers,
+                self.pool_queue_depth_peak.load(Ordering::Relaxed),
+                self.pool_utilization() * 100.0,
+            ));
+        }
+        s
     }
 }
 
@@ -113,5 +153,16 @@ mod tests {
     #[test]
     fn empty_percentile_is_none() {
         assert_eq!(Metrics::new().latency_percentile_us(0.5), None);
+    }
+
+    #[test]
+    fn pool_gauges_surface_in_summary() {
+        let m = Metrics::new();
+        assert!(!m.summary().contains("pool["), "unpooled summary is bare");
+        assert_eq!(m.pool_utilization(), 0.0);
+        m.set_pool_gauges(4, 12, 3);
+        assert!((m.pool_utilization() - 0.75).abs() < 1e-9);
+        let s = m.summary();
+        assert!(s.contains("pool[workers=4 queue_peak=12 util_peak=75%]"), "{s}");
     }
 }

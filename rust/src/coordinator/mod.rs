@@ -1,14 +1,24 @@
-//! L3 coordinator: a batched posit-DNN inference service.
+//! L3 coordinator: a batched, sharded posit-DNN inference service.
 //!
 //! The paper's contribution lives in the numeric format (L1/L2), so the
 //! coordinator is deliberately thin but real: a request [`router`]
 //! dispatches named models to backends, a dynamic [`batcher`] coalesces
 //! concurrent requests up to a batch size / deadline (vLLM-router
 //! style), [`server`] exposes the service over TCP with a compact binary
-//! protocol, and [`metrics`] tracks throughput and latency percentiles.
-//! Backends are either the pure-Rust posit engine ([`backend::NnBackend`])
-//! or an AOT-compiled PJRT artifact ([`backend::PjrtBackend`]) — Python
-//! is never on the request path.
+//! protocol, and [`metrics`] tracks throughput, latency percentiles,
+//! and the worker-pool gauges. Backends are either the pure-Rust posit
+//! engine ([`backend::NnBackend`]) or an AOT-compiled PJRT artifact
+//! ([`backend::PjrtBackend`]) — Python is never on the request path.
+//!
+//! Parallel execution: `ServerConfig::workers` sizes one shared
+//! work-stealing [`crate::nn::WorkerPool`]; every batcher hands its
+//! batches to it ([`InferenceBackend::infer_batch_pooled`]) and the
+//! GEMM engine shards each batch into MB-aligned row bands across the
+//! pool's workers — results stay bit-identical to single-threaded
+//! execution, a property the stress suite asserts end to end.
+//! `ServerConfig::max_inflight` adds admission-control backpressure in
+//! front of the batch queues: over-limit requests wait bounded time for
+//! a slot, then get a clean "server overloaded" error frame.
 
 pub mod backend;
 pub mod batcher;
@@ -21,7 +31,7 @@ pub use backend::{InferenceBackend, NnBackend};
 pub use batcher::{Batcher, BatcherConfig};
 pub use metrics::Metrics;
 pub use router::Router;
-pub use server::{serve, Client, ServerConfig};
+pub use server::{serve, Admission, Client, ServerConfig};
 
 #[cfg(feature = "pjrt")]
 pub use backend::PjrtBackend;

@@ -7,6 +7,7 @@ use anyhow::{bail, Result};
 
 use super::backend::InferenceBackend;
 use super::batcher::{Batcher, BatcherConfig};
+use crate::nn::pool::WorkerPool;
 
 /// Name → batcher registry. Each registered model gets its own batching
 /// worker, so e.g. `lenet5-plam` and `lenet5-exact` batch independently.
@@ -55,6 +56,14 @@ impl Router {
             s.push_str(&format!("  {name} -> {}\n", self.descriptions[&name]));
         }
         s
+    }
+
+    /// Hand every registered batcher the shared GEMM worker pool (the
+    /// server calls this with its `ServerConfig::workers`-sized pool).
+    pub fn set_pool(&self, pool: &Arc<WorkerPool>) {
+        for b in self.routes.values() {
+            b.set_pool(Some(pool.clone()));
+        }
     }
 
     /// Shut down all batchers.

@@ -3,22 +3,125 @@
 //! dynamic batchers. (std::net + threads — tokio is unavailable offline;
 //! see DESIGN.md §5 — and a thread pool is entirely adequate for the
 //! request rates the experiments drive.)
+//!
+//! Scaling controls ([`ServerConfig`]): `workers` sizes one shared
+//! [`WorkerPool`] that every batcher shards its GEMMs across, and
+//! `max_inflight` is the admission valve — requests beyond it wait up
+//! to `admission_timeout` for a slot and are then rejected with a
+//! clean "server overloaded" error response instead of piling onto the
+//! batch queues.
 
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
-use std::time::Duration;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use super::router::Router;
 use super::wire;
+use crate::nn::pool::WorkerPool;
 
 /// Server configuration.
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
     /// Bind address, e.g. `127.0.0.1:7070`. Port 0 picks a free port.
     pub addr: String,
+    /// GEMM worker-pool size shared by every registered model's
+    /// batcher. 0 = no pool (single-threaded batch execution, the
+    /// pre-pool behaviour).
+    pub workers: usize,
+    /// Admission control: maximum requests concurrently past the read
+    /// stage, across all connections. 0 = unlimited.
+    pub max_inflight: usize,
+    /// How long an over-limit request waits for an inflight slot before
+    /// being rejected with a "server overloaded" error response.
+    pub admission_timeout: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            workers: 0,
+            max_inflight: 0,
+            admission_timeout: Duration::from_secs(10),
+        }
+    }
+}
+
+/// Counting-semaphore admission valve (std primitives; no tokio
+/// offline). `max == 0` means unlimited — requests are still counted
+/// so the inflight/peak gauges stay meaningful.
+pub struct Admission {
+    max: usize,
+    timeout: Duration,
+    inflight: Mutex<usize>,
+    freed: Condvar,
+    peak: AtomicU64,
+    rejected: AtomicU64,
+}
+
+impl Admission {
+    fn new(max: usize, timeout: Duration) -> Self {
+        Admission {
+            max,
+            timeout,
+            inflight: Mutex::new(0),
+            freed: Condvar::new(),
+            peak: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+        }
+    }
+
+    /// Acquire an inflight slot, waiting up to the admission timeout.
+    /// `None` means the server is saturated and the request must be
+    /// rejected. The slot is released when the guard drops.
+    pub fn try_enter(&self) -> Option<AdmissionGuard<'_>> {
+        let mut n = self.inflight.lock().unwrap();
+        if self.max > 0 {
+            let deadline = Instant::now() + self.timeout;
+            while *n >= self.max {
+                let now = Instant::now();
+                if now >= deadline {
+                    self.rejected.fetch_add(1, Ordering::Relaxed);
+                    return None;
+                }
+                let (g, _) = self.freed.wait_timeout(n, deadline - now).unwrap();
+                n = g;
+            }
+        }
+        *n += 1;
+        self.peak.fetch_max(*n as u64, Ordering::Relaxed);
+        Some(AdmissionGuard(self))
+    }
+
+    /// Requests currently past admission.
+    pub fn inflight(&self) -> usize {
+        *self.inflight.lock().unwrap()
+    }
+
+    /// High-water mark of concurrent inflight requests.
+    pub fn peak(&self) -> u64 {
+        self.peak.load(Ordering::Relaxed)
+    }
+
+    /// Requests rejected for overload.
+    pub fn rejected(&self) -> u64 {
+        self.rejected.load(Ordering::Relaxed)
+    }
+}
+
+/// RAII inflight slot; dropping it frees the slot and wakes one waiter.
+pub struct AdmissionGuard<'a>(&'a Admission);
+
+impl Drop for AdmissionGuard<'_> {
+    fn drop(&mut self) {
+        let mut n = self.0.inflight.lock().unwrap();
+        *n -= 1;
+        drop(n);
+        self.0.freed.notify_one();
+    }
 }
 
 /// Handle to a running server.
@@ -28,6 +131,8 @@ pub struct ServerHandle {
     stop: Arc<AtomicBool>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
     router: Arc<Router>,
+    pool: Option<Arc<WorkerPool>>,
+    admission: Arc<Admission>,
 }
 
 impl ServerHandle {
@@ -40,11 +145,24 @@ impl ServerHandle {
             let _ = h.join();
         }
         self.router.shutdown();
+        if let Some(p) = &self.pool {
+            p.shutdown();
+        }
     }
 
     /// The shared router (for metric inspection).
     pub fn router(&self) -> &Arc<Router> {
         &self.router
+    }
+
+    /// The shared GEMM worker pool, if the config asked for one.
+    pub fn pool(&self) -> Option<&Arc<WorkerPool>> {
+        self.pool.as_ref()
+    }
+
+    /// The admission valve (inflight/peak/rejected gauges).
+    pub fn admission(&self) -> &Arc<Admission> {
+        &self.admission
     }
 }
 
@@ -53,11 +171,17 @@ pub fn serve(router: Router, cfg: &ServerConfig) -> Result<ServerHandle> {
     let listener = TcpListener::bind(&cfg.addr).with_context(|| format!("bind {}", cfg.addr))?;
     let addr = listener.local_addr()?;
     let stop = Arc::new(AtomicBool::new(false));
+    let pool = (cfg.workers > 0).then(|| Arc::new(WorkerPool::new(cfg.workers)));
+    if let Some(p) = &pool {
+        router.set_pool(p);
+    }
+    let admission = Arc::new(Admission::new(cfg.max_inflight, cfg.admission_timeout));
     let router = Arc::new(router);
 
     let accept_thread = {
         let stop = stop.clone();
         let router = router.clone();
+        let admission = admission.clone();
         std::thread::Builder::new()
             .name("plam-accept".into())
             .spawn(move || {
@@ -68,9 +192,10 @@ pub fn serve(router: Router, cfg: &ServerConfig) -> Result<ServerHandle> {
                     match conn {
                         Ok(stream) => {
                             let router = router.clone();
+                            let admission = admission.clone();
                             let _ = std::thread::Builder::new()
                                 .name("plam-conn".into())
-                                .spawn(move || handle_connection(stream, router));
+                                .spawn(move || handle_connection(stream, router, admission));
                         }
                         Err(_) => continue,
                     }
@@ -84,11 +209,13 @@ pub fn serve(router: Router, cfg: &ServerConfig) -> Result<ServerHandle> {
         stop,
         accept_thread: Some(accept_thread),
         router,
+        pool,
+        admission,
     })
 }
 
 /// Serve one connection: a stream of request/response pairs until EOF.
-fn handle_connection(mut stream: TcpStream, router: Arc<Router>) {
+fn handle_connection(mut stream: TcpStream, router: Arc<Router>, admission: Arc<Admission>) {
     let _ = stream.set_nodelay(true);
     let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
     loop {
@@ -96,9 +223,14 @@ fn handle_connection(mut stream: TcpStream, router: Arc<Router>) {
             Ok(r) => r,
             Err(_) => return, // EOF or garbage: close the connection
         };
-        let result = router
-            .get(&req.model)
-            .and_then(|b| b.infer(req.input));
+        let result = match admission.try_enter() {
+            Some(_slot) => router.get(&req.model).and_then(|b| b.infer(req.input)),
+            None => Err(anyhow::anyhow!(
+                "server overloaded: {} requests in flight (max {})",
+                admission.inflight(),
+                admission.max,
+            )),
+        };
         let ok = match result {
             Ok(out) => wire::write_ok(&mut stream, &out),
             Err(e) => wire::write_err(&mut stream, &format!("{e:#}")),
@@ -141,7 +273,7 @@ impl Client {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::backend::NnBackend;
+    use crate::coordinator::backend::{InferenceBackend, NnBackend};
     use crate::coordinator::batcher::BatcherConfig;
     use crate::nn::{ArithMode, Model, ModelKind};
 
@@ -155,13 +287,7 @@ mod tests {
             )),
             BatcherConfig::default(),
         );
-        serve(
-            router,
-            &ServerConfig {
-                addr: "127.0.0.1:0".into(),
-            },
-        )
-        .unwrap()
+        serve(router, &ServerConfig::default()).unwrap()
     }
 
     #[test]
@@ -207,6 +333,133 @@ mod tests {
             m.completed.load(std::sync::atomic::Ordering::Relaxed),
             32
         );
+        assert!(h.admission().peak() >= 1);
+        assert_eq!(h.admission().inflight(), 0, "all slots released");
+        h.shutdown();
+    }
+
+    #[test]
+    fn pooled_server_serves_and_records_gauges() {
+        let mut router = Router::new();
+        router.register(
+            "isolet",
+            Arc::new(NnBackend::new(
+                Model::new(ModelKind::MlpIsolet),
+                ArithMode::float32(),
+            )),
+            BatcherConfig::default(),
+        );
+        let h = serve(
+            router,
+            &ServerConfig {
+                workers: 2,
+                ..ServerConfig::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(h.pool().unwrap().workers(), 2);
+        let mut c = Client::connect(h.addr).unwrap();
+        for _ in 0..3 {
+            assert_eq!(c.infer("isolet", &vec![0.1; 617]).unwrap().len(), 26);
+        }
+        let m = &h.router().get("isolet").unwrap().metrics;
+        assert_eq!(
+            m.pool_workers.load(std::sync::atomic::Ordering::Relaxed),
+            2,
+            "batcher must export the pool gauges"
+        );
+        h.shutdown();
+    }
+
+    /// Backend that sleeps, to hold inflight slots open.
+    struct Sleepy;
+
+    impl InferenceBackend for Sleepy {
+        fn input_len(&self) -> usize {
+            1
+        }
+        fn output_len(&self) -> usize {
+            1
+        }
+        fn max_batch(&self) -> usize {
+            1
+        }
+        fn infer_batch(&self, inputs: &[Vec<f32>]) -> anyhow::Result<Vec<Vec<f32>>> {
+            std::thread::sleep(Duration::from_millis(300));
+            Ok(inputs.to_vec())
+        }
+        fn describe(&self) -> String {
+            "sleepy".into()
+        }
+    }
+
+    #[test]
+    fn admission_control_rejects_over_limit_requests() {
+        let mut router = Router::new();
+        router.register("sleepy", Arc::new(Sleepy), BatcherConfig::default());
+        let h = serve(
+            router,
+            &ServerConfig {
+                max_inflight: 1,
+                admission_timeout: Duration::from_millis(5),
+                ..ServerConfig::default()
+            },
+        )
+        .unwrap();
+        let addr = h.addr;
+        let mut joins = vec![];
+        for _ in 0..4 {
+            joins.push(std::thread::spawn(move || {
+                let mut c = Client::connect(addr).unwrap();
+                c.infer("sleepy", &[1.0])
+            }));
+        }
+        let results: Vec<_> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+        let ok = results.iter().filter(|r| r.is_ok()).count();
+        let overloaded = results
+            .iter()
+            .filter(|r| {
+                r.as_ref()
+                    .err()
+                    .is_some_and(|e| e.to_string().contains("overloaded"))
+            })
+            .count();
+        assert!(ok >= 1, "one request must be admitted");
+        assert!(overloaded >= 1, "excess requests must be rejected cleanly");
+        assert_eq!(ok + overloaded, 4, "no other failure modes");
+        assert!(h.admission().peak() <= 1, "peak bounded by max_inflight");
+        assert_eq!(h.admission().rejected() as usize, overloaded);
+        h.shutdown();
+    }
+
+    #[test]
+    fn admission_backpressure_blocks_then_admits() {
+        // With a generous timeout the valve serialises rather than
+        // rejects: all requests eventually succeed, peak stays ≤ max.
+        let mut router = Router::new();
+        router.register("sleepy", Arc::new(Sleepy), BatcherConfig::default());
+        let h = serve(
+            router,
+            &ServerConfig {
+                max_inflight: 2,
+                admission_timeout: Duration::from_secs(30),
+                ..ServerConfig::default()
+            },
+        )
+        .unwrap();
+        let addr = h.addr;
+        let mut joins = vec![];
+        for _ in 0..5 {
+            joins.push(std::thread::spawn(move || {
+                let mut c = Client::connect(addr).unwrap();
+                c.infer("sleepy", &[2.0])
+            }));
+        }
+        for j in joins {
+            assert_eq!(j.join().unwrap().unwrap(), vec![2.0]);
+        }
+        assert!(h.admission().peak() <= 2, "peak={}", h.admission().peak());
+        assert_eq!(h.admission().rejected(), 0);
         h.shutdown();
     }
 }

@@ -47,10 +47,14 @@ fn print_help() {
 USAGE: plam <command> [flags]
 
 COMMANDS:
-  serve      [--addr HOST:PORT] [--artifact PATH --batch N --in N --out N]
+  serve      [--addr HOST:PORT] [--workers N] [--max-inflight N]
+             [--artifact PATH --batch N --in N --out N]
              Start the batched inference server. Registers the Table I
              models in float32 / posit<16,1> / posit<16,1>+PLAM modes;
              optionally also a PJRT artifact backend (--features pjrt).
+             --workers sizes the shared GEMM worker pool (default: the
+             machine's parallelism; 0 disables it); --max-inflight is
+             the admission-control bound (default 256, 0 = unlimited).
   table2     [--quick | --full]
              Reproduce Table II (inference accuracy across formats).
   hw-report  [--table3] [--fig1] [--fig5] [--fig6] [--headline]
@@ -154,10 +158,34 @@ fn cmd_serve(args: &[String]) -> i32 {
         }
     }
 
+    // GEMM worker pool: default to the machine's parallelism; override
+    // with --workers N (0 = single-threaded batches). --max-inflight
+    // bounds concurrently admitted requests (0 = unlimited).
+    let default_workers = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let workers: usize = flag_value(args, "--workers")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default_workers);
+    let max_inflight: usize = flag_value(args, "--max-inflight")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(256);
+
     println!("routing table:\n{}", router.table());
-    match serve(router, &ServerConfig { addr: addr.into() }) {
+    match serve(
+        router,
+        &ServerConfig {
+            addr: addr.into(),
+            workers,
+            max_inflight,
+            ..ServerConfig::default()
+        },
+    ) {
         Ok(h) => {
-            println!("plam server listening on {}", h.addr);
+            println!(
+                "plam server listening on {} (workers={workers}, max_inflight={max_inflight})",
+                h.addr
+            );
             loop {
                 std::thread::sleep(std::time::Duration::from_secs(60));
                 for name in h.router().model_names() {
@@ -240,7 +268,8 @@ fn cmd_selftest() -> i32 {
     match serve(
         router,
         &ServerConfig {
-            addr: "127.0.0.1:0".into(),
+            workers: 2,
+            ..ServerConfig::default()
         },
     ) {
         Ok(h) => {

@@ -17,11 +17,30 @@
 //! with `W` stored row-major `[N, K]`, so both operands stream
 //! contiguously along `K` — the natural layout for `[out, in]` weight
 //! matrices and for im2col patch matrices alike.
+//!
+//! Two scaling layers sit on top of the sequential kernel:
+//!
+//! * [`gemm_bt_pool`] shards the M (batch) dimension into MB-aligned
+//!   row bands and fans them out over a [`WorkerPool`]. Rows are
+//!   independent (each output rounds once from its own quire; the
+//!   float path keeps ascending-k order per row), so pooled results
+//!   are bit-identical to the sequential call. Each worker reuses a
+//!   thread-local [`FastQuire`] scratch pad across shards.
+//! * [`PlaneCache`] memoises encoded planes by `(format, shape, data)`
+//!   so concurrent servers registering the same weights (or the same
+//!   weights under exact *and* PLAM modes, which share decode planes)
+//!   never re-decode them.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::posit::tables::{decode_entry, DecEntry, FW};
 use crate::posit::{from_f32, to_f32, FastQuire, PositFormat};
 
 use super::layers::{ArithMode, MulKind};
+use super::pool::WorkerPool;
 use super::tensor::Tensor;
 
 /// Output-tile rows (batch direction).
@@ -41,6 +60,14 @@ pub struct EncodedMatrix {
     pub cols: usize,
     f32s: Vec<f32>,
     dec: Vec<DecEntry>,
+}
+
+impl EncodedMatrix {
+    /// Heap footprint of the encoded plane (cache accounting).
+    pub fn bytes(&self) -> usize {
+        self.f32s.len() * std::mem::size_of::<f32>()
+            + self.dec.len() * std::mem::size_of::<DecEntry>()
+    }
 }
 
 /// Encode a row-major `rows × cols` matrix for a mode. This is the
@@ -73,6 +100,198 @@ pub fn encode_matrix(mode: &ArithMode, rows: usize, cols: usize, data: &[f32]) -
     }
 }
 
+// ---------------------------------------------------------------------
+// Shared plane cache
+// ---------------------------------------------------------------------
+
+/// Cache key arithmetic: decode planes depend only on the posit format
+/// (not on the multiplier — exact and PLAM share planes), and the float
+/// path only on the raw data.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+enum ModeKey {
+    F32,
+    Posit { n: u32, es: u32 },
+}
+
+fn mode_key(mode: &ArithMode) -> ModeKey {
+    match mode {
+        ArithMode::Float32 => ModeKey::F32,
+        ArithMode::Posit { fmt, .. } => ModeKey::Posit {
+            n: fmt.n,
+            es: fmt.es,
+        },
+    }
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+struct PlaneKey {
+    mode: ModeKey,
+    rows: usize,
+    cols: usize,
+    /// FNV-1a over the f32 bit patterns. The cache trusts this 64-bit
+    /// fingerprint (plus the shape) for identity; at cache-scale entry
+    /// counts a collision is vanishingly unlikely, and a collision
+    /// would only ever swap one weight plane for another's.
+    fnv: u64,
+}
+
+fn fnv64(data: &[f32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for v in data {
+        for b in v.to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+struct CacheEntry {
+    plane: Arc<EncodedMatrix>,
+    bytes: usize,
+    last_used: u64,
+}
+
+struct CacheInner {
+    map: HashMap<PlaneKey, CacheEntry>,
+    tick: u64,
+    bytes: usize,
+}
+
+/// Shared, LRU-evicting cache of encoded planes, keyed by
+/// `(format, shape, data fingerprint)`. Interior-mutability-safe: all
+/// state sits behind one mutex, so any number of server threads can
+/// prepare models concurrently and the same weight matrix is decoded
+/// exactly once. Entries handed out as [`Arc`]s stay valid after
+/// eviction — eviction only drops the cache's own reference.
+pub struct PlaneCache {
+    cap_bytes: usize,
+    inner: Mutex<CacheInner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl PlaneCache {
+    /// Cache bounded to `cap_bytes` of encoded-plane payload.
+    pub fn new(cap_bytes: usize) -> Self {
+        PlaneCache {
+            cap_bytes,
+            inner: Mutex::new(CacheInner {
+                map: HashMap::new(),
+                tick: 0,
+                bytes: 0,
+            }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// The process-wide cache used by model preparation (64 MiB — a few
+    /// dozen ISOLET/LeNet-scale weight sets).
+    pub fn global() -> &'static PlaneCache {
+        static GLOBAL: OnceLock<PlaneCache> = OnceLock::new();
+        GLOBAL.get_or_init(|| PlaneCache::new(64 << 20))
+    }
+
+    /// Encode through the cache: returns the shared plane if this
+    /// `(mode-format, shape, data)` was encoded before, else encodes,
+    /// inserts, and evicts least-recently-used planes over capacity.
+    pub fn encode(
+        &self,
+        mode: &ArithMode,
+        rows: usize,
+        cols: usize,
+        data: &[f32],
+    ) -> Arc<EncodedMatrix> {
+        let key = PlaneKey {
+            mode: mode_key(mode),
+            rows,
+            cols,
+            fnv: fnv64(data),
+        };
+        {
+            let mut inner = self.inner.lock().unwrap();
+            inner.tick += 1;
+            let tick = inner.tick;
+            if let Some(e) = inner.map.get_mut(&key) {
+                e.last_used = tick;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return e.plane.clone();
+            }
+        }
+        // Encode outside the lock: concurrent misses on the same key may
+        // both encode, but only one result is kept.
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let plane = Arc::new(encode_matrix(mode, rows, cols, data));
+        let bytes = plane.bytes();
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        if let Some(e) = inner.map.get_mut(&key) {
+            // Lost the encode race; adopt the winner's plane.
+            e.last_used = tick;
+            return e.plane.clone();
+        }
+        inner.bytes += bytes;
+        inner.map.insert(
+            key,
+            CacheEntry {
+                plane: plane.clone(),
+                bytes,
+                last_used: tick,
+            },
+        );
+        while inner.bytes > self.cap_bytes && inner.map.len() > 1 {
+            let oldest = inner
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| *k)
+                .expect("non-empty cache");
+            if let Some(e) = inner.map.remove(&oldest) {
+                inner.bytes -= e.bytes;
+            }
+        }
+        plane
+    }
+
+    /// Cached plane count.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    /// True if nothing is cached.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Payload bytes currently cached.
+    pub fn bytes(&self) -> usize {
+        self.inner.lock().unwrap().bytes
+    }
+
+    /// Cache hits so far.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Cache misses so far.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Drop every cached plane (outstanding `Arc`s stay valid).
+    pub fn clear(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.map.clear();
+        inner.bytes = 0;
+    }
+}
+
+// ---------------------------------------------------------------------
+// GEMM kernels
+// ---------------------------------------------------------------------
+
 /// `Y[M, N] = X[M, K] · Wᵀ (+ bias)`, `W` row-major `[N, K]`, `bias`
 /// broadcast over rows (one value per output column). `y` must hold
 /// `M · N` elements, row-major.
@@ -87,32 +306,94 @@ pub fn gemm_bt(
     bias: Option<&[f32]>,
     y: &mut [f32],
 ) {
+    let (m_dim, k_dim, n_dim) = check_shapes(x, w, bias, y);
+    gemm_band(mode, x, w, bias, y, 0, m_dim, k_dim, n_dim);
+}
+
+/// [`gemm_bt`] sharded over a [`WorkerPool`]: the M dimension is split
+/// into MB-aligned row bands (~4 per worker, so the steal scheduler can
+/// rebalance uneven progress) and each band runs as one pool task with
+/// per-worker quire scratch. Output is bit-identical to [`gemm_bt`] —
+/// rows are computed independently in both paths.
+pub fn gemm_bt_pool(
+    mode: &ArithMode,
+    x: &EncodedMatrix,
+    w: &EncodedMatrix,
+    bias: Option<&[f32]>,
+    y: &mut [f32],
+    pool: &WorkerPool,
+) {
+    let (m_dim, k_dim, n_dim) = check_shapes(x, w, bias, y);
+    let workers = pool.workers();
+    if workers <= 1 || m_dim <= MB || n_dim == 0 {
+        gemm_band(mode, x, w, bias, y, 0, m_dim, k_dim, n_dim);
+        return;
+    }
+    let bands = (workers * 4).min(m_dim.div_ceil(MB));
+    let rows_per = m_dim.div_ceil(bands).div_ceil(MB) * MB;
+    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = y
+        .chunks_mut(rows_per * n_dim)
+        .enumerate()
+        .map(|(i, band)| {
+            let row0 = i * rows_per;
+            Box::new(move || {
+                let rows = band.len() / n_dim;
+                gemm_band(mode, x, w, bias, band, row0, rows, k_dim, n_dim);
+            }) as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    pool.run(tasks);
+}
+
+fn check_shapes(
+    x: &EncodedMatrix,
+    w: &EncodedMatrix,
+    bias: Option<&[f32]>,
+    y: &[f32],
+) -> (usize, usize, usize) {
     let (m_dim, k_dim, n_dim) = (x.rows, x.cols, w.rows);
     assert_eq!(w.cols, k_dim, "gemm contraction length mismatch");
     assert_eq!(y.len(), m_dim * n_dim, "gemm output length mismatch");
     if let Some(b) = bias {
         assert_eq!(b.len(), n_dim, "gemm bias length mismatch");
     }
-    match mode {
-        ArithMode::Float32 => gemm_float(x, w, bias, y, m_dim, k_dim, n_dim),
-        ArithMode::Posit { fmt, mul, .. } => {
-            gemm_posit(*fmt, *mul, x, w, bias, y, m_dim, k_dim, n_dim)
-        }
-    }
+    (m_dim, k_dim, n_dim)
 }
 
-fn gemm_float(
+/// Compute `rows` output rows starting at x-row `row0`, writing into
+/// the band slice `y` (`rows × n_dim`, indexed from 0).
+fn gemm_band(
+    mode: &ArithMode,
     x: &EncodedMatrix,
     w: &EncodedMatrix,
     bias: Option<&[f32]>,
     y: &mut [f32],
-    m_dim: usize,
+    row0: usize,
+    rows: usize,
     k_dim: usize,
     n_dim: usize,
 ) {
-    let mut acc = vec![0f32; m_dim.min(MB) * NB];
-    for m0 in (0..m_dim).step_by(MB) {
-        let mh = (m_dim - m0).min(MB);
+    match mode {
+        ArithMode::Float32 => gemm_float_band(x, w, bias, y, row0, rows, k_dim, n_dim),
+        ArithMode::Posit { fmt, mul, .. } => {
+            gemm_posit_band(*fmt, *mul, x, w, bias, y, row0, rows, k_dim, n_dim)
+        }
+    }
+}
+
+fn gemm_float_band(
+    x: &EncodedMatrix,
+    w: &EncodedMatrix,
+    bias: Option<&[f32]>,
+    y: &mut [f32],
+    row0: usize,
+    rows: usize,
+    k_dim: usize,
+    n_dim: usize,
+) {
+    let mut acc = vec![0f32; rows.min(MB) * NB];
+    for m0 in (0..rows).step_by(MB) {
+        let mh = (rows - m0).min(MB);
         for n0 in (0..n_dim).step_by(NB) {
             let nw = (n_dim - n0).min(NB);
             for mi in 0..mh {
@@ -123,7 +404,8 @@ fn gemm_float(
             for k0 in (0..k_dim).step_by(KB) {
                 let kw = (k_dim - k0).min(KB);
                 for mi in 0..mh {
-                    let xrow = &x.f32s[(m0 + mi) * k_dim + k0..(m0 + mi) * k_dim + k0 + kw];
+                    let xoff = (row0 + m0 + mi) * k_dim + k0;
+                    let xrow = &x.f32s[xoff..xoff + kw];
                     for ni in 0..nw {
                         let wrow = &w.f32s[(n0 + ni) * k_dim + k0..(n0 + ni) * k_dim + k0 + kw];
                         let mut s = acc[mi * NB + ni];
@@ -143,76 +425,113 @@ fn gemm_float(
     }
 }
 
-fn gemm_posit(
+/// Per-thread quire scratch: each pool worker (and the caller, for
+/// sequential runs) reuses one allocation across every shard it
+/// executes instead of reallocating `MB × NB` quires per band.
+struct QuireScratch {
+    fmt: Option<PositFormat>,
+    quires: Vec<FastQuire>,
+}
+
+impl QuireScratch {
+    fn take(&mut self, fmt: PositFormat, len: usize) -> &mut [FastQuire] {
+        if self.fmt != Some(fmt) {
+            self.quires.clear();
+            self.fmt = Some(fmt);
+        }
+        if self.quires.len() < len {
+            self.quires.resize_with(len, || FastQuire::new(fmt));
+        }
+        &mut self.quires[..len]
+    }
+}
+
+thread_local! {
+    static QUIRE_SCRATCH: RefCell<QuireScratch> = RefCell::new(QuireScratch {
+        fmt: None,
+        quires: Vec::new(),
+    });
+}
+
+fn gemm_posit_band(
     fmt: PositFormat,
     mul: MulKind,
     x: &EncodedMatrix,
     w: &EncodedMatrix,
     bias: Option<&[f32]>,
     y: &mut [f32],
-    m_dim: usize,
+    row0: usize,
+    rows: usize,
     k_dim: usize,
     n_dim: usize,
 ) {
-    // Bias encoded once per call (not per output row).
+    // Bias encoded once per band (not per output row).
     let bias_bits: Option<Vec<u64>> =
         bias.map(|b| b.iter().map(|&v| from_f32(fmt, v)).collect());
     // Scratch sized to the rows actually used: an M=1 per-sample call
     // touches one tile row, not the full MB×NB panel.
-    let scratch = m_dim.min(MB) * NB;
-    let mut quires: Vec<FastQuire> = (0..scratch).map(|_| FastQuire::new(fmt)).collect();
-    for m0 in (0..m_dim).step_by(MB) {
-        let mh = (m_dim - m0).min(MB);
-        for n0 in (0..n_dim).step_by(NB) {
-            let nw = (n_dim - n0).min(NB);
-            for mi in 0..mh {
-                for ni in 0..nw {
-                    quires[mi * NB + ni].clear();
-                }
-            }
-            for k0 in (0..k_dim).step_by(KB) {
-                let kw = (k_dim - k0).min(KB);
+    let scratch = rows.min(MB) * NB;
+    QUIRE_SCRATCH.with(|cell| {
+        let mut sc = cell.borrow_mut();
+        let quires = sc.take(fmt, scratch);
+        for m0 in (0..rows).step_by(MB) {
+            let mh = (rows - m0).min(MB);
+            for n0 in (0..n_dim).step_by(NB) {
+                let nw = (n_dim - n0).min(NB);
                 for mi in 0..mh {
-                    let xrow = &x.dec[(m0 + mi) * k_dim + k0..(m0 + mi) * k_dim + k0 + kw];
                     for ni in 0..nw {
-                        let wrow = &w.dec[(n0 + ni) * k_dim + k0..(n0 + ni) * k_dim + k0 + kw];
-                        let q = &mut quires[mi * NB + ni];
-                        match mul {
-                            MulKind::Exact => {
-                                for (a, b) in xrow.iter().zip(wrow.iter()) {
-                                    quire_mac_exact(q, a, b);
+                        quires[mi * NB + ni].clear();
+                    }
+                }
+                for k0 in (0..k_dim).step_by(KB) {
+                    let kw = (k_dim - k0).min(KB);
+                    for mi in 0..mh {
+                        let xoff = (row0 + m0 + mi) * k_dim + k0;
+                        let xrow = &x.dec[xoff..xoff + kw];
+                        for ni in 0..nw {
+                            let wrow =
+                                &w.dec[(n0 + ni) * k_dim + k0..(n0 + ni) * k_dim + k0 + kw];
+                            let q = &mut quires[mi * NB + ni];
+                            match mul {
+                                MulKind::Exact => {
+                                    for (a, b) in xrow.iter().zip(wrow.iter()) {
+                                        quire_mac_exact(q, a, b);
+                                    }
                                 }
-                            }
-                            MulKind::Plam => {
-                                for (a, b) in xrow.iter().zip(wrow.iter()) {
-                                    quire_mac_plam(q, a, b);
+                                MulKind::Plam => {
+                                    for (a, b) in xrow.iter().zip(wrow.iter()) {
+                                        quire_mac_plam(q, a, b);
+                                    }
                                 }
                             }
                         }
                     }
                 }
-            }
-            for mi in 0..mh {
-                for ni in 0..nw {
-                    let q = &mut quires[mi * NB + ni];
-                    if let Some(bb) = &bias_bits {
-                        q.add_posit(bb[n0 + ni]);
+                for mi in 0..mh {
+                    for ni in 0..nw {
+                        let q = &mut quires[mi * NB + ni];
+                        if let Some(bb) = &bias_bits {
+                            q.add_posit(bb[n0 + ni]);
+                        }
+                        y[(m0 + mi) * n_dim + n0 + ni] = to_f32(fmt, q.to_posit());
                     }
-                    y[(m0 + mi) * n_dim + n0 + ni] = to_f32(fmt, q.to_posit());
                 }
             }
         }
-    }
+    });
 }
 
 /// Quire MAC from pre-decoded entries, exact product (paper Fig. 3).
+/// NaR is checked before zero so `0 × NaR` poisons the accumulator,
+/// matching the scalar multipliers (`exact::mul`, `plam_mul`) and the
+/// posit standard — the exhaustive conformance suite pins this down.
 #[inline(always)]
 fn quire_mac_exact(q: &mut FastQuire, a: &DecEntry, b: &DecEntry) {
-    if a.is_zero() || b.is_zero() {
-        return;
-    }
     if a.is_nar() || b.is_nar() {
         q.set_nar();
+        return;
+    }
+    if a.is_zero() || b.is_zero() {
         return;
     }
     // Product of Q30 significands → ≤ 62-bit magnitude with combined
@@ -227,11 +546,11 @@ fn quire_mac_exact(q: &mut FastQuire, a: &DecEntry, b: &DecEntry) {
 /// bumps the scale).
 #[inline(always)]
 fn quire_mac_plam(q: &mut FastQuire, a: &DecEntry, b: &DecEntry) {
-    if a.is_zero() || b.is_zero() {
-        return;
-    }
     if a.is_nar() || b.is_nar() {
         q.set_nar();
+        return;
+    }
+    if a.is_zero() || b.is_zero() {
         return;
     }
     let fsum = a.frac as u64 + b.frac as u64; // Q30 fraction sum
@@ -399,6 +718,89 @@ mod tests {
     }
 
     #[test]
+    fn pooled_gemm_is_bit_identical_to_sequential() {
+        // Row-band sharding must not change a single bit, for any mode,
+        // any worker count, and shapes that stress partial bands.
+        let pools = [WorkerPool::new(0), WorkerPool::new(2), WorkerPool::new(4)];
+        for mode in [
+            ArithMode::float32(),
+            ArithMode::posit_exact(PositFormat::P16E1),
+            ArithMode::posit_plam(PositFormat::P16E1),
+            ArithMode::posit_plam(PositFormat::P8E0),
+        ] {
+            for (m, k, n) in [(1, 9, 5), (13, 40, 17), (64, 33, 20), (95, 64, 31)] {
+                let mut rng = Rng::new(7 + m as u64);
+                let x = random_matrix(&mut rng, m, k);
+                let w = random_matrix(&mut rng, n, k);
+                let bias: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 0.1).collect();
+                let xe = encode_matrix(&mode, m, k, &x);
+                let we = encode_matrix(&mode, n, k, &w);
+                let mut want = vec![0f32; m * n];
+                gemm_bt(&mode, &xe, &we, Some(&bias), &mut want);
+                for pool in &pools {
+                    let mut got = vec![0f32; m * n];
+                    gemm_bt_pool(&mode, &xe, &we, Some(&bias), &mut got, pool);
+                    let same = got
+                        .iter()
+                        .zip(want.iter())
+                        .all(|(a, b)| a.to_bits() == b.to_bits());
+                    assert!(
+                        same,
+                        "{} m={m} k={k} n={n} workers={}",
+                        mode.name(),
+                        pool.workers()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn plane_cache_shares_and_evicts() {
+        let cache = PlaneCache::new(10 * 1024);
+        let mode = ArithMode::posit_plam(PositFormat::P16E1);
+        let data: Vec<f32> = (0..256).map(|i| i as f32 * 0.25).collect();
+        let a = cache.encode(&mode, 16, 16, &data);
+        let b = cache.encode(&mode, 16, 16, &data);
+        assert!(Arc::ptr_eq(&a, &b), "second encode must hit");
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(cache.misses(), 1);
+        // Exact and PLAM share decode planes (same format).
+        let c = cache.encode(&ArithMode::posit_exact(PositFormat::P16E1), 16, 16, &data);
+        assert!(Arc::ptr_eq(&a, &c), "exact/plam share the plane");
+        // Same data under a different shape is a different plane.
+        let d = cache.encode(&mode, 8, 32, &data);
+        assert!(!Arc::ptr_eq(&a, &d));
+        // Overflow the 10 KiB cap: the LRU planes get evicted, but the
+        // Arcs handed out survive.
+        for i in 0..16u32 {
+            let other: Vec<f32> = (0..256).map(|j| (i * 1000 + j) as f32).collect();
+            cache.encode(&mode, 16, 16, &other);
+        }
+        assert!(cache.bytes() <= 10 * 1024, "bytes={}", cache.bytes());
+        assert!(cache.len() < 18);
+        assert_eq!(a.rows, 16);
+        // The original entry was evicted, so re-encoding misses.
+        let before = cache.misses();
+        let e = cache.encode(&mode, 16, 16, &data);
+        assert_eq!(cache.misses(), before + 1);
+        assert!(!Arc::ptr_eq(&a, &e));
+        cache.clear();
+        assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn plane_cache_float_mode_cached_separately() {
+        let cache = PlaneCache::new(1 << 20);
+        let data = vec![1.0f32, 2.0, 3.0, 4.0];
+        let f = cache.encode(&ArithMode::float32(), 2, 2, &data);
+        let p = cache.encode(&ArithMode::posit_plam(PositFormat::P16E1), 2, 2, &data);
+        assert!(!Arc::ptr_eq(&f, &p));
+        assert_eq!(cache.len(), 2);
+        assert!(f.bytes() > 0 && p.bytes() > 0);
+    }
+
+    #[test]
     fn wide_format_tableless_path_matches_naive() {
         // P⟨32,2⟩ has no decode table; the per-element decode path must
         // produce identical planes and results.
@@ -467,6 +869,23 @@ mod tests {
         gemm_bt(&mode, &xe, &we, None, &mut y);
         assert!(y[0].is_nan(), "NaR row must round to NaR/NaN");
         assert_eq!(y[1], 3.0);
+    }
+
+    #[test]
+    fn zero_times_nar_poisons() {
+        // NaR dominates zero (posit standard; matches `plam_mul` and
+        // `exact::mul`), even though the zero operand alone would have
+        // skipped the MAC.
+        for mode in [
+            ArithMode::posit_exact(PositFormat::P16E1),
+            ArithMode::posit_plam(PositFormat::P16E1),
+        ] {
+            let xe = encode_matrix(&mode, 1, 1, &[f32::NAN]);
+            let we = encode_matrix(&mode, 1, 1, &[0.0]);
+            let mut y = vec![0f32; 1];
+            gemm_bt(&mode, &xe, &we, None, &mut y);
+            assert!(y[0].is_nan(), "{}: 0 × NaR must be NaR", mode.name());
+        }
     }
 
     #[test]

@@ -3,16 +3,21 @@
 //! The arithmetic hot path lives in [`gemm`]: a table-driven,
 //! cache-blocked batched GEMM that every dense/conv layer routes
 //! through (decode weights once, reuse across the whole batch).
+//! [`pool`] shards that GEMM across a work-stealing worker pool
+//! (bit-identical results, one row band per task), and
+//! [`gemm::PlaneCache`] shares encoded weight planes across models.
 
 pub mod gemm;
+pub mod pool;
 pub mod tensor;
 pub mod layers;
 pub mod model;
 pub mod loader;
 pub mod prepared;
 
-pub use gemm::{encode_matrix, gemm_bt, EncodedMatrix};
+pub use gemm::{encode_matrix, gemm_bt, gemm_bt_pool, EncodedMatrix, PlaneCache};
 pub use layers::{ArithMode, Layer, MulKind};
+pub use pool::{PoolStats, WorkerPool};
 pub use prepared::PreparedModel;
 pub use model::{Model, ModelKind};
 pub use tensor::Tensor;

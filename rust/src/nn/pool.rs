@@ -1,0 +1,501 @@
+//! Sharded work-stealing worker pool for the GEMM engine.
+//!
+//! The batched engine in [`super::gemm`] is strictly sequential: one
+//! thread walks every output tile, so the coordinator's throughput is
+//! capped at one core no matter how large the batch. This pool is the
+//! execution layer that lifts that cap — `gemm_bt_pool` splits the
+//! `[M, K] × [N, K]ᵀ` kernel into MB-aligned row-band shards and runs
+//! them here, and [`crate::coordinator`] sizes one shared pool per
+//! server (`ServerConfig::workers`).
+//!
+//! Built on std primitives only (threads, `Mutex`, `Condvar` — no
+//! crossbeam offline): each worker owns a deque and *steals from the
+//! back* of its neighbours when its own runs dry, the crossbeam-deque
+//! scheduling discipline on a mutex substrate. Coarse GEMM shards
+//! (~milliseconds each) make the mutex cost invisible.
+//!
+//! [`WorkerPool::run`] is a scoped fork-join: it blocks until every
+//! submitted shard has finished, which is what makes it sound to hand
+//! the shards borrowed slices of the output matrix (see the SAFETY
+//! note in `run`). A pool with `workers == 0` degrades to inline
+//! execution on the caller, so every call path works unpooled.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// A type-erased shard body. `'static` here is a lie told once, in
+/// [`WorkerPool::run`], and made true by the completion latch.
+type Task = Box<dyn FnOnce() + Send>;
+
+/// Countdown latch: `run` blocks on it until every shard of the
+/// submission has executed (or panicked).
+struct Latch {
+    remaining: Mutex<usize>,
+    done: Condvar,
+    panicked: AtomicBool,
+}
+
+impl Latch {
+    fn new(n: usize) -> Self {
+        Latch {
+            remaining: Mutex::new(n),
+            done: Condvar::new(),
+            panicked: AtomicBool::new(false),
+        }
+    }
+
+    fn count_down(&self, panicked: bool) {
+        if panicked {
+            self.panicked.store(true, Ordering::Release);
+        }
+        let mut r = self.remaining.lock().unwrap();
+        *r -= 1;
+        if *r == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut r = self.remaining.lock().unwrap();
+        while *r > 0 {
+            r = self.done.wait(r).unwrap();
+        }
+    }
+}
+
+/// One queued shard plus the latch of the submission it belongs to.
+struct Job {
+    task: Task,
+    latch: Arc<Latch>,
+}
+
+/// State shared between the pool handle and its worker threads.
+struct Shared {
+    /// One deque per worker; owners pop the front, thieves the back.
+    queues: Vec<Mutex<VecDeque<Job>>>,
+    /// Sleep/wake signalling for idle workers.
+    sleep: Mutex<()>,
+    wake: Condvar,
+    shutdown: AtomicBool,
+    /// Jobs currently queued across all deques (gauge).
+    queued: AtomicUsize,
+    /// High-water mark of `queued`.
+    queued_peak: AtomicUsize,
+    /// Workers currently executing a shard (gauge).
+    active: AtomicUsize,
+    /// High-water mark of `active` — `active_peak / workers` is the
+    /// pool's peak utilization.
+    active_peak: AtomicUsize,
+    /// Shards executed, per worker.
+    executed: Vec<AtomicU64>,
+    /// Shards stolen from another worker's deque, per thief.
+    stolen: Vec<AtomicU64>,
+}
+
+impl Shared {
+    fn push(&self, qi: usize, job: Job) {
+        // Increment under the queue lock: the matching fetch_sub in
+        // take()/take_any() can only run after this job is popped, so
+        // the gauge can never race below zero and wrap.
+        let depth = {
+            let mut q = self.queues[qi].lock().unwrap();
+            q.push_back(job);
+            self.queued.fetch_add(1, Ordering::SeqCst) + 1
+        };
+        self.queued_peak.fetch_max(depth, Ordering::Relaxed);
+        // Notify under the sleep mutex so a worker that just observed an
+        // empty pool cannot miss the wakeup.
+        let _g = self.sleep.lock().unwrap();
+        self.wake.notify_all();
+    }
+
+    /// Pop work for worker `me`: own queue first (front), then steal
+    /// from the back of the others. Returns the job and whether it was
+    /// stolen.
+    fn take(&self, me: usize) -> Option<(Job, bool)> {
+        if let Some(j) = self.queues[me].lock().unwrap().pop_front() {
+            self.queued.fetch_sub(1, Ordering::SeqCst);
+            return Some((j, false));
+        }
+        let n = self.queues.len();
+        for k in 1..n {
+            let qi = (me + k) % n;
+            if let Some(j) = self.queues[qi].lock().unwrap().pop_back() {
+                self.queued.fetch_sub(1, Ordering::SeqCst);
+                return Some((j, true));
+            }
+        }
+        None
+    }
+
+    /// Drain any queue (used by the submitter to rescue jobs if the
+    /// pool is shut down mid-submission).
+    fn take_any(&self) -> Option<Job> {
+        for q in &self.queues {
+            if let Some(j) = q.lock().unwrap().pop_front() {
+                self.queued.fetch_sub(1, Ordering::SeqCst);
+                return Some(j);
+            }
+        }
+        None
+    }
+
+    fn execute(&self, job: Job) {
+        let n = self.active.fetch_add(1, Ordering::SeqCst) + 1;
+        self.active_peak.fetch_max(n, Ordering::Relaxed);
+        let r = catch_unwind(AssertUnwindSafe(job.task));
+        self.active.fetch_sub(1, Ordering::SeqCst);
+        job.latch.count_down(r.is_err());
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>, me: usize) {
+    loop {
+        if let Some((job, stolen)) = shared.take(me) {
+            shared.executed[me].fetch_add(1, Ordering::Relaxed);
+            if stolen {
+                shared.stolen[me].fetch_add(1, Ordering::Relaxed);
+            }
+            shared.execute(job);
+            continue;
+        }
+        // Queues looked drained; exit only once shutdown is flagged.
+        // A submission may have pushed between our empty take() and the
+        // flag read, so sweep the queues once more on the way out —
+        // combined with run()'s own post-push rescue (SeqCst total
+        // order on the flag), every job pushed before shutdown is
+        // executed by somebody and its latch always resolves.
+        if shared.shutdown.load(Ordering::SeqCst) {
+            while let Some(job) = shared.take_any() {
+                shared.execute(job);
+            }
+            return;
+        }
+        let g = shared.sleep.lock().unwrap();
+        if shared.queued.load(Ordering::SeqCst) == 0 && !shared.shutdown.load(Ordering::SeqCst) {
+            // Timeout is a belt-and-braces shutdown poll, not the wake
+            // path — `push` notifies under the same mutex.
+            let _ = shared.wake.wait_timeout(g, Duration::from_millis(50)).unwrap();
+        }
+    }
+}
+
+/// Point-in-time pool statistics (the coordinator exports these as
+/// per-shard queue-depth / utilization gauges).
+#[derive(Debug, Clone)]
+pub struct PoolStats {
+    /// Worker-thread count.
+    pub workers: usize,
+    /// Jobs queued right now.
+    pub queue_depth: usize,
+    /// High-water mark of the queue depth.
+    pub queue_depth_peak: usize,
+    /// Workers executing right now.
+    pub active: usize,
+    /// High-water mark of concurrently active workers.
+    pub active_peak: usize,
+    /// Shards executed, per worker (length = `workers`).
+    pub executed: Vec<u64>,
+    /// Shards stolen from a sibling deque, per thief.
+    pub stolen: Vec<u64>,
+}
+
+impl PoolStats {
+    /// Peak fraction of workers busy at once, in `[0, 1]`.
+    pub fn utilization_peak(&self) -> f64 {
+        if self.workers == 0 {
+            0.0
+        } else {
+            self.active_peak as f64 / self.workers as f64
+        }
+    }
+}
+
+/// Fixed-size work-stealing thread pool for GEMM shards.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+    /// Round-robin rotation so consecutive submissions spread across
+    /// different home queues.
+    next: AtomicUsize,
+}
+
+impl WorkerPool {
+    /// Spawn `workers` threads. `workers == 0` builds a degenerate pool
+    /// that executes every submission inline on the caller.
+    pub fn new(workers: usize) -> Self {
+        let shared = Arc::new(Shared {
+            queues: (0..workers).map(|_| Mutex::new(VecDeque::new())).collect(),
+            sleep: Mutex::new(()),
+            wake: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            queued: AtomicUsize::new(0),
+            queued_peak: AtomicUsize::new(0),
+            active: AtomicUsize::new(0),
+            active_peak: AtomicUsize::new(0),
+            executed: (0..workers).map(|_| AtomicU64::new(0)).collect(),
+            stolen: (0..workers).map(|_| AtomicU64::new(0)).collect(),
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("plam-pool-{i}"))
+                    .spawn(move || worker_loop(shared, i))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        WorkerPool {
+            shared,
+            handles: Mutex::new(handles),
+            next: AtomicUsize::new(0),
+        }
+    }
+
+    /// Number of worker threads (0 for an inline pool).
+    pub fn workers(&self) -> usize {
+        self.shared.queues.len()
+    }
+
+    /// Run a set of independent shards to completion (fork-join).
+    ///
+    /// Blocks until every task has executed; panics if any task
+    /// panicked (after all of them finished). Tasks may borrow from the
+    /// caller's stack — the blocking is what makes that sound.
+    pub fn run<'scope>(&self, tasks: Vec<Box<dyn FnOnce() + Send + 'scope>>) {
+        if tasks.is_empty() {
+            return;
+        }
+        let inline = self.workers() == 0
+            || tasks.len() == 1
+            || self.shared.shutdown.load(Ordering::SeqCst);
+        if inline {
+            for t in tasks {
+                t();
+            }
+            return;
+        }
+        let latch = Arc::new(Latch::new(tasks.len()));
+        let start = self.next.fetch_add(1, Ordering::Relaxed);
+        for (i, task) in tasks.into_iter().enumerate() {
+            // SAFETY: the latch makes this a scoped spawn. `run` does
+            // not return until `latch.wait()` has observed every task's
+            // completion, so every borrow captured by `task` (with
+            // lifetime `'scope`) strictly outlives its execution; the
+            // transmute only erases the lifetime the queue cannot
+            // express, it never extends a task past `run`.
+            let task: Task = unsafe {
+                std::mem::transmute::<Box<dyn FnOnce() + Send + 'scope>, Task>(task)
+            };
+            let qi = (start + i) % self.workers();
+            self.shared.push(
+                qi,
+                Job {
+                    task,
+                    latch: latch.clone(),
+                },
+            );
+        }
+        // Shutdown raced with the submission: workers may already have
+        // exited, so rescue anything still queued and run it here. Jobs
+        // a live worker already popped are counted down by that worker.
+        // (SeqCst pairing: if this read misses the flag, the store came
+        // later, and every exiting worker's final sweep sees our pushed
+        // jobs — they were enqueued before this read.)
+        if self.shared.shutdown.load(Ordering::SeqCst) {
+            while let Some(job) = self.shared.take_any() {
+                self.shared.execute(job);
+            }
+        }
+        latch.wait();
+        if latch.panicked.load(Ordering::Acquire) {
+            panic!("worker pool task panicked");
+        }
+    }
+
+    /// Snapshot the gauges.
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            workers: self.workers(),
+            queue_depth: self.shared.queued.load(Ordering::SeqCst),
+            queue_depth_peak: self.shared.queued_peak.load(Ordering::Relaxed),
+            active: self.shared.active.load(Ordering::SeqCst),
+            active_peak: self.shared.active_peak.load(Ordering::Relaxed),
+            executed: self
+                .shared
+                .executed
+                .iter()
+                .map(|c| c.load(Ordering::Relaxed))
+                .collect(),
+            stolen: self
+                .shared
+                .stolen
+                .iter()
+                .map(|c| c.load(Ordering::Relaxed))
+                .collect(),
+        }
+    }
+
+    /// Stop and join every worker. Queued jobs finish first; later
+    /// [`WorkerPool::run`] calls execute inline. Idempotent.
+    pub fn shutdown(&self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        {
+            let _g = self.shared.sleep.lock().unwrap();
+            self.shared.wake.notify_all();
+        }
+        let mut hs = self.handles.lock().unwrap();
+        for h in hs.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+
+    fn boxed<'a, F: FnOnce() + Send + 'a>(f: F) -> Box<dyn FnOnce() + Send + 'a> {
+        Box::new(f)
+    }
+
+    #[test]
+    fn runs_every_task_exactly_once() {
+        let pool = WorkerPool::new(4);
+        let counter = AtomicU32::new(0);
+        let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+        for _ in 0..100 {
+            tasks.push(boxed(|| {
+                counter.fetch_add(1, Ordering::SeqCst);
+            }));
+        }
+        pool.run(tasks);
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+        let st = pool.stats();
+        assert_eq!(st.queue_depth, 0, "queues drained");
+        assert_eq!(st.active, 0, "no stragglers");
+        assert_eq!(st.executed.iter().sum::<u64>(), 100);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn tasks_may_borrow_disjoint_slices() {
+        let pool = WorkerPool::new(3);
+        let mut data = vec![0u64; 64];
+        let tasks: Vec<_> = data
+            .chunks_mut(16)
+            .enumerate()
+            .map(|(i, chunk)| {
+                boxed(move || {
+                    for (j, v) in chunk.iter_mut().enumerate() {
+                        *v = (i * 16 + j) as u64;
+                    }
+                })
+            })
+            .collect();
+        pool.run(tasks);
+        for (i, v) in data.iter().enumerate() {
+            assert_eq!(*v, i as u64);
+        }
+    }
+
+    #[test]
+    fn zero_worker_pool_executes_inline() {
+        let pool = WorkerPool::new(0);
+        let mut hit = false;
+        pool.run(vec![boxed(|| hit = true)]);
+        assert!(hit);
+        assert_eq!(pool.workers(), 0);
+    }
+
+    #[test]
+    fn uneven_tasks_all_complete() {
+        // One long shard + many short ones: the short ones must be
+        // stolen / spread rather than serialising behind the long one.
+        let pool = WorkerPool::new(4);
+        let counter = AtomicU32::new(0);
+        let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = vec![boxed(|| {
+            std::thread::sleep(Duration::from_millis(30));
+            counter.fetch_add(1, Ordering::SeqCst);
+        })];
+        for _ in 0..40 {
+            tasks.push(boxed(|| {
+                counter.fetch_add(1, Ordering::SeqCst);
+            }));
+        }
+        pool.run(tasks);
+        assert_eq!(counter.load(Ordering::SeqCst), 41);
+        assert!(pool.stats().active_peak >= 2, "work spread across workers");
+    }
+
+    #[test]
+    fn panic_in_task_propagates_and_pool_survives() {
+        let pool = WorkerPool::new(2);
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run(vec![boxed(|| panic!("shard failure")), boxed(|| {})]);
+        }));
+        assert!(r.is_err(), "panic must propagate to the submitter");
+        // The pool is still functional afterwards.
+        let counter = AtomicU32::new(0);
+        let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+        for _ in 0..8 {
+            tasks.push(boxed(|| {
+                counter.fetch_add(1, Ordering::SeqCst);
+            }));
+        }
+        pool.run(tasks);
+        assert_eq!(counter.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
+    fn run_after_shutdown_executes_inline() {
+        let pool = WorkerPool::new(2);
+        pool.shutdown();
+        pool.shutdown(); // idempotent
+        let counter = AtomicU32::new(0);
+        let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+        for _ in 0..5 {
+            tasks.push(boxed(|| {
+                counter.fetch_add(1, Ordering::SeqCst);
+            }));
+        }
+        pool.run(tasks);
+        assert_eq!(counter.load(Ordering::SeqCst), 5);
+    }
+
+    #[test]
+    fn concurrent_submissions_do_not_cross() {
+        let pool = Arc::new(WorkerPool::new(4));
+        let mut joins = vec![];
+        for t in 0..4u64 {
+            let pool = pool.clone();
+            joins.push(std::thread::spawn(move || {
+                let sum = AtomicU64::new(0);
+                let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+                for i in 0..32u64 {
+                    let sum = &sum;
+                    tasks.push(boxed(move || {
+                        sum.fetch_add(t * 1000 + i, Ordering::SeqCst);
+                    }));
+                }
+                pool.run(tasks);
+                sum.load(Ordering::SeqCst)
+            }));
+        }
+        for (t, j) in joins.into_iter().enumerate() {
+            let want: u64 = (0..32).map(|i| t as u64 * 1000 + i).sum();
+            assert_eq!(j.join().unwrap(), want);
+        }
+    }
+}

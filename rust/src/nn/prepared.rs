@@ -9,22 +9,33 @@
 //! amortises the per-layer activation encode over a whole batch by
 //! running each dense layer as one `[batch, in] × [out, in]ᵀ` GEMM —
 //! this is what makes server throughput scale with batch size.
+//!
+//! Weight planes come from the shared [`PlaneCache`], so preparing the
+//! same model twice (or under exact *and* PLAM modes of one format,
+//! which share decode planes) re-uses the existing `Arc`'d plane
+//! instead of re-decoding. [`PreparedModel::forward_batch_pooled`]
+//! additionally shards the dense GEMMs (and per-sample conv GEMMs)
+//! across a [`WorkerPool`]; results stay bit-identical to the
+//! single-threaded path.
 
-use crate::nn::gemm::{conv2d_gemm, encode_matrix, gemm_bt, EncodedMatrix};
+use std::sync::Arc;
+
+use crate::nn::gemm::{conv2d_gemm, encode_matrix, gemm_bt, gemm_bt_pool, EncodedMatrix, PlaneCache};
 use crate::nn::layers::{ArithMode, Layer};
 use crate::nn::model::Model;
+use crate::nn::pool::WorkerPool;
 use crate::nn::tensor::Tensor;
 
 /// Per-layer prepared state (weights already encoded for the mode).
 enum Prepared {
     Dense {
-        /// `[out, in]` weight plane.
-        w: EncodedMatrix,
+        /// `[out, in]` weight plane (shared via the plane cache).
+        w: Arc<EncodedMatrix>,
         b: Vec<f32>,
     },
     Conv2d {
-        /// `[oc, ic·kh·kw]` filter plane.
-        w: EncodedMatrix,
+        /// `[oc, ic·kh·kw]` filter plane (shared via the plane cache).
+        w: Arc<EncodedMatrix>,
         b: Vec<f32>,
         ic: usize,
         kh: usize,
@@ -51,18 +62,20 @@ pub struct PreparedModel {
 }
 
 impl PreparedModel {
-    /// Encode a model's parameters for a mode.
+    /// Encode a model's parameters for a mode (planes shared through
+    /// the global [`PlaneCache`]).
     pub fn new(model: &Model, mode: ArithMode) -> Self {
+        let cache = PlaneCache::global();
         let layers = model
             .layers
             .iter()
             .map(|l| match l {
                 Layer::Dense { w, b } => Prepared::Dense {
-                    w: encode_matrix(&mode, w.shape[0], w.shape[1], &w.data),
+                    w: cache.encode(&mode, w.shape[0], w.shape[1], &w.data),
                     b: b.data.clone(),
                 },
                 Layer::Conv2d { w, b, stride, pad } => Prepared::Conv2d {
-                    w: encode_matrix(
+                    w: cache.encode(
                         &mode,
                         w.shape[0],
                         w.shape[1] * w.shape[2] * w.shape[3],
@@ -107,17 +120,30 @@ impl PreparedModel {
     /// [`PreparedModel::forward`] calls: posit outputs round once from
     /// an exact quire, and the float path keeps ascending-k order.
     pub fn forward_batch(&self, xs: &[Tensor]) -> Vec<Tensor> {
+        self.forward_batch_pooled(xs, None)
+    }
+
+    /// [`PreparedModel::forward_batch`] with the dense GEMMs sharded
+    /// over `pool` (row bands) and conv layers fanned out one sample
+    /// per task. `None` — or a zero-worker pool — is the sequential
+    /// path. Outputs are bit-identical either way.
+    pub fn forward_batch_pooled(&self, xs: &[Tensor], pool: Option<&WorkerPool>) -> Vec<Tensor> {
         for x in xs {
             assert_eq!(x.shape, self.input_shape, "input shape mismatch");
         }
         let mut hs: Vec<Tensor> = xs.to_vec();
         for l in &self.layers {
-            hs = self.forward_layer_batch(l, hs);
+            hs = self.forward_layer_batch(l, hs, pool);
         }
         hs
     }
 
-    fn forward_layer_batch(&self, l: &Prepared, hs: Vec<Tensor>) -> Vec<Tensor> {
+    fn forward_layer_batch(
+        &self,
+        l: &Prepared,
+        hs: Vec<Tensor>,
+        pool: Option<&WorkerPool>,
+    ) -> Vec<Tensor> {
         match l {
             Prepared::Dense { w, b } => {
                 let (out_dim, in_dim) = (w.rows, w.cols);
@@ -129,7 +155,10 @@ impl PreparedModel {
                 }
                 let xe = encode_matrix(&self.mode, batch, in_dim, &flat);
                 let mut y = vec![0f32; batch * out_dim];
-                gemm_bt(&self.mode, &xe, w, Some(b), &mut y);
+                match pool {
+                    Some(p) => gemm_bt_pool(&self.mode, &xe, w.as_ref(), Some(b), &mut y, p),
+                    None => gemm_bt(&self.mode, &xe, w.as_ref(), Some(b), &mut y),
+                }
                 (0..batch)
                     .map(|i| {
                         Tensor::from_vec(&[out_dim], y[i * out_dim..(i + 1) * out_dim].to_vec())
@@ -144,10 +173,47 @@ impl PreparedModel {
                 kw,
                 stride,
                 pad,
-            } => hs
-                .iter()
-                .map(|h| conv2d_gemm(&self.mode, h, w, b, *ic, *kh, *kw, *stride, *pad))
-                .collect(),
+            } => {
+                let (ic, kh, kw, stride, pad) = (*ic, *kh, *kw, *stride, *pad);
+                match pool {
+                    Some(p) if hs.len() > 1 && p.workers() > 1 => {
+                        // One task per sample: conv GEMMs are already
+                        // per-sample, so sample-level sharding keeps the
+                        // im2col buffers worker-local.
+                        let mode = &self.mode;
+                        let mut outs: Vec<Option<Tensor>> = (0..hs.len()).map(|_| None).collect();
+                        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = outs
+                            .iter_mut()
+                            .zip(hs.iter())
+                            .map(|(slot, h)| {
+                                Box::new(move || {
+                                    *slot = Some(conv2d_gemm(
+                                        mode,
+                                        h,
+                                        w.as_ref(),
+                                        b,
+                                        ic,
+                                        kh,
+                                        kw,
+                                        stride,
+                                        pad,
+                                    ));
+                                }) as Box<dyn FnOnce() + Send + '_>
+                            })
+                            .collect();
+                        p.run(tasks);
+                        outs.into_iter()
+                            .map(|o| o.expect("conv task completed"))
+                            .collect()
+                    }
+                    _ => hs
+                        .iter()
+                        .map(|h| {
+                            conv2d_gemm(&self.mode, h, w.as_ref(), b, ic, kh, kw, stride, pad)
+                        })
+                        .collect(),
+                }
+            }
             Prepared::MaxPool2d { k, stride } => {
                 let l = Layer::MaxPool2d {
                     k: *k,
@@ -264,6 +330,61 @@ mod tests {
                         prepared.name
                     );
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_forward_batch_is_bit_identical() {
+        // Dense + conv pooled paths vs the sequential path, all modes.
+        let pool = WorkerPool::new(4);
+        let mut rng = Rng::new(24);
+        let mlp = Model::init(ModelKind::MlpIsolet, &mut rng);
+        let lenet = Model::init(ModelKind::LeNet5 { in_ch: 1, in_hw: 28 }, &mut rng);
+        for mode in [
+            ArithMode::float32(),
+            ArithMode::posit_plam(PositFormat::P16E1),
+        ] {
+            let pm = PreparedModel::new(&mlp, mode.clone());
+            let xs: Vec<Tensor> = (0..19)
+                .map(|_| {
+                    Tensor::from_vec(
+                        &[617],
+                        (0..617).map(|_| rng.normal() as f32 * 0.5).collect(),
+                    )
+                })
+                .collect();
+            let want = pm.forward_batch(&xs);
+            let got = pm.forward_batch_pooled(&xs, Some(&pool));
+            for (g, w) in got.iter().zip(want.iter()) {
+                assert_eq!(g.data, w.data, "mlp {}", pm.name);
+            }
+
+            let pc = PreparedModel::new(&lenet, mode);
+            let imgs: Vec<Tensor> = (0..3)
+                .map(|_| Tensor::from_vec(&[1, 28, 28], (0..784).map(|_| rng.f32()).collect()))
+                .collect();
+            let want = pc.forward_batch(&imgs);
+            let got = pc.forward_batch_pooled(&imgs, Some(&pool));
+            for (g, w) in got.iter().zip(want.iter()) {
+                assert_eq!(g.data, w.data, "lenet {}", pc.name);
+            }
+        }
+        pool.shutdown();
+    }
+
+    #[test]
+    fn repeated_preparation_shares_weight_planes() {
+        // Same model + same format twice → the plane cache returns the
+        // same Arc'd planes instead of re-decoding (and exact/PLAM of
+        // one format share planes too, since decode ignores the mul).
+        let mut rng = Rng::new(25);
+        let model = Model::init(ModelKind::MlpIsolet, &mut rng);
+        let a = PreparedModel::new(&model, ArithMode::posit_plam(PositFormat::P16E1));
+        let b = PreparedModel::new(&model, ArithMode::posit_exact(PositFormat::P16E1));
+        for (la, lb) in a.layers.iter().zip(b.layers.iter()) {
+            if let (Prepared::Dense { w: wa, .. }, Prepared::Dense { w: wb, .. }) = (la, lb) {
+                assert!(Arc::ptr_eq(wa, wb), "planes must be shared");
             }
         }
     }

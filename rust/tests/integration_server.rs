@@ -38,9 +38,7 @@ fn make_router() -> Router {
 fn all_three_formats_serve_and_agree_on_argmax_mostly() {
     let h = serve(
         make_router(),
-        &ServerConfig {
-            addr: "127.0.0.1:0".into(),
-        },
+        &ServerConfig::default(),
     )
     .unwrap();
     let mut c = Client::connect(h.addr).unwrap();
@@ -74,9 +72,7 @@ fn all_three_formats_serve_and_agree_on_argmax_mostly() {
 fn concurrent_load_batches_and_counts() {
     let h = serve(
         make_router(),
-        &ServerConfig {
-            addr: "127.0.0.1:0".into(),
-        },
+        &ServerConfig::default(),
     )
     .unwrap();
     let addr = h.addr;
@@ -113,9 +109,7 @@ fn concurrent_load_batches_and_counts() {
 fn malformed_requests_do_not_kill_the_server() {
     let h = serve(
         make_router(),
-        &ServerConfig {
-            addr: "127.0.0.1:0".into(),
-        },
+        &ServerConfig::default(),
     )
     .unwrap();
     // Garbage connection.
@@ -168,9 +162,7 @@ fn failing_backend_reports_errors_but_server_survives() {
     router.register("flaky", Arc::new(FlakyBackend), BatcherConfig::default());
     let h = serve(
         router,
-        &ServerConfig {
-            addr: "127.0.0.1:0".into(),
-        },
+        &ServerConfig::default(),
     )
     .unwrap();
     let mut c = Client::connect(h.addr).unwrap();

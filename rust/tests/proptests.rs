@@ -5,6 +5,7 @@
 //! and prints the failing case on assertion, which is enough to
 //! reproduce deterministically.
 
+use plam::coordinator::wire;
 use plam::posit::{
     self, decode, encode, from_f64, plam_mul, plam_value_f64, to_f64, DecodeResult, PositFormat,
     Quire, PLAM_MAX_RELATIVE_ERROR,
@@ -330,6 +331,149 @@ fn prop_div_brackets_true_quotient() {
             lo <= truth + eps && truth - eps <= hi,
             "a={a:#x} b={b:#x} q={q:#x}: {lo} !<= {truth} !<= {hi}"
         );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Wire-protocol properties: arbitrary frames round-trip, and malformed
+// frames (truncated, oversized, garbage) produce clean errors — never
+// panics, which is what keeps a hostile client from killing its
+// connection thread.
+// ---------------------------------------------------------------------
+
+fn random_model_name(rng: &mut Rng) -> String {
+    const ALPHABET: &[u8] = b"abcdefghijklmnopqrstuvwxyz0123456789-_.";
+    let len = rng.below(33) as usize;
+    (0..len)
+        .map(|_| ALPHABET[rng.below(ALPHABET.len() as u64) as usize] as char)
+        .collect()
+}
+
+/// Arbitrary f32 payload from raw bits: includes NaN, ±inf, subnormals.
+fn random_payload(rng: &mut Rng, max_len: u64) -> Vec<f32> {
+    let len = rng.below(max_len + 1) as usize;
+    (0..len).map(|_| f32::from_bits(rng.next_u32())).collect()
+}
+
+fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+#[test]
+fn prop_wire_request_round_trips_arbitrary_frames() {
+    let mut rng = Rng::new(0x31BE);
+    for case in 0..2_000 {
+        let req = wire::Request {
+            model: random_model_name(&mut rng),
+            input: random_payload(&mut rng, 64),
+        };
+        let mut buf = vec![];
+        wire::write_request(&mut buf, &req).unwrap();
+        let got = wire::read_request(&mut buf.as_slice())
+            .unwrap_or_else(|e| panic!("case {case}: {e:#}"));
+        assert_eq!(got.model, req.model, "case {case}");
+        assert!(bits_eq(&got.input, &req.input), "case {case}: payload bits");
+    }
+}
+
+#[test]
+fn prop_wire_response_round_trips_arbitrary_frames() {
+    let mut rng = Rng::new(0x31BF);
+    for case in 0..2_000 {
+        if rng.below(4) == 0 {
+            // Error frame with an arbitrary ASCII message.
+            let msg = random_model_name(&mut rng);
+            let mut buf = vec![];
+            wire::write_err(&mut buf, &msg).unwrap();
+            let got = wire::read_response(&mut buf.as_slice()).unwrap();
+            assert_eq!(got, Err(msg), "case {case}");
+        } else {
+            let out = random_payload(&mut rng, 64);
+            let mut buf = vec![];
+            wire::write_ok(&mut buf, &out).unwrap();
+            let got = wire::read_response(&mut buf.as_slice())
+                .unwrap()
+                .expect("ok frame");
+            assert!(bits_eq(&got, &out), "case {case}: payload bits");
+        }
+    }
+}
+
+#[test]
+fn prop_wire_truncated_frames_error_cleanly() {
+    // Every strict prefix of a valid frame is an error, not a panic and
+    // not a bogus success.
+    let mut rng = Rng::new(0x7C); // "truncated"
+    for _ in 0..50 {
+        let req = wire::Request {
+            model: random_model_name(&mut rng),
+            input: random_payload(&mut rng, 16),
+        };
+        let mut rbuf = vec![];
+        wire::write_request(&mut rbuf, &req).unwrap();
+        for cut in 0..rbuf.len() {
+            assert!(
+                wire::read_request(&mut &rbuf[..cut]).is_err(),
+                "prefix {cut}/{} parsed as a full request",
+                rbuf.len()
+            );
+        }
+        let mut obuf = vec![];
+        wire::write_ok(&mut obuf, &req.input).unwrap();
+        for cut in 0..obuf.len() {
+            assert!(
+                wire::read_response(&mut &obuf[..cut]).is_err(),
+                "prefix {cut}/{} parsed as a full response",
+                obuf.len()
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_wire_oversized_frames_rejected() {
+    // Oversized declared lengths must be rejected up front (bounded
+    // allocation), for both frame kinds and both length fields.
+    let mut oversized_name = vec![];
+    oversized_name.extend_from_slice(b"PLRQ");
+    oversized_name.extend_from_slice(&(u32::MAX).to_le_bytes());
+    assert!(wire::read_request(&mut oversized_name.as_slice()).is_err());
+
+    let mut oversized_count = vec![];
+    oversized_count.extend_from_slice(b"PLRQ");
+    oversized_count.extend_from_slice(&1u32.to_le_bytes());
+    oversized_count.push(b'm');
+    oversized_count.extend_from_slice(&(17 * 1024 * 1024u32).to_le_bytes());
+    assert!(wire::read_request(&mut oversized_count.as_slice()).is_err());
+
+    let mut oversized_resp = vec![];
+    oversized_resp.extend_from_slice(b"PLRS");
+    oversized_resp.extend_from_slice(&0u32.to_le_bytes());
+    oversized_resp.extend_from_slice(&u32::MAX.to_le_bytes());
+    assert!(wire::read_response(&mut oversized_resp.as_slice()).is_err());
+}
+
+#[test]
+fn prop_wire_garbage_never_panics() {
+    // Random byte soup: parsing must return (either way), never panic.
+    // Valid-looking prefixes with absurd inner lengths are the
+    // interesting cases, so bias some buffers to start with the magic.
+    let mut rng = Rng::new(0x6A33A6E);
+    for _ in 0..2_000 {
+        let len = rng.below(192) as usize;
+        let mut buf: Vec<u8> = (0..len).map(|_| rng.next_u32() as u8).collect();
+        match rng.below(4) {
+            0 if len >= 4 => buf[..4].copy_from_slice(b"PLRQ"),
+            1 if len >= 4 => buf[..4].copy_from_slice(b"PLRS"),
+            _ => {}
+        }
+        let _ = wire::read_request(&mut buf.as_slice());
+        let _ = wire::read_response(&mut buf.as_slice());
+        // Interpreting the same soup mid-stream must also be safe.
+        if len > 3 {
+            let _ = wire::read_request(&mut &buf[3..]);
+            let _ = wire::read_response(&mut &buf[3..]);
+        }
     }
 }
 

@@ -1,0 +1,208 @@
+//! Concurrency stress: the full serving stack — TCP server, admission
+//! valve, per-model batchers, shared work-stealing GEMM pool — under
+//! 64 interleaved clients across two models, asserting *bit-exact*
+//! equality with single-threaded `forward_batch` results and zero
+//! dropped or reordered responses.
+//!
+//! Determinism is the whole point: posit outputs round once from an
+//! exact quire and the float path keeps a fixed summation order, so no
+//! matter how requests are batched together or how the batch is
+//! sharded across pool workers, every response must equal the
+//! sequential reference to the last bit. Worker count defaults to 8
+//! and can be pinned via `PLAM_STRESS_WORKERS` (CI runs 4).
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use plam::coordinator::{serve, BatcherConfig, Client, NnBackend, Router, ServerConfig};
+use plam::nn::{ArithMode, Layer, Model, PreparedModel, Tensor, WorkerPool};
+use plam::posit::PositFormat;
+use plam::prng::Rng;
+
+const CLIENTS: usize = 64;
+const REQUESTS_PER_CLIENT: usize = 4;
+
+fn stress_workers() -> usize {
+    std::env::var("PLAM_STRESS_WORKERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(8)
+}
+
+fn random_tensor(rng: &mut Rng, shape: &[usize]) -> Tensor {
+    Tensor::from_vec(
+        shape,
+        (0..shape.iter().product::<usize>())
+            .map(|_| rng.normal() as f32 * 0.5)
+            .collect(),
+    )
+}
+
+/// Small two-layer MLP so the stress budget goes into concurrency, not
+/// into MACs.
+fn small_model(name: &str, in_dim: usize, hidden: usize, out_dim: usize, seed: u64) -> Model {
+    let mut rng = Rng::new(seed);
+    Model {
+        name: name.into(),
+        input_shape: vec![in_dim],
+        layers: vec![
+            Layer::Dense {
+                w: random_tensor(&mut rng, &[hidden, in_dim]),
+                b: random_tensor(&mut rng, &[hidden]),
+            },
+            Layer::Relu,
+            Layer::Dense {
+                w: random_tensor(&mut rng, &[out_dim, hidden]),
+                b: random_tensor(&mut rng, &[out_dim]),
+            },
+        ],
+    }
+}
+
+/// Deterministic input for one (client, request) pair.
+fn request_input(client: usize, req: usize, in_dim: usize) -> Vec<f32> {
+    let mut rng = Rng::new(0x57E5 + (client as u64) * 1000 + req as u64);
+    (0..in_dim).map(|_| rng.normal() as f32 * 0.5).collect()
+}
+
+#[test]
+fn sixty_four_clients_two_models_bit_exact_no_drops_no_reorder() {
+    // Two models with different shapes, so a cross-model mixup shows up
+    // as a wrong output length, and different arithmetic so a
+    // cross-batcher mixup changes bits.
+    let model_a = small_model("stress-a", 32, 24, 10, 0xA);
+    let model_b = small_model("stress-b", 48, 20, 7, 0xB);
+    let mode_a = ArithMode::posit_plam(PositFormat::P16E1);
+    let mode_b = ArithMode::posit_exact(PositFormat::P16E1);
+
+    // Single-threaded references, computed through the same batched
+    // entry point the server uses (forward_batch, no pool).
+    let ref_a = Arc::new(PreparedModel::new(&model_a, mode_a.clone()));
+    let ref_b = Arc::new(PreparedModel::new(&model_b, mode_b.clone()));
+
+    let mut router = Router::new();
+    let cfg = BatcherConfig {
+        max_batch: 16,
+        max_wait: Duration::from_millis(2),
+    };
+    router.register("stress-a", Arc::new(NnBackend::new(model_a, mode_a)), cfg);
+    router.register("stress-b", Arc::new(NnBackend::new(model_b, mode_b)), cfg);
+
+    let workers = stress_workers();
+    let h = serve(
+        router,
+        &ServerConfig {
+            workers,
+            max_inflight: 128,
+            ..ServerConfig::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(h.pool().unwrap().workers(), workers);
+    let addr = h.addr;
+
+    let mut joins = vec![];
+    for client in 0..CLIENTS {
+        let (ref_a, ref_b) = (ref_a.clone(), ref_b.clone());
+        joins.push(std::thread::spawn(move || {
+            let mut c = Client::connect(addr).unwrap();
+            // Interleave the two models on one connection; responses
+            // must come back in request order, so checking response i
+            // against request i's reference catches both drops (hang /
+            // error) and reordering (wrong bits or wrong length).
+            for req in 0..REQUESTS_PER_CLIENT {
+                let use_a = (client + req) % 2 == 0;
+                let (name, in_dim, reference) = if use_a {
+                    ("stress-a", 32, &ref_a)
+                } else {
+                    ("stress-b", 48, &ref_b)
+                };
+                let input = request_input(client, req, in_dim);
+                let got = c.infer(name, &input).unwrap();
+                let want = reference
+                    .forward(&Tensor::from_vec(&[in_dim], input))
+                    .data;
+                assert_eq!(
+                    got.len(),
+                    want.len(),
+                    "client {client} req {req}: wrong output length (cross-model mixup?)"
+                );
+                let same = got
+                    .iter()
+                    .zip(want.iter())
+                    .all(|(g, w)| g.to_bits() == w.to_bits());
+                assert!(
+                    same,
+                    "client {client} req {req} ({name}): response not bit-exact"
+                );
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+
+    // Nothing dropped: every request accounted for as completed, none
+    // failed, and the admission valve drained.
+    let total: u64 = ["stress-a", "stress-b"]
+        .iter()
+        .map(|n| {
+            let m = &h.router().get(n).unwrap().metrics;
+            assert_eq!(m.failed.load(Ordering::Relaxed), 0, "{n} had failures");
+            m.completed.load(Ordering::Relaxed)
+        })
+        .sum();
+    assert_eq!(total, (CLIENTS * REQUESTS_PER_CLIENT) as u64);
+    assert_eq!(h.admission().inflight(), 0);
+    assert!(h.admission().peak() as usize <= 128);
+
+    // The pool actually served the batchers (gauges exported).
+    let st = h.pool().unwrap().stats();
+    assert_eq!(st.queue_depth, 0, "pool queues drained");
+    assert_eq!(st.active, 0, "no stuck shards");
+    h.shutdown();
+}
+
+#[test]
+fn pooled_engine_matches_sequential_under_contention() {
+    // Direct (no TCP) contention check: many threads share one pool and
+    // hammer the same prepared model; every pooled batch must be
+    // bit-identical to the sequential reference computed up front.
+    let model = small_model("contend", 40, 32, 12, 0xC);
+    let mode = ArithMode::posit_plam(PositFormat::P16E1);
+    let prepared = Arc::new(PreparedModel::new(&model, mode));
+    let pool = Arc::new(WorkerPool::new(stress_workers().min(4)));
+
+    let batches: Vec<Vec<Tensor>> = (0..8)
+        .map(|b| {
+            (0..17)
+                .map(|i| {
+                    Tensor::from_vec(&[40], request_input(b, i, 40))
+                })
+                .collect()
+        })
+        .collect();
+    let references: Vec<Vec<Vec<f32>>> = batches
+        .iter()
+        .map(|xs| prepared.forward_batch(xs).into_iter().map(|t| t.data).collect())
+        .collect();
+
+    let mut joins = vec![];
+    for (xs, want) in batches.into_iter().zip(references.into_iter()) {
+        let prepared = prepared.clone();
+        let pool = pool.clone();
+        joins.push(std::thread::spawn(move || {
+            for _ in 0..4 {
+                let got = prepared.forward_batch_pooled(&xs, Some(&pool));
+                for (g, w) in got.iter().zip(want.iter()) {
+                    assert_eq!(&g.data, w, "pooled batch diverged under contention");
+                }
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    pool.shutdown();
+}
