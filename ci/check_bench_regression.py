@@ -1,0 +1,184 @@
+#!/usr/bin/env python3
+"""Bench regression guard for the GEMM hot path.
+
+Compares a freshly produced ``BENCH_gemm_formats.json`` (written by
+``cargo bench --bench gemm_formats``) against the committed baseline in
+``ci/bench_baseline.json`` and fails the job when a guarded series —
+most importantly the 256^3 P16E1 PLAM case — regresses by more than the
+baseline's tolerance (default 15% in mean time, i.e. >15% throughput
+loss).
+
+Design notes:
+
+* **Skip-not-fail** when the bench JSON is absent: bench jobs are
+  optional in some pipelines, and a missing artifact means "benches
+  didn't run", not "the code got slower".
+* **Hardware calibration**: absolute nanoseconds differ across runners,
+  so the guard rescales every baseline number by the ratio of the
+  ``calibration`` series (a stable, windowing-independent workload)
+  between the current run and the baseline run. This catches real
+  kernel regressions while shrugging off runner-speed variance.
+* **Self-relative checks** need no baseline hardware at all: within one
+  JSON, the windowed kernel must not be slower than its FastQuire
+  fallback beyond tolerance — if it is, the optimisation regressed no
+  matter what the absolute numbers say.
+* **Provisional baselines**: a baseline recorded on unknown hardware
+  (``"provisional": true``) downgrades absolute-number failures to
+  warnings (self-relative checks still fail hard). Refresh with
+  ``check_bench_regression.py --update`` on a representative runner and
+  commit the result to arm the absolute gate.
+
+Usage:
+    python3 ci/check_bench_regression.py \
+        [--bench rust/BENCH_gemm_formats.json] \
+        [--baseline ci/bench_baseline.json] [--update]
+"""
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+DEFAULT_BENCH = "rust/BENCH_gemm_formats.json"
+DEFAULT_BASELINE = "ci/bench_baseline.json"
+
+
+def load_results(path):
+    """BENCH_*.json -> {series name: mean_ns}."""
+    with open(path) as f:
+        doc = json.load(f)
+    return {r["name"]: r["mean_ns"] for r in doc["results"]}
+
+
+def update_baseline(results, baseline_path, old):
+    guarded = old.get("series", {})
+    new_series = {}
+    missing = []
+    for name in guarded:
+        if name in results:
+            new_series[name] = results[name]
+        else:
+            missing.append(name)
+    if missing:
+        print(f"ERROR: bench JSON lacks guarded series: {missing}")
+        return 1
+    cal = old.get("calibration")
+    if cal and cal not in results:
+        # Refuse to arm an uncalibrated absolute gate: a baseline with
+        # calibration_mean_ns: null would compare raw nanoseconds across
+        # runners on every future CI run.
+        print(f"ERROR: bench JSON lacks the calibration series '{cal}'")
+        return 1
+    doc = {
+        "comment": old.get("comment", ""),
+        "calibration": cal,
+        "calibration_mean_ns": results.get(cal),
+        "tolerance": old.get("tolerance", 0.15),
+        "self_check_tolerance": old.get("self_check_tolerance", 0.5),
+        "provisional": False,
+        "series": new_series,
+        "self_checks": old.get("self_checks", []),
+    }
+    Path(baseline_path).write_text(json.dumps(doc, indent=2) + "\n")
+    print(f"baseline updated: {baseline_path}")
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--bench", default=DEFAULT_BENCH)
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument(
+        "--update",
+        action="store_true",
+        help="rewrite the baseline from the current bench JSON (arms the absolute gate)",
+    )
+    args = ap.parse_args()
+
+    if not Path(args.bench).exists():
+        print(f"SKIP: {args.bench} not found (benches didn't run) — not failing the job")
+        return 0
+    results = load_results(args.bench)
+
+    if not Path(args.baseline).exists():
+        print(f"SKIP: no committed baseline at {args.baseline} — nothing to compare against")
+        return 0
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+
+    if args.update:
+        return update_baseline(results, args.baseline, baseline)
+
+    tol = baseline.get("tolerance", 0.15)
+    provisional = baseline.get("provisional", False)
+    failures, warnings = [], []
+
+    # Hardware calibration factor (current runner vs baseline runner).
+    scale = 1.0
+    cal = baseline.get("calibration")
+    cal_base = baseline.get("calibration_mean_ns")
+    if cal and cal_base and cal in results:
+        scale = results[cal] / cal_base
+        print(f"calibration '{cal}': {results[cal]} ns vs {cal_base} ns -> scale {scale:.3f}")
+    else:
+        print("calibration unavailable — comparing raw nanoseconds")
+
+    # Absolute gate: guarded series vs (calibrated) baseline numbers.
+    for name, base_ns in baseline.get("series", {}).items():
+        if name not in results:
+            failures.append(f"guarded series missing from bench JSON: '{name}'")
+            continue
+        cur = results[name]
+        limit = base_ns * scale * (1.0 + tol)
+        verdict = "ok" if cur <= limit else "REGRESSION"
+        print(f"  {name}: {cur:.0f} ns (limit {limit:.0f} ns) {verdict}")
+        if cur > limit:
+            msg = (
+                f"'{name}' regressed: {cur:.0f} ns vs calibrated baseline "
+                f"{base_ns * scale:.0f} ns (+{100 * (cur / (base_ns * scale) - 1):.1f}%, "
+                f"tolerance {100 * tol:.0f}%)"
+            )
+            (warnings if provisional else failures).append(msg)
+
+    # Self-relative gate (runner-independent): `fast` must not be slower
+    # than `slow` by more than the self-check tolerance within this very
+    # run. The tolerance is deliberately looser than the absolute gate's
+    # (default 50%): both means come from one noisy smoke run on a
+    # shared runner, and the windowed kernel's expected margin over its
+    # fallback is large — this only trips when the optimisation has
+    # genuinely stopped paying for itself.
+    self_tol = baseline.get("self_check_tolerance", 0.5)
+    for chk in baseline.get("self_checks", []):
+        fast, slow = chk["fast"], chk["slow"]
+        if fast not in results or slow not in results:
+            failures.append(f"self-check series missing: '{fast}' / '{slow}'")
+            continue
+        ratio = results[fast] / results[slow]
+        verdict = "ok" if ratio <= 1.0 + self_tol else "REGRESSION"
+        print(f"  self-check: {fast} / {slow} = {ratio:.3f} {verdict}")
+        if ratio > 1.0 + self_tol:
+            failures.append(
+                f"'{fast}' is {ratio:.2f}x the time of '{slow}' — the windowed "
+                f"kernel lost to its own fallback (tolerance {100 * self_tol:.0f}%)"
+            )
+
+    for w in warnings:
+        print(f"WARN (provisional baseline — not failing): {w}")
+    if provisional and baseline.get("series"):
+        print(
+            "NOTE: baseline is provisional (recorded off-runner). Run "
+            "`python3 ci/check_bench_regression.py --update` on a "
+            "representative runner and commit ci/bench_baseline.json to arm "
+            "the absolute gate."
+        )
+    if failures:
+        print("\nFAIL: bench regression guard tripped:")
+        for msg in failures:
+            print(f"  - {msg}")
+        return 1
+    print("bench regression guard passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

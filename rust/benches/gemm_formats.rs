@@ -1,13 +1,16 @@
 //! Bench: GEMM throughput across arithmetic formats — the software-
 //! emulation ablation behind Table II's cost story (float32 vs exact
 //! posit vs PLAM, quire vs f32 accumulation), the scalar-dot vs
-//! batched-GEMM comparison across P8E0/P16E1/P32E2, plus the AOT PJRT
-//! kernel when artifacts are present.
+//! batched-GEMM comparison across P8E0/P16E1/P32E2, the windowed
+//! single-limb vs FastQuire accumulator ablation (exact + PLAM, plus a
+//! skinny M=1 GEMV), plus the AOT PJRT kernel when artifacts are
+//! present. The exported `BENCH_gemm_formats.json` feeds
+//! `ci/check_bench_regression.py` — keep series names stable.
 //!
 //! Run: cargo bench --bench gemm_formats   (PLAM_BENCH_FAST=1 for smoke)
 
 use plam::bench::{black_box, Bench};
-use plam::nn::gemm::{encode_matrix, gemm_bt, gemm_bt_pool};
+use plam::nn::gemm::{encode_matrix, gemm_bt, gemm_bt_pool, gemm_bt_with_policy, AccPolicy};
 use plam::nn::{ArithMode, Layer, Tensor, WorkerPool};
 use plam::posit::PositFormat;
 use plam::prng::Rng;
@@ -229,6 +232,111 @@ fn main() {
         if let Some(s4) = bench.speedup(&series_name(1), &series_name(4)) {
             println!("  4-worker speedup {s4:.2}× (target ≥ 2.5×)");
         }
+    }
+
+    // -----------------------------------------------------------------
+    // Windowed vs FastQuire accumulation: AccPolicy::Auto picks the
+    // scale-windowed single-limb i128 kernel whenever an output row
+    // pair's scale window fits (always, for these Gaussian operands);
+    // ForceQuire is the pre-windowing baseline. Operands are
+    // pre-encoded so each series isolates pure MAC throughput.
+    // Acceptance: ≥ 1.5× on the 256³ P16E1 PLAM case.
+    // -----------------------------------------------------------------
+    println!("\nwindowed vs FastQuire accumulation (256×256×256, exact + PLAM):");
+    {
+        let m_dim = 256usize;
+        let flat: Vec<f32> = (0..m_dim * k_dim)
+            .map(|_| rng.normal() as f32 * 0.5)
+            .collect();
+        let macs = (m_dim * k_dim * n_dim) as f64;
+        let muls: [(&str, fn(PositFormat) -> ArithMode); 2] = [
+            ("exact", ArithMode::posit_exact),
+            ("plam", ArithMode::posit_plam),
+        ];
+        for (fname, fmt) in formats {
+            for (mname, mk) in muls {
+                let mode = mk(fmt);
+                let xe = encode_matrix(&mode, m_dim, k_dim, &flat);
+                let we = encode_matrix(&mode, n_dim, k_dim, &wt.data);
+                let mut y = vec![0f32; m_dim * n_dim];
+                let win_name = format!("gemm {mname} {fname} 256^3 windowed");
+                let fq_name = format!("gemm {mname} {fname} 256^3 fastquire");
+                let win = bench
+                    .run(&win_name, || {
+                        gemm_bt_with_policy(
+                            &mode,
+                            &xe,
+                            &we,
+                            Some(&bt.data),
+                            &mut y,
+                            AccPolicy::Auto,
+                        );
+                        black_box(&y);
+                    })
+                    .clone();
+                let fq = bench
+                    .run(&fq_name, || {
+                        gemm_bt_with_policy(
+                            &mode,
+                            &xe,
+                            &we,
+                            Some(&bt.data),
+                            &mut y,
+                            AccPolicy::ForceQuire,
+                        );
+                        black_box(&y);
+                    })
+                    .clone();
+                let speedup = bench.speedup(&fq_name, &win_name).unwrap_or(1.0);
+                println!(
+                    "  {mname:<5} {fname:<6} windowed {:>12.0} MAC/s   fastquire {:>12.0} \
+                     MAC/s   speedup {speedup:.2}×{}",
+                    win.ops_per_sec(macs),
+                    fq.ops_per_sec(macs),
+                    if mname == "plam" && fname == "p16e1" {
+                        "  (target ≥ 1.5×)"
+                    } else {
+                        ""
+                    },
+                );
+            }
+        }
+
+        // Skinny GEMV (M=1): the per-request serving shape — the
+        // planner and scratch must not pay tile-sized overheads for a
+        // single output row.
+        let mode = ArithMode::posit_plam(PositFormat::P16E1);
+        let xe = encode_matrix(&mode, 1, k_dim, &flat[..k_dim]);
+        let we = encode_matrix(&mode, n_dim, k_dim, &wt.data);
+        let mut y = vec![0f32; n_dim];
+        let gemv_macs = (k_dim * n_dim) as f64;
+        let wname = "gemv plam p16e1 1x256x256 windowed";
+        let qname = "gemv plam p16e1 1x256x256 fastquire";
+        let win = bench
+            .run(wname, || {
+                gemm_bt_with_policy(&mode, &xe, &we, Some(&bt.data), &mut y, AccPolicy::Auto);
+                black_box(&y);
+            })
+            .clone();
+        let fq = bench
+            .run(qname, || {
+                gemm_bt_with_policy(
+                    &mode,
+                    &xe,
+                    &we,
+                    Some(&bt.data),
+                    &mut y,
+                    AccPolicy::ForceQuire,
+                );
+                black_box(&y);
+            })
+            .clone();
+        println!(
+            "  gemv  p16e1  windowed {:>12.0} MAC/s   fastquire {:>12.0} MAC/s   speedup {:.2}×",
+            win.ops_per_sec(gemv_macs),
+            fq.ops_per_sec(gemv_macs),
+            bench.speedup(qname, wname).unwrap_or(1.0)
+        );
     }
 
     // PJRT kernel artifact (Pallas PLAM GEMM), if built.

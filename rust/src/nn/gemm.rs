@@ -4,14 +4,35 @@
 //! The scalar engine this replaces decoded both operand vectors per dot
 //! product; for a batch of B samples through a `[N, K]` weight matrix
 //! that re-encoded the same N·K weights B times, which rivalled the MAC
-//! work itself. Here each matrix is pre-encoded *once* into a plane of
-//! [`DecEntry`]s (via the 64 K decode tables for n ≤ 16 formats, or
-//! [`decode_entry`] directly for wider ones, following the template
-//! reuse idea of Murillo et al.'s Template-Based Posit Multiplication)
-//! and the inner loop runs cache-blocked over `MB × NB` output tiles
-//! with per-output [`FastQuire`] accumulation — exact EMAC semantics,
-//! one rounding per output, with either the exact (paper Fig. 3) or the
-//! PLAM (paper Fig. 4, Eq. 17) product rule.
+//! work itself. Here each matrix is pre-encoded *once* — via the 64 K
+//! decode tables for n ≤ 16 formats, or [`decode_entry`] directly for
+//! wider ones, following the template reuse idea of Murillo et al.'s
+//! Template-Based Posit Multiplication — into structure-of-arrays
+//! planes: a `scales: Vec<i16>` plane (zero/NaR as sentinel scales) and
+//! an `sfracs: Vec<u32>` plane (Q30 fraction, sign packed in bit 31).
+//! SoA planes carry 6 bytes/element instead of the 8-byte AoS
+//! `DecEntry` and keep each loaded cache line pure payload for the
+//! k-loop. The inner loop runs cache-blocked over `MB × NB` output
+//! tiles with either the exact (paper Fig. 3) or the PLAM (paper
+//! Fig. 4, Eq. 17) product rule — exact EMAC semantics, one rounding
+//! per output, whichever accumulator runs:
+//!
+//! * **Scale-windowed single-limb accumulation** (the common case):
+//!   encoding records per-`row × KB` panel min/max scales and zero/NaR
+//!   occupancy masks ([`PanelMeta`]). When an output row pair's
+//!   combined product-scale window passes [`window_anchor`]'s
+//!   feasibility check (`window + sig bits + ⌈log₂ K⌉ ≤ 126` — always
+//!   for P8E0, and for typical P16E1/P32E2 layers), the whole dot
+//!   accumulates in one [`WindowedAcc`] `i128` at a fixed anchor scale:
+//!   one shift + one add per MAC. Panels whose occupancy mask is clean
+//!   additionally run a branch-free 4×-unrolled MAC loop; panels with
+//!   zeros/NaRs keep sentinel branches.
+//! * **[`FastQuire`] fallback**: outputs whose window does not fit
+//!   (adversarial scale spreads) accumulate exactly as before. Both
+//!   accumulators hold the mathematically exact sum and round once
+//!   through the same `FastQuire` read-out, so results are
+//!   **bit-identical** either way ([`AccPolicy::ForceQuire`] pins this
+//!   in tests and serves as the bench baseline).
 //!
 //! Orientation: `gemm_bt` computes `Y[M, N] = X[M, K] · Wᵀ + bias`
 //! with `W` stored row-major `[N, K]`, so both operands stream
@@ -22,22 +43,26 @@
 //!
 //! * [`gemm_bt_pool`] shards the M (batch) dimension into MB-aligned
 //!   row bands and fans them out over a [`WorkerPool`]. Rows are
-//!   independent (each output rounds once from its own quire; the
-//!   float path keeps ascending-k order per row), so pooled results
-//!   are bit-identical to the sequential call. Each worker reuses a
-//!   thread-local [`FastQuire`] scratch pad across shards.
+//!   independent (each output rounds once from its own accumulator;
+//!   the float path keeps ascending-k order per row), so pooled
+//!   results are bit-identical to the sequential call. Each worker
+//!   reuses a thread-local accumulator scratch pad across shards.
 //! * [`PlaneCache`] memoises encoded planes by `(format, shape, data)`
 //!   so concurrent servers registering the same weights (or the same
 //!   weights under exact *and* PLAM modes, which share decode planes)
-//!   never re-decode them.
+//!   never re-decode them. Cache accounting covers both SoA planes and
+//!   the panel metadata.
 
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
-use crate::posit::tables::{decode_entry, DecEntry, FW};
-use crate::posit::{from_f32, to_f32, FastQuire, PositFormat};
+use crate::posit::tables::{
+    decode_entry, sfrac_sign, sfrac_significand, DecEntry, FW, SCALE_NAR, SCALE_ZERO,
+    SFRAC_FRAC_MASK,
+};
+use crate::posit::{from_f32, to_f32, window_anchor, FastQuire, PositFormat, WindowedAcc};
 
 use super::layers::{ArithMode, MulKind};
 use super::pool::WorkerPool;
@@ -51,28 +76,120 @@ const NB: usize = 32;
 /// stays cache-resident while every tile row streams over it.
 const KB: usize = 512;
 
+/// Panel occupancy bit: the panel contains at least one posit zero.
+pub const SPECIAL_ZERO: u8 = 1;
+/// Panel occupancy bit: the panel contains at least one NaR.
+pub const SPECIAL_NAR: u8 = 1 << 1;
+
+/// Scale/specials summary of one `row × KB` panel chunk of an encoded
+/// plane (and, folded across chunks, of a whole row).
+/// `min_scale`/`max_scale` cover only *normal* entries — a panel with
+/// no normal entries keeps the inverted init (`min > max`). `specials`
+/// is the zero/NaR occupancy mask ([`SPECIAL_ZERO`] | [`SPECIAL_NAR`]):
+/// the MAC dispatcher runs the branch-free unrolled loop only over
+/// panels whose mask is clean.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PanelMeta {
+    /// Smallest normal scale in the panel (`i16::MAX` when none).
+    pub min_scale: i16,
+    /// Largest normal scale in the panel (`i16::MIN` when none).
+    pub max_scale: i16,
+    /// Zero/NaR occupancy mask.
+    pub specials: u8,
+}
+
+impl PanelMeta {
+    /// Inverted-empty init: folding any normal entry fixes the order.
+    const EMPTY: PanelMeta = PanelMeta {
+        min_scale: i16::MAX,
+        max_scale: i16::MIN,
+        specials: 0,
+    };
+
+    #[inline(always)]
+    fn fold(&mut self, e: &DecEntry) {
+        if e.is_zero() {
+            self.specials |= SPECIAL_ZERO;
+        } else if e.is_nar() {
+            self.specials |= SPECIAL_NAR;
+        } else {
+            self.min_scale = self.min_scale.min(e.scale);
+            self.max_scale = self.max_scale.max(e.scale);
+        }
+    }
+
+    fn merge(&mut self, o: &PanelMeta) {
+        self.min_scale = self.min_scale.min(o.min_scale);
+        self.max_scale = self.max_scale.max(o.max_scale);
+        self.specials |= o.specials;
+    }
+
+    /// True if the panel holds any zero or NaR entry.
+    #[inline(always)]
+    pub fn has_specials(&self) -> bool {
+        self.specials != 0
+    }
+}
+
 /// A matrix pre-encoded for one arithmetic mode: f32 copy for the
-/// float path, pre-aligned decode planes for the posit paths.
+/// float path; for the posit paths, SoA decode planes (`scales` +
+/// sign-packed `sfracs`) plus per-panel scale-window/occupancy
+/// metadata that the kernel's accumulator planner reads.
 pub struct EncodedMatrix {
     /// Row count.
     pub rows: usize,
     /// Column count (the contraction length in [`gemm_bt`]).
     pub cols: usize,
     f32s: Vec<f32>,
-    dec: Vec<DecEntry>,
+    /// Combined scales, one per element ([`SCALE_ZERO`]/[`SCALE_NAR`]
+    /// sentinels for specials).
+    scales: Vec<i16>,
+    /// Sign-packed Q30 fractions ([`DecEntry::sfrac`] layout).
+    sfracs: Vec<u32>,
+    /// Per `row × KB-chunk` summaries, `rows × cols.div_ceil(KB)`
+    /// row-major — chunked with the same `KB` as the GEMM k blocking.
+    panels: Vec<PanelMeta>,
+    /// Per-row fold of `panels`: windowed feasibility is a whole-row
+    /// property (the accumulator lives across every k chunk).
+    row_meta: Vec<PanelMeta>,
 }
 
 impl EncodedMatrix {
-    /// Heap footprint of the encoded plane (cache accounting).
+    /// Heap footprint of the encoded plane including panel metadata
+    /// (cache accounting).
     pub fn bytes(&self) -> usize {
         self.f32s.len() * std::mem::size_of::<f32>()
-            + self.dec.len() * std::mem::size_of::<DecEntry>()
+            + self.scales.len() * std::mem::size_of::<i16>()
+            + self.sfracs.len() * std::mem::size_of::<u32>()
+            + (self.panels.len() + self.row_meta.len()) * std::mem::size_of::<PanelMeta>()
+    }
+
+    /// Number of KB-sized k chunks per row (0 for empty posit planes
+    /// and for float planes, which carry no panel metadata).
+    pub fn k_chunks(&self) -> usize {
+        if self.scales.is_empty() {
+            0
+        } else {
+            self.cols.div_ceil(KB)
+        }
+    }
+
+    /// Scale/specials summary of one `row × KB` panel.
+    pub fn panel(&self, row: usize, chunk: usize) -> &PanelMeta {
+        &self.panels[row * self.cols.div_ceil(KB) + chunk]
+    }
+
+    /// Whole-row scale/specials summary.
+    pub fn row_window(&self, row: usize) -> &PanelMeta {
+        &self.row_meta[row]
     }
 }
 
 /// Encode a row-major `rows × cols` matrix for a mode. This is the
 /// decode-once step: do it per weight matrix at model-preparation time
-/// and per activation batch at the layer boundary.
+/// and per activation batch at the layer boundary. Posit planes are
+/// written as SoA (`scales`/`sfracs`) with panel metadata folded in
+/// the same pass.
 pub fn encode_matrix(mode: &ArithMode, rows: usize, cols: usize, data: &[f32]) -> EncodedMatrix {
     assert_eq!(rows * cols, data.len(), "matrix shape/data mismatch");
     match mode {
@@ -80,21 +197,46 @@ pub fn encode_matrix(mode: &ArithMode, rows: usize, cols: usize, data: &[f32]) -
             rows,
             cols,
             f32s: data.to_vec(),
-            dec: Vec::new(),
+            scales: Vec::new(),
+            sfracs: Vec::new(),
+            panels: Vec::new(),
+            row_meta: Vec::new(),
         },
         ArithMode::Posit { fmt, table, .. } => {
-            let dec = match table {
-                Some(t) => data.iter().map(|&v| t.get(from_f32(*fmt, v))).collect(),
-                None => data
-                    .iter()
-                    .map(|&v| decode_entry(*fmt, from_f32(*fmt, v)))
-                    .collect(),
+            let dec_one = |v: f32| -> DecEntry {
+                match table {
+                    Some(t) => t.get(from_f32(*fmt, v)),
+                    None => decode_entry(*fmt, from_f32(*fmt, v)),
+                }
             };
+            let kc = cols.div_ceil(KB);
+            let mut scales = Vec::with_capacity(rows * cols);
+            let mut sfracs = Vec::with_capacity(rows * cols);
+            let mut panels = Vec::with_capacity(rows * kc);
+            let mut row_meta = Vec::with_capacity(rows);
+            for r in 0..rows {
+                let mut rm = PanelMeta::EMPTY;
+                for c0 in (0..cols).step_by(KB) {
+                    let mut pm = PanelMeta::EMPTY;
+                    for c in c0..(c0 + KB).min(cols) {
+                        let e = dec_one(data[r * cols + c]);
+                        scales.push(e.scale);
+                        sfracs.push(e.sfrac());
+                        pm.fold(&e);
+                    }
+                    rm.merge(&pm);
+                    panels.push(pm);
+                }
+                row_meta.push(rm);
+            }
             EncodedMatrix {
                 rows,
                 cols,
                 f32s: Vec::new(),
-                dec,
+                scales,
+                sfracs,
+                panels,
+                row_meta,
             }
         }
     }
@@ -292,13 +434,26 @@ impl PlaneCache {
 // GEMM kernels
 // ---------------------------------------------------------------------
 
+/// Accumulator selection policy for the posit kernels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AccPolicy {
+    /// Windowed single-limb accumulation wherever an output row pair's
+    /// scale window fits ([`window_anchor`]), [`FastQuire`] elsewhere.
+    /// The default — outputs are bit-identical either way.
+    Auto,
+    /// [`FastQuire`] everywhere — the pre-windowing kernel. Baseline
+    /// for benches and for fallback-equivalence tests.
+    ForceQuire,
+}
+
 /// `Y[M, N] = X[M, K] · Wᵀ (+ bias)`, `W` row-major `[N, K]`, `bias`
 /// broadcast over rows (one value per output column). `y` must hold
 /// `M · N` elements, row-major.
 ///
-/// Posit modes accumulate each output in a [`FastQuire`] (single
-/// rounding, NaR-poisoning); the float mode reproduces the scalar
-/// engine's ascending-`k` f32 summation order bit-for-bit.
+/// Posit modes accumulate each output exactly — windowed `i128` or
+/// [`FastQuire`], per [`AccPolicy::Auto`] — with a single rounding and
+/// NaR-poisoning; the float mode reproduces the scalar engine's
+/// ascending-`k` f32 summation order bit-for-bit.
 pub fn gemm_bt(
     mode: &ArithMode,
     x: &EncodedMatrix,
@@ -306,15 +461,27 @@ pub fn gemm_bt(
     bias: Option<&[f32]>,
     y: &mut [f32],
 ) {
+    gemm_bt_with_policy(mode, x, w, bias, y, AccPolicy::Auto);
+}
+
+/// [`gemm_bt`] with an explicit accumulator policy.
+pub fn gemm_bt_with_policy(
+    mode: &ArithMode,
+    x: &EncodedMatrix,
+    w: &EncodedMatrix,
+    bias: Option<&[f32]>,
+    y: &mut [f32],
+    policy: AccPolicy,
+) {
     let (m_dim, k_dim, n_dim) = check_shapes(x, w, bias, y);
-    gemm_band(mode, x, w, bias, y, 0, m_dim, k_dim, n_dim);
+    gemm_band(mode, x, w, bias, y, 0, m_dim, k_dim, n_dim, policy);
 }
 
 /// [`gemm_bt`] sharded over a [`WorkerPool`]: the M dimension is split
 /// into MB-aligned row bands (~4 per worker, so the steal scheduler can
 /// rebalance uneven progress) and each band runs as one pool task with
-/// per-worker quire scratch. Output is bit-identical to [`gemm_bt`] —
-/// rows are computed independently in both paths.
+/// per-worker accumulator scratch. Output is bit-identical to
+/// [`gemm_bt`] — rows are computed independently in both paths.
 pub fn gemm_bt_pool(
     mode: &ArithMode,
     x: &EncodedMatrix,
@@ -323,10 +490,23 @@ pub fn gemm_bt_pool(
     y: &mut [f32],
     pool: &WorkerPool,
 ) {
+    gemm_bt_pool_with_policy(mode, x, w, bias, y, pool, AccPolicy::Auto);
+}
+
+/// [`gemm_bt_pool`] with an explicit accumulator policy.
+pub fn gemm_bt_pool_with_policy(
+    mode: &ArithMode,
+    x: &EncodedMatrix,
+    w: &EncodedMatrix,
+    bias: Option<&[f32]>,
+    y: &mut [f32],
+    pool: &WorkerPool,
+    policy: AccPolicy,
+) {
     let (m_dim, k_dim, n_dim) = check_shapes(x, w, bias, y);
     let workers = pool.workers();
     if workers <= 1 || m_dim <= MB || n_dim == 0 {
-        gemm_band(mode, x, w, bias, y, 0, m_dim, k_dim, n_dim);
+        gemm_band(mode, x, w, bias, y, 0, m_dim, k_dim, n_dim, policy);
         return;
     }
     let bands = (workers * 4).min(m_dim.div_ceil(MB));
@@ -338,7 +518,7 @@ pub fn gemm_bt_pool(
             let row0 = i * rows_per;
             Box::new(move || {
                 let rows = band.len() / n_dim;
-                gemm_band(mode, x, w, bias, band, row0, rows, k_dim, n_dim);
+                gemm_band(mode, x, w, bias, band, row0, rows, k_dim, n_dim, policy);
             }) as Box<dyn FnOnce() + Send + '_>
         })
         .collect();
@@ -372,11 +552,12 @@ fn gemm_band(
     rows: usize,
     k_dim: usize,
     n_dim: usize,
+    policy: AccPolicy,
 ) {
     match mode {
         ArithMode::Float32 => gemm_float_band(x, w, bias, y, row0, rows, k_dim, n_dim),
         ArithMode::Posit { fmt, mul, .. } => {
-            gemm_posit_band(*fmt, *mul, x, w, bias, y, row0, rows, k_dim, n_dim)
+            gemm_posit_band(*fmt, *mul, x, w, bias, y, row0, rows, k_dim, n_dim, policy)
         }
     }
 }
@@ -425,32 +606,78 @@ fn gemm_float_band(
     }
 }
 
-/// Per-thread quire scratch: each pool worker (and the caller, for
-/// sequential runs) reuses one allocation across every shard it
-/// executes instead of reallocating `MB × NB` quires per band.
-struct QuireScratch {
+/// Per-output accumulation plan codes, chosen per tile before the k
+/// loop from the operand rows' scale windows and the policy.
+const PLAN_QUIRE: u8 = 0;
+const PLAN_WINDOWED: u8 = 1;
+/// Windowed output that hit NaR: remaining chunks are skipped (NaR is
+/// absorbing) and read-out emits NaR directly.
+const PLAN_NAR: u8 = 2;
+
+/// Per-thread accumulator scratch: each pool worker (and the caller,
+/// for sequential runs) reuses one allocation across every shard it
+/// executes instead of reallocating `MB × NB` accumulators per band.
+/// Holds both accumulator kinds plus the per-tile plan bytes; the last
+/// quire (`len..=len`) is the read-out drain for windowed outputs.
+struct MacScratch {
     fmt: Option<PositFormat>,
     quires: Vec<FastQuire>,
+    winds: Vec<WindowedAcc>,
+    plans: Vec<u8>,
 }
 
-impl QuireScratch {
-    fn take(&mut self, fmt: PositFormat, len: usize) -> &mut [FastQuire] {
+impl MacScratch {
+    fn take(
+        &mut self,
+        fmt: PositFormat,
+        len: usize,
+    ) -> (&mut [FastQuire], &mut [WindowedAcc], &mut [u8]) {
         if self.fmt != Some(fmt) {
             self.quires.clear();
             self.fmt = Some(fmt);
         }
-        if self.quires.len() < len {
-            self.quires.resize_with(len, || FastQuire::new(fmt));
+        if self.quires.len() < len + 1 {
+            self.quires.resize_with(len + 1, || FastQuire::new(fmt));
         }
-        &mut self.quires[..len]
+        if self.winds.len() < len {
+            self.winds.resize_with(len, || WindowedAcc::new(0));
+        }
+        if self.plans.len() < len {
+            self.plans.resize(len, PLAN_QUIRE);
+        }
+        (
+            &mut self.quires[..len + 1],
+            &mut self.winds[..len],
+            &mut self.plans[..len],
+        )
     }
 }
 
 thread_local! {
-    static QUIRE_SCRATCH: RefCell<QuireScratch> = RefCell::new(QuireScratch {
+    static MAC_SCRATCH: RefCell<MacScratch> = RefCell::new(MacScratch {
         fmt: None,
         quires: Vec::new(),
+        winds: Vec::new(),
+        plans: Vec::new(),
     });
+}
+
+/// Combined product-scale window of one output row pair, as a windowed
+/// anchor when feasible for `k_dim`-term dots. Product scales per
+/// multiplier rule: exact — `sa + sb − 2·FW` with ≤ 62-bit magnitudes;
+/// PLAM — `sa + sb + carry − FW`, carry ∈ {0, 1}, ≤ 31-bit magnitudes.
+fn product_window(mul: MulKind, xm: &PanelMeta, wm: &PanelMeta, k_dim: usize) -> Option<i32> {
+    if xm.min_scale > xm.max_scale || wm.min_scale > wm.max_scale {
+        // One operand row has no normal entries: every product is
+        // special (skipped or NaR-poisoning), so any anchor serves.
+        return Some(0);
+    }
+    let lo = xm.min_scale as i32 + wm.min_scale as i32;
+    let hi = xm.max_scale as i32 + wm.max_scale as i32;
+    match mul {
+        MulKind::Exact => window_anchor(lo - 2 * FW as i32, hi - 2 * FW as i32, 62, k_dim),
+        MulKind::Plam => window_anchor(lo - FW as i32, hi + 1 - FW as i32, 31, k_dim),
+    }
 }
 
 fn gemm_posit_band(
@@ -464,43 +691,73 @@ fn gemm_posit_band(
     rows: usize,
     k_dim: usize,
     n_dim: usize,
+    policy: AccPolicy,
 ) {
-    // Bias encoded once per band (not per output row).
-    let bias_bits: Option<Vec<u64>> =
-        bias.map(|b| b.iter().map(|&v| from_f32(fmt, v)).collect());
+    // Bias pre-decoded once per band into Q30-aligned entries (the old
+    // path ran a full `add_posit` decode per output per band).
+    let bias_dec: Option<Vec<DecEntry>> =
+        bias.map(|b| b.iter().map(|&v| decode_entry(fmt, from_f32(fmt, v))).collect());
+    let x_kc = x.cols.div_ceil(KB);
+    let w_kc = w.cols.div_ceil(KB);
     // Scratch sized to the rows actually used: an M=1 per-sample call
     // touches one tile row, not the full MB×NB panel.
     let scratch = rows.min(MB) * NB;
-    QUIRE_SCRATCH.with(|cell| {
+    MAC_SCRATCH.with(|cell| {
         let mut sc = cell.borrow_mut();
-        let quires = sc.take(fmt, scratch);
+        let (quires, winds, plans) = sc.take(fmt, scratch);
+        let (quires, drain) = quires.split_at_mut(scratch);
+        let drain = &mut drain[0];
         for m0 in (0..rows).step_by(MB) {
             let mh = (rows - m0).min(MB);
             for n0 in (0..n_dim).step_by(NB) {
                 let nw = (n_dim - n0).min(NB);
+                // Plan each output: windowed single-limb accumulation
+                // when the row pair's combined scale window fits,
+                // FastQuire otherwise (or when forced by policy).
                 for mi in 0..mh {
+                    let xm = &x.row_meta[row0 + m0 + mi];
                     for ni in 0..nw {
-                        quires[mi * NB + ni].clear();
+                        let idx = mi * NB + ni;
+                        let anchor = match policy {
+                            AccPolicy::ForceQuire => None,
+                            AccPolicy::Auto => product_window(mul, xm, &w.row_meta[n0 + ni], k_dim),
+                        };
+                        match anchor {
+                            Some(a) => {
+                                winds[idx].reset(a);
+                                plans[idx] = PLAN_WINDOWED;
+                            }
+                            None => {
+                                quires[idx].clear();
+                                plans[idx] = PLAN_QUIRE;
+                            }
+                        }
                     }
                 }
                 for k0 in (0..k_dim).step_by(KB) {
                     let kw = (k_dim - k0).min(KB);
+                    let kc = k0 / KB;
                     for mi in 0..mh {
                         let xoff = (row0 + m0 + mi) * k_dim + k0;
-                        let xrow = &x.dec[xoff..xoff + kw];
+                        let xs = &x.scales[xoff..xoff + kw];
+                        let xf = &x.sfracs[xoff..xoff + kw];
+                        let x_specials = x.panels[(row0 + m0 + mi) * x_kc + kc].specials;
                         for ni in 0..nw {
-                            let wrow =
-                                &w.dec[(n0 + ni) * k_dim + k0..(n0 + ni) * k_dim + k0 + kw];
-                            let q = &mut quires[mi * NB + ni];
-                            match mul {
-                                MulKind::Exact => {
-                                    for (a, b) in xrow.iter().zip(wrow.iter()) {
-                                        quire_mac_exact(q, a, b);
-                                    }
-                                }
-                                MulKind::Plam => {
-                                    for (a, b) in xrow.iter().zip(wrow.iter()) {
-                                        quire_mac_plam(q, a, b);
+                            let idx = mi * NB + ni;
+                            let woff = (n0 + ni) * k_dim + k0;
+                            let ws = &w.scales[woff..woff + kw];
+                            let wf = &w.sfracs[woff..woff + kw];
+                            match plans[idx] {
+                                PLAN_NAR => {}
+                                PLAN_QUIRE => quire_dot(mul, &mut quires[idx], xs, xf, ws, wf),
+                                _ => {
+                                    let wa = &mut winds[idx];
+                                    let specials =
+                                        x_specials | w.panels[(n0 + ni) * w_kc + kc].specials;
+                                    if specials == 0 {
+                                        windowed_dot_clean(mul, wa, xs, xf, ws, wf);
+                                    } else if windowed_dot_specials(mul, wa, xs, xf, ws, wf) {
+                                        plans[idx] = PLAN_NAR;
                                     }
                                 }
                             }
@@ -509,11 +766,28 @@ fn gemm_posit_band(
                 }
                 for mi in 0..mh {
                     for ni in 0..nw {
-                        let q = &mut quires[mi * NB + ni];
-                        if let Some(bb) = &bias_bits {
-                            q.add_posit(bb[n0 + ni]);
-                        }
-                        y[(m0 + mi) * n_dim + n0 + ni] = to_f32(fmt, q.to_posit());
+                        let idx = mi * NB + ni;
+                        let bits = match plans[idx] {
+                            // Bias cannot un-poison: the quire path
+                            // would round to NaR regardless.
+                            PLAN_NAR => fmt.nar(),
+                            PLAN_QUIRE => {
+                                let q = &mut quires[idx];
+                                if let Some(bd) = &bias_dec {
+                                    quire_add_entry(q, &bd[n0 + ni]);
+                                }
+                                q.to_posit()
+                            }
+                            _ => {
+                                drain.clear();
+                                winds[idx].drain_into(drain);
+                                if let Some(bd) = &bias_dec {
+                                    quire_add_entry(drain, &bd[n0 + ni]);
+                                }
+                                drain.to_posit()
+                            }
+                        };
+                        y[(m0 + mi) * n_dim + n0 + ni] = to_f32(fmt, bits);
                     }
                 }
             }
@@ -521,44 +795,189 @@ fn gemm_posit_band(
     });
 }
 
-/// Quire MAC from pre-decoded entries, exact product (paper Fig. 3).
-/// NaR is checked before zero so `0 × NaR` poisons the accumulator,
-/// matching the scalar multipliers (`exact::mul`, `plam_mul`) and the
-/// posit standard — the exhaustive conformance suite pins this down.
+/// Add one pre-decoded posit (Q30-aligned [`DecEntry`]) into a quire —
+/// the per-band bias path. Value-identical to `FastQuire::add_posit`
+/// on the same bits: `1.f · 2^s = significand · 2^(s − FW)`.
 #[inline(always)]
-fn quire_mac_exact(q: &mut FastQuire, a: &DecEntry, b: &DecEntry) {
-    if a.is_nar() || b.is_nar() {
+fn quire_add_entry(q: &mut FastQuire, e: &DecEntry) {
+    if e.is_nar() {
         q.set_nar();
-        return;
+    } else if !e.is_zero() {
+        q.add_product64(e.significand() as u64, e.scale as i32 - FW as i32, e.sign);
     }
-    if a.is_zero() || b.is_zero() {
-        return;
-    }
-    // Product of Q30 significands → ≤ 62-bit magnitude with combined
-    // scale (u64 fast path: two quire limb writes).
-    let sig = (a.significand() as u64) * (b.significand() as u64);
-    let scale = a.scale as i32 + b.scale as i32 - 2 * FW as i32;
-    q.add_product64(sig, scale, a.sign ^ b.sign);
 }
 
-/// Quire MAC from pre-decoded entries, PLAM product (paper Fig. 4,
-/// Eq. 17: fraction addition in the log domain; the Eq. 20/21 carry
-/// bumps the scale).
+// ---------------------------------------------------------------------
+// MAC inner loops (one panel chunk per call)
+// ---------------------------------------------------------------------
+
+/// The exact product rule (paper Fig. 3) on SoA plane elements:
+/// Q30 × Q30 significand product → `(sig < 2^62, scale, negative)`.
+/// The single source of truth — every MAC loop below takes one of
+/// these two product rules as a (monomorphized) parameter.
 #[inline(always)]
-fn quire_mac_plam(q: &mut FastQuire, a: &DecEntry, b: &DecEntry) {
-    if a.is_nar() || b.is_nar() {
+fn exact_product(sa: i16, fa: u32, sb: i16, fb: u32) -> (u64, i32, bool) {
+    let sig = (sfrac_significand(fa) as u64) * (sfrac_significand(fb) as u64);
+    let scale = sa as i32 + sb as i32 - 2 * FW as i32;
+    (sig, scale, sfrac_sign(fa ^ fb))
+}
+
+/// The PLAM product rule (paper Fig. 4, Eq. 17: fraction addition in
+/// the log domain; the Eq. 20/21 carry bumps the scale) on SoA plane
+/// elements: `(sig < 2^31, scale, negative)`. Single source of truth,
+/// like [`exact_product`].
+#[inline(always)]
+fn plam_product(sa: i16, fa: u32, sb: i16, fb: u32) -> (u64, i32, bool) {
+    let fsum = (fa & SFRAC_FRAC_MASK) as u64 + (fb & SFRAC_FRAC_MASK) as u64;
+    let carry = (fsum >> FW) as i32; // Eq. 20/21 condition
+    let sig = (1u64 << FW) | (fsum & ((1u64 << FW) - 1)); // 1.F in Q30
+    let scale = sa as i32 + sb as i32 + carry - FW as i32;
+    (sig, scale, sfrac_sign(fa ^ fb))
+}
+
+/// Product-rule parameter for the generic MAC loops (a plain fn
+/// pointer shape; [`exact_product`]/[`plam_product`] monomorphize it).
+trait ProductRule: Fn(i16, u32, i16, u32) -> (u64, i32, bool) + Copy {}
+impl<F: Fn(i16, u32, i16, u32) -> (u64, i32, bool) + Copy> ProductRule for F {}
+
+/// Quire MAC: specials sentinels, then one product. NaR is checked
+/// before zero so `0 × NaR` poisons the accumulator, matching the
+/// scalar multipliers (`exact::mul`, `plam_mul`) and the posit
+/// standard — the exhaustive conformance suite pins this down.
+#[inline(always)]
+fn quire_mac(product: impl ProductRule, q: &mut FastQuire, sa: i16, fa: u32, sb: i16, fb: u32) {
+    if sa == SCALE_NAR || sb == SCALE_NAR {
         q.set_nar();
         return;
     }
-    if a.is_zero() || b.is_zero() {
+    if sa == SCALE_ZERO || sb == SCALE_ZERO {
         return;
     }
-    let fsum = a.frac as u64 + b.frac as u64; // Q30 fraction sum
-    let carry = (fsum >> FW) as i32; // Eq. 20/21 condition
-    let frac = fsum & ((1u64 << FW) - 1);
-    let sig = (1u64 << FW) | frac; // 1.F in Q30 (31 bits)
-    let scale = a.scale as i32 + b.scale as i32 + carry - FW as i32;
-    q.add_product64(sig, scale, a.sign ^ b.sign);
+    let (sig, scale, neg) = product(sa, fa, sb, fb);
+    q.add_product64(sig, scale, neg);
+}
+
+/// FastQuire fallback dot over one panel chunk: sentinel branches per
+/// element, offset computation and two limb writes per MAC.
+#[inline(always)]
+fn quire_dot(mul: MulKind, q: &mut FastQuire, xs: &[i16], xf: &[u32], ws: &[i16], wf: &[u32]) {
+    match mul {
+        MulKind::Exact => quire_dot_with(exact_product, q, xs, xf, ws, wf),
+        MulKind::Plam => quire_dot_with(plam_product, q, xs, xf, ws, wf),
+    }
+}
+
+#[inline(always)]
+fn quire_dot_with(
+    product: impl ProductRule,
+    q: &mut FastQuire,
+    xs: &[i16],
+    xf: &[u32],
+    ws: &[i16],
+    wf: &[u32],
+) {
+    for k in 0..xs.len() {
+        quire_mac(product, q, xs[k], xf[k], ws[k], wf[k]);
+    }
+}
+
+/// One signed product in accumulator units (`· 2^anchor`): shift to
+/// the anchor, then apply the sign branch-free via the
+/// two's-complement identity `(v ^ m) − m` with `m = −sign`.
+#[inline(always)]
+fn signed_shifted(sig: u64, scale: i32, neg: bool, anchor: i32) -> i128 {
+    let v = ((sig as u128) << ((scale - anchor) as u32)) as i128;
+    let m = -(neg as i128);
+    (v ^ m) - m
+}
+
+/// Branch-free windowed dot over a specials-free panel chunk (the
+/// occupancy mask guarantees no zero/NaR sentinels), 4×-unrolled.
+/// Terms sum into a chunk-local `i128` and fold into the accumulator
+/// once; exactness is guaranteed by the window feasibility check (the
+/// whole row's |sum| stays below 2^126, so every partial sum does).
+#[inline(always)]
+fn windowed_dot_clean(
+    mul: MulKind,
+    wa: &mut WindowedAcc,
+    xs: &[i16],
+    xf: &[u32],
+    ws: &[i16],
+    wf: &[u32],
+) {
+    match mul {
+        MulKind::Exact => windowed_dot_clean_with(exact_product, wa, xs, xf, ws, wf),
+        MulKind::Plam => windowed_dot_clean_with(plam_product, wa, xs, xf, ws, wf),
+    }
+}
+
+#[inline(always)]
+fn windowed_dot_clean_with(
+    product: impl ProductRule,
+    wa: &mut WindowedAcc,
+    xs: &[i16],
+    xf: &[u32],
+    ws: &[i16],
+    wf: &[u32],
+) {
+    let n = xs.len();
+    let anchor = wa.anchor();
+    let term = |k: usize| {
+        let (sig, scale, neg) = product(xs[k], xf[k], ws[k], wf[k]);
+        signed_shifted(sig, scale, neg, anchor)
+    };
+    let mut sum = 0i128;
+    let mut k = 0;
+    while k + 4 <= n {
+        sum += term(k) + term(k + 1) + term(k + 2) + term(k + 3);
+        k += 4;
+    }
+    while k < n {
+        sum += term(k);
+        k += 1;
+    }
+    wa.accumulate(sum);
+}
+
+/// Windowed dot over a panel chunk whose occupancy mask flags zeros or
+/// NaRs: per-element sentinel branches, NaR checked first (`0 × NaR`
+/// poisons) and short-circuiting — it is absorbing, so the caller
+/// flips the output's plan to `PLAN_NAR` when this returns true.
+fn windowed_dot_specials(
+    mul: MulKind,
+    wa: &mut WindowedAcc,
+    xs: &[i16],
+    xf: &[u32],
+    ws: &[i16],
+    wf: &[u32],
+) -> bool {
+    match mul {
+        MulKind::Exact => windowed_dot_specials_with(exact_product, wa, xs, xf, ws, wf),
+        MulKind::Plam => windowed_dot_specials_with(plam_product, wa, xs, xf, ws, wf),
+    }
+}
+
+fn windowed_dot_specials_with(
+    product: impl ProductRule,
+    wa: &mut WindowedAcc,
+    xs: &[i16],
+    xf: &[u32],
+    ws: &[i16],
+    wf: &[u32],
+) -> bool {
+    for k in 0..xs.len() {
+        let (sa, sb) = (xs[k], ws[k]);
+        if sa == SCALE_NAR || sb == SCALE_NAR {
+            wa.set_nar();
+            return true;
+        }
+        if sa == SCALE_ZERO || sb == SCALE_ZERO {
+            continue;
+        }
+        let (sig, scale, neg) = product(sa, xf[k], sb, wf[k]);
+        wa.add_product64(sig, scale, neg);
+    }
+    false
 }
 
 /// im2col: gather `[ic, h, w]` input patches into a row-major
@@ -673,11 +1092,14 @@ mod tests {
                         for ki in 0..k {
                             let a = decode_entry(*fmt, from_f32(*fmt, x[mi * k + ki]));
                             let b = decode_entry(*fmt, from_f32(*fmt, w[ni * k + ki]));
+                            let (sa, fa, sb, fb) = (a.scale, a.sfrac(), b.scale, b.sfrac());
                             match mul {
-                                MulKind::Exact => quire_mac_exact(&mut q, &a, &b),
-                                MulKind::Plam => quire_mac_plam(&mut q, &a, &b),
+                                MulKind::Exact => quire_mac(exact_product, &mut q, sa, fa, sb, fb),
+                                MulKind::Plam => quire_mac(plam_product, &mut q, sa, fa, sb, fb),
                             }
                         }
+                        // Reference bias path: the full posit decode the
+                        // kernel's pre-decoded entries must match.
                         q.add_posit(from_f32(*fmt, bias[ni]));
                         y[mi * n + ni] = to_f32(*fmt, q.to_posit());
                     }
@@ -714,6 +1136,132 @@ mod tests {
                 let (got, want) = run_both(&mode, m, k, n, 42 + m as u64);
                 assert_eq!(got, want, "{} m={m} k={k} n={n}", mode.name());
             }
+        }
+    }
+
+    #[test]
+    fn forced_quire_policy_is_bit_identical_to_auto() {
+        // The windowed accumulator and the FastQuire fallback hold the
+        // same exact value and round through the same path, so the two
+        // policies must agree bit for bit — including shapes that span
+        // multiple KB chunks and the skinny GEMV case.
+        for mode in [
+            ArithMode::posit_exact(PositFormat::P8E0),
+            ArithMode::posit_plam(PositFormat::P8E0),
+            ArithMode::posit_exact(PositFormat::P16E1),
+            ArithMode::posit_plam(PositFormat::P16E1),
+            ArithMode::posit_exact(PositFormat::P32E2),
+            ArithMode::posit_plam(PositFormat::P32E2),
+        ] {
+            for (m, k, n) in [(1, 256, 16), (3, 600, 5), (9, 40, 33)] {
+                let mut rng = Rng::new(0xACC + k as u64);
+                let x = random_matrix(&mut rng, m, k);
+                let w = random_matrix(&mut rng, n, k);
+                let bias: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 0.1).collect();
+                let xe = encode_matrix(&mode, m, k, &x);
+                let we = encode_matrix(&mode, n, k, &w);
+                let mut auto = vec![0f32; m * n];
+                let mut forced = vec![0f32; m * n];
+                gemm_bt_with_policy(&mode, &xe, &we, Some(&bias), &mut auto, AccPolicy::Auto);
+                gemm_bt_with_policy(
+                    &mode,
+                    &xe,
+                    &we,
+                    Some(&bias),
+                    &mut forced,
+                    AccPolicy::ForceQuire,
+                );
+                let same = auto
+                    .iter()
+                    .zip(forced.iter())
+                    .all(|(a, b)| a.to_bits() == b.to_bits());
+                assert!(same, "{} m={m} k={k} n={n}", mode.name());
+            }
+        }
+    }
+
+    #[test]
+    fn panel_metadata_tracks_scales_and_specials() {
+        let mode = ArithMode::posit_plam(PositFormat::P16E1);
+        // One row longer than KB so it spans two panels: first panel
+        // holds normals {scale 0, scale 2} plus a zero, second panel a
+        // NaR plus a scale −1 normal.
+        let cols = KB + 3;
+        let mut data = vec![1.0f32; cols]; // scale 0
+        data[1] = 4.0; // scale 2
+        data[2] = 0.0;
+        data[KB] = f32::NAN;
+        data[KB + 1] = 0.5; // scale −1
+        let e = encode_matrix(&mode, 1, cols, &data);
+        assert_eq!(e.k_chunks(), 2);
+        let p0 = e.panel(0, 0);
+        assert_eq!((p0.min_scale, p0.max_scale), (0, 2));
+        assert_eq!(p0.specials, SPECIAL_ZERO);
+        let p1 = e.panel(0, 1);
+        assert_eq!((p1.min_scale, p1.max_scale), (-1, 0));
+        assert_eq!(p1.specials, SPECIAL_NAR);
+        let rm = e.row_window(0);
+        assert_eq!((rm.min_scale, rm.max_scale), (-1, 2));
+        assert_eq!(rm.specials, SPECIAL_ZERO | SPECIAL_NAR);
+        assert!(rm.has_specials());
+        // All-special rows keep the inverted empty window.
+        let z = encode_matrix(&mode, 1, 2, &[0.0, 0.0]);
+        let zm = z.row_window(0);
+        assert!(zm.min_scale > zm.max_scale);
+        assert_eq!(zm.specials, SPECIAL_ZERO);
+    }
+
+    #[test]
+    fn encoded_matrix_bytes_accounts_soa_planes_and_meta() {
+        use std::mem::size_of;
+        let mode = ArithMode::posit_plam(PositFormat::P16E1);
+        let data: Vec<f32> = (0..256).map(|i| i as f32 * 0.25).collect();
+        let e = encode_matrix(&mode, 16, 16, &data);
+        // 16×16 elements in two SoA planes + 16 one-chunk panels + 16
+        // row folds.
+        let want = 256 * (size_of::<i16>() + size_of::<u32>())
+            + (16 + 16) * size_of::<PanelMeta>();
+        assert_eq!(e.bytes(), want);
+        // Float planes carry only the f32 copy.
+        let f = encode_matrix(&ArithMode::float32(), 16, 16, &data);
+        assert_eq!(f.bytes(), 256 * size_of::<f32>());
+    }
+
+    #[test]
+    fn plane_cache_eviction_honours_true_footprint() {
+        let mode = ArithMode::posit_plam(PositFormat::P16E1);
+        let data: Vec<f32> = (0..256).map(|i| i as f32 * 0.5).collect();
+        let probe = encode_matrix(&mode, 16, 16, &data);
+        // Capacity for exactly three planes of this shape: inserting
+        // four must evict down to at most three, measured by the full
+        // SoA + panel-metadata footprint.
+        let cache = PlaneCache::new(3 * probe.bytes());
+        for i in 0..4u32 {
+            let d: Vec<f32> = (0..256).map(|j| (i * 1000 + j) as f32).collect();
+            let p = cache.encode(&mode, 16, 16, &d);
+            assert_eq!(p.bytes(), probe.bytes());
+        }
+        assert!(cache.len() <= 3, "len={}", cache.len());
+        assert!(
+            cache.bytes() <= 3 * probe.bytes(),
+            "bytes={} cap={}",
+            cache.bytes(),
+            3 * probe.bytes()
+        );
+    }
+
+    #[test]
+    fn nar_bias_poisons_outputs() {
+        // The pre-decoded bias path must poison like `add_posit` did.
+        for mode in [
+            ArithMode::posit_exact(PositFormat::P16E1),
+            ArithMode::posit_plam(PositFormat::P16E1),
+        ] {
+            let xe = encode_matrix(&mode, 1, 2, &[1.0, 2.0]);
+            let we = encode_matrix(&mode, 1, 2, &[3.0, 4.0]);
+            let mut y = [0f32; 1];
+            gemm_bt(&mode, &xe, &we, Some(&[f32::NAN]), &mut y);
+            assert!(y[0].is_nan(), "{}", mode.name());
         }
     }
 

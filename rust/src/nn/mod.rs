@@ -2,7 +2,9 @@
 //!
 //! The arithmetic hot path lives in [`gemm`]: a table-driven,
 //! cache-blocked batched GEMM that every dense/conv layer routes
-//! through (decode weights once, reuse across the whole batch).
+//! through (decode weights once into SoA scale/fraction planes, reuse
+//! across the whole batch; accumulate windowed-single-limb where the
+//! scale window fits, FastQuire elsewhere — bit-identical either way).
 //! [`pool`] shards that GEMM across a work-stealing worker pool
 //! (bit-identical results, one row band per task), and
 //! [`gemm::PlaneCache`] shares encoded weight planes across models.
@@ -15,7 +17,10 @@ pub mod model;
 pub mod loader;
 pub mod prepared;
 
-pub use gemm::{encode_matrix, gemm_bt, gemm_bt_pool, EncodedMatrix, PlaneCache};
+pub use gemm::{
+    encode_matrix, gemm_bt, gemm_bt_pool, gemm_bt_pool_with_policy, gemm_bt_with_policy,
+    AccPolicy, EncodedMatrix, PanelMeta, PlaneCache,
+};
 pub use layers::{ArithMode, Layer, MulKind};
 pub use pool::{PoolStats, WorkerPool};
 pub use prepared::PreparedModel;

@@ -13,10 +13,14 @@
 //! Weight planes come from the shared [`PlaneCache`], so preparing the
 //! same model twice (or under exact *and* PLAM modes of one format,
 //! which share decode planes) re-uses the existing `Arc`'d plane
-//! instead of re-decoding. [`PreparedModel::forward_batch_pooled`]
-//! additionally shards the dense GEMMs (and per-sample conv GEMMs)
-//! across a [`WorkerPool`]; results stay bit-identical to the
-//! single-threaded path.
+//! instead of re-decoding. Planes are SoA (scale + sign-packed
+//! fraction) with per-panel scale-window metadata, so a prepared
+//! weight matrix also carries everything the GEMM's windowed
+//! accumulator planner needs — encoding happens exactly once per
+//! distinct weight set, window analysis included.
+//! [`PreparedModel::forward_batch_pooled`] additionally shards the
+//! dense GEMMs (and per-sample conv GEMMs) across a [`WorkerPool`];
+//! results stay bit-identical to the single-threaded path.
 
 use std::sync::Arc;
 
@@ -102,6 +106,20 @@ impl PreparedModel {
             mode,
             layers,
         }
+    }
+
+    /// Total heap footprint of this model's encoded weight planes
+    /// (SoA scale/fraction planes + panel metadata — the same
+    /// accounting the [`PlaneCache`] evicts by). Planes shared with
+    /// other prepared models count fully here.
+    pub fn encoded_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| match l {
+                Prepared::Dense { w, .. } | Prepared::Conv2d { w, .. } => w.bytes(),
+                _ => 0,
+            })
+            .sum()
     }
 
     /// Forward one sample → logits.
@@ -371,6 +389,27 @@ mod tests {
             }
         }
         pool.shutdown();
+    }
+
+    #[test]
+    fn encoded_bytes_reports_plane_footprint() {
+        let mut rng = Rng::new(26);
+        let model = Model::init(ModelKind::MlpIsolet, &mut rng);
+        let pm = PreparedModel::new(&model, ArithMode::posit_plam(PositFormat::P16E1));
+        let params: usize = model
+            .layers
+            .iter()
+            .map(|l| match l {
+                Layer::Dense { w, .. } => w.data.len(),
+                _ => 0,
+            })
+            .sum();
+        // Every weight element costs 6 bytes across the two SoA planes
+        // (i16 scale + u32 sign-packed fraction); panel metadata adds
+        // a small amount on top.
+        let bytes = pm.encoded_bytes();
+        assert!(bytes >= params * 6, "bytes={bytes} params={params}");
+        assert!(bytes <= params * 6 + params, "metadata should be small");
     }
 
     #[test]

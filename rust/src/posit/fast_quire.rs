@@ -1,13 +1,27 @@
-//! FastQuire — carry-free exact accumulator for n ≤ 32 formats.
+//! FastQuire — carry-free exact accumulator for n ≤ 32 formats — and
+//! WindowedAcc, its single-limb fast path for scale-bounded dot
+//! products.
 //!
-//! Perf-pass replacement for [`super::quire::Quire`] on the inference
-//! hot path (EXPERIMENTS.md §Perf). Same semantics (exact accumulation,
-//! single rounding at read-out), different representation: *lazy*
-//! `i128` limbs, each accumulating signed 64-bit chunks at weight
-//! `2^(64·i − QFRAC)`. Additions never propagate carries — an `i128`
-//! absorbs 2^63 worst-case chunks before overflow, far beyond any layer
-//! fan-in — so the per-MAC cost is three indexed `i128` adds. Carries
-//! are normalised once, in `to_posit`.
+//! [`FastQuire`] is the perf-pass replacement for
+//! [`super::quire::Quire`] on the inference hot path (EXPERIMENTS.md
+//! §Perf). Same semantics (exact accumulation, single rounding at
+//! read-out), different representation: *lazy* `i128` limbs, each
+//! accumulating signed 64-bit chunks at weight `2^(64·i − QFRAC)`.
+//! Additions never propagate carries — an `i128` absorbs 2^63
+//! worst-case chunks before overflow, far beyond any layer fan-in — so
+//! the per-MAC cost is two or three indexed `i128` adds.
+//!
+//! [`WindowedAcc`] exploits the bounded-dynamic-range observation
+//! behind Fixed-Posit: real layers rarely use the format's full scale
+//! range, so when every product of a dot falls inside a window narrow
+//! enough that `window + significand bits + ⌈log₂ fan-in⌉ ≤ 126`
+//! (see [`window_anchor`]), the whole accumulation fits one `i128` at
+//! a fixed anchor scale — one shift + one add per MAC, no limb
+//! indexing. The accumulated value is *exactly* the quire's value, and
+//! read-out drains it through a [`FastQuire`] for the identical single
+//! RNE rounding, so results are bit-identical whichever accumulator
+//! ran. The GEMM engine picks per output row, falling back to
+//! [`FastQuire`] whenever the window does not fit.
 
 use super::encode::encode;
 use super::format::PositFormat;
@@ -191,6 +205,137 @@ impl FastQuire {
     }
 }
 
+// ---------------------------------------------------------------------
+// Windowed single-limb accumulation
+// ---------------------------------------------------------------------
+
+/// Magnitude-bit budget for a [`WindowedAcc`]: the worst-case
+/// accumulated magnitude must stay below `2^126` so the signed `i128`
+/// never wraps and the drain (`FastQuire::add_product`, `sig < 2^126`)
+/// stays in range.
+const WINDOW_BITS: i64 = 126;
+
+/// Feasibility test for windowed accumulation: given the min/max
+/// *product* scale of a dot product (over its normal, non-special
+/// terms), the product magnitude width `sig_bits` (products are
+/// `< 2^sig_bits`), and the fan-in, return the anchor scale if every
+/// possible sum fits one `i128`, else `None`.
+///
+/// A product at scale `s` lands in the accumulator as
+/// `sig << (s − anchor)` with `anchor = min_scale`, so the largest
+/// term is below `2^(max_scale − min_scale + sig_bits)` and `fan_in`
+/// of them sum below
+/// `2^(max_scale − min_scale + sig_bits + ⌈log₂ fan_in⌉)`. The window
+/// fits iff that exponent is ≤ 126 (one bit of `i128` is the sign).
+/// The anchor must also sit on the quire grid (`QFRAC + anchor ≥ 0`),
+/// which holds for every n ≤ 32 product but is checked anyway.
+pub fn window_anchor(min_scale: i32, max_scale: i32, sig_bits: u32, fan_in: usize) -> Option<i32> {
+    if fan_in == 0 || min_scale > max_scale {
+        // No products at all: any grid-valid anchor works.
+        return Some(0);
+    }
+    let log2_fan_in = (usize::BITS - (fan_in - 1).leading_zeros()) as i64;
+    let need = (max_scale as i64 - min_scale as i64) + sig_bits as i64 + log2_fan_in;
+    if need <= WINDOW_BITS && QFRAC as i64 + min_scale as i64 >= 0 {
+        Some(min_scale)
+    } else {
+        None
+    }
+}
+
+/// Single-limb exact accumulator for scale-windowed dot products.
+///
+/// Holds `value = acc · 2^anchor` in one signed 128-bit word. Callers
+/// must only feed products whose scales were covered by the
+/// [`window_anchor`] feasibility check that produced `anchor`;
+/// under that contract the accumulation is exact (no wrap, nothing
+/// below the grid) and [`WindowedAcc::drain_into`] transfers the exact
+/// value into a [`FastQuire`] for the identical single rounding.
+#[derive(Clone)]
+pub struct WindowedAcc {
+    acc: i128,
+    anchor: i32,
+    nar: bool,
+}
+
+impl WindowedAcc {
+    /// Fresh zero accumulator at the given anchor scale.
+    pub fn new(anchor: i32) -> Self {
+        WindowedAcc {
+            acc: 0,
+            anchor,
+            nar: false,
+        }
+    }
+
+    /// Reset to zero with a (possibly new) anchor.
+    #[inline]
+    pub fn reset(&mut self, anchor: i32) {
+        self.acc = 0;
+        self.anchor = anchor;
+        self.nar = false;
+    }
+
+    /// The anchor scale (`value = acc · 2^anchor`).
+    #[inline(always)]
+    pub fn anchor(&self) -> i32 {
+        self.anchor
+    }
+
+    /// Poison with NaR (absorbing, like the quire's flag).
+    #[inline]
+    pub fn set_nar(&mut self) {
+        self.nar = true;
+    }
+
+    /// True once poisoned.
+    #[inline(always)]
+    pub fn is_nar(&self) -> bool {
+        self.nar
+    }
+
+    /// Add `±sig · 2^scale`; `scale ≥ anchor` and the window contract
+    /// must hold (the GEMM only calls this on window-checked panels).
+    #[inline(always)]
+    pub fn add_product64(&mut self, sig: u64, scale: i32, negative: bool) {
+        let shift = (scale - self.anchor) as u32;
+        debug_assert!(scale >= self.anchor, "product below the window anchor");
+        let v = ((sig as u128) << shift) as i128;
+        if negative {
+            self.acc -= v;
+        } else {
+            self.acc += v;
+        }
+    }
+
+    /// Add a pre-shifted partial sum in accumulator units
+    /// (`delta · 2^anchor`). The unrolled GEMM inner loops build a
+    /// chunk-local sum and fold it in once.
+    #[inline(always)]
+    pub fn accumulate(&mut self, delta: i128) {
+        self.acc += delta;
+    }
+
+    /// Transfer the exact accumulated value (or NaR) into a quire.
+    pub fn drain_into(&self, q: &mut FastQuire) {
+        if self.nar {
+            q.set_nar();
+            return;
+        }
+        if self.acc != 0 {
+            q.add_product(self.acc.unsigned_abs(), self.anchor, self.acc < 0);
+        }
+    }
+
+    /// Round to the nearest posit via a scratch [`FastQuire`] (tests /
+    /// standalone use; the GEMM drains into a reused scratch quire).
+    pub fn to_posit(&self, fmt: PositFormat) -> u64 {
+        let mut q = FastQuire::new(fmt);
+        self.drain_into(&mut q);
+        q.to_posit()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -322,5 +467,96 @@ mod tests {
             fast.add_product(sig, 2 * (d.scale - d.frac_bits as i32), false);
         }
         assert_eq!(fast.to_posit(), maxpos); // saturates, no wrap
+    }
+
+    #[test]
+    fn window_anchor_feasibility_math() {
+        // Degenerate dots are always feasible.
+        assert_eq!(window_anchor(5, -5, 62, 0), Some(0)); // empty window
+        assert_eq!(window_anchor(1, 0, 62, 4), Some(0)); // min > max: no normals
+        // Tight fit: window + sig_bits + ceil_log2(k) == 126.
+        assert_eq!(window_anchor(-30, 30, 62, 16), Some(-30)); // 60+62+4
+        assert_eq!(window_anchor(-30, 31, 62, 16), None); // 61+62+4 > 126
+        assert_eq!(window_anchor(-30, 30, 62, 17), None); // ceil_log2(17)=5
+        // P8E0 worst case (scales ±6, exact 62-bit products): feasible
+        // for any realistic fan-in (2^40 terms).
+        assert_eq!(window_anchor(-72, -48, 62, 1 << 40), Some(-72));
+        // P32E2 full-range products overflow any window.
+        assert_eq!(window_anchor(-300, 180, 62, 1), None);
+        // Anchor must sit on the quire grid.
+        assert_eq!(window_anchor(-321, -321, 31, 1), None);
+        assert_eq!(window_anchor(-300, -300, 62, 1), Some(-300));
+    }
+
+    #[test]
+    fn windowed_acc_matches_fastquire_on_random_windows() {
+        // Random windowed dots: both accumulators must round to the
+        // same posit for every format, including heavy cancellation.
+        let mut rng = Rng::new(0x717D);
+        for fmt in [PositFormat::P8E0, P16, PositFormat::P32E2] {
+            for case in 0..500 {
+                let len = 1 + rng.below(96) as usize;
+                // A window the feasibility test accepts for 62-bit sigs.
+                let min_s = -40 + rng.below(20) as i32;
+                let max_s = min_s + rng.below(40) as i32;
+                let anchor = window_anchor(min_s, max_s, 62, len)
+                    .expect("window chosen feasible");
+                let mut wa = WindowedAcc::new(anchor);
+                let mut q = FastQuire::new(fmt);
+                for _ in 0..len {
+                    let sig = rng.next_u64() >> 2; // < 2^62
+                    let scale = min_s + rng.below((max_s - min_s + 1) as u64) as i32;
+                    let neg = rng.below(2) == 1;
+                    wa.add_product64(sig, scale, neg);
+                    q.add_product64(sig, scale, neg);
+                }
+                assert_eq!(wa.to_posit(fmt), q.to_posit(), "{fmt} case {case}");
+            }
+        }
+    }
+
+    #[test]
+    fn windowed_acc_worst_case_window_no_wrap() {
+        // Saturate the feasibility bound: fan_in products of maximal
+        // magnitude at the window's top scale, all one sign. The i128
+        // must not wrap and the drain must agree with FastQuire.
+        let (min_s, max_s, fan_in) = (-30, 30, 16usize);
+        let anchor = window_anchor(min_s, max_s, 62, fan_in).unwrap();
+        let mut wa = WindowedAcc::new(anchor);
+        let mut q = FastQuire::new(P16);
+        let sig = (1u64 << 62) - 1;
+        for _ in 0..fan_in {
+            wa.add_product64(sig, max_s, false);
+            q.add_product64(sig, max_s, false);
+        }
+        assert_eq!(wa.to_posit(P16), q.to_posit()); // maxpos, no wrap
+        // And the mirrored all-negative case.
+        let mut wa = WindowedAcc::new(anchor);
+        let mut q = FastQuire::new(P16);
+        for _ in 0..fan_in {
+            wa.add_product64(sig, max_s, true);
+            q.add_product64(sig, max_s, true);
+        }
+        assert_eq!(wa.to_posit(P16), q.to_posit());
+    }
+
+    #[test]
+    fn windowed_acc_nar_and_reset() {
+        let mut wa = WindowedAcc::new(-10);
+        wa.add_product64(123, -3, false);
+        wa.set_nar();
+        assert!(wa.is_nar());
+        assert_eq!(wa.to_posit(P16), P16.nar());
+        wa.reset(4);
+        assert!(!wa.is_nar());
+        assert_eq!(wa.anchor(), 4);
+        assert_eq!(wa.to_posit(P16), 0);
+        // accumulate() folds pre-shifted partial sums exactly.
+        let mut a = WindowedAcc::new(0);
+        let mut b = WindowedAcc::new(0);
+        a.add_product64(7, 3, false);
+        a.add_product64(9, 0, true);
+        b.accumulate((7i128 << 3) - 9);
+        assert_eq!(a.to_posit(P16), b.to_posit(P16));
     }
 }

@@ -11,6 +11,9 @@
 //! * [`exact`] — exact add/sub/mul/div/compare (Eqs. 3–10 for mul);
 //! * [`plam`] — the paper's logarithm-approximate multiplier (Eqs. 14–24);
 //! * [`quire`] — the exact fixed-point accumulator (EMAC support);
+//! * [`fast_quire`] — the hot-path accumulators: carry-free lazy-limb
+//!   [`FastQuire`] plus the scale-windowed single-limb [`WindowedAcc`]
+//!   (see `posit/README.md` for the windowed-accumulation design);
 //! * [`convert`] — IEEE-754 ⇄ posit and posit ⇄ posit conversions;
 //! * [`typed`] — `Posit<N, ES>` value types with operator overloading;
 //! * [`tables`] — precomputed decode tables for the hot inference path.
@@ -31,7 +34,7 @@ pub use decode::{classify, decode, DecodeResult, Decoded, PositClass};
 pub use encode::encode;
 pub use exact::{abs, add, cmp, div, mul, neg, sub};
 pub use format::PositFormat;
-pub use fast_quire::FastQuire;
+pub use fast_quire::{window_anchor, FastQuire, WindowedAcc};
 pub use plam::{plam_mul, plam_relative_error, plam_value_f64, PLAM_MAX_RELATIVE_ERROR};
 pub use quire::Quire;
 pub use typed::{Posit, P16E1, P16E2, P32E2, P8E0};

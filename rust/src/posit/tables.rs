@@ -15,6 +15,16 @@ use super::format::PositFormat;
 /// `u64`.
 pub const FW: u32 = 30;
 
+/// Sign bit position in a packed sign+fraction word ([`DecEntry::sfrac`]):
+/// the FW-bit fraction occupies bits `0..FW`, bit `FW` is spare (the
+/// hidden bit is implicit), and the sign rides in the top bit so the
+/// GEMM's structure-of-arrays planes carry `(scale: i16, sfrac: u32)`
+/// per element instead of an 8-byte AoS entry.
+pub const SFRAC_SIGN: u32 = 1 << 31;
+
+/// Mask selecting the FW-bit fraction out of a packed sign+frac word.
+pub const SFRAC_FRAC_MASK: u32 = (1 << FW) - 1;
+
 /// One decoded pattern, fraction pre-aligned to [`FW`] bits.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct DecEntry {
@@ -50,6 +60,26 @@ impl DecEntry {
     pub fn significand(&self) -> u32 {
         (1u32 << FW) | self.frac
     }
+
+    /// Sign-packed fraction word: fraction in bits `0..FW`, sign in bit
+    /// 31 ([`SFRAC_SIGN`]). This is the element the GEMM's SoA fraction
+    /// plane stores; `sfrac_sign`/`sfrac_significand` unpack it.
+    #[inline(always)]
+    pub fn sfrac(&self) -> u32 {
+        self.frac | if self.sign { SFRAC_SIGN } else { 0 }
+    }
+}
+
+/// Sign of a packed sign+frac word (true = negative).
+#[inline(always)]
+pub fn sfrac_sign(sf: u32) -> bool {
+    sf & SFRAC_SIGN != 0
+}
+
+/// Q30 significand `1.f` of a packed sign+frac word.
+#[inline(always)]
+pub fn sfrac_significand(sf: u32) -> u32 {
+    (1u32 << FW) | (sf & SFRAC_FRAC_MASK)
 }
 
 /// Decode one bit pattern into a pre-aligned [`DecEntry`] without a
@@ -156,6 +186,24 @@ mod tests {
                     assert_eq!(e.frac as u64, d.frac << (FW - d.frac_bits));
                 }
             }
+        }
+    }
+
+    #[test]
+    fn sfrac_packing_round_trips() {
+        let fmt = PositFormat::P16E1;
+        let t = DecodeTable::new(fmt);
+        for bits in 0u64..65536 {
+            let e = t.get(bits);
+            let sf = e.sfrac();
+            assert_eq!(sfrac_sign(sf), e.sign, "bits={bits:#x}");
+            if !e.is_zero() && !e.is_nar() {
+                assert_eq!(sfrac_significand(sf), e.significand(), "bits={bits:#x}");
+                assert_eq!(sf & SFRAC_FRAC_MASK, e.frac, "bits={bits:#x}");
+            }
+            // Bit FW stays clear: the hidden bit is implicit, so the
+            // sign never collides with fraction payload.
+            assert_eq!(sf & (1 << FW), 0, "bits={bits:#x}");
         }
     }
 

@@ -12,12 +12,16 @@
 //!   mismatches tolerated — including every NaR/zero combination.
 //! * **Sampled** (4 096 PRNG-seeded pairs each) for P⟨16,1⟩ and
 //!   P⟨32,2⟩, same oracle.
-//! * The GEMM engine's fused PLAM MAC path (`quire_mac_plam` via
+//! * The GEMM engine's fused PLAM MAC path (`plam_product` via
 //!   `gemm_bt`) against `plam_mul` on 1×1×1 products, exhaustively for
 //!   P⟨8,0⟩ and sampled for P⟨16,1⟩ — proving the batched engine and
 //!   the scalar datapath implement the same multiplier bit for bit.
+//!   Both GEMM checks run under **both accumulator policies** (the
+//!   scale-windowed single-limb default and the forced-FastQuire
+//!   fallback), so the exhaustive sweep re-proves the windowed kernel
+//!   against the same oracle that validated the original one.
 
-use plam::nn::{encode_matrix, gemm_bt, ArithMode};
+use plam::nn::{encode_matrix, gemm_bt_with_policy, AccPolicy, ArithMode};
 use plam::posit::{from_f64, plam_mul, plam_value_f64, to_f32, PositFormat};
 use plam::prng::Rng;
 
@@ -74,17 +78,20 @@ fn exhaustive_p8e0_gemm_plam_mac_matches_plam_mul() {
         for b in 0u64..256 {
             let wb = [to_f32(fmt, b)];
             let we = encode_matrix(&mode, 1, 1, &wb);
-            let mut y = [0f32; 1];
-            gemm_bt(&mode, &xe, &we, None, &mut y);
             let want = to_f32(fmt, plam_mul(fmt, a, b));
-            if y[0].to_bits() != want.to_bits() {
-                mismatches += 1;
-                if mismatches <= 8 {
-                    eprintln!(
-                        "gemm mismatch: {a:#04x} ×̃ {b:#04x}: got {:#010x} want {:#010x}",
-                        y[0].to_bits(),
-                        want.to_bits()
-                    );
+            for policy in [AccPolicy::Auto, AccPolicy::ForceQuire] {
+                let mut y = [0f32; 1];
+                gemm_bt_with_policy(&mode, &xe, &we, None, &mut y, policy);
+                if y[0].to_bits() != want.to_bits() {
+                    mismatches += 1;
+                    if mismatches <= 8 {
+                        eprintln!(
+                            "gemm mismatch ({policy:?}): {a:#04x} ×̃ {b:#04x}: \
+                             got {:#010x} want {:#010x}",
+                            y[0].to_bits(),
+                            want.to_bits()
+                        );
+                    }
                 }
             }
         }
@@ -146,13 +153,15 @@ fn sweep_p16e1_gemm_plam_mac_matches_plam_mul() {
         let b = rng.next_u64() & fmt.mask();
         let xe = encode_matrix(&mode, 1, 1, &[to_f32(fmt, a)]);
         let we = encode_matrix(&mode, 1, 1, &[to_f32(fmt, b)]);
-        let mut y = [0f32; 1];
-        gemm_bt(&mode, &xe, &we, None, &mut y);
         let want = to_f32(fmt, plam_mul(fmt, a, b));
-        assert_eq!(
-            y[0].to_bits(),
-            want.to_bits(),
-            "case {case}: {a:#x} ×̃ {b:#x}"
-        );
+        for policy in [AccPolicy::Auto, AccPolicy::ForceQuire] {
+            let mut y = [0f32; 1];
+            gemm_bt_with_policy(&mode, &xe, &we, None, &mut y, policy);
+            assert_eq!(
+                y[0].to_bits(),
+                want.to_bits(),
+                "case {case} ({policy:?}): {a:#x} ×̃ {b:#x}"
+            );
+        }
     }
 }

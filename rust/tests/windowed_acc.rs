@@ -1,0 +1,261 @@
+//! Property suite pinning the scale-windowed single-limb GEMM
+//! accumulator ([`plam::posit::WindowedAcc`], `AccPolicy::Auto`)
+//! bit-identical to the FastQuire kernel (`AccPolicy::ForceQuire`) on
+//! adversarial inputs: extreme scale spreads (window-infeasible panels
+//! forcing the per-output fallback), dense zeros, NaR poisoning, and
+//! random mixes — across P⟨8,0⟩ / P⟨16,1⟩ / P⟨32,2⟩, exact and PLAM
+//! multipliers, sequential and pooled execution.
+//!
+//! Both accumulators hold the mathematically exact dot-product value
+//! and round once through the same FastQuire read-out, so *any*
+//! one-bit divergence is a kernel bug; these tests tolerate none.
+
+use plam::nn::{
+    encode_matrix, gemm_bt_pool_with_policy, gemm_bt_with_policy, AccPolicy, ArithMode, WorkerPool,
+};
+use plam::posit::{to_f32, PositFormat};
+use plam::prng::Rng;
+
+fn all_posit_modes() -> Vec<ArithMode> {
+    vec![
+        ArithMode::posit_exact(PositFormat::P8E0),
+        ArithMode::posit_plam(PositFormat::P8E0),
+        ArithMode::posit_exact(PositFormat::P16E1),
+        ArithMode::posit_plam(PositFormat::P16E1),
+        ArithMode::posit_exact(PositFormat::P32E2),
+        ArithMode::posit_plam(PositFormat::P32E2),
+    ]
+}
+
+/// Run one GEMM under both policies and assert bitwise equality.
+fn assert_policies_agree(
+    mode: &ArithMode,
+    m: usize,
+    k: usize,
+    n: usize,
+    x: &[f32],
+    w: &[f32],
+    bias: Option<&[f32]>,
+    label: &str,
+) {
+    let xe = encode_matrix(mode, m, k, x);
+    let we = encode_matrix(mode, n, k, w);
+    let mut auto = vec![0f32; m * n];
+    let mut forced = vec![0f32; m * n];
+    gemm_bt_with_policy(mode, &xe, &we, bias, &mut auto, AccPolicy::Auto);
+    gemm_bt_with_policy(mode, &xe, &we, bias, &mut forced, AccPolicy::ForceQuire);
+    for (i, (a, f)) in auto.iter().zip(forced.iter()).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            f.to_bits(),
+            "{label} {}: output {i} diverges (windowed {a} vs quire {f})",
+            mode.name()
+        );
+    }
+}
+
+/// Extreme-scale vectors for a format: maxpos/minpos magnitudes mixed
+/// with moderate values, so P⟨32,2⟩ rows blow the 126-bit window (the
+/// planner must fall back) while P⟨8,0⟩ rows always fit.
+fn extreme_value(fmt: PositFormat, rng: &mut Rng) -> f32 {
+    let v = match rng.below(5) {
+        0 => to_f32(fmt, fmt.maxpos()),
+        1 => to_f32(fmt, fmt.minpos()),
+        2 => rng.normal() as f32,
+        3 => (rng.normal() * 1e4) as f32,
+        _ => (rng.normal() * 1e-4) as f32,
+    };
+    if rng.below(2) == 0 {
+        -v
+    } else {
+        v
+    }
+}
+
+#[test]
+fn random_vectors_agree_across_policies() {
+    for mode in all_posit_modes() {
+        for (case, (m, k, n)) in [(3usize, 40usize, 17usize), (1, 600, 9), (8, 130, 33)]
+            .into_iter()
+            .enumerate()
+        {
+            let mut rng = Rng::new(0xA110 + case as u64);
+            let x: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32 * 0.5).collect();
+            let w: Vec<f32> = (0..n * k).map(|_| rng.normal() as f32 * 0.5).collect();
+            let bias: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 0.1).collect();
+            assert_policies_agree(&mode, m, k, n, &x, &w, Some(&bias), "random");
+        }
+    }
+}
+
+#[test]
+fn extreme_scales_force_fallback_and_agree() {
+    // maxpos² products at fan-in k push the accumulated magnitude to
+    // the format's ceiling; for P⟨32,2⟩ the combined window
+    // (±240 scales) can NEVER fit one i128, so this also proves the
+    // per-output fallback path produces the exact saturated result.
+    for mode in all_posit_modes() {
+        for seed in 0..4u64 {
+            let (m, k, n) = (4usize, 96usize, 11usize);
+            let fmt = match &mode {
+                ArithMode::Posit { fmt, .. } => *fmt,
+                _ => unreachable!(),
+            };
+            let mut rng = Rng::new(0xE57 + seed);
+            let x: Vec<f32> = (0..m * k).map(|_| extreme_value(fmt, &mut rng)).collect();
+            let w: Vec<f32> = (0..n * k).map(|_| extreme_value(fmt, &mut rng)).collect();
+            assert_policies_agree(&mode, m, k, n, &x, &w, None, "extreme");
+        }
+    }
+}
+
+#[test]
+fn dense_zero_vectors_agree() {
+    // ~90% zeros: the occupancy masks must route these rows through
+    // the sentinel-checked loops and skip every zero product, in both
+    // accumulators identically. Includes all-zero rows and columns.
+    for mode in all_posit_modes() {
+        let (m, k, n) = (6usize, 150usize, 13usize);
+        let mut rng = Rng::new(0x0000_BEEF);
+        let sparse = |rng: &mut Rng| {
+            if rng.below(10) < 9 {
+                0.0
+            } else {
+                rng.normal() as f32
+            }
+        };
+        let mut x: Vec<f32> = (0..m * k).map(|_| sparse(&mut rng)).collect();
+        let w: Vec<f32> = (0..n * k).map(|_| sparse(&mut rng)).collect();
+        for v in x.iter_mut().take(k) {
+            *v = 0.0; // whole first row zero
+        }
+        let bias: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        assert_policies_agree(&mode, m, k, n, &x, &w, Some(&bias), "sparse");
+    }
+}
+
+#[test]
+fn nar_poisoning_agrees_and_stays_row_local() {
+    // NaR anywhere in a row pair poisons exactly that output — in the
+    // windowed plan (PLAN_NAR short-circuit), the quire fallback, and
+    // the 0 × NaR corner — and never leaks into neighbouring rows.
+    for mode in all_posit_modes() {
+        let (m, k, n) = (5usize, 64usize, 9usize);
+        let mut rng = Rng::new(0x7A12);
+        let mut x: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let mut w: Vec<f32> = (0..n * k).map(|_| rng.normal() as f32).collect();
+        x[2 * k + 7] = f32::NAN; // x row 2 poisoned mid-row
+        w[4 * k + 63] = f32::NAN; // w row 4 poisoned at the row end
+        // 0 × NaR: zero on the x side everywhere NaR sits in w row 5,
+        // so column 5 only survives if the kernel wrongly skips the
+        // zero operand before the NaR check.
+        for mi in 0..m {
+            x[mi * k + 9] = 0.0;
+        }
+        w[5 * k + 9] = f32::NAN;
+        assert_policies_agree(&mode, m, k, n, &x, &w, None, "nar");
+
+        let xe = encode_matrix(&mode, m, k, &x);
+        let we = encode_matrix(&mode, n, k, &w);
+        let mut y = vec![0f32; m * n];
+        gemm_bt_with_policy(&mode, &xe, &we, None, &mut y, AccPolicy::Auto);
+        for mi in 0..m {
+            for ni in 0..n {
+                // NaR poisons its whole output row (x row 2) and
+                // column (w rows 4 and 5 — the latter only via the
+                // 0 × NaR rule), and nothing else.
+                let poisoned = mi == 2 || ni == 4 || ni == 5;
+                assert_eq!(
+                    y[mi * n + ni].is_nan(),
+                    poisoned,
+                    "{} output ({mi},{ni})",
+                    mode.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn mixed_feasible_and_infeasible_rows_in_one_tile() {
+    // P⟨32,2⟩ matrix where even rows hold moderate scales (windowed
+    // plan) and odd rows span the full ±2^120 range (quire fallback):
+    // both plans coexist inside one MB×NB tile and must agree with the
+    // all-quire kernel everywhere.
+    for mode in [
+        ArithMode::posit_exact(PositFormat::P32E2),
+        ArithMode::posit_plam(PositFormat::P32E2),
+    ] {
+        let (m, k, n) = (8usize, 200usize, 24usize);
+        let mut rng = Rng::new(0x3272);
+        let gen = |row: usize, rng: &mut Rng| -> f32 {
+            if row % 2 == 0 {
+                rng.normal() as f32
+            } else if rng.below(2) == 0 {
+                to_f32(PositFormat::P32E2, PositFormat::P32E2.maxpos())
+            } else {
+                to_f32(PositFormat::P32E2, PositFormat::P32E2.minpos())
+            }
+        };
+        let x: Vec<f32> = (0..m * k).map(|i| gen(i / k, &mut rng)).collect();
+        let w: Vec<f32> = (0..n * k).map(|i| gen(i / k, &mut rng)).collect();
+        assert_policies_agree(&mode, m, k, n, &x, &w, None, "mixed");
+    }
+}
+
+#[test]
+fn pooled_windowed_gemm_matches_sequential_quire() {
+    // The pooled kernel threads the policy through each row band; the
+    // cross-product {pooled, sequential} × {Auto, ForceQuire} must be
+    // one single bit pattern.
+    let pool = WorkerPool::new(4);
+    for mode in [
+        ArithMode::posit_plam(PositFormat::P16E1),
+        ArithMode::posit_exact(PositFormat::P8E0),
+    ] {
+        let (m, k, n) = (37usize, 120usize, 19usize);
+        let mut rng = Rng::new(0x9001);
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let w: Vec<f32> = (0..n * k).map(|_| rng.normal() as f32).collect();
+        let bias: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 0.1).collect();
+        let xe = encode_matrix(&mode, m, k, &x);
+        let we = encode_matrix(&mode, n, k, &w);
+        let mut want = vec![0f32; m * n];
+        gemm_bt_with_policy(&mode, &xe, &we, Some(&bias), &mut want, AccPolicy::ForceQuire);
+        for policy in [AccPolicy::Auto, AccPolicy::ForceQuire] {
+            let mut got = vec![0f32; m * n];
+            gemm_bt_pool_with_policy(&mode, &xe, &we, Some(&bias), &mut got, &pool, policy);
+            let same = got
+                .iter()
+                .zip(want.iter())
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(same, "{} pooled {policy:?}", mode.name());
+        }
+    }
+    pool.shutdown();
+}
+
+#[test]
+fn exhaustive_p8e0_pairs_agree_across_policies() {
+    // Every P⟨8,0⟩ value pair as a K=2 dot product (value ± itself):
+    // covers every scale/fraction/specials combination the windowed
+    // planner can see for the format where the window always fits.
+    for mode in [
+        ArithMode::posit_exact(PositFormat::P8E0),
+        ArithMode::posit_plam(PositFormat::P8E0),
+    ] {
+        let fmt = PositFormat::P8E0;
+        for a in 0u64..256 {
+            let av = to_f32(fmt, a);
+            // One x row, 256 w rows: [a, a] · [b, ±b]ᵀ for every b.
+            let x = [av, av];
+            let mut w = Vec::with_capacity(2 * 256);
+            for b in 0u64..256 {
+                let bv = to_f32(fmt, b);
+                w.push(bv);
+                w.push(if b % 2 == 0 { bv } else { -bv });
+            }
+            assert_policies_agree(&mode, 1, 2, 256, &x, &w, None, "exhaustive-k2");
+        }
+    }
+}
