@@ -1,36 +1,51 @@
 #!/usr/bin/env python3
-"""Bench regression guard for the GEMM hot path.
+"""Bench regression guard for the GEMM hot path and the encoded-activation pipeline.
 
-Compares a freshly produced ``BENCH_gemm_formats.json`` (written by
-``cargo bench --bench gemm_formats``) against the committed baseline in
+Compares freshly produced ``BENCH_*.json`` files (written by
+``cargo bench``) against the committed baseline in
 ``ci/bench_baseline.json`` and fails the job when a guarded series —
-most importantly the 256^3 P16E1 PLAM case — regresses by more than the
-baseline's tolerance (default 15% in mean time, i.e. >15% throughput
-loss).
+most importantly the 256^3 P16E1 PLAM GEMM and the LeNet-5 P16E1 PLAM
+forward pass — regresses beyond the baseline's tolerance.
 
 Design notes:
 
-* **Skip-not-fail** when the bench JSON is absent: bench jobs are
-  optional in some pipelines, and a missing artifact means "benches
+* **Multiple bench files, per-series sources**: guarded series carry a
+  ``from`` field naming the bench JSON they come from (legacy plain
+  numbers default to ``BENCH_gemm_formats.json``). CI jobs that run
+  only one bench harness pass only that file; series whose source file
+  was not provided (or does not exist) are *skipped with a note*, never
+  failed — each job guards exactly what it measured.
+* **Skip-not-fail** when no bench JSON is present at all: bench jobs
+  are optional in some pipelines, and a missing artifact means "benches
   didn't run", not "the code got slower".
-* **Hardware calibration**: absolute nanoseconds differ across runners,
-  so the guard rescales every baseline number by the ratio of the
-  ``calibration`` series (a stable, windowing-independent workload)
-  between the current run and the baseline run. This catches real
-  kernel regressions while shrugging off runner-speed variance.
+* **Per-file hardware calibration**: absolute nanoseconds differ across
+  runners, so the guard rescales every baseline number by the ratio of
+  its source file's ``calibrations`` series (a stable workload
+  unaffected by the optimisation being guarded: ``dense float32`` for
+  the GEMM file, the f32 round-trip forward pass for the e2e file)
+  between the current run and the baseline run. A guarded series whose
+  file has no usable calibration is compared raw only while the
+  baseline is provisional — ``--update`` refuses to arm such a series,
+  so an armed baseline never hard-fails on raw cross-runner
+  nanoseconds.
 * **Self-relative checks** need no baseline hardware at all: within one
-  JSON, the windowed kernel must not be slower than its FastQuire
-  fallback beyond tolerance — if it is, the optimisation regressed no
-  matter what the absolute numbers say.
+  run, a ``fast`` series must not exceed ``max_ratio`` × its ``slow``
+  counterpart (default ``1 + self_check_tolerance``). The windowed
+  kernel vs its FastQuire fallback and the encoded pipeline vs the f32
+  round-trip path are guarded this way. A check marked ``"soft": true``
+  warns instead of failing — used while a freshly added series has
+  never been measured on a representative runner.
 * **Provisional baselines**: a baseline recorded on unknown hardware
   (``"provisional": true``) downgrades absolute-number failures to
-  warnings (self-relative checks still fail hard). Refresh with
-  ``check_bench_regression.py --update`` on a representative runner and
-  commit the result to arm the absolute gate.
+  warnings (hard self-relative checks still fail). Refresh with
+  ``check_bench_regression.py --update`` on a representative runner
+  (providing *all* source bench files) and commit the result to arm the
+  absolute gate — updating also clears every self-check's ``soft``
+  flag.
 
 Usage:
     python3 ci/check_bench_regression.py \
-        [--bench rust/BENCH_gemm_formats.json] \
+        [--bench rust/BENCH_gemm_formats.json] [--bench rust/BENCH_e2e_inference.json] \
         [--baseline ci/bench_baseline.json] [--update]
 """
 
@@ -39,45 +54,99 @@ import json
 import sys
 from pathlib import Path
 
-DEFAULT_BENCH = "rust/BENCH_gemm_formats.json"
+DEFAULT_BENCHES = ["rust/BENCH_gemm_formats.json", "rust/BENCH_e2e_inference.json"]
 DEFAULT_BASELINE = "ci/bench_baseline.json"
+# Series without an explicit "from" predate multi-file support and all
+# came from the GEMM bench.
+LEGACY_SOURCE = "BENCH_gemm_formats.json"
 
 
-def load_results(path):
-    """BENCH_*.json -> {series name: mean_ns}."""
-    with open(path) as f:
-        doc = json.load(f)
-    return {r["name"]: r["mean_ns"] for r in doc["results"]}
+def load_benches(paths):
+    """-> (merged {series: mean_ns}, set of loaded basenames, missing paths)."""
+    merged, loaded, missing = {}, set(), []
+    for path in paths:
+        p = Path(path)
+        if not p.exists():
+            missing.append(path)
+            continue
+        with open(p) as f:
+            doc = json.load(f)
+        for r in doc["results"]:
+            merged[r["name"]] = r["mean_ns"]
+        loaded.add(p.name)
+    return merged, loaded, missing
 
 
-def update_baseline(results, baseline_path, old):
-    guarded = old.get("series", {})
+def series_entry(value):
+    """Baseline series value -> (mean_ns, source basename)."""
+    if isinstance(value, dict):
+        return value["mean_ns"], value.get("from", LEGACY_SOURCE)
+    return value, LEGACY_SOURCE
+
+
+def calibrations(baseline):
+    """-> {source basename: {"series": name, "mean_ns": N|None}}.
+
+    Reads the per-file ``calibrations`` map; the legacy top-level
+    ``calibration``/``calibration_mean_ns`` pair (which always described
+    the GEMM file) folds in as that file's entry when absent.
+    """
+    cals = {k: dict(v) for k, v in baseline.get("calibrations", {}).items()}
+    legacy = baseline.get("calibration")
+    if legacy and LEGACY_SOURCE not in cals:
+        cals[LEGACY_SOURCE] = {
+            "series": legacy,
+            "mean_ns": baseline.get("calibration_mean_ns"),
+        }
+    return cals
+
+
+def update_baseline(results, loaded, baseline_path, old):
+    cals = calibrations(old)
     new_series = {}
     missing = []
-    for name in guarded:
-        if name in results:
-            new_series[name] = results[name]
-        else:
+    for name, value in old.get("series", {}).items():
+        _, src = series_entry(value)
+        if src not in loaded:
+            missing.append(f"{name} (needs {src})")
+            continue
+        if name not in results:
             missing.append(name)
+            continue
+        cal = cals.get(src)
+        if not cal or cal["series"] not in results:
+            # Refuse to arm an uncalibrated absolute gate: the armed
+            # baseline would compare raw nanoseconds across runners on
+            # every future CI run of that series' job.
+            want = cal["series"] if cal else "a calibrations entry"
+            missing.append(f"{name} (needs calibration '{want}' from {src})")
+            continue
+        if isinstance(value, dict):
+            new_series[name] = {"mean_ns": results[name], "from": src}
+        else:
+            new_series[name] = results[name]
     if missing:
-        print(f"ERROR: bench JSON lacks guarded series: {missing}")
+        print(f"ERROR: bench JSONs lack guarded series: {missing}")
+        print("       (--update needs every source bench file; pass more --bench flags)")
         return 1
-    cal = old.get("calibration")
-    if cal and cal not in results:
-        # Refuse to arm an uncalibrated absolute gate: a baseline with
-        # calibration_mean_ns: null would compare raw nanoseconds across
-        # runners on every future CI run.
-        print(f"ERROR: bench JSON lacks the calibration series '{cal}'")
-        return 1
+    new_cals = {}
+    for src, cal in cals.items():
+        mean = results.get(cal["series"], cal.get("mean_ns"))
+        new_cals[src] = {"series": cal["series"], "mean_ns": mean}
+    # Arming clears soft flags: every self-check becomes a hard gate.
+    self_checks = []
+    for chk in old.get("self_checks", []):
+        chk = dict(chk)
+        chk.pop("soft", None)
+        self_checks.append(chk)
     doc = {
         "comment": old.get("comment", ""),
-        "calibration": cal,
-        "calibration_mean_ns": results.get(cal),
+        "calibrations": new_cals,
         "tolerance": old.get("tolerance", 0.15),
         "self_check_tolerance": old.get("self_check_tolerance", 0.5),
         "provisional": False,
         "series": new_series,
-        "self_checks": old.get("self_checks", []),
+        "self_checks": self_checks,
     }
     Path(baseline_path).write_text(json.dumps(doc, indent=2) + "\n")
     print(f"baseline updated: {baseline_path}")
@@ -86,19 +155,26 @@ def update_baseline(results, baseline_path, old):
 
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--bench", default=DEFAULT_BENCH)
+    ap.add_argument(
+        "--bench",
+        action="append",
+        help=f"bench JSON(s) to check (repeatable; default: {DEFAULT_BENCHES})",
+    )
     ap.add_argument("--baseline", default=DEFAULT_BASELINE)
     ap.add_argument(
         "--update",
         action="store_true",
-        help="rewrite the baseline from the current bench JSON (arms the absolute gate)",
+        help="rewrite the baseline from the current bench JSONs (arms the absolute gate)",
     )
     args = ap.parse_args()
 
-    if not Path(args.bench).exists():
-        print(f"SKIP: {args.bench} not found (benches didn't run) — not failing the job")
+    bench_paths = args.bench or DEFAULT_BENCHES
+    results, loaded, missing_files = load_benches(bench_paths)
+    for path in missing_files:
+        print(f"note: {path} not found — its series will be skipped")
+    if not loaded:
+        print("SKIP: no bench JSON found (benches didn't run) — not failing the job")
         return 0
-    results = load_results(args.bench)
 
     if not Path(args.baseline).exists():
         print(f"SKIP: no committed baseline at {args.baseline} — nothing to compare against")
@@ -107,69 +183,89 @@ def main():
         baseline = json.load(f)
 
     if args.update:
-        return update_baseline(results, args.baseline, baseline)
+        return update_baseline(results, loaded, args.baseline, baseline)
 
     tol = baseline.get("tolerance", 0.15)
     provisional = baseline.get("provisional", False)
     failures, warnings = [], []
 
-    # Hardware calibration factor (current runner vs baseline runner).
-    scale = 1.0
-    cal = baseline.get("calibration")
-    cal_base = baseline.get("calibration_mean_ns")
-    if cal and cal_base and cal in results:
-        scale = results[cal] / cal_base
-        print(f"calibration '{cal}': {results[cal]} ns vs {cal_base} ns -> scale {scale:.3f}")
-    else:
-        print("calibration unavailable — comparing raw nanoseconds")
+    # Per-file hardware calibration factors (current vs baseline runner).
+    cals = calibrations(baseline)
+    scales = {}
+    for src, cal in sorted(cals.items()):
+        mean = cal.get("mean_ns")
+        if src in loaded and mean and cal["series"] in results:
+            scales[src] = results[cal["series"]] / mean
+            print(
+                f"calibration[{src}] '{cal['series']}': {results[cal['series']]} ns "
+                f"vs {mean} ns -> scale {scales[src]:.3f}"
+            )
 
     # Absolute gate: guarded series vs (calibrated) baseline numbers.
-    for name, base_ns in baseline.get("series", {}).items():
+    # Series whose source file has no usable calibration compare raw and
+    # only ever warn — `--update` refuses to arm them, so this state is
+    # always provisional.
+    for name, value in baseline.get("series", {}).items():
+        base_ns, src = series_entry(value)
+        if src not in loaded:
+            print(f"  {name}: SKIP ({src} not provided)")
+            continue
         if name not in results:
-            failures.append(f"guarded series missing from bench JSON: '{name}'")
+            failures.append(f"guarded series missing from {src}: '{name}'")
             continue
         cur = results[name]
+        scale = scales.get(src)
+        uncalibrated = scale is None
+        scale = 1.0 if uncalibrated else scale
         limit = base_ns * scale * (1.0 + tol)
         verdict = "ok" if cur <= limit else "REGRESSION"
-        print(f"  {name}: {cur:.0f} ns (limit {limit:.0f} ns) {verdict}")
+        raw = " [raw: no calibration]" if uncalibrated else ""
+        print(f"  {name}: {cur:.0f} ns (limit {limit:.0f} ns){raw} {verdict}")
         if cur > limit:
             msg = (
                 f"'{name}' regressed: {cur:.0f} ns vs calibrated baseline "
                 f"{base_ns * scale:.0f} ns (+{100 * (cur / (base_ns * scale) - 1):.1f}%, "
                 f"tolerance {100 * tol:.0f}%)"
             )
-            (warnings if provisional else failures).append(msg)
+            (warnings if provisional or uncalibrated else failures).append(msg)
 
-    # Self-relative gate (runner-independent): `fast` must not be slower
-    # than `slow` by more than the self-check tolerance within this very
-    # run. The tolerance is deliberately looser than the absolute gate's
-    # (default 50%): both means come from one noisy smoke run on a
-    # shared runner, and the windowed kernel's expected margin over its
-    # fallback is large — this only trips when the optimisation has
-    # genuinely stopped paying for itself.
+    # Self-relative gate (runner-independent): `fast` must not exceed
+    # `max_ratio` × `slow` within this very run (default max_ratio =
+    # 1 + self_check_tolerance — deliberately loose, since both means
+    # come from one noisy smoke run). A tighter per-check "max_ratio"
+    # pins an expected speedup (e.g. 0.77 asserts the encoded pipeline
+    # beats the round-trip path by ≥ 1.3×); "soft": true warns instead
+    # of failing until the baseline is armed.
     self_tol = baseline.get("self_check_tolerance", 0.5)
     for chk in baseline.get("self_checks", []):
         fast, slow = chk["fast"], chk["slow"]
+        src = chk.get("from", LEGACY_SOURCE)
+        if src not in loaded:
+            print(f"  self-check: {fast} / {slow}: SKIP ({src} not provided)")
+            continue
         if fast not in results or slow not in results:
             failures.append(f"self-check series missing: '{fast}' / '{slow}'")
             continue
+        max_ratio = chk.get("max_ratio", 1.0 + self_tol)
+        soft = chk.get("soft", False)
         ratio = results[fast] / results[slow]
-        verdict = "ok" if ratio <= 1.0 + self_tol else "REGRESSION"
-        print(f"  self-check: {fast} / {slow} = {ratio:.3f} {verdict}")
-        if ratio > 1.0 + self_tol:
-            failures.append(
-                f"'{fast}' is {ratio:.2f}x the time of '{slow}' — the windowed "
-                f"kernel lost to its own fallback (tolerance {100 * self_tol:.0f}%)"
+        verdict = "ok" if ratio <= max_ratio else "REGRESSION"
+        print(f"  self-check: {fast} / {slow} = {ratio:.3f} (max {max_ratio:.3f}) {verdict}")
+        if ratio > max_ratio:
+            msg = (
+                f"'{fast}' is {ratio:.2f}x the time of '{slow}' "
+                f"(max allowed {max_ratio:.2f}x)"
             )
+            (warnings if soft else failures).append(msg)
 
     for w in warnings:
-        print(f"WARN (provisional baseline — not failing): {w}")
+        print(f"WARN (provisional/soft — not failing): {w}")
     if provisional and baseline.get("series"):
         print(
             "NOTE: baseline is provisional (recorded off-runner). Run "
-            "`python3 ci/check_bench_regression.py --update` on a "
-            "representative runner and commit ci/bench_baseline.json to arm "
-            "the absolute gate."
+            "`python3 ci/check_bench_regression.py --update` with every "
+            "source bench file on a representative runner and commit "
+            "ci/bench_baseline.json to arm the absolute gate."
         )
     if failures:
         print("\nFAIL: bench regression guard tripped:")

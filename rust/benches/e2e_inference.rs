@@ -1,6 +1,9 @@
 //! Bench: end-to-end serving — latency/throughput of the L3 coordinator
 //! under open-loop concurrent load, per arithmetic mode and batching
-//! policy (the serving-side evaluation of DESIGN.md E8).
+//! policy (the serving-side evaluation of DESIGN.md E8) — plus the
+//! layer-boundary series: the encoded-activation pipeline vs the f32
+//! round-trip path on multi-layer forward passes (guarded by
+//! ci/check_bench_regression.py once exported).
 //!
 //! Run: cargo bench --bench e2e_inference
 
@@ -8,9 +11,9 @@ use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use plam::bench::Bench;
+use plam::bench::{black_box, Bench};
 use plam::coordinator::{serve, BatcherConfig, Client, NnBackend, Router, ServerConfig};
-use plam::nn::{ArithMode, Model, ModelKind};
+use plam::nn::{ActivationPipeline, ArithMode, Model, ModelKind, PreparedModel, Tensor};
 use plam::posit::PositFormat;
 use plam::prng::Rng;
 
@@ -137,6 +140,61 @@ fn main() {
             "failures under load"
         );
         h.shutdown();
+    }
+
+    // Layer-boundary series: the encoded-activation pipeline (planes
+    // end to end, f32 only at the model boundary) vs the f32 round-trip
+    // path (round every layer output to a posit, convert to f32,
+    // re-encode at the next layer). Outputs are bit-identical — this
+    // measures pure boundary tax. The conv model is where the tax bites
+    // hardest: the round-trip path materialises and re-encodes a full
+    // im2col matrix per sample per conv layer.
+    println!("\nencoded-activation pipeline vs f32 round-trip (forward_batch):");
+    let lenet = Model::init(ModelKind::LeNet5 { in_ch: 1, in_hw: 28 }, &mut rng);
+    let imgs: Vec<Tensor> = (0..4)
+        .map(|_| Tensor::from_vec(&[1, 28, 28], (0..784).map(|_| rng.f32()).collect()))
+        .collect();
+    let isolet: Vec<Tensor> = (0..16)
+        .map(|_| {
+            Tensor::from_vec(&[617], (0..617).map(|_| rng.normal() as f32 * 0.5).collect())
+        })
+        .collect();
+    for (label, mode) in [
+        ("lenet5 plam p16e1", ArithMode::posit_plam(PositFormat::P16E1)),
+        ("lenet5 exact p16e1", ArithMode::posit_exact(PositFormat::P16E1)),
+        ("lenet5 plam p8e0", ArithMode::posit_plam(PositFormat::P8E0)),
+    ] {
+        let enc = PreparedModel::new(&lenet, mode.clone());
+        let rt = PreparedModel::new(&lenet, mode).with_pipeline(ActivationPipeline::F32Roundtrip);
+        bench.run(&format!("{label} encoded"), || {
+            black_box(enc.forward_batch(black_box(&imgs)));
+        });
+        bench.run(&format!("{label} roundtrip"), || {
+            black_box(rt.forward_batch(black_box(&imgs)));
+        });
+        if let Some(s) =
+            bench.speedup(&format!("{label} roundtrip"), &format!("{label} encoded"))
+        {
+            println!("  {label}: encoded speedup over round-trip {s:.2}x");
+        }
+    }
+    {
+        let mode = ArithMode::posit_plam(PositFormat::P16E1);
+        let enc = PreparedModel::new(&model, mode.clone());
+        let rt = PreparedModel::new(&model, mode).with_pipeline(ActivationPipeline::F32Roundtrip);
+        bench.run("mlp-isolet plam p16e1 encoded", || {
+            black_box(enc.forward_batch(black_box(&isolet)));
+        });
+        bench.run("mlp-isolet plam p16e1 roundtrip", || {
+            black_box(rt.forward_batch(black_box(&isolet)));
+        });
+        let s = bench.speedup(
+            "mlp-isolet plam p16e1 roundtrip",
+            "mlp-isolet plam p16e1 encoded",
+        );
+        if let Some(s) = s {
+            println!("  mlp-isolet plam p16e1: encoded speedup over round-trip {s:.2}x");
+        }
     }
 
     bench

@@ -1,0 +1,800 @@
+//! EncodedTensor — activations kept in decode-plane form across
+//! layers (the end-to-end encoded pipeline).
+//!
+//! The seed inference path leaves the posit domain at every layer
+//! boundary: GEMM outputs round to posits, convert to `f32`
+//! [`Tensor`]s, and get re-encoded into SoA planes by the next layer's
+//! `encode_matrix` call — and conv layers additionally materialise a
+//! full `f32` im2col matrix per sample before re-encoding it. An
+//! [`EncodedTensor`] removes that tax: a whole activation batch lives
+//! as one `[batch, features]` [`EncodedMatrix`] (the same
+//! `scales: Vec<i16>` + sign-packed Q30 `sfracs: Vec<u32>` planes the
+//! GEMM consumes, panel metadata folded at write time), and flows
+//! between layers without ever touching `f32`:
+//!
+//! * dense layers feed the batch matrix straight into the GEMM and
+//!   receive the next activation via the plane-emitting read-out
+//!   (`gemm_bt_planes` — planes written directly from the
+//!   accumulator's single rounding);
+//! * conv layers gather im2col patches *by index* over the input's
+//!   planes (`gather_patches_into`) instead of copying f32s and
+//!   re-encoding them;
+//! * ReLU is a sign-bit test on the sfrac plane that zeroes entries in
+//!   place; maxpool compares in the decoded domain
+//!   (`posit::tables::decoded_key` — monotone with the real value);
+//!   flatten is a shape relabel.
+//!
+//! `f32` appears only at the model boundary: [`EncodedTensor::encode`]
+//! quantises the input batch once (exactly the planes the seed path's
+//! first `encode_matrix` would build), and the *last* GEMM layer of a
+//! prepared model reads out through the classic `to_f32` path (see
+//! `nn::prepared`), so final logits carry no extra rounding. Every
+//! intermediate output still rounds exactly once — re-decoding a
+//! freshly rounded posit is lossless (n > 16 formats apply the f32
+//! storage round-trip inside `readout_entry`) — so the whole pipeline
+//! is **bit-identical** to the seed f32-round-trip path.
+//!
+//! ## NaR semantics (pinned)
+//!
+//! NaR is *absorbing* through elementwise and pooling layers: ReLU
+//! keeps NaR (it is not "negative"), and a pool window containing NaR
+//! pools to NaR. The f32 layers in `nn::layers` implement the same
+//! rule for NaN, so both pipelines agree bit for bit on poisoned
+//! inputs.
+
+use crate::posit::tables::{
+    decoded_key, sfrac_sign, sfrac_significand, FW, SCALE_NAR, SCALE_ZERO, SFRAC_SIGN,
+};
+use crate::posit::PositFormat;
+
+use super::gemm::{
+    encode_matrix_into, gemm_bt, gemm_bt_planes, EncodedMatrix, PanelMeta, CONV_SCRATCH, KB,
+};
+use super::layers::ArithMode;
+use super::pool::WorkerPool;
+use super::tensor::Tensor;
+
+/// The sfrac plane element for NaR (`DecEntry { sign: true, frac: 0 }`
+/// packed), matching what decode produces so NaR-writing layers keep
+/// planes byte-identical to the encode path.
+const NAR_SFRAC: u32 = SFRAC_SIGN;
+
+/// A batch of activations in decode-plane form: per-sample logical
+/// `shape`, and one `[batch, features]` plane matrix ready to be a
+/// GEMM operand (each sample is one row, panel metadata included).
+pub struct EncodedTensor {
+    shape: Vec<usize>,
+    fmt: PositFormat,
+    mat: EncodedMatrix,
+}
+
+impl EncodedTensor {
+    /// Quantise an f32 batch into decode planes — the model *input*
+    /// boundary, and the only place the encoded pipeline pays the
+    /// `from_f32` encode tax. Produces exactly the planes the seed
+    /// path's first `encode_matrix` call would have built. Panics on
+    /// [`ArithMode::Float32`] (float activations have no planes) and
+    /// on an empty or shape-mixed batch.
+    pub fn encode(mode: &ArithMode, xs: &[Tensor]) -> EncodedTensor {
+        let fmt = match mode {
+            ArithMode::Posit { fmt, .. } => *fmt,
+            ArithMode::Float32 => panic!("encoded activations require a posit mode"),
+        };
+        assert!(!xs.is_empty(), "cannot encode an empty batch");
+        let shape = xs[0].shape.clone();
+        let features = xs[0].len();
+        let mut flat = Vec::with_capacity(xs.len() * features);
+        for x in xs {
+            assert_eq!(x.shape, shape, "mixed sample shapes in one batch");
+            flat.extend_from_slice(&x.data);
+        }
+        let mut mat = EncodedMatrix::empty();
+        encode_matrix_into(mode, xs.len(), features, &flat, &mut mat);
+        EncodedTensor { shape, fmt, mat }
+    }
+
+    /// Decode back to f32 tensors — the model *output* boundary.
+    /// Exact: each plane element is a posit the read-out rounded once;
+    /// its value `±1.f · 2^(scale − FW)` reconstructs exactly in f64
+    /// and converts to f32 with the same single rounding `to_f32`
+    /// performs, so decoded values equal the classic read-out's bit
+    /// for bit.
+    pub fn decode(&self) -> Vec<Tensor> {
+        let features = self.mat.cols;
+        (0..self.mat.rows)
+            .map(|s| {
+                let base = s * features;
+                let data = (base..base + features)
+                    .map(|i| decode_elem(self.mat.scales[i], self.mat.sfracs[i]))
+                    .collect();
+                Tensor::from_vec(&self.shape, data)
+            })
+            .collect()
+    }
+
+    /// Per-sample logical shape.
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// Number of samples in the batch.
+    pub fn batch(&self) -> usize {
+        self.mat.rows
+    }
+
+    /// Flattened per-sample element count.
+    pub fn features(&self) -> usize {
+        self.mat.cols
+    }
+
+    /// The posit format the planes were decoded for.
+    pub fn fmt(&self) -> PositFormat {
+        self.fmt
+    }
+
+    /// Heap footprint of the activation planes (same accounting as
+    /// [`EncodedMatrix::bytes`]).
+    pub fn bytes(&self) -> usize {
+        self.mat.bytes()
+    }
+
+    /// The batch plane matrix (each sample one row) — directly a GEMM
+    /// operand.
+    pub(crate) fn matrix(&self) -> &EncodedMatrix {
+        &self.mat
+    }
+
+    /// Wrap a plane matrix produced by the plane-emitting GEMM (or a
+    /// layer kernel below) as an activation batch.
+    pub(crate) fn from_matrix(shape: Vec<usize>, fmt: PositFormat, mat: EncodedMatrix) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>(), mat.cols);
+        EncodedTensor { shape, fmt, mat }
+    }
+
+    /// ReLU in the decoded domain: a sign-bit test on the sfrac plane
+    /// that zeroes negative entries in place (no decode, no rounding —
+    /// ReLU is exact in every arithmetic). NaR survives (see the
+    /// module docs); zero stays zero. Panel/row metadata is re-folded
+    /// in the same pass, so the result is immediately a valid GEMM
+    /// operand.
+    pub fn relu_in_place(&mut self) {
+        let cols = self.mat.cols;
+        if cols == 0 {
+            return;
+        }
+        let kc = cols.div_ceil(KB);
+        for r in 0..self.mat.rows {
+            let base = r * cols;
+            let mut rm = PanelMeta::EMPTY;
+            for c0 in (0..cols).step_by(KB) {
+                let mut pm = PanelMeta::EMPTY;
+                for c in c0..(c0 + KB).min(cols) {
+                    let i = base + c;
+                    let s = self.mat.scales[i];
+                    if s != SCALE_NAR && s != SCALE_ZERO && sfrac_sign(self.mat.sfracs[i]) {
+                        self.mat.scales[i] = SCALE_ZERO;
+                        self.mat.sfracs[i] = 0;
+                    }
+                    pm.fold_scale(self.mat.scales[i]);
+                }
+                self.mat.panels[r * kc + c0 / KB] = pm;
+                rm.merge(&pm);
+            }
+            self.mat.row_meta[r] = rm;
+        }
+    }
+
+    /// Max pooling in the decoded domain: windows compare by
+    /// `decoded_key` (strictly monotone with the real value, so the
+    /// winner is exactly the element the f32 path would have kept) and
+    /// a window containing NaR pools to NaR (see the module docs).
+    /// Input must be `[c, h, w]`; output is `[c, oh, ow]` with
+    /// metadata folded at write time.
+    pub fn maxpool2d(&self, k: usize, stride: usize) -> EncodedTensor {
+        assert_eq!(self.shape.len(), 3, "maxpool input must be [c,h,w]");
+        let (c, h, w) = (self.shape[0], self.shape[1], self.shape[2]);
+        let oh = (h - k) / stride + 1;
+        let ow = (w - k) / stride + 1;
+        let feat = c * oh * ow;
+        let mut mat = EncodedMatrix::empty();
+        mat.reset_planes(self.mat.rows, feat);
+        for r in 0..self.mat.rows {
+            let base_in = r * self.mat.cols;
+            let mut writer = PlaneRowWriter::new(&mut mat, r);
+            for ch in 0..c {
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        let mut best_key = i64::MIN;
+                        let (mut best_s, mut best_f) = (SCALE_ZERO, 0u32);
+                        let mut nar = false;
+                        'win: for ky in 0..k {
+                            for kx in 0..k {
+                                let j = base_in
+                                    + (ch * h + oy * stride + ky) * w
+                                    + ox * stride
+                                    + kx;
+                                let s = self.mat.scales[j];
+                                if s == SCALE_NAR {
+                                    nar = true;
+                                    break 'win;
+                                }
+                                let f = self.mat.sfracs[j];
+                                let key = decoded_key(s, f);
+                                if key > best_key {
+                                    best_key = key;
+                                    best_s = s;
+                                    best_f = f;
+                                }
+                            }
+                        }
+                        if nar {
+                            writer.push(SCALE_NAR, NAR_SFRAC);
+                        } else {
+                            writer.push(best_s, best_f);
+                        }
+                    }
+                }
+            }
+            writer.finish();
+        }
+        EncodedTensor {
+            shape: vec![c, oh, ow],
+            fmt: self.fmt,
+            mat,
+        }
+    }
+
+    /// Flatten `[c, h, w] → [c·h·w]`: the planes are already stored
+    /// row-major per sample, so this is a shape relabel — no copy.
+    pub fn flatten(mut self) -> EncodedTensor {
+        self.shape = vec![self.mat.cols];
+        self
+    }
+}
+
+/// Reconstruct one plane element's f32 value (the output-boundary
+/// decode): the same exact `significand × 2^(scale − width)` f64
+/// computation as `Decoded::to_f64` (the FW-aligned significand shifts
+/// the exponent by exactly the alignment amount, so the products are
+/// identical doubles), followed by the same single f64→f32 rounding —
+/// so decoded values match `posit::to_f32` of the underlying bits.
+#[inline]
+fn decode_elem(scale: i16, sfrac: u32) -> f32 {
+    if scale == SCALE_NAR {
+        return f64::NAN as f32;
+    }
+    if scale == SCALE_ZERO {
+        return 0.0;
+    }
+    let sig = sfrac_significand(sfrac) as f64; // [2^30, 2^31), exact
+    let v = sig * ((scale as i32 - FW as i32) as f64).exp2();
+    (if sfrac_sign(sfrac) { -v } else { v }) as f32
+}
+
+/// Sequential plane writer for one row of an [`EncodedMatrix`]: pushes
+/// `(scale, sfrac)` elements left to right, folding panel metadata at
+/// every `KB` chunk boundary and the row fold at `finish`. The layer
+/// kernels above (pool, scatter, gather) all write through this so the
+/// metadata contract has a single implementation.
+struct PlaneRowWriter<'a> {
+    scales: &'a mut [i16],
+    sfracs: &'a mut [u32],
+    panels: &'a mut [PanelMeta],
+    row_meta: &'a mut PanelMeta,
+    cols: usize,
+    idx: usize,
+    pm: PanelMeta,
+    rm: PanelMeta,
+}
+
+impl<'a> PlaneRowWriter<'a> {
+    fn new(mat: &'a mut EncodedMatrix, row: usize) -> Self {
+        let cols = mat.cols;
+        let kc = cols.div_ceil(KB);
+        PlaneRowWriter {
+            scales: &mut mat.scales[row * cols..(row + 1) * cols],
+            sfracs: &mut mat.sfracs[row * cols..(row + 1) * cols],
+            panels: &mut mat.panels[row * kc..(row + 1) * kc],
+            row_meta: &mut mat.row_meta[row],
+            cols,
+            idx: 0,
+            pm: PanelMeta::EMPTY,
+            rm: PanelMeta::EMPTY,
+        }
+    }
+
+    /// Writer over pre-split row slices (the pooled conv path hands
+    /// each worker its own disjoint sample row).
+    fn over(
+        scales: &'a mut [i16],
+        sfracs: &'a mut [u32],
+        panels: &'a mut [PanelMeta],
+        row_meta: &'a mut PanelMeta,
+    ) -> Self {
+        let cols = scales.len();
+        PlaneRowWriter {
+            scales,
+            sfracs,
+            panels,
+            row_meta,
+            cols,
+            idx: 0,
+            pm: PanelMeta::EMPTY,
+            rm: PanelMeta::EMPTY,
+        }
+    }
+
+    #[inline(always)]
+    fn push(&mut self, scale: i16, sfrac: u32) {
+        self.scales[self.idx] = scale;
+        self.sfracs[self.idx] = sfrac;
+        self.pm.fold_scale(scale);
+        self.idx += 1;
+        if self.idx % KB == 0 {
+            self.flush_panel();
+        }
+    }
+
+    #[inline]
+    fn flush_panel(&mut self) {
+        self.panels[(self.idx - 1) / KB] = self.pm;
+        self.rm.merge(&self.pm);
+        self.pm = PanelMeta::EMPTY;
+    }
+
+    fn finish(mut self) {
+        debug_assert_eq!(self.idx, self.cols, "row not fully written");
+        if self.idx % KB != 0 {
+            self.flush_panel();
+        }
+        *self.row_meta = self.rm;
+    }
+}
+
+/// Conv geometry shared by the gather/scatter kernels.
+#[derive(Clone, Copy)]
+pub(crate) struct ConvGeom {
+    pub ic: usize,
+    pub h: usize,
+    pub w: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub stride: usize,
+    pub pad: usize,
+    pub oc: usize,
+}
+
+impl ConvGeom {
+    pub(crate) fn out_hw(&self) -> (usize, usize) {
+        (
+            (self.h + 2 * self.pad - self.kh) / self.stride + 1,
+            (self.w + 2 * self.pad - self.kw) / self.stride + 1,
+        )
+    }
+
+    fn patch(&self) -> usize {
+        self.ic * self.kh * self.kw
+    }
+}
+
+/// im2col in the decoded domain: gather one sample's `[ic, h, w]`
+/// planes into a `[oh·ow, ic·kh·kw]` patch matrix by pure index copy —
+/// no f32 materialisation, no re-encode. Padding cells write the zero
+/// sentinel (exactly what encoding a padded 0.0 produces), and panel
+/// metadata folds during the gather, so the result is identical to
+/// `encode_matrix(im2col(x))` plane for plane.
+pub(crate) fn gather_patches_into(
+    scales: &[i16],
+    sfracs: &[u32],
+    g: &ConvGeom,
+    out: &mut EncodedMatrix,
+) {
+    let (oh, ow) = g.out_hw();
+    let patch = g.patch();
+    out.reset_planes(oh * ow, patch);
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let mut writer = PlaneRowWriter::new(out, oy * ow + ox);
+            for c in 0..g.ic {
+                for ky in 0..g.kh {
+                    for kx in 0..g.kw {
+                        let iy = oy * g.stride + ky;
+                        let ix = ox * g.stride + kx;
+                        if iy < g.pad || ix < g.pad || iy - g.pad >= g.h || ix - g.pad >= g.w {
+                            writer.push(SCALE_ZERO, 0);
+                        } else {
+                            let j = (c * g.h + (iy - g.pad)) * g.w + (ix - g.pad);
+                            writer.push(scales[j], sfracs[j]);
+                        }
+                    }
+                }
+            }
+            writer.finish();
+        }
+    }
+}
+
+/// One sample's conv2d, fully in the decoded domain: gather patches
+/// from the input planes, run the plane-emitting GEMM against the
+/// pre-encoded filter plane, then scatter the position-major
+/// `[oh·ow, oc]` result into the sample's channel-major output row
+/// (metadata folded at write time). Gather and GEMM scratch are
+/// thread-local.
+fn conv_sample_planes(
+    mode: &ArithMode,
+    x_scales: &[i16],
+    x_sfracs: &[u32],
+    g: &ConvGeom,
+    we: &EncodedMatrix,
+    bias: &[f32],
+    out_scales: &mut [i16],
+    out_sfracs: &mut [u32],
+    out_panels: &mut [PanelMeta],
+    out_row_meta: &mut PanelMeta,
+) {
+    let (oh, ow) = g.out_hw();
+    let hw = oh * ow;
+    CONV_SCRATCH.with(|cell| {
+        let mut sc = cell.borrow_mut();
+        let sc = &mut *sc;
+        gather_patches_into(x_scales, x_sfracs, g, &mut sc.patch);
+        gemm_bt_planes(mode, &sc.patch, we, Some(bias), &mut sc.out);
+        let mut writer = PlaneRowWriter::over(out_scales, out_sfracs, out_panels, out_row_meta);
+        for o in 0..g.oc {
+            for p in 0..hw {
+                writer.push(sc.out.scales[p * g.oc + o], sc.out.sfracs[p * g.oc + o]);
+            }
+        }
+        writer.finish();
+    });
+}
+
+/// Conv2d over an encoded activation batch → encoded output batch.
+/// With a pool (and more than one sample), samples fan out one task
+/// each — bit-identical to the sequential loop, since every sample
+/// writes only its own output row.
+pub(crate) fn conv2d_encoded(
+    mode: &ArithMode,
+    x: &EncodedTensor,
+    we: &EncodedMatrix,
+    bias: &[f32],
+    g: &ConvGeom,
+    pool: Option<&WorkerPool>,
+) -> EncodedTensor {
+    assert_eq!(x.shape(), [g.ic, g.h, g.w], "conv input shape mismatch");
+    let (oh, ow) = g.out_hw();
+    let feat = g.oc * oh * ow;
+    let kc = feat.div_ceil(KB);
+    let batch = x.batch();
+    let in_feat = x.features();
+    let mut mat = EncodedMatrix::empty();
+    mat.reset_planes(batch, feat);
+    {
+        let rows = mat
+            .scales
+            .chunks_mut(feat)
+            .zip(mat.sfracs.chunks_mut(feat))
+            .zip(mat.panels.chunks_mut(kc))
+            .zip(mat.row_meta.iter_mut())
+            .enumerate();
+        match pool {
+            Some(p) if batch > 1 && p.workers() > 1 => {
+                let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = rows
+                    .map(|(s, (((oscales, osfracs), opanels), orm))| {
+                        Box::new(move || {
+                            let base = s * in_feat;
+                            conv_sample_planes(
+                                mode,
+                                &x.mat.scales[base..base + in_feat],
+                                &x.mat.sfracs[base..base + in_feat],
+                                g,
+                                we,
+                                bias,
+                                oscales,
+                                osfracs,
+                                opanels,
+                                orm,
+                            );
+                        }) as Box<dyn FnOnce() + Send + '_>
+                    })
+                    .collect();
+                p.run(tasks);
+            }
+            _ => {
+                for (s, (((oscales, osfracs), opanels), orm)) in rows {
+                    let base = s * in_feat;
+                    conv_sample_planes(
+                        mode,
+                        &x.mat.scales[base..base + in_feat],
+                        &x.mat.sfracs[base..base + in_feat],
+                        g,
+                        we,
+                        bias,
+                        oscales,
+                        osfracs,
+                        opanels,
+                        orm,
+                    );
+                }
+            }
+        }
+    }
+    EncodedTensor {
+        shape: vec![g.oc, oh, ow],
+        fmt: x.fmt,
+        mat,
+    }
+}
+
+/// Conv2d over an encoded activation batch → f32 tensors: the *last
+/// GEMM* boundary of a prepared model (the classic `to_f32` read-out,
+/// so final outputs carry no extra rounding). Pool semantics as in
+/// [`conv2d_encoded`].
+pub(crate) fn conv2d_encoded_to_f32(
+    mode: &ArithMode,
+    x: &EncodedTensor,
+    we: &EncodedMatrix,
+    bias: &[f32],
+    g: &ConvGeom,
+    pool: Option<&WorkerPool>,
+) -> Vec<Tensor> {
+    assert_eq!(x.shape(), [g.ic, g.h, g.w], "conv input shape mismatch");
+    let (oh, ow) = g.out_hw();
+    let hw = oh * ow;
+    let batch = x.batch();
+    let in_feat = x.features();
+    let run_one = |s: usize| -> Tensor {
+        let base = s * in_feat;
+        let (x_scales, x_sfracs) = (
+            &x.mat.scales[base..base + in_feat],
+            &x.mat.sfracs[base..base + in_feat],
+        );
+        CONV_SCRATCH.with(|cell| {
+            let mut sc = cell.borrow_mut();
+            let sc = &mut *sc;
+            gather_patches_into(x_scales, x_sfracs, g, &mut sc.patch);
+            sc.y.clear();
+            sc.y.resize(hw * g.oc, 0.0);
+            gemm_bt(mode, &sc.patch, we, Some(bias), &mut sc.y);
+            let mut out = Tensor::zeros(&[g.oc, oh, ow]);
+            for p in 0..hw {
+                for o in 0..g.oc {
+                    out.data[o * hw + p] = sc.y[p * g.oc + o];
+                }
+            }
+            out
+        })
+    };
+    match pool {
+        Some(p) if batch > 1 && p.workers() > 1 => {
+            let mut outs: Vec<Option<Tensor>> = (0..batch).map(|_| None).collect();
+            let run = &run_one;
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = outs
+                .iter_mut()
+                .enumerate()
+                .map(|(s, slot)| {
+                    Box::new(move || {
+                        *slot = Some(run(s));
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            p.run(tasks);
+            outs.into_iter()
+                .map(|o| o.expect("conv task completed"))
+                .collect()
+        }
+        _ => (0..batch).map(run_one).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::gemm::{assert_planes_eq, conv2d_gemm, encode_matrix, im2col};
+    use crate::nn::layers::Layer;
+    use crate::posit::{from_f32, to_f32};
+    use crate::prng::Rng;
+
+    fn random_tensor(rng: &mut Rng, shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor::from_vec(shape, (0..n).map(|_| rng.normal() as f32 * 0.7).collect())
+    }
+
+    fn modes() -> Vec<ArithMode> {
+        vec![
+            ArithMode::posit_exact(PositFormat::P8E0),
+            ArithMode::posit_plam(PositFormat::P8E0),
+            ArithMode::posit_exact(PositFormat::P16E1),
+            ArithMode::posit_plam(PositFormat::P16E1),
+            ArithMode::posit_exact(PositFormat::P32E2),
+            ArithMode::posit_plam(PositFormat::P32E2),
+        ]
+    }
+
+    #[test]
+    fn encode_decode_is_posit_quantisation() {
+        // decode(encode(x)) must equal per-value posit quantisation
+        // through f32 storage — bit for bit, specials included.
+        for mode in modes() {
+            let fmt = match &mode {
+                ArithMode::Posit { fmt, .. } => *fmt,
+                _ => unreachable!(),
+            };
+            let mut rng = Rng::new(0xE0);
+            let mut x = random_tensor(&mut rng, &[3, 4]);
+            x.data[0] = 0.0;
+            x.data[5] = f32::NAN;
+            x.data[7] = -0.0;
+            let xs = vec![x.clone(), random_tensor(&mut rng, &[3, 4])];
+            let enc = EncodedTensor::encode(&mode, &xs);
+            assert_eq!(enc.batch(), 2);
+            assert_eq!(enc.features(), 12);
+            assert_eq!(enc.shape(), [3, 4]);
+            let dec = enc.decode();
+            for (t, d) in xs.iter().zip(dec.iter()) {
+                assert_eq!(d.shape, t.shape);
+                for (v, got) in t.data.iter().zip(d.data.iter()) {
+                    let want = to_f32(fmt, from_f32(fmt, *v));
+                    assert_eq!(got.to_bits(), want.to_bits(), "{} v={v}", mode.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn relu_matches_f32_layer_planes() {
+        for mode in modes() {
+            let mut rng = Rng::new(0x1E1);
+            let mut x = random_tensor(&mut rng, &[37]);
+            x.data[0] = f32::NAN;
+            x.data[1] = 0.0;
+            x.data[2] = -0.0;
+            let xs = vec![x];
+            // f32 path: ReLU then encode.
+            let relu_f32: Vec<Tensor> = xs
+                .iter()
+                .map(|t| Layer::Relu.forward(t, &ArithMode::float32()))
+                .collect();
+            let want = EncodedTensor::encode(&mode, &relu_f32);
+            // Encoded path: encode then decoded-domain ReLU.
+            let mut got = EncodedTensor::encode(&mode, &xs);
+            got.relu_in_place();
+            assert_planes_eq(got.matrix(), want.matrix(), &mode.name());
+        }
+    }
+
+    #[test]
+    fn maxpool_matches_f32_layer_planes() {
+        for mode in modes() {
+            let mut rng = Rng::new(0xF001);
+            let mut x = random_tensor(&mut rng, &[2, 6, 6]);
+            x.data[3] = f32::NAN; // one window pools to NaR
+            x.data[40] = 0.0;
+            let xs = vec![x, random_tensor(&mut rng, &[2, 6, 6])];
+            let pool_f32: Vec<Tensor> = xs
+                .iter()
+                .map(|t| {
+                    Layer::MaxPool2d { k: 2, stride: 2 }.forward(t, &ArithMode::float32())
+                })
+                .collect();
+            let want = EncodedTensor::encode(&mode, &pool_f32);
+            let got = EncodedTensor::encode(&mode, &xs).maxpool2d(2, 2);
+            assert_eq!(got.shape(), [2, 3, 3]);
+            assert_planes_eq(got.matrix(), want.matrix(), &mode.name());
+        }
+    }
+
+    #[test]
+    fn gather_matches_im2col_encode_planes() {
+        // The decoded-domain gather must equal "materialise f32 im2col,
+        // then encode" plane for plane — including zero padding.
+        for mode in [
+            ArithMode::posit_plam(PositFormat::P16E1),
+            ArithMode::posit_exact(PositFormat::P32E2),
+        ] {
+            let mut rng = Rng::new(0x6A7);
+            let mut x = random_tensor(&mut rng, &[2, 5, 5]);
+            x.data[6] = f32::NAN;
+            x.data[9] = 0.0;
+            let g = ConvGeom {
+                ic: 2,
+                h: 5,
+                w: 5,
+                kh: 3,
+                kw: 3,
+                stride: 1,
+                pad: 1,
+                oc: 1,
+            };
+            let enc = EncodedTensor::encode(&mode, std::slice::from_ref(&x));
+            let mut got = EncodedMatrix::empty();
+            gather_patches_into(&enc.mat.scales, &enc.mat.sfracs, &g, &mut got);
+            let (cols, oh, ow) = im2col(&x, g.ic, g.kh, g.kw, g.stride, g.pad);
+            let want = encode_matrix(&mode, oh * ow, g.patch(), &cols);
+            assert_planes_eq(&got, &want, &mode.name());
+        }
+    }
+
+    #[test]
+    fn conv2d_encoded_matches_f32_conv_reencoded() {
+        for mode in [
+            ArithMode::posit_exact(PositFormat::P16E1),
+            ArithMode::posit_plam(PositFormat::P16E1),
+            ArithMode::posit_plam(PositFormat::P32E2),
+        ] {
+            let mut rng = Rng::new(0xC0);
+            let xs: Vec<Tensor> = (0..3).map(|_| random_tensor(&mut rng, &[2, 6, 6])).collect();
+            let wt = random_tensor(&mut rng, &[4, 2, 3, 3]);
+            let bias: Vec<f32> = (0..4).map(|_| rng.normal() as f32 * 0.1).collect();
+            let we = encode_matrix(&mode, 4, 2 * 3 * 3, &wt.data);
+            let g = ConvGeom {
+                ic: 2,
+                h: 6,
+                w: 6,
+                kh: 3,
+                kw: 3,
+                stride: 1,
+                pad: 1,
+                oc: 4,
+            };
+            // f32 path: conv via im2col + f32 read-out, then re-encode.
+            let conv_f32: Vec<Tensor> = xs
+                .iter()
+                .map(|x| conv2d_gemm(&mode, x, &we, &bias, 2, 3, 3, 1, 1))
+                .collect();
+            let want = EncodedTensor::encode(&mode, &conv_f32);
+            let enc = EncodedTensor::encode(&mode, &xs);
+            let got = conv2d_encoded(&mode, &enc, &we, &bias, &g, None);
+            assert_eq!(got.shape(), [4, 6, 6]);
+            assert_planes_eq(got.matrix(), want.matrix(), &mode.name());
+            // Pooled fan-out must not change a bit.
+            let pool = WorkerPool::new(3);
+            let pooled = conv2d_encoded(&mode, &enc, &we, &bias, &g, Some(&pool));
+            assert_planes_eq(pooled.matrix(), got.matrix(), &mode.name());
+            // And the f32-boundary variant equals the seed conv output.
+            let f32_out = conv2d_encoded_to_f32(&mode, &enc, &we, &bias, &g, None);
+            for (a, b) in f32_out.iter().zip(conv_f32.iter()) {
+                assert_eq!(a.shape, b.shape);
+                let same = a
+                    .data
+                    .iter()
+                    .zip(b.data.iter())
+                    .all(|(x, y)| x.to_bits() == y.to_bits());
+                assert!(same, "{}", mode.name());
+            }
+            pool.shutdown();
+        }
+    }
+
+    #[test]
+    fn flatten_relabels_shape_only() {
+        let mode = ArithMode::posit_plam(PositFormat::P16E1);
+        let mut rng = Rng::new(0xF1A);
+        let xs = vec![random_tensor(&mut rng, &[2, 3, 4])];
+        let enc = EncodedTensor::encode(&mode, &xs);
+        let before: Vec<i16> = enc.mat.scales.clone();
+        let flat = enc.flatten();
+        assert_eq!(flat.shape(), [24]);
+        assert_eq!(flat.features(), 24);
+        assert_eq!(flat.mat.scales, before);
+    }
+
+    #[test]
+    fn nar_survives_relu_and_maxpool_in_decoded_domain() {
+        // The pinned NaR rule, asserted directly on the planes.
+        let mode = ArithMode::posit_plam(PositFormat::P16E1);
+        let mut x = Tensor::zeros(&[1, 2, 2]);
+        x.data = vec![f32::NAN, -1.0, 2.0, 0.5];
+        let mut enc = EncodedTensor::encode(&mode, std::slice::from_ref(&x));
+        enc.relu_in_place();
+        assert_eq!(enc.mat.scales[0], SCALE_NAR, "NaR must survive ReLU");
+        assert_eq!(enc.mat.scales[1], SCALE_ZERO, "negative must clamp");
+        let pooled = enc.maxpool2d(2, 2);
+        assert_eq!(
+            pooled.mat.scales[0], SCALE_NAR,
+            "a window containing NaR must pool to NaR"
+        );
+        // Decode surfaces NaN at the boundary.
+        assert!(pooled.decode()[0].data[0].is_nan());
+    }
+}

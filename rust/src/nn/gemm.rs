@@ -59,8 +59,8 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::posit::tables::{
-    decode_entry, sfrac_sign, sfrac_significand, DecEntry, FW, SCALE_NAR, SCALE_ZERO,
-    SFRAC_FRAC_MASK,
+    decode_entry, readout_entry, sfrac_sign, sfrac_significand, DecEntry, DecodeTable, FW,
+    SCALE_NAR, SCALE_ZERO, SFRAC_FRAC_MASK,
 };
 use crate::posit::{from_f32, to_f32, window_anchor, FastQuire, PositFormat, WindowedAcc};
 
@@ -73,8 +73,11 @@ const MB: usize = 8;
 /// Output-tile columns (weight-row direction).
 const NB: usize = 32;
 /// K-blocking depth: one `NB × KB` weight panel (~128 KiB of entries)
-/// stays cache-resident while every tile row streams over it.
-const KB: usize = 512;
+/// stays cache-resident while every tile row streams over it. Also the
+/// panel-metadata chunk size every plane writer folds against
+/// (`encode_matrix`, the plane-emitting read-out, and the encoded
+/// activation gather/scatter paths in `nn::encoded`).
+pub(crate) const KB: usize = 512;
 
 /// Panel occupancy bit: the panel contains at least one posit zero.
 pub const SPECIAL_ZERO: u8 = 1;
@@ -100,25 +103,34 @@ pub struct PanelMeta {
 
 impl PanelMeta {
     /// Inverted-empty init: folding any normal entry fixes the order.
-    const EMPTY: PanelMeta = PanelMeta {
+    pub(crate) const EMPTY: PanelMeta = PanelMeta {
         min_scale: i16::MAX,
         max_scale: i16::MIN,
         specials: 0,
     };
 
+    /// Fold one plane element by its scale alone — the scale sentinels
+    /// carry everything the metadata needs, so plane writers that hold
+    /// `(scale, sfrac)` pairs (the gather and emission paths) fold
+    /// without reconstructing a [`DecEntry`].
     #[inline(always)]
-    fn fold(&mut self, e: &DecEntry) {
-        if e.is_zero() {
+    pub(crate) fn fold_scale(&mut self, scale: i16) {
+        if scale == SCALE_ZERO {
             self.specials |= SPECIAL_ZERO;
-        } else if e.is_nar() {
+        } else if scale == SCALE_NAR {
             self.specials |= SPECIAL_NAR;
         } else {
-            self.min_scale = self.min_scale.min(e.scale);
-            self.max_scale = self.max_scale.max(e.scale);
+            self.min_scale = self.min_scale.min(scale);
+            self.max_scale = self.max_scale.max(scale);
         }
     }
 
-    fn merge(&mut self, o: &PanelMeta) {
+    #[inline(always)]
+    fn fold(&mut self, e: &DecEntry) {
+        self.fold_scale(e.scale);
+    }
+
+    pub(crate) fn merge(&mut self, o: &PanelMeta) {
         self.min_scale = self.min_scale.min(o.min_scale);
         self.max_scale = self.max_scale.max(o.max_scale);
         self.specials |= o.specials;
@@ -140,21 +152,54 @@ pub struct EncodedMatrix {
     pub rows: usize,
     /// Column count (the contraction length in [`gemm_bt`]).
     pub cols: usize,
-    f32s: Vec<f32>,
+    pub(crate) f32s: Vec<f32>,
     /// Combined scales, one per element ([`SCALE_ZERO`]/[`SCALE_NAR`]
     /// sentinels for specials).
-    scales: Vec<i16>,
+    pub(crate) scales: Vec<i16>,
     /// Sign-packed Q30 fractions ([`DecEntry::sfrac`] layout).
-    sfracs: Vec<u32>,
+    pub(crate) sfracs: Vec<u32>,
     /// Per `row × KB-chunk` summaries, `rows × cols.div_ceil(KB)`
     /// row-major — chunked with the same `KB` as the GEMM k blocking.
-    panels: Vec<PanelMeta>,
+    pub(crate) panels: Vec<PanelMeta>,
     /// Per-row fold of `panels`: windowed feasibility is a whole-row
     /// property (the accumulator lives across every k chunk).
-    row_meta: Vec<PanelMeta>,
+    pub(crate) row_meta: Vec<PanelMeta>,
 }
 
 impl EncodedMatrix {
+    /// An empty (0 × 0) matrix — the starting point for the `*_into`
+    /// encode/gather/emission paths, which reuse its buffers across
+    /// calls instead of reallocating.
+    pub fn empty() -> EncodedMatrix {
+        EncodedMatrix {
+            rows: 0,
+            cols: 0,
+            f32s: Vec::new(),
+            scales: Vec::new(),
+            sfracs: Vec::new(),
+            panels: Vec::new(),
+            row_meta: Vec::new(),
+        }
+    }
+
+    /// Reshape into a posit plane container for `rows × cols` elements:
+    /// planes sized (contents undefined until every element is
+    /// written), metadata reset to the inverted-empty fold. Capacity is
+    /// retained, so scratch matrices stop allocating after warm-up.
+    pub(crate) fn reset_planes(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.f32s.clear();
+        self.scales.clear();
+        self.scales.resize(rows * cols, SCALE_ZERO);
+        self.sfracs.clear();
+        self.sfracs.resize(rows * cols, 0);
+        let kc = if cols == 0 { 0 } else { cols.div_ceil(KB) };
+        self.panels.clear();
+        self.panels.resize(rows * kc, PanelMeta::EMPTY);
+        self.row_meta.clear();
+        self.row_meta.resize(rows, PanelMeta::EMPTY);
+    }
     /// Heap footprint of the encoded plane including panel metadata
     /// (cache accounting).
     pub fn bytes(&self) -> usize {
@@ -191,17 +236,31 @@ impl EncodedMatrix {
 /// written as SoA (`scales`/`sfracs`) with panel metadata folded in
 /// the same pass.
 pub fn encode_matrix(mode: &ArithMode, rows: usize, cols: usize, data: &[f32]) -> EncodedMatrix {
+    let mut out = EncodedMatrix::empty();
+    encode_matrix_into(mode, rows, cols, data, &mut out);
+    out
+}
+
+/// [`encode_matrix`] into a caller-owned matrix, reusing its buffers.
+/// Hot per-sample paths (conv2d's patch matrices) keep one scratch
+/// [`EncodedMatrix`] per thread and stop allocating after warm-up.
+pub fn encode_matrix_into(
+    mode: &ArithMode,
+    rows: usize,
+    cols: usize,
+    data: &[f32],
+    out: &mut EncodedMatrix,
+) {
     assert_eq!(rows * cols, data.len(), "matrix shape/data mismatch");
+    out.rows = rows;
+    out.cols = cols;
+    out.f32s.clear();
+    out.scales.clear();
+    out.sfracs.clear();
+    out.panels.clear();
+    out.row_meta.clear();
     match mode {
-        ArithMode::Float32 => EncodedMatrix {
-            rows,
-            cols,
-            f32s: data.to_vec(),
-            scales: Vec::new(),
-            sfracs: Vec::new(),
-            panels: Vec::new(),
-            row_meta: Vec::new(),
-        },
+        ArithMode::Float32 => out.f32s.extend_from_slice(data),
         ArithMode::Posit { fmt, table, .. } => {
             let dec_one = |v: f32| -> DecEntry {
                 match table {
@@ -210,33 +269,24 @@ pub fn encode_matrix(mode: &ArithMode, rows: usize, cols: usize, data: &[f32]) -
                 }
             };
             let kc = cols.div_ceil(KB);
-            let mut scales = Vec::with_capacity(rows * cols);
-            let mut sfracs = Vec::with_capacity(rows * cols);
-            let mut panels = Vec::with_capacity(rows * kc);
-            let mut row_meta = Vec::with_capacity(rows);
+            out.scales.reserve(rows * cols);
+            out.sfracs.reserve(rows * cols);
+            out.panels.reserve(rows * kc);
+            out.row_meta.reserve(rows);
             for r in 0..rows {
                 let mut rm = PanelMeta::EMPTY;
                 for c0 in (0..cols).step_by(KB) {
                     let mut pm = PanelMeta::EMPTY;
                     for c in c0..(c0 + KB).min(cols) {
                         let e = dec_one(data[r * cols + c]);
-                        scales.push(e.scale);
-                        sfracs.push(e.sfrac());
+                        out.scales.push(e.scale);
+                        out.sfracs.push(e.sfrac());
                         pm.fold(&e);
                     }
                     rm.merge(&pm);
-                    panels.push(pm);
+                    out.panels.push(pm);
                 }
-                row_meta.push(rm);
-            }
-            EncodedMatrix {
-                rows,
-                cols,
-                f32s: Vec::new(),
-                scales,
-                sfracs,
-                panels,
-                row_meta,
+                out.row_meta.push(rm);
             }
         }
     }
@@ -525,6 +575,161 @@ pub fn gemm_bt_pool_with_policy(
     pool.run(tasks);
 }
 
+/// Split a posit mode into the pieces the plane-emitting kernels need.
+/// Plane emission has no meaning for [`ArithMode::Float32`] (float
+/// activations carry no decode planes), so that is a programmer error.
+fn posit_parts(mode: &ArithMode) -> (PositFormat, MulKind, Option<&DecodeTable>) {
+    match mode {
+        ArithMode::Posit { fmt, mul, table } => (*fmt, *mul, table.as_deref()),
+        ArithMode::Float32 => panic!("plane-emitting GEMM requires a posit mode"),
+    }
+}
+
+/// [`gemm_bt`] with a plane-emitting read-out: instead of converting
+/// each rounded output to `f32`, the kernel decodes it straight into
+/// `out`'s SoA planes (panel metadata folded at write time), producing
+/// an [`EncodedMatrix`] that is immediately a valid GEMM operand for
+/// the next layer. This is the encoded-activation pipeline's layer
+/// boundary: the output still rounds exactly once, and re-decoding a
+/// freshly rounded posit is lossless (n > 16 formats apply the f32
+/// storage round-trip inside [`readout_entry`]), so the emitted planes
+/// are bit-identical to "read out as f32, re-encode at the next
+/// layer". Posit modes only — panics on [`ArithMode::Float32`].
+pub fn gemm_bt_planes(
+    mode: &ArithMode,
+    x: &EncodedMatrix,
+    w: &EncodedMatrix,
+    bias: Option<&[f32]>,
+    out: &mut EncodedMatrix,
+) {
+    gemm_bt_planes_with_policy(mode, x, w, bias, out, AccPolicy::Auto);
+}
+
+/// [`gemm_bt_planes`] with an explicit accumulator policy.
+pub fn gemm_bt_planes_with_policy(
+    mode: &ArithMode,
+    x: &EncodedMatrix,
+    w: &EncodedMatrix,
+    bias: Option<&[f32]>,
+    out: &mut EncodedMatrix,
+    policy: AccPolicy,
+) {
+    let (fmt, mul, table) = posit_parts(mode);
+    let (m_dim, k_dim, n_dim) = (x.rows, x.cols, w.rows);
+    assert_eq!(w.cols, k_dim, "gemm contraction length mismatch");
+    if let Some(b) = bias {
+        assert_eq!(b.len(), n_dim, "gemm bias length mismatch");
+    }
+    out.reset_planes(m_dim, n_dim);
+    if m_dim == 0 || n_dim == 0 {
+        return;
+    }
+    let kc = n_dim.div_ceil(KB);
+    let mut sink = PlaneSink {
+        scales: &mut out.scales,
+        sfracs: &mut out.sfracs,
+        panels: &mut out.panels,
+        row_meta: &mut out.row_meta,
+        n_dim,
+        kc,
+        fmt,
+        table,
+    };
+    gemm_posit_band_sink(fmt, mul, x, w, bias, &mut sink, 0, m_dim, k_dim, n_dim, policy);
+}
+
+/// [`gemm_bt_planes`] sharded over a [`WorkerPool`]: MB-aligned row
+/// bands, each emitting into its disjoint slice of `out`'s planes.
+/// Bit-identical to the sequential call (rows are independent and each
+/// row's metadata folds only from that row's outputs).
+pub fn gemm_bt_planes_pool(
+    mode: &ArithMode,
+    x: &EncodedMatrix,
+    w: &EncodedMatrix,
+    bias: Option<&[f32]>,
+    out: &mut EncodedMatrix,
+    pool: &WorkerPool,
+) {
+    let (fmt, mul, table) = posit_parts(mode);
+    let (m_dim, k_dim, n_dim) = (x.rows, x.cols, w.rows);
+    assert_eq!(w.cols, k_dim, "gemm contraction length mismatch");
+    if let Some(b) = bias {
+        assert_eq!(b.len(), n_dim, "gemm bias length mismatch");
+    }
+    out.reset_planes(m_dim, n_dim);
+    if m_dim == 0 || n_dim == 0 {
+        return;
+    }
+    let kc = n_dim.div_ceil(KB);
+    let workers = pool.workers();
+    if workers <= 1 || m_dim <= MB {
+        let mut sink = PlaneSink {
+            scales: &mut out.scales,
+            sfracs: &mut out.sfracs,
+            panels: &mut out.panels,
+            row_meta: &mut out.row_meta,
+            n_dim,
+            kc,
+            fmt,
+            table,
+        };
+        gemm_posit_band_sink(
+            fmt,
+            mul,
+            x,
+            w,
+            bias,
+            &mut sink,
+            0,
+            m_dim,
+            k_dim,
+            n_dim,
+            AccPolicy::Auto,
+        );
+        return;
+    }
+    let bands = (workers * 4).min(m_dim.div_ceil(MB));
+    let rows_per = m_dim.div_ceil(bands).div_ceil(MB) * MB;
+    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = out
+        .scales
+        .chunks_mut(rows_per * n_dim)
+        .zip(out.sfracs.chunks_mut(rows_per * n_dim))
+        .zip(out.panels.chunks_mut(rows_per * kc))
+        .zip(out.row_meta.chunks_mut(rows_per))
+        .enumerate()
+        .map(|(i, (((scales, sfracs), panels), row_meta))| {
+            let row0 = i * rows_per;
+            Box::new(move || {
+                let rows = row_meta.len();
+                let mut sink = PlaneSink {
+                    scales,
+                    sfracs,
+                    panels,
+                    row_meta,
+                    n_dim,
+                    kc,
+                    fmt,
+                    table,
+                };
+                gemm_posit_band_sink(
+                    fmt,
+                    mul,
+                    x,
+                    w,
+                    bias,
+                    &mut sink,
+                    row0,
+                    rows,
+                    k_dim,
+                    n_dim,
+                    AccPolicy::Auto,
+                );
+            }) as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    pool.run(tasks);
+}
+
 fn check_shapes(
     x: &EncodedMatrix,
     w: &EncodedMatrix,
@@ -680,6 +885,61 @@ fn product_window(mul: MulKind, xm: &PanelMeta, wm: &PanelMeta, k_dim: usize) ->
     }
 }
 
+/// Where a posit band's freshly rounded outputs go. The posit kernel
+/// is generic over this: the classic read-out converts each output to
+/// `f32` ([`F32Sink`]); the encoded-activation pipeline emits
+/// `(scale, sfrac)` plane elements with panel metadata folded at write
+/// time ([`PlaneSink`]), skipping the `to_f32`/`from_f32` layer-boundary
+/// round-trip entirely. Both receive the *same* bits from the same
+/// single rounding, which is what keeps the two pipelines bit-identical.
+trait ReadoutSink {
+    /// Deliver output `(row, col)` (band-local row) rounded to `bits`.
+    fn emit(&mut self, row: usize, col: usize, bits: u64);
+}
+
+/// Classic read-out: `y[row, col] = to_f32(bits)`.
+struct F32Sink<'a> {
+    y: &'a mut [f32],
+    n_dim: usize,
+    fmt: PositFormat,
+}
+
+impl ReadoutSink for F32Sink<'_> {
+    #[inline(always)]
+    fn emit(&mut self, row: usize, col: usize, bits: u64) {
+        self.y[row * self.n_dim + col] = to_f32(self.fmt, bits);
+    }
+}
+
+/// Plane-emitting read-out: decodes the rounded bits straight into the
+/// output's SoA planes ([`readout_entry`] — table lookup for n ≤ 16,
+/// f32-storage round-trip for wider formats) and folds the panel/row
+/// scale-window metadata as it writes, so the emitted matrix is
+/// immediately consumable as the next layer's GEMM operand.
+struct PlaneSink<'a> {
+    scales: &'a mut [i16],
+    sfracs: &'a mut [u32],
+    panels: &'a mut [PanelMeta],
+    row_meta: &'a mut [PanelMeta],
+    n_dim: usize,
+    /// KB chunks per output row (`n_dim.div_ceil(KB)`).
+    kc: usize,
+    fmt: PositFormat,
+    table: Option<&'a DecodeTable>,
+}
+
+impl ReadoutSink for PlaneSink<'_> {
+    #[inline(always)]
+    fn emit(&mut self, row: usize, col: usize, bits: u64) {
+        let e = readout_entry(self.fmt, self.table, bits);
+        self.scales[row * self.n_dim + col] = e.scale;
+        self.sfracs[row * self.n_dim + col] = e.sfrac();
+        self.panels[row * self.kc + col / KB].fold_scale(e.scale);
+        self.row_meta[row].fold_scale(e.scale);
+    }
+}
+
+/// The classic f32 read-out band (see [`gemm_posit_band_sink`]).
 fn gemm_posit_band(
     fmt: PositFormat,
     mul: MulKind,
@@ -687,6 +947,23 @@ fn gemm_posit_band(
     w: &EncodedMatrix,
     bias: Option<&[f32]>,
     y: &mut [f32],
+    row0: usize,
+    rows: usize,
+    k_dim: usize,
+    n_dim: usize,
+    policy: AccPolicy,
+) {
+    let mut sink = F32Sink { y, n_dim, fmt };
+    gemm_posit_band_sink(fmt, mul, x, w, bias, &mut sink, row0, rows, k_dim, n_dim, policy);
+}
+
+fn gemm_posit_band_sink<S: ReadoutSink>(
+    fmt: PositFormat,
+    mul: MulKind,
+    x: &EncodedMatrix,
+    w: &EncodedMatrix,
+    bias: Option<&[f32]>,
+    sink: &mut S,
     row0: usize,
     rows: usize,
     k_dim: usize,
@@ -787,7 +1064,7 @@ fn gemm_posit_band(
                                 drain.to_posit()
                             }
                         };
-                        y[(m0 + mi) * n_dim + n0 + ni] = to_f32(fmt, bits);
+                        sink.emit(m0 + mi, n0 + ni, bits);
                     }
                 }
             }
@@ -991,11 +1268,29 @@ pub fn im2col(
     stride: usize,
     pad: usize,
 ) -> (Vec<f32>, usize, usize) {
+    let mut cols = Vec::new();
+    let (oh, ow) = im2col_into(x, ic, kh, kw, stride, pad, &mut cols);
+    (cols, oh, ow)
+}
+
+/// [`im2col`] into a caller-owned buffer (cleared and refilled;
+/// capacity is retained, so per-sample conv loops stop allocating the
+/// patch matrix on every call). Returns `(oh, ow)`.
+pub fn im2col_into(
+    x: &Tensor,
+    ic: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+    cols: &mut Vec<f32>,
+) -> (usize, usize) {
     let (h, wdt) = (x.shape[1], x.shape[2]);
     let oh = (h + 2 * pad - kh) / stride + 1;
     let ow = (wdt + 2 * pad - kw) / stride + 1;
     let patch = ic * kh * kw;
-    let mut cols = vec![0f32; patch * oh * ow];
+    cols.clear();
+    cols.resize(patch * oh * ow, 0.0);
     for oy in 0..oh {
         for ox in 0..ow {
             let col = (oy * ow + ox) * patch;
@@ -1017,13 +1312,36 @@ pub fn im2col(
             }
         }
     }
-    (cols, oh, ow)
+    (oh, ow)
+}
+
+/// Per-thread conv2d scratch: the f32 patch matrix, its encoded plane,
+/// and the GEMM output buffer. One set per thread (pool workers
+/// included) — per-sample forward passes reuse these across every call
+/// instead of allocating a full im2col matrix each time.
+pub(crate) struct ConvScratch {
+    pub(crate) cols: Vec<f32>,
+    pub(crate) patch: EncodedMatrix,
+    pub(crate) y: Vec<f32>,
+    /// Plane-emitting GEMM output (the encoded-activation conv path).
+    pub(crate) out: EncodedMatrix,
+}
+
+thread_local! {
+    pub(crate) static CONV_SCRATCH: RefCell<ConvScratch> = RefCell::new(ConvScratch {
+        cols: Vec::new(),
+        patch: EncodedMatrix::empty(),
+        y: Vec::new(),
+        out: EncodedMatrix::empty(),
+    });
 }
 
 /// Full conv2d forward through the GEMM engine: im2col the input, run
 /// one `[oh·ow, patch] × [oc, patch]ᵀ` GEMM against the pre-encoded
 /// filter plane, then scatter the position-major result into the
-/// channel-major `[oc, oh, ow]` output tensor.
+/// channel-major `[oc, oh, ow]` output tensor. The patch matrix, its
+/// encoded plane, and the GEMM output live in thread-local scratch —
+/// only the returned tensor is allocated per call.
 pub fn conv2d_gemm(
     mode: &ArithMode,
     x: &Tensor,
@@ -1035,20 +1353,37 @@ pub fn conv2d_gemm(
     stride: usize,
     pad: usize,
 ) -> Tensor {
-    let (cols, oh, ow) = im2col(x, ic, kh, kw, stride, pad);
-    let patch = ic * kh * kw;
-    let oc = we.rows;
-    let ce = encode_matrix(mode, oh * ow, patch, &cols);
-    let mut y = vec![0f32; oh * ow * oc];
-    gemm_bt(mode, &ce, we, Some(bias), &mut y);
-    let hw = oh * ow;
-    let mut out = Tensor::zeros(&[oc, oh, ow]);
-    for p in 0..hw {
-        for o in 0..oc {
-            out.data[o * hw + p] = y[p * oc + o];
+    CONV_SCRATCH.with(|cell| {
+        let mut sc = cell.borrow_mut();
+        let sc = &mut *sc;
+        let (oh, ow) = im2col_into(x, ic, kh, kw, stride, pad, &mut sc.cols);
+        let patch = ic * kh * kw;
+        let oc = we.rows;
+        encode_matrix_into(mode, oh * ow, patch, &sc.cols, &mut sc.patch);
+        sc.y.clear();
+        sc.y.resize(oh * ow * oc, 0.0);
+        gemm_bt(mode, &sc.patch, we, Some(bias), &mut sc.y);
+        let hw = oh * ow;
+        let mut out = Tensor::zeros(&[oc, oh, ow]);
+        for p in 0..hw {
+            for o in 0..oc {
+                out.data[o * hw + p] = sc.y[p * oc + o];
+            }
         }
-    }
-    out
+        out
+    })
+}
+
+/// Test-only helper: planes (and their metadata) must match exactly.
+/// Shared by the gemm and encoded-activation unit suites.
+#[cfg(test)]
+pub(crate) fn assert_planes_eq(a: &EncodedMatrix, b: &EncodedMatrix, ctx: &str) {
+    assert_eq!(a.rows, b.rows, "{ctx}: rows");
+    assert_eq!(a.cols, b.cols, "{ctx}: cols");
+    assert_eq!(a.scales, b.scales, "{ctx}: scale plane");
+    assert_eq!(a.sfracs, b.sfracs, "{ctx}: sfrac plane");
+    assert_eq!(a.panels, b.panels, "{ctx}: panel metadata");
+    assert_eq!(a.row_meta, b.row_meta, "{ctx}: row metadata");
 }
 
 #[cfg(test)]
@@ -1442,5 +1777,116 @@ mod tests {
         let (cols, oh, ow) = im2col(&x, 1, 1, 1, 1, 0);
         assert_eq!((oh, ow), (2, 2));
         assert_eq!(cols, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn plane_emission_matches_f32_roundtrip_reencode() {
+        // The plane-emitting read-out must produce exactly the planes
+        // (metadata included) that reading out to f32 and re-encoding
+        // at the next layer boundary would have produced — that is the
+        // whole bit-identity argument of the encoded pipeline. Covers
+        // all formats (incl. the n > 16 storage round-trip), both
+        // multipliers, specials-poisoned inputs, and shapes straddling
+        // every tile boundary.
+        for mode in [
+            ArithMode::posit_exact(PositFormat::P8E0),
+            ArithMode::posit_plam(PositFormat::P8E0),
+            ArithMode::posit_exact(PositFormat::P16E1),
+            ArithMode::posit_plam(PositFormat::P16E1),
+            ArithMode::posit_exact(PositFormat::P32E2),
+            ArithMode::posit_plam(PositFormat::P32E2),
+        ] {
+            for (m, k, n) in [(1, 7, 3), (9, 40, 33), (3, 600, 37)] {
+                let mut rng = Rng::new(0xE2E + (m * k * n) as u64);
+                let mut x = random_matrix(&mut rng, m, k);
+                // Poison a couple of entries so specials flow through.
+                x[0] = 0.0;
+                if m > 1 {
+                    x[k + 1] = f32::NAN;
+                }
+                let w = random_matrix(&mut rng, n, k);
+                let bias: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 0.1).collect();
+                let xe = encode_matrix(&mode, m, k, &x);
+                let we = encode_matrix(&mode, n, k, &w);
+                // Seed path: f32 read-out, then re-encode.
+                let mut y = vec![0f32; m * n];
+                gemm_bt(&mode, &xe, &we, Some(&bias), &mut y);
+                let want = encode_matrix(&mode, m, n, &y);
+                // Encoded path: planes straight from the read-out.
+                let mut got = EncodedMatrix::empty();
+                gemm_bt_planes(&mode, &xe, &we, Some(&bias), &mut got);
+                assert_planes_eq(&got, &want, &format!("{} m={m} k={k} n={n}", mode.name()));
+                // Policy must not change a bit either.
+                let mut forced = EncodedMatrix::empty();
+                gemm_bt_planes_with_policy(
+                    &mode,
+                    &xe,
+                    &we,
+                    Some(&bias),
+                    &mut forced,
+                    AccPolicy::ForceQuire,
+                );
+                assert_planes_eq(
+                    &forced,
+                    &want,
+                    &format!("{} m={m} k={k} n={n} forced", mode.name()),
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_plane_emission_is_bit_identical_to_sequential() {
+        let pools = [WorkerPool::new(0), WorkerPool::new(2), WorkerPool::new(4)];
+        for mode in [
+            ArithMode::posit_plam(PositFormat::P16E1),
+            ArithMode::posit_exact(PositFormat::P8E0),
+        ] {
+            for (m, k, n) in [(1, 9, 5), (13, 40, 17), (95, 64, 31)] {
+                let mut rng = Rng::new(0xB0B + m as u64);
+                let x = random_matrix(&mut rng, m, k);
+                let w = random_matrix(&mut rng, n, k);
+                let bias: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 0.1).collect();
+                let xe = encode_matrix(&mode, m, k, &x);
+                let we = encode_matrix(&mode, n, k, &w);
+                let mut want = EncodedMatrix::empty();
+                gemm_bt_planes(&mode, &xe, &we, Some(&bias), &mut want);
+                for pool in &pools {
+                    let mut got = EncodedMatrix::empty();
+                    gemm_bt_planes_pool(&mode, &xe, &we, Some(&bias), &mut got, pool);
+                    assert_planes_eq(
+                        &got,
+                        &want,
+                        &format!("{} m={m} k={k} n={n} workers={}", mode.name(), pool.workers()),
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_survives_shape_changes() {
+        // Back-to-back encodes into one scratch matrix with different
+        // shapes must behave exactly like fresh encodes (stale panels /
+        // plane lengths must not leak).
+        let mode = ArithMode::posit_plam(PositFormat::P16E1);
+        let mut scratch = EncodedMatrix::empty();
+        let mut rng = Rng::new(0x5C);
+        for (rows, cols) in [(4, 600), (1, 3), (7, 129), (2, 600)] {
+            let data = random_matrix(&mut rng, rows, cols);
+            encode_matrix_into(&mode, rows, cols, &data, &mut scratch);
+            let fresh = encode_matrix(&mode, rows, cols, &data);
+            assert_planes_eq(&scratch, &fresh, &format!("{rows}x{cols}"));
+        }
+        // And the im2col buffer path.
+        let x = Tensor::from_vec(&[1, 3, 3], (0..9).map(|i| i as f32).collect());
+        let mut cols = Vec::new();
+        let (oh, ow) = im2col_into(&x, 1, 2, 2, 1, 0, &mut cols);
+        assert_eq!((oh, ow), (2, 2));
+        let again = im2col(&x, 1, 2, 2, 1, 0).0;
+        assert_eq!(cols, again);
+        let (oh2, ow2) = im2col_into(&x, 1, 1, 1, 1, 0, &mut cols);
+        assert_eq!((oh2, ow2), (3, 3));
+        assert_eq!(cols, (0..9).map(|i| i as f32).collect::<Vec<_>>());
     }
 }

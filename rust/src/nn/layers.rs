@@ -4,13 +4,20 @@
 //! Posit layers follow the Deep PeNSieve / Deep Positron EMAC scheme:
 //! every multiply is a posit product (exact Fig. 3 datapath or PLAM
 //! Fig. 4 datapath), and dot products accumulate in a quire with a
-//! single rounding at the end. Activations/weights are stored as f32
-//! (exact for n ≤ 16 formats) and re-encoded at layer entry.
+//! single rounding at the end. In this per-sample API,
+//! activations/weights are stored as f32 (exact for n ≤ 16 formats)
+//! and re-encoded at layer entry; the prepared batch path
+//! ([`super::prepared`]) instead keeps activations in decode-plane
+//! form between layers ([`super::encoded`]) and pays the f32
+//! conversion only at the model boundary — bit-identical results
+//! either way.
 //!
 //! All dense/conv arithmetic routes through the batched GEMM engine in
 //! [`super::gemm`]: operands are encoded into decode planes once per
-//! matrix, and the MAC loops run cache-blocked over output tiles. For
-//! weight reuse across whole batches, see [`super::prepared`].
+//! matrix, and the MAC loops run cache-blocked over output tiles.
+//!
+//! NaR semantics through ReLU/maxpool are pinned — see the
+//! `maxpool2d` comment below: NaR (NaN in f32 storage) is absorbing.
 
 use std::sync::Arc;
 
@@ -167,6 +174,19 @@ fn conv2d(
     conv2d_gemm(mode, x, &we, &b.data, ic, kh, kw, stride, pad)
 }
 
+/// NaR/NaN semantics through elementwise and pooling layers (pinned —
+/// the encoded-activation pipeline in `nn::encoded` implements the
+/// identical rule in the decoded domain, and the equivalence suite
+/// holds both paths to it bit for bit):
+///
+/// * **NaR is absorbing.** ReLU keeps NaR (NaR is "not a real" — it is
+///   not negative, so the sign test does not clamp it), and a pool
+///   window containing NaR pools to NaR. In the f32 representation
+///   NaR surfaces as NaN, so these layers propagate NaN explicitly
+///   rather than letting `f32::max`'s NaN-ignoring fold silently drop
+///   it (which is what the pre-pin code did: `NaN.max(0.0) == 0.0`).
+/// * Everything else is a pure sign test / monotone comparison —
+///   exact in every arithmetic, no rounding.
 fn maxpool2d(x: &Tensor, k: usize, stride: usize) -> Tensor {
     let (c, h, w) = (x.shape[0], x.shape[1], x.shape[2]);
     let oh = (h - k) / stride + 1;
@@ -176,12 +196,18 @@ fn maxpool2d(x: &Tensor, k: usize, stride: usize) -> Tensor {
         for oy in 0..oh {
             for ox in 0..ow {
                 let mut m = f32::NEG_INFINITY;
+                let mut nar = false;
                 for ky in 0..k {
                     for kx in 0..k {
-                        m = m.max(x.at3(ch, oy * stride + ky, ox * stride + kx));
+                        let v = x.at3(ch, oy * stride + ky, ox * stride + kx);
+                        if v.is_nan() {
+                            nar = true;
+                        } else {
+                            m = m.max(v);
+                        }
                     }
                 }
-                *out.at3_mut(ch, oy, ox) = m;
+                *out.at3_mut(ch, oy, ox) = if nar { f32::NAN } else { m };
             }
         }
     }
@@ -189,10 +215,15 @@ fn maxpool2d(x: &Tensor, k: usize, stride: usize) -> Tensor {
 }
 
 fn relu(x: &Tensor) -> Tensor {
-    // Max with zero is exact in every arithmetic (sign test only).
+    // Sign test only — exact in every arithmetic. NaR/NaN survives
+    // (see the maxpool2d comment; `v.max(0.0)` alone would turn NaN
+    // into 0).
     Tensor::from_vec(
         &x.shape,
-        x.data.iter().map(|&v| v.max(0.0)).collect(),
+        x.data
+            .iter()
+            .map(|&v| if v.is_nan() { v } else { v.max(0.0) })
+            .collect(),
     )
 }
 
@@ -304,6 +335,27 @@ mod tests {
         let x = Tensor::from_vec(&[3], vec![-1.0, 0.0, 2.0]);
         let y = Layer::Relu.forward(&x, &ArithMode::float32());
         assert_eq!(y.data, vec![0.0, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn nar_survives_relu_and_maxpool_deterministically() {
+        // The pinned NaR rule (see the maxpool2d comment): NaR/NaN is
+        // absorbing through elementwise and pooling layers. Run twice
+        // to pin determinism.
+        let x = Tensor::from_vec(&[1, 2, 2], vec![f32::NAN, -1.0, 3.0, 0.5]);
+        for _ in 0..2 {
+            let r = Layer::Relu.forward(&x, &ArithMode::float32());
+            assert!(r.data[0].is_nan(), "NaR must survive ReLU");
+            assert_eq!(&r.data[1..], &[0.0, 3.0, 0.5]);
+            let p = Layer::MaxPool2d { k: 2, stride: 2 }.forward(&x, &ArithMode::float32());
+            assert!(p.data[0].is_nan(), "NaR window must pool to NaR");
+        }
+        // NaN-free windows are unaffected by the rule.
+        let clean =
+            Tensor::from_vec(&[1, 2, 4], vec![1.0, 5.0, f32::NAN, 2.0, 0.0, -3.0, 4.0, 8.0]);
+        let p = Layer::MaxPool2d { k: 2, stride: 2 }.forward(&clean, &ArithMode::float32());
+        assert_eq!(p.data[0], 5.0, "clean window keeps its max");
+        assert!(p.data[1].is_nan(), "poisoned window pools to NaR");
     }
 
     #[test]

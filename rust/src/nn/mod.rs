@@ -5,11 +5,18 @@
 //! through (decode weights once into SoA scale/fraction planes, reuse
 //! across the whole batch; accumulate windowed-single-limb where the
 //! scale window fits, FastQuire elsewhere — bit-identical either way).
-//! [`pool`] shards that GEMM across a work-stealing worker pool
+//! [`encoded`] keeps *activations* in that same plane form across
+//! layers: prepared posit models default to the encoded-activation
+//! pipeline, where the GEMM read-out emits planes straight from its
+//! single rounding, elementwise/pool layers run in the decoded domain,
+//! conv im2col is an index gather, and `f32` appears only at the model
+//! input/output boundary — bit-identical to the classic round-trip
+//! path. [`pool`] shards the GEMM across a work-stealing worker pool
 //! (bit-identical results, one row band per task), and
 //! [`gemm::PlaneCache`] shares encoded weight planes across models.
 
 pub mod gemm;
+pub mod encoded;
 pub mod pool;
 pub mod tensor;
 pub mod layers;
@@ -17,12 +24,14 @@ pub mod model;
 pub mod loader;
 pub mod prepared;
 
+pub use encoded::EncodedTensor;
 pub use gemm::{
-    encode_matrix, gemm_bt, gemm_bt_pool, gemm_bt_pool_with_policy, gemm_bt_with_policy,
+    encode_matrix, encode_matrix_into, gemm_bt, gemm_bt_planes, gemm_bt_planes_pool,
+    gemm_bt_planes_with_policy, gemm_bt_pool, gemm_bt_pool_with_policy, gemm_bt_with_policy,
     AccPolicy, EncodedMatrix, PanelMeta, PlaneCache,
 };
 pub use layers::{ArithMode, Layer, MulKind};
 pub use pool::{PoolStats, WorkerPool};
-pub use prepared::PreparedModel;
+pub use prepared::{ActivationPipeline, PreparedModel};
 pub use model::{Model, ModelKind};
 pub use tensor::Tensor;

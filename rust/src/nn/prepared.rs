@@ -10,6 +10,19 @@
 //! running each dense layer as one `[batch, in] × [out, in]ᵀ` GEMM —
 //! this is what makes server throughput scale with batch size.
 //!
+//! On top of weight reuse, posit modes default to the
+//! **encoded-activation pipeline** ([`ActivationPipeline::Encoded`]):
+//! activations stay in decode-plane form ([`EncodedTensor`]) between
+//! layers — the GEMM read-out emits `(scale, sfrac)` planes straight
+//! from its single rounding, elementwise/pool layers run in the
+//! decoded domain, and conv im2col becomes an index gather over the
+//! input planes. `f32` appears only at the model boundary: inputs are
+//! quantised once on entry, and the *last* dense/conv layer reads out
+//! through the classic `to_f32` path (so final logits carry no extra
+//! storage round-trip — load-bearing for n > 16 formats). Outputs are
+//! **bit-identical** to [`ActivationPipeline::F32Roundtrip`] (the seed
+//! path, kept as a knob for benches and the equivalence suite).
+//!
 //! Weight planes come from the shared [`PlaneCache`], so preparing the
 //! same model twice (or under exact *and* PLAM modes of one format,
 //! which share decode planes) re-uses the existing `Arc`'d plane
@@ -24,11 +37,28 @@
 
 use std::sync::Arc;
 
-use crate::nn::gemm::{conv2d_gemm, encode_matrix, gemm_bt, gemm_bt_pool, EncodedMatrix, PlaneCache};
+use crate::nn::encoded::{conv2d_encoded, conv2d_encoded_to_f32, ConvGeom, EncodedTensor};
+use crate::nn::gemm::{
+    conv2d_gemm, encode_matrix, gemm_bt, gemm_bt_planes, gemm_bt_planes_pool, gemm_bt_pool,
+    EncodedMatrix, PlaneCache,
+};
 use crate::nn::layers::{ArithMode, Layer};
 use crate::nn::model::Model;
 use crate::nn::pool::WorkerPool;
 use crate::nn::tensor::Tensor;
+
+/// How activations travel between layers of a prepared posit model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ActivationPipeline {
+    /// Decode-plane activations end to end (the default for posit
+    /// modes): `f32` only at the model input/output boundary.
+    Encoded,
+    /// The seed path: every layer boundary rounds to a posit, converts
+    /// to `f32`, and re-encodes at the next layer. Kept for benches
+    /// and the bit-identity equivalence suite. (Float32 mode always
+    /// runs this path — it has no decode planes.)
+    F32Roundtrip,
+}
 
 /// Per-layer prepared state (weights already encoded for the mode).
 enum Prepared {
@@ -62,6 +92,7 @@ pub struct PreparedModel {
     /// Input shape of one sample.
     pub input_shape: Vec<usize>,
     mode: ArithMode,
+    pipeline: ActivationPipeline,
     layers: Vec<Prepared>,
 }
 
@@ -104,8 +135,24 @@ impl PreparedModel {
             name: format!("{}[{}]", model.name, mode.name()),
             input_shape: model.input_shape.clone(),
             mode,
+            pipeline: ActivationPipeline::Encoded,
             layers,
         }
+    }
+
+    /// Select the activation pipeline (builder style). Posit modes
+    /// default to [`ActivationPipeline::Encoded`]; Float32 mode always
+    /// runs the f32 path regardless of this knob. Outputs are
+    /// bit-identical either way — this is a perf/debug knob, not a
+    /// semantics knob.
+    pub fn with_pipeline(mut self, pipeline: ActivationPipeline) -> Self {
+        self.pipeline = pipeline;
+        self
+    }
+
+    /// The configured activation pipeline.
+    pub fn pipeline(&self) -> ActivationPipeline {
+        self.pipeline
     }
 
     /// Total heap footprint of this model's encoded weight planes
@@ -144,13 +191,124 @@ impl PreparedModel {
     /// [`PreparedModel::forward_batch`] with the dense GEMMs sharded
     /// over `pool` (row bands) and conv layers fanned out one sample
     /// per task. `None` — or a zero-worker pool — is the sequential
-    /// path. Outputs are bit-identical either way.
+    /// path. Outputs are bit-identical either way, and identical
+    /// across both activation pipelines.
     pub fn forward_batch_pooled(&self, xs: &[Tensor], pool: Option<&WorkerPool>) -> Vec<Tensor> {
         for x in xs {
             assert_eq!(x.shape, self.input_shape, "input shape mismatch");
         }
+        if xs.is_empty() {
+            return Vec::new();
+        }
+        if matches!(self.mode, ArithMode::Posit { .. })
+            && self.pipeline == ActivationPipeline::Encoded
+        {
+            // The last GEMM layer reads out through the classic f32
+            // path (no extra storage round-trip on final outputs);
+            // a model with no GEMM layer at all has no boundary tax to
+            // save, so it runs the plain f32 path.
+            let last_gemm = self
+                .layers
+                .iter()
+                .rposition(|l| matches!(l, Prepared::Dense { .. } | Prepared::Conv2d { .. }));
+            if let Some(last_gemm) = last_gemm {
+                return self.forward_batch_encoded(xs, pool, last_gemm);
+            }
+        }
         let mut hs: Vec<Tensor> = xs.to_vec();
         for l in &self.layers {
+            hs = self.forward_layer_batch(l, hs, pool);
+        }
+        hs
+    }
+
+    /// The encoded-activation pipeline: quantise the batch once, keep
+    /// it in decode-plane form through every layer before `last_gemm`,
+    /// run `last_gemm` with the f32 read-out, and finish any trailing
+    /// elementwise layers on f32 tensors. Bit-identical to the
+    /// round-trip path: each intermediate output still rounds exactly
+    /// once, and re-decoding a freshly rounded posit (with the f32
+    /// storage round-trip applied for n > 16 formats) is exactly what
+    /// the round-trip path's next-layer encode would have produced.
+    fn forward_batch_encoded(
+        &self,
+        xs: &[Tensor],
+        pool: Option<&WorkerPool>,
+        last_gemm: usize,
+    ) -> Vec<Tensor> {
+        let mut acts = EncodedTensor::encode(&self.mode, xs);
+        for l in &self.layers[..last_gemm] {
+            acts = match l {
+                Prepared::Dense { w, b } => {
+                    assert_eq!(acts.features(), w.cols, "dense input size");
+                    let mut out = EncodedMatrix::empty();
+                    match pool {
+                        Some(p) => gemm_bt_planes_pool(
+                            &self.mode,
+                            acts.matrix(),
+                            w.as_ref(),
+                            Some(b),
+                            &mut out,
+                            p,
+                        ),
+                        None => {
+                            gemm_bt_planes(&self.mode, acts.matrix(), w.as_ref(), Some(b), &mut out)
+                        }
+                    }
+                    EncodedTensor::from_matrix(vec![w.rows], acts.fmt(), out)
+                }
+                Prepared::Conv2d {
+                    w,
+                    b,
+                    ic,
+                    kh,
+                    kw,
+                    stride,
+                    pad,
+                } => {
+                    let g = conv_geom(acts.shape(), *ic, *kh, *kw, *stride, *pad, w.rows);
+                    conv2d_encoded(&self.mode, &acts, w.as_ref(), b, &g, pool)
+                }
+                Prepared::MaxPool2d { k, stride } => acts.maxpool2d(*k, *stride),
+                Prepared::Relu => {
+                    acts.relu_in_place();
+                    acts
+                }
+                Prepared::Flatten => acts.flatten(),
+            };
+        }
+        let mut hs: Vec<Tensor> = match &self.layers[last_gemm] {
+            Prepared::Dense { w, b } => {
+                assert_eq!(acts.features(), w.cols, "dense input size");
+                let (batch, out_dim) = (acts.batch(), w.rows);
+                let mut y = vec![0f32; batch * out_dim];
+                match pool {
+                    Some(p) => {
+                        gemm_bt_pool(&self.mode, acts.matrix(), w.as_ref(), Some(b), &mut y, p)
+                    }
+                    None => gemm_bt(&self.mode, acts.matrix(), w.as_ref(), Some(b), &mut y),
+                }
+                (0..batch)
+                    .map(|i| {
+                        Tensor::from_vec(&[out_dim], y[i * out_dim..(i + 1) * out_dim].to_vec())
+                    })
+                    .collect()
+            }
+            Prepared::Conv2d {
+                w,
+                b,
+                ic,
+                kh,
+                kw,
+                stride,
+                pad,
+            } => {
+                let g = conv_geom(acts.shape(), *ic, *kh, *kw, *stride, *pad, w.rows);
+                conv2d_encoded_to_f32(&self.mode, &acts, w.as_ref(), b, &g, pool)
+            }
+            _ => unreachable!("last_gemm indexes a dense/conv layer"),
+        };
+        for l in &self.layers[last_gemm + 1..] {
             hs = self.forward_layer_batch(l, hs, pool);
         }
         hs
@@ -274,6 +432,30 @@ impl PreparedModel {
     }
 }
 
+/// Conv geometry for an encoded activation of shape `[ic, h, w]`.
+fn conv_geom(
+    shape: &[usize],
+    ic: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+    oc: usize,
+) -> ConvGeom {
+    assert_eq!(shape.len(), 3, "conv input must be [c,h,w]");
+    assert_eq!(shape[0], ic, "conv channel mismatch");
+    ConvGeom {
+        ic,
+        h: shape[1],
+        w: shape[2],
+        kh,
+        kw,
+        stride,
+        pad,
+        oc,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -389,6 +571,43 @@ mod tests {
             }
         }
         pool.shutdown();
+    }
+
+    #[test]
+    fn pipeline_defaults_to_encoded_and_matches_roundtrip_bitwise() {
+        // The encoded-activation pipeline is the default for posit
+        // modes and must be bit-identical to the F32Roundtrip knob on
+        // a conv model (the deep cross-format sweep lives in
+        // tests/encoded_pipeline.rs).
+        let mut rng = Rng::new(27);
+        let model = Model::init(ModelKind::LeNet5 { in_ch: 1, in_hw: 28 }, &mut rng);
+        let mode = ArithMode::posit_plam(PositFormat::P16E1);
+        let enc = PreparedModel::new(&model, mode.clone());
+        assert_eq!(enc.pipeline(), ActivationPipeline::Encoded);
+        let rt = PreparedModel::new(&model, mode).with_pipeline(ActivationPipeline::F32Roundtrip);
+        assert_eq!(rt.pipeline(), ActivationPipeline::F32Roundtrip);
+        let xs: Vec<Tensor> = (0..2)
+            .map(|_| Tensor::from_vec(&[1, 28, 28], (0..784).map(|_| rng.f32()).collect()))
+            .collect();
+        let a = enc.forward_batch(&xs);
+        let b = rt.forward_batch(&xs);
+        for (ta, tb) in a.iter().zip(b.iter()) {
+            let same = ta
+                .data
+                .iter()
+                .zip(tb.data.iter())
+                .all(|(x, y)| x.to_bits() == y.to_bits());
+            assert!(same, "encoded pipeline must be bit-identical");
+        }
+        // Float32 mode ignores the knob (no decode planes to carry).
+        let f = PreparedModel::new(&model, ArithMode::float32());
+        assert_eq!(f.pipeline(), ActivationPipeline::Encoded);
+        let want = f.forward_batch(&xs);
+        let rtf = PreparedModel::new(&model, ArithMode::float32())
+            .with_pipeline(ActivationPipeline::F32Roundtrip);
+        for (ta, tb) in want.iter().zip(rtf.forward_batch(&xs).iter()) {
+            assert_eq!(ta.data, tb.data);
+        }
     }
 
     #[test]

@@ -68,6 +68,13 @@ impl FastQuire {
         self.nar = true;
     }
 
+    /// True once poisoned (the read-out will emit NaR regardless of
+    /// the limb contents).
+    #[inline(always)]
+    pub fn is_nar(&self) -> bool {
+        self.nar
+    }
+
     /// Add `±sig · 2^scale` (integer magnitude `sig` < 2^126).
     #[inline]
     pub fn add_product(&mut self, sig: u128, scale: i32, negative: bool) {
@@ -149,6 +156,13 @@ impl FastQuire {
     }
 
     /// Round to the nearest posit (single RNE).
+    ///
+    /// This is the *only* rounding a GEMM output ever sees. The
+    /// encoded-activation pipeline feeds the returned bits straight to
+    /// `posit::tables::readout_entry` to emit `(scale, sfrac)` planes —
+    /// re-decoding a freshly rounded posit is lossless, so plane
+    /// emission and the classic `to_f32` read-out describe the same
+    /// value.
     pub fn to_posit(&self) -> u64 {
         if self.nar {
             return self.fmt.nar();

@@ -7,6 +7,7 @@
 //! of the paper's observation that decode hardware is cheap compared to
 //! the fraction multiplier.
 
+use super::convert::{from_f32, to_f32};
 use super::decode::{decode, DecodeResult};
 use super::format::PositFormat;
 
@@ -110,6 +111,57 @@ pub fn decode_entry(fmt: PositFormat, bits: u64) -> DecEntry {
     }
 }
 
+/// Decode a freshly rounded accumulator read-out straight into a plane
+/// entry — the encoded-activation pipeline's boundary step. For n ≤ 16
+/// formats (whose values round-trip `f32` losslessly) this is a plain
+/// table lookup / decode of the posit the read-out just produced, so
+/// emitting `(scale, sfrac)` planes skips the `to_f32`/`from_f32`
+/// round-trip entirely. Wider formats (n > 16) do **not** round-trip
+/// `f32` losslessly, and the engine's activation-storage contract is
+/// f32 (see `nn::tensor`), so the round-trip is applied *here*: the
+/// emitted plane is bit-identical to what storing the output as `f32`
+/// and re-encoding it at the next layer would have produced.
+pub fn readout_entry(fmt: PositFormat, table: Option<&DecodeTable>, bits: u64) -> DecEntry {
+    if fmt.n <= 16 {
+        match table {
+            Some(t) => t.get(bits),
+            None => decode_entry(fmt, bits),
+        }
+    } else {
+        decode_entry(fmt, from_f32(fmt, to_f32(fmt, bits)))
+    }
+}
+
+/// Total-order key of a decoded plane entry: `decoded_key(a) <
+/// decoded_key(b)` iff posit `a < b` as reals. Zero maps to 0,
+/// negatives below, positives above; within one sign, a larger scale
+/// (then a larger fraction) means a larger magnitude because the
+/// significand `1.f` lives in `[1, 2)`. **NaR is excluded** — callers
+/// (maxpool and friends) must test the [`SCALE_NAR`] sentinel first;
+/// feeding NaR here is a logic error (`debug_assert`ed).
+#[inline(always)]
+pub fn decoded_key(scale: i16, sfrac: u32) -> i64 {
+    debug_assert_ne!(scale, SCALE_NAR, "decoded_key is not defined for NaR");
+    if scale == SCALE_ZERO {
+        return 0;
+    }
+    // (scale + 2^15) is ≥ 1 for every non-sentinel scale, so the
+    // magnitude key is strictly positive and zero keeps rank 0.
+    let mag = (((scale as i64) + (1 << 15)) << FW) | (sfrac & SFRAC_FRAC_MASK) as i64;
+    if sfrac_sign(sfrac) {
+        -mag
+    } else {
+        mag
+    }
+}
+
+/// Decoded-domain posit compare (total order over reals; NaR excluded —
+/// see [`decoded_key`]).
+#[inline(always)]
+pub fn decoded_cmp(sa: i16, fa: u32, sb: i16, fb: u32) -> std::cmp::Ordering {
+    decoded_key(sa, fa).cmp(&decoded_key(sb, fb))
+}
+
 /// Full decode table for a format with `n <= 16`.
 pub struct DecodeTable {
     /// The format this table was built for.
@@ -204,6 +256,88 @@ mod tests {
             // Bit FW stays clear: the hidden bit is implicit, so the
             // sign never collides with fraction payload.
             assert_eq!(sf & (1 << FW), 0, "bits={bits:#x}");
+        }
+    }
+
+    #[test]
+    fn decoded_cmp_matches_value_order_exhaustive_p8() {
+        // The decoded-domain total order must agree with the real-value
+        // order for every non-NaR P8E0 pair (the maxpool contract).
+        use crate::posit::convert::to_f64;
+        let fmt = PositFormat::P8E0;
+        let t = DecodeTable::new(fmt);
+        for a in 0u64..256 {
+            if a == fmt.nar() {
+                continue;
+            }
+            for b in 0u64..256 {
+                if b == fmt.nar() {
+                    continue;
+                }
+                let (ea, eb) = (t.get(a), t.get(b));
+                let want = to_f64(fmt, a).partial_cmp(&to_f64(fmt, b)).unwrap();
+                assert_eq!(
+                    decoded_cmp(ea.scale, ea.sfrac(), eb.scale, eb.sfrac()),
+                    want,
+                    "a={a:#x} b={b:#x}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn decoded_cmp_matches_value_order_sampled_p16() {
+        use crate::posit::convert::to_f64;
+        let fmt = PositFormat::P16E1;
+        let t = DecodeTable::new(fmt);
+        let mut state = 0x5EEDu64;
+        let mut next = move || {
+            state = state
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(1442695040888963407);
+            (state >> 32) & fmt.mask()
+        };
+        for _ in 0..50_000 {
+            let (a, b) = (next(), next());
+            if a == fmt.nar() || b == fmt.nar() {
+                continue;
+            }
+            let (ea, eb) = (t.get(a), t.get(b));
+            let want = to_f64(fmt, a).partial_cmp(&to_f64(fmt, b)).unwrap();
+            assert_eq!(
+                decoded_cmp(ea.scale, ea.sfrac(), eb.scale, eb.sfrac()),
+                want,
+                "a={a:#x} b={b:#x}"
+            );
+        }
+    }
+
+    #[test]
+    fn readout_entry_is_plain_decode_for_narrow_formats() {
+        // n ≤ 16: the table lookup and the tableless decode agree, and
+        // no f32 round-trip is involved (it would be the identity).
+        let fmt = PositFormat::P16E1;
+        let t = DecodeTable::new(fmt);
+        for bits in (0u64..65536).step_by(17) {
+            assert_eq!(readout_entry(fmt, Some(&t), bits), t.get(bits));
+            assert_eq!(readout_entry(fmt, None, bits), decode_entry(fmt, bits));
+        }
+    }
+
+    #[test]
+    fn readout_entry_applies_f32_storage_roundtrip_for_wide_formats() {
+        // n > 16: the emitted plane must match "store as f32, re-encode
+        // at the next layer" bit for bit — that is the seed pipeline's
+        // behaviour the encoded path must reproduce.
+        let fmt = PositFormat::P32E2;
+        let mut state = 0xCAFEF00Du64;
+        for _ in 0..20_000 {
+            state = state
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(1442695040888963407);
+            let bits = (state >> 32) & fmt.mask();
+            let want = decode_entry(fmt, from_f32(fmt, to_f32(fmt, bits)));
+            assert_eq!(readout_entry(fmt, None, bits), want, "bits={bits:#x}");
         }
     }
 

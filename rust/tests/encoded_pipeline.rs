@@ -1,0 +1,257 @@
+//! End-to-end equivalence suite for the encoded-activation pipeline.
+//!
+//! The contract under test: a prepared posit model running with
+//! activations in decode-plane form between layers
+//! (`ActivationPipeline::Encoded`, the default) produces outputs
+//! **bit-identical** to the seed f32-round-trip path
+//! (`ActivationPipeline::F32Roundtrip`) — for exact and PLAM
+//! multipliers, across P⟨8,0⟩ / P⟨16,1⟩ / P⟨32,2⟩, through `forward`,
+//! `forward_batch`, and `forward_batch_pooled`, on dense chains and on
+//! a conv→pool→relu→dense model, including NaR- and zero-poisoned
+//! inputs. The round-trip path itself is pinned to the unprepared
+//! scalar engine, so the chain seed ≡ round-trip ≡ encoded is closed.
+
+use plam::nn::{
+    ActivationPipeline, ArithMode, Layer, Model, PreparedModel, Tensor, WorkerPool,
+};
+use plam::posit::PositFormat;
+use plam::prng::Rng;
+
+fn random_tensor(rng: &mut Rng, shape: &[usize]) -> Tensor {
+    let n: usize = shape.iter().product();
+    Tensor::from_vec(shape, (0..n).map(|_| rng.normal() as f32 * 0.6).collect())
+}
+
+/// A batch exercising the interesting input classes: plain random,
+/// NaR-poisoned, all-zero, zero-speckled, large-magnitude (stresses
+/// the windowed planner), and tiny-magnitude.
+fn adversarial_batch(rng: &mut Rng, shape: &[usize]) -> Vec<Tensor> {
+    let n: usize = shape.iter().product();
+    let mut poisoned = random_tensor(rng, shape);
+    poisoned.data[n / 2] = f32::NAN;
+    let mut speckled = random_tensor(rng, shape);
+    for i in (0..n).step_by(3) {
+        speckled.data[i] = 0.0;
+    }
+    let mut large = random_tensor(rng, shape);
+    for v in large.data.iter_mut() {
+        *v *= 4096.0;
+    }
+    let mut tiny = random_tensor(rng, shape);
+    for v in tiny.data.iter_mut() {
+        *v *= 1.0 / 4096.0;
+    }
+    vec![
+        random_tensor(rng, shape),
+        poisoned,
+        Tensor::zeros(shape),
+        speckled,
+        large,
+        tiny,
+    ]
+}
+
+fn conv_pool_relu_dense(rng: &mut Rng) -> Model {
+    let rand = |rng: &mut Rng, shape: &[usize]| random_tensor(rng, shape);
+    Model {
+        name: "conv-pool-relu-dense".into(),
+        layers: vec![
+            Layer::Conv2d {
+                w: rand(rng, &[4, 2, 3, 3]),
+                b: rand(rng, &[4]),
+                stride: 1,
+                pad: 1,
+            },
+            Layer::MaxPool2d { k: 2, stride: 2 },
+            Layer::Relu,
+            Layer::Flatten,
+            Layer::Dense {
+                w: rand(rng, &[5, 4 * 4 * 4]),
+                b: rand(rng, &[5]),
+            },
+        ],
+        input_shape: vec![2, 8, 8],
+    }
+}
+
+fn mlp(rng: &mut Rng) -> Model {
+    let rand = |rng: &mut Rng, shape: &[usize]| random_tensor(rng, shape);
+    Model {
+        name: "mlp".into(),
+        layers: vec![
+            Layer::Dense {
+                w: rand(rng, &[10, 12]),
+                b: rand(rng, &[10]),
+            },
+            Layer::Relu,
+            Layer::Dense {
+                w: rand(rng, &[4, 10]),
+                b: rand(rng, &[4]),
+            },
+        ],
+        input_shape: vec![12],
+    }
+}
+
+/// Ends with ReLU after the last GEMM: the encoded pipeline must hand
+/// trailing elementwise layers over to the f32 path.
+fn dense_then_relu(rng: &mut Rng) -> Model {
+    let rand = |rng: &mut Rng, shape: &[usize]| random_tensor(rng, shape);
+    Model {
+        name: "dense-relu-tail".into(),
+        layers: vec![
+            Layer::Dense {
+                w: rand(rng, &[6, 9]),
+                b: rand(rng, &[6]),
+            },
+            Layer::Relu,
+        ],
+        input_shape: vec![9],
+    }
+}
+
+fn all_modes() -> Vec<ArithMode> {
+    vec![
+        ArithMode::posit_exact(PositFormat::P8E0),
+        ArithMode::posit_plam(PositFormat::P8E0),
+        ArithMode::posit_exact(PositFormat::P16E1),
+        ArithMode::posit_plam(PositFormat::P16E1),
+        ArithMode::posit_exact(PositFormat::P32E2),
+        ArithMode::posit_plam(PositFormat::P32E2),
+    ]
+}
+
+fn assert_bits_eq(a: &[Tensor], b: &[Tensor], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: batch size");
+    for (i, (ta, tb)) in a.iter().zip(b.iter()).enumerate() {
+        assert_eq!(ta.shape, tb.shape, "{ctx}: sample {i} shape");
+        for (j, (x, y)) in ta.data.iter().zip(tb.data.iter()).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "{ctx}: sample {i} elem {j}: {x} vs {y}"
+            );
+        }
+    }
+}
+
+/// The full sweep for one model: encoded vs round-trip (per-sample,
+/// batched, pooled) and round-trip vs the unprepared scalar engine.
+fn sweep_model(model: &Model, pool: &WorkerPool, seed: u64) {
+    for mode in all_modes() {
+        let mut rng = Rng::new(seed);
+        let xs = adversarial_batch(&mut rng, &model.input_shape);
+        let enc = PreparedModel::new(model, mode.clone());
+        assert_eq!(enc.pipeline(), ActivationPipeline::Encoded);
+        let rt =
+            PreparedModel::new(model, mode.clone()).with_pipeline(ActivationPipeline::F32Roundtrip);
+        let ctx = format!("{} {}", model.name, mode.name());
+
+        // Round-trip path ≡ the unprepared scalar engine (the seed).
+        let seed_out: Vec<Tensor> = xs.iter().map(|x| model.forward(x, &mode)).collect();
+        let rt_batch = rt.forward_batch(&xs);
+        assert_bits_eq(&rt_batch, &seed_out, &format!("{ctx} [roundtrip vs seed]"));
+
+        // Encoded ≡ round-trip: batched, per-sample, pooled.
+        let enc_batch = enc.forward_batch(&xs);
+        assert_bits_eq(&enc_batch, &rt_batch, &format!("{ctx} [batch]"));
+        for (i, x) in xs.iter().enumerate() {
+            let one = enc.forward(x);
+            assert_bits_eq(
+                std::slice::from_ref(&one),
+                std::slice::from_ref(&rt_batch[i]),
+                &format!("{ctx} [forward sample {i}]"),
+            );
+        }
+        let enc_pooled = enc.forward_batch_pooled(&xs, Some(pool));
+        assert_bits_eq(&enc_pooled, &rt_batch, &format!("{ctx} [pooled]"));
+        let rt_pooled = rt.forward_batch_pooled(&xs, Some(pool));
+        assert_bits_eq(&rt_pooled, &rt_batch, &format!("{ctx} [roundtrip pooled]"));
+    }
+}
+
+#[test]
+fn conv_pool_relu_dense_bit_identical_across_pipelines() {
+    let pool = WorkerPool::new(4);
+    let mut rng = Rng::new(0xC0DE);
+    let model = conv_pool_relu_dense(&mut rng);
+    sweep_model(&model, &pool, 11);
+    pool.shutdown();
+}
+
+#[test]
+fn mlp_bit_identical_across_pipelines() {
+    let pool = WorkerPool::new(4);
+    let mut rng = Rng::new(0xD1CE);
+    let model = mlp(&mut rng);
+    sweep_model(&model, &pool, 13);
+    pool.shutdown();
+}
+
+#[test]
+fn trailing_elementwise_layers_bit_identical() {
+    let pool = WorkerPool::new(2);
+    let mut rng = Rng::new(0xFADE);
+    let model = dense_then_relu(&mut rng);
+    sweep_model(&model, &pool, 17);
+    pool.shutdown();
+}
+
+#[test]
+fn nar_poisons_whole_logit_vector_in_both_pipelines() {
+    // A NaR anywhere in the input poisons every logit (dense layers
+    // contract over all features, and NaR is absorbing through conv,
+    // pool, and ReLU per the pinned rule) — deterministically, in both
+    // pipelines.
+    let mut rng = Rng::new(0xBAD);
+    let model = conv_pool_relu_dense(&mut rng);
+    for mode in [
+        ArithMode::posit_plam(PositFormat::P16E1),
+        ArithMode::posit_exact(PositFormat::P8E0),
+    ] {
+        let mut x = random_tensor(&mut rng, &model.input_shape);
+        x.data[17] = f32::NAN;
+        let enc = PreparedModel::new(&model, mode.clone());
+        let rt = PreparedModel::new(&model, mode.clone())
+            .with_pipeline(ActivationPipeline::F32Roundtrip);
+        for _ in 0..2 {
+            let a = enc.forward(&x);
+            let b = rt.forward(&x);
+            assert!(
+                a.data.iter().all(|v| v.is_nan()),
+                "{}: encoded logits must all be NaR",
+                mode.name()
+            );
+            assert!(
+                b.data.iter().all(|v| v.is_nan()),
+                "{}: roundtrip logits must all be NaR",
+                mode.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn batch_sizes_straddling_tiles_bit_identical() {
+    // Batch sizes around the GEMM's MB=8 tile edge, plus batch 1.
+    let pool = WorkerPool::new(3);
+    let mut rng = Rng::new(0x517E);
+    let model = mlp(&mut rng);
+    for mode in [
+        ArithMode::posit_plam(PositFormat::P16E1),
+        ArithMode::posit_exact(PositFormat::P32E2),
+    ] {
+        let enc = PreparedModel::new(&model, mode.clone());
+        let rt = PreparedModel::new(&model, mode.clone())
+            .with_pipeline(ActivationPipeline::F32Roundtrip);
+        for batch in [1usize, 7, 8, 9, 17] {
+            let xs: Vec<Tensor> = (0..batch)
+                .map(|_| random_tensor(&mut rng, &model.input_shape))
+                .collect();
+            let a = enc.forward_batch_pooled(&xs, Some(&pool));
+            let b = rt.forward_batch(&xs);
+            assert_bits_eq(&a, &b, &format!("{} batch={batch}", mode.name()));
+        }
+    }
+    pool.shutdown();
+}
