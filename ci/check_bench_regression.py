@@ -1,11 +1,17 @@
 #!/usr/bin/env python3
-"""Bench regression guard for the GEMM hot path and the encoded-activation pipeline.
+"""Bench regression guard for the GEMM hot path, the encoded-activation
+pipeline, and the mixed-format plan series.
 
 Compares freshly produced ``BENCH_*.json`` files (written by
 ``cargo bench``) against the committed baseline in
 ``ci/bench_baseline.json`` and fails the job when a guarded series —
-most importantly the 256^3 P16E1 PLAM GEMM and the LeNet-5 P16E1 PLAM
-forward pass — regresses beyond the baseline's tolerance.
+most importantly the 256^3 P16E1 PLAM GEMM, the LeNet-5 P16E1 PLAM
+forward pass, and the LeNet-5 format-plan series (uniform vs
+first-last-wide mixed plans) — regresses beyond the baseline's
+tolerance. The plan self-checks additionally pin two refactor
+invariants within one run: the uniform-plan path must not be slower
+than the pre-plan encoded path beyond noise, and a mixed plan's
+plane-recode boundary tax must stay bounded relative to uniform.
 
 Design notes:
 

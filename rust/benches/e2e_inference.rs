@@ -13,7 +13,9 @@ use std::time::{Duration, Instant};
 
 use plam::bench::{black_box, Bench};
 use plam::coordinator::{serve, BatcherConfig, Client, NnBackend, Router, ServerConfig};
-use plam::nn::{ActivationPipeline, ArithMode, Model, ModelKind, PreparedModel, Tensor};
+use plam::nn::{
+    ActivationPipeline, ArithMode, FormatPlan, Model, ModelKind, PreparedModel, Tensor,
+};
 use plam::posit::PositFormat;
 use plam::prng::Rng;
 
@@ -195,6 +197,54 @@ fn main() {
         if let Some(s) = s {
             println!("  mlp-isolet plam p16e1: encoded speedup over round-trip {s:.2}x");
         }
+    }
+
+    // Mixed-format plans (per-layer formats with plane-domain recoding
+    // at the boundaries): latency, encoded weight bytes, and a cheap
+    // accuracy proxy (top-1 agreement with the float32 reference on a
+    // random probe set) per plan. The uniform-P16E1 plan runs exactly
+    // the model-global path — its series doubles as the "plan plumbing
+    // must not slow the uniform case" guard in ci/bench_baseline.json;
+    // first-last-wide adds two plane recodes per forward pass.
+    println!("\nmixed-format plans (LeNet-5 forward_batch, PLAM):");
+    println!(
+        "{:<38} {:>12} {:>12} {:>10}",
+        "plan", "mean ms", "enc bytes", "f32 agree"
+    );
+    let probe: Vec<Tensor> = (0..32)
+        .map(|_| Tensor::from_vec(&[1, 28, 28], (0..784).map(|_| rng.f32()).collect()))
+        .collect();
+    let f32_ref = PreparedModel::new(&lenet, ArithMode::float32());
+    let ref_classes: Vec<usize> = probe.iter().map(|x| f32_ref.predict(x)).collect();
+    for plan in [
+        FormatPlan::Uniform(PositFormat::P16E1),
+        FormatPlan::FirstLastWide {
+            wide: PositFormat::P16E1,
+            narrow: PositFormat::P8E0,
+        },
+        FormatPlan::Uniform(PositFormat::P8E0),
+    ] {
+        let base = plan.representative_format().unwrap();
+        let pm = PreparedModel::with_plan(&lenet, ArithMode::posit_plam(base), &plan)
+            .expect("plan resolves against LeNet-5");
+        let series = format!("lenet5 plan {}", plan.name());
+        let r = bench.run(&series, || {
+            black_box(pm.forward_batch(black_box(&imgs)));
+        });
+        let mean_ms = r.mean.as_secs_f64() * 1e3;
+        let agree = probe
+            .iter()
+            .zip(ref_classes.iter())
+            .filter(|(x, &c)| pm.predict(x) == c)
+            .count() as f64
+            / probe.len() as f64;
+        println!(
+            "{:<38} {:>12.3} {:>12} {:>9.0}%",
+            plan.name(),
+            mean_ms,
+            pm.encoded_bytes(),
+            agree * 100.0
+        );
     }
 
     bench

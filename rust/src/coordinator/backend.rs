@@ -3,7 +3,7 @@
 use anyhow::{bail, Result};
 
 use crate::nn::pool::WorkerPool;
-use crate::nn::{ArithMode, Model, PreparedModel, Tensor};
+use crate::nn::{ArithMode, FormatPlan, Model, PreparedModel, Tensor};
 
 #[cfg(feature = "pjrt")]
 use std::path::Path;
@@ -47,14 +47,35 @@ pub struct NnBackend {
 impl NnBackend {
     /// Wrap a model + mode (weights encoded here, once).
     pub fn new(model: Model, mode: ArithMode) -> Self {
-        let out_len = {
-            let x = Tensor::zeros(&model.input_shape);
-            model.forward(&x, &ArithMode::float32()).len()
-        };
+        let out_len = Self::probe_out_len(&model);
         NnBackend {
             model: PreparedModel::new(&model, mode),
             out_len,
         }
+    }
+
+    /// Wrap a model with a per-layer [`FormatPlan`] (mixed-format
+    /// serving): each dense/conv layer encodes and computes in its own
+    /// posit format, with plane-domain recoding at format boundaries.
+    /// The plan name is echoed through [`InferenceBackend::describe`]
+    /// into the serve routing table. Errors when the plan does not
+    /// resolve against the model.
+    pub fn with_plan(model: Model, mode: ArithMode, plan: &FormatPlan) -> Result<Self> {
+        let out_len = Self::probe_out_len(&model);
+        Ok(NnBackend {
+            model: PreparedModel::with_plan(&model, mode, plan)?,
+            out_len,
+        })
+    }
+
+    fn probe_out_len(model: &Model) -> usize {
+        let x = Tensor::zeros(&model.input_shape);
+        model.forward(&x, &ArithMode::float32()).len()
+    }
+
+    /// Encoded weight-plane footprint of the served model (bytes).
+    pub fn encoded_bytes(&self) -> usize {
+        self.model.encoded_bytes()
     }
 }
 
@@ -219,5 +240,37 @@ mod tests {
         let model = Model::new(ModelKind::MlpIsolet);
         let be = NnBackend::new(model, ArithMode::float32());
         assert!(be.infer_batch(&[vec![0.0; 5]]).is_err());
+    }
+
+    #[test]
+    fn nn_backend_serves_format_plans_and_echoes_them() {
+        use crate::nn::FormatPlan;
+        use crate::posit::PositFormat;
+        let mut rng = Rng::new(2);
+        let model = Model::init(ModelKind::MlpIsolet, &mut rng);
+        let plan = FormatPlan::FirstLastWide {
+            wide: PositFormat::P16E1,
+            narrow: PositFormat::P8E0,
+        };
+        let be = NnBackend::with_plan(
+            model.clone(),
+            ArithMode::posit_plam(PositFormat::P16E1),
+            &plan,
+        )
+        .unwrap();
+        assert!(
+            be.describe().contains("first-last-wide(p16e1/p8e0)"),
+            "{}",
+            be.describe()
+        );
+        assert!(be.encoded_bytes() > 0);
+        let out = be.infer_batch(&[vec![0.05; 617]]).unwrap();
+        assert_eq!(out[0].len(), 26);
+        // A mis-sized per-layer table is a registration-time error.
+        let bad = FormatPlan::PerLayer(vec![PositFormat::P8E0]);
+        assert!(
+            NnBackend::with_plan(model, ArithMode::posit_plam(PositFormat::P16E1), &bad)
+                .is_err()
+        );
     }
 }

@@ -206,6 +206,10 @@ fn worker_loop(
                 st.active_peak as u64,
             );
         }
+        // Plane-cache counters ride along with the batch cadence (the
+        // cache is process-wide; see the Metrics field docs).
+        let pc = crate::nn::PlaneCache::global();
+        metrics.set_plane_cache_gauges(pc.hits(), pc.misses(), pc.evictions(), pc.bytes() as u64);
         // Post-flush sweep: requests that arrived while the backend ran
         // are already waiting with aged timestamps. Seed the next batch
         // with them now so they coalesce into one immediate batch

@@ -26,6 +26,16 @@ pub struct Metrics {
     /// Pool-lifetime high-water mark of concurrently busy workers
     /// (shared across batchers, like `pool_queue_depth_peak`).
     pub pool_active_peak: AtomicU64,
+    /// Process-wide plane-cache hits (the cache is shared across every
+    /// model — mixed plans key planes per layer format, so one model
+    /// can hold planes under several formats).
+    pub plane_cache_hits: AtomicU64,
+    /// Process-wide plane-cache misses (encodes).
+    pub plane_cache_misses: AtomicU64,
+    /// Process-wide plane-cache evictions (over-capacity drops).
+    pub plane_cache_evictions: AtomicU64,
+    /// Process-wide plane-cache resident payload bytes.
+    pub plane_cache_bytes: AtomicU64,
     /// Latency samples (µs), bounded reservoir.
     latencies_us: Mutex<Vec<u64>>,
 }
@@ -79,6 +89,17 @@ impl Metrics {
         self.pool_active_peak.store(active_peak, Ordering::Relaxed);
     }
 
+    /// Record the shared plane cache's counters (refreshed after each
+    /// batch; the cache is process-wide, so like the pool gauges these
+    /// reflect every model on the server, not this batcher alone).
+    pub fn set_plane_cache_gauges(&self, hits: u64, misses: u64, evictions: u64, bytes: u64) {
+        self.plane_cache_hits.store(hits, Ordering::Relaxed);
+        self.plane_cache_misses.store(misses, Ordering::Relaxed);
+        self.plane_cache_evictions
+            .store(evictions, Ordering::Relaxed);
+        self.plane_cache_bytes.store(bytes, Ordering::Relaxed);
+    }
+
     /// Peak pool utilization in `[0, 1]` (busy workers / pool size), or
     /// 0 when no pool serves this batcher.
     pub fn pool_utilization(&self) -> f64 {
@@ -121,6 +142,20 @@ impl Metrics {
                 self.pool_utilization() * 100.0,
             ));
         }
+        let (h, m, e) = (
+            self.plane_cache_hits.load(Ordering::Relaxed),
+            self.plane_cache_misses.load(Ordering::Relaxed),
+            self.plane_cache_evictions.load(Ordering::Relaxed),
+        );
+        if h + m + e > 0 {
+            s.push_str(&format!(
+                " plane_cache[hits={} misses={} evictions={} bytes={}]",
+                h,
+                m,
+                e,
+                self.plane_cache_bytes.load(Ordering::Relaxed),
+            ));
+        }
         s
     }
 }
@@ -153,6 +188,21 @@ mod tests {
     #[test]
     fn empty_percentile_is_none() {
         assert_eq!(Metrics::new().latency_percentile_us(0.5), None);
+    }
+
+    #[test]
+    fn plane_cache_gauges_surface_in_summary() {
+        let m = Metrics::new();
+        assert!(
+            !m.summary().contains("plane_cache["),
+            "untouched cache keeps the summary bare"
+        );
+        m.set_plane_cache_gauges(10, 4, 1, 123_456);
+        let s = m.summary();
+        assert!(
+            s.contains("plane_cache[hits=10 misses=4 evictions=1 bytes=123456]"),
+            "{s}"
+        );
     }
 
     #[test]

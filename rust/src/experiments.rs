@@ -226,22 +226,7 @@ pub fn load_exported_testset(path: &Path, kind: DatasetKind) -> Option<(Vec<Tens
 /// without artifacts are trained here with the Rust trainer on flattened
 /// features replaced by the actual conv forward… see `train_rust_model`).
 pub fn table2_row(kind: DatasetKind, cfg: &Table2Config) -> Table2Row {
-    let weights_path = cfg.artifacts_dir.join(format!("{}.ptw", artifact_name(kind)));
-    let testset_path = cfg.artifacts_dir.join(format!("{}_test.ptw", artifact_name(kind)));
-
-    let mkind = model_for(kind);
-    let mut model = Model::new(mkind);
-    let (xs, ys, source) = if weights_path.exists() && testset_path.exists() {
-        let w = loader::load_weights(&weights_path).expect("read weights artifact");
-        loader::apply_weights(&mut model, &w).expect("apply weights artifact");
-        let (xs, ys) =
-            load_exported_testset(&testset_path, kind).expect("read testset artifact");
-        (xs, ys, "python-artifact".to_string())
-    } else {
-        let (m, xs, ys) = train_rust_model(kind, cfg);
-        model = m;
-        (xs, ys, "rust-trained".to_string())
-    };
+    let (model, xs, ys, source) = trained_model_and_testset(kind, cfg);
 
     // The posit rows evaluate the posit-quantised weight set (the
     // "trained under posit" model of Table II).
@@ -260,6 +245,107 @@ pub fn table2_row(kind: DatasetKind, cfg: &Table2Config) -> Table2Row {
         plam: (pp.evaluate_topk(&xs, &ys, 1), pp.evaluate_topk(&xs, &ys, 5)),
         source,
     }
+}
+
+/// Acquire a trained model + test split for a dataset: Python-trained
+/// artifacts when present, else the Rust-native training path. Shared
+/// by [`table2_row`] and the format-plan sweep.
+fn trained_model_and_testset(
+    kind: DatasetKind,
+    cfg: &Table2Config,
+) -> (Model, Vec<Tensor>, Vec<usize>, String) {
+    let weights_path = cfg.artifacts_dir.join(format!("{}.ptw", artifact_name(kind)));
+    let testset_path = cfg.artifacts_dir.join(format!("{}_test.ptw", artifact_name(kind)));
+
+    let mkind = model_for(kind);
+    let mut model = Model::new(mkind);
+    if weights_path.exists() && testset_path.exists() {
+        let w = loader::load_weights(&weights_path).expect("read weights artifact");
+        loader::apply_weights(&mut model, &w).expect("apply weights artifact");
+        let (xs, ys) =
+            load_exported_testset(&testset_path, kind).expect("read testset artifact");
+        (model, xs, ys, "python-artifact".to_string())
+    } else {
+        let (m, xs, ys) = train_rust_model(kind, cfg);
+        (m, xs, ys, "rust-trained".to_string())
+    }
+}
+
+/// One accuracy-vs-plan cell of the mixed-format grid: a dataset
+/// evaluated under one [`FormatPlan`] (weights quantised per layer
+/// through the plan, PLAM multiplier — the deployment the plan would
+/// actually serve).
+#[derive(Debug, Clone)]
+pub struct PlanSweepRow {
+    pub dataset: String,
+    pub plan: String,
+    /// `(top1, top5)` accuracy under the plan (PLAM multiplier).
+    pub accuracy: (f64, f64),
+    /// Encoded weight-plane footprint of the prepared model.
+    pub encoded_bytes: usize,
+}
+
+/// The default plan grid the CLI/bench sweep: the paper's uniform
+/// P⟨16,1⟩ baseline, the mixed first-last-wide plan, and all-narrow
+/// P⟨8,0⟩.
+pub fn default_plan_grid() -> Vec<crate::nn::FormatPlan> {
+    use crate::nn::FormatPlan;
+    vec![
+        FormatPlan::Uniform(PositFormat::P16E1),
+        FormatPlan::FirstLastWide {
+            wide: PositFormat::P16E1,
+            narrow: PositFormat::P8E0,
+        },
+        FormatPlan::Uniform(PositFormat::P8E0),
+    ]
+}
+
+/// The Table II accuracy grid, per format plan: for each dataset and
+/// each plan, quantise the trained weights per layer through the plan
+/// (`loader::quantize_weights_plan`) and evaluate the prepared
+/// mixed-format model (PLAM multiplier) on the test split.
+pub fn table2_plan_sweep(
+    kind: DatasetKind,
+    cfg: &Table2Config,
+    plans: &[crate::nn::FormatPlan],
+) -> Vec<PlanSweepRow> {
+    let (model, xs, ys, _source) = trained_model_and_testset(kind, cfg);
+    plans
+        .iter()
+        .map(|plan| {
+            let mut pmodel = model.clone();
+            loader::quantize_weights_plan(&mut pmodel, plan)
+                .expect("plan grid resolves against Table I models");
+            let base = plan
+                .representative_format()
+                .expect("plan grid plans carry formats");
+            let pm =
+                crate::nn::PreparedModel::with_plan(&pmodel, ArithMode::posit_plam(base), plan)
+                    .expect("plan grid resolves against Table I models");
+            PlanSweepRow {
+                dataset: kind.name().into(),
+                plan: plan.name(),
+                accuracy: (pm.evaluate_topk(&xs, &ys, 1), pm.evaluate_topk(&xs, &ys, 5)),
+                encoded_bytes: pm.encoded_bytes(),
+            }
+        })
+        .collect()
+}
+
+/// Render the accuracy-vs-plan grid.
+pub fn render_plan_sweep(rows: &[PlanSweepRow]) -> String {
+    let mut s = String::from("Mixed-format plans — accuracy (top-1 / top-5, PLAM)\n");
+    s.push_str(&format!(
+        "{:<16} {:<34} {:>17} {:>12}\n",
+        "dataset", "plan", "top1/top5", "enc bytes"
+    ));
+    for r in rows {
+        s.push_str(&format!(
+            "{:<16} {:<34} {:>8.4}/{:<8.4} {:>12}\n",
+            r.dataset, r.plan, r.accuracy.0, r.accuracy.1, r.encoded_bytes
+        ));
+    }
+    s
 }
 
 /// Rust-native training path (no Python artifacts): MLP datasets train
@@ -419,6 +505,36 @@ mod tests {
         );
         // top-5 ≥ top-1 always.
         assert!(r.plam.1 >= r.plam.0);
+    }
+
+    #[test]
+    fn plan_sweep_reports_the_grid() {
+        // The accuracy-vs-plan grid: mixed plans must stay in the same
+        // accuracy ballpark as uniform-P16E1 on a trained MLP (the
+        // per-layer Deep-Positron claim), and every cell reports a
+        // real footprint.
+        let mut cfg = Table2Config::quick();
+        cfg.train_n = 520;
+        cfg.test_n = 130;
+        cfg.epochs = 8;
+        let rows = table2_plan_sweep(DatasetKind::Isolet, &cfg, &default_plan_grid());
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[0].plan, "uniform-p16e1");
+        assert_eq!(rows[1].plan, "first-last-wide(p16e1/p8e0)");
+        assert_eq!(rows[2].plan, "uniform-p8e0");
+        for r in &rows {
+            assert!(r.accuracy.1 >= r.accuracy.0, "{}: top5 >= top1", r.plan);
+            assert!(r.encoded_bytes > 0);
+        }
+        let wide = rows[0].accuracy.0;
+        let mixed = rows[1].accuracy.0;
+        assert!(wide > 0.5, "uniform-p16e1 top-1 {wide}");
+        assert!(
+            (wide - mixed).abs() < 0.12,
+            "mixed plan should hold accuracy: wide {wide} vs mixed {mixed}"
+        );
+        let s = render_plan_sweep(&rows);
+        assert!(s.contains("first-last-wide(p16e1/p8e0)"), "{s}");
     }
 
     #[test]

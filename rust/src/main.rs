@@ -48,15 +48,23 @@ USAGE: plam <command> [flags]
 
 COMMANDS:
   serve      [--addr HOST:PORT] [--workers N] [--max-inflight N]
-             [--artifact PATH --batch N --in N --out N]
+             [--format-plan SPEC] [--artifact PATH --batch N --in N --out N]
              Start the batched inference server. Registers the Table I
              models in float32 / posit<16,1> / posit<16,1>+PLAM modes;
              optionally also a PJRT artifact backend (--features pjrt).
+             --format-plan additionally registers each model under a
+             per-layer mixed-format plan ('<name>-mixed' routes, PLAM
+             multiplier). SPEC is 'uniform:p16e1',
+             'first-last-wide:p16e1/p8e0', 'layers:p16e1,p8e0,...', or
+             '@model.json' (per-layer "format" fields, see README).
              --workers sizes the shared GEMM worker pool (default: the
              machine's parallelism; 0 disables it); --max-inflight is
              the admission-control bound (default 256, 0 = unlimited).
-  table2     [--quick | --full]
+  table2     [--quick | --full] [--plans]
              Reproduce Table II (inference accuracy across formats).
+             --plans adds the mixed-format grid: accuracy + encoded
+             bytes per format plan (uniform-P16E1 / first-last-wide /
+             uniform-P8E0) for every dataset.
   hw-report  [--table3] [--fig1] [--fig5] [--fig6] [--headline]
              Reproduce the hardware evaluation (all when no flag given).
   error      Reproduce the §III.C approximation-error analysis.
@@ -81,6 +89,28 @@ fn cmd_serve(args: &[String]) -> i32 {
     let addr = flag_value(args, "--addr").unwrap_or("127.0.0.1:7070");
     let mut router = Router::new();
     let cfg = BatcherConfig::default();
+
+    // Optional per-layer format plan: every registered NN model gains a
+    // '<name>-mixed' route running the plan (PLAM multiplier).
+    let plan = match flag_value(args, "--format-plan") {
+        Some(spec) => {
+            let parsed = match spec.strip_prefix('@') {
+                Some(path) => plam::nn::loader::load_format_plan(std::path::Path::new(path)),
+                None => plam::nn::FormatPlan::parse(spec),
+            };
+            match parsed {
+                Ok(p) => {
+                    println!("format plan: {p}");
+                    Some(p)
+                }
+                Err(e) => {
+                    eprintln!("bad --format-plan: {e:#}");
+                    return 2;
+                }
+            }
+        }
+        None => None,
+    };
 
     // Register the ISOLET MLP in all three arithmetic modes (weights are
     // whatever artifacts provide; fall back to random init for a demo
@@ -112,6 +142,18 @@ fn cmd_serve(args: &[String]) -> i32 {
             )),
             cfg,
         );
+        if let Some(plan) = &plan {
+            // Base the mode on the plan's representative format; each
+            // layer still resolves to its own format.
+            let base = plan.representative_format().unwrap_or(PositFormat::P16E1);
+            match NnBackend::with_plan(model.clone(), ArithMode::posit_plam(base), plan) {
+                Ok(be) => router.register(&format!("{name}-mixed"), Arc::new(be), cfg),
+                Err(e) => {
+                    eprintln!("--format-plan does not fit model '{name}': {e:#}");
+                    return 2;
+                }
+            }
+        }
         router.register(
             &format!("{name}-plam"),
             Arc::new(NnBackend::new(
@@ -210,6 +252,16 @@ fn cmd_table2(args: &[String]) -> i32 {
     };
     let rows = experiments::table2(&cfg);
     println!("{}", experiments::render_table2(&rows));
+    if has_flag(args, "--plans") {
+        // The mixed-format grid: every Table II dataset × the default
+        // plan trio (uniform-P16E1 / first-last-wide / uniform-P8E0).
+        let plans = experiments::default_plan_grid();
+        let mut rows = Vec::new();
+        for &kind in &cfg.datasets {
+            rows.extend(experiments::table2_plan_sweep(kind, &cfg, &plans));
+        }
+        println!("{}", experiments::render_plan_sweep(&rows));
+    }
     0
 }
 

@@ -43,7 +43,7 @@
 //! inputs.
 
 use crate::posit::tables::{
-    decoded_key, sfrac_sign, sfrac_significand, FW, SCALE_NAR, SCALE_ZERO, SFRAC_SIGN,
+    decoded_f32, decoded_key, recode_entry, sfrac_sign, SCALE_NAR, SCALE_ZERO, SFRAC_SIGN,
 };
 use crate::posit::PositFormat;
 
@@ -139,8 +139,8 @@ impl EncodedTensor {
     }
 
     /// The batch plane matrix (each sample one row) — directly a GEMM
-    /// operand.
-    pub(crate) fn matrix(&self) -> &EncodedMatrix {
+    /// operand (e.g. for `gemm_bt` / `gemm_bt_planes`).
+    pub fn matrix(&self) -> &EncodedMatrix {
         &self.mat
     }
 
@@ -250,25 +250,59 @@ impl EncodedTensor {
         self.shape = vec![self.mat.cols];
         self
     }
+
+    /// Recode the whole batch into another format's decode planes —
+    /// the mixed-format pipeline's layer boundary. Each element
+    /// re-rounds exactly once (`posit::tables::recode_entry`: exact
+    /// reconstruction, one RNE rounding into `dst`), panel/row metadata
+    /// refolds through the shared [`PlaneRowWriter`], NaR and zero
+    /// sentinels pass through untouched. Bit-identical to "decode the
+    /// batch to f32, encode in the destination mode" — which is what
+    /// the f32-round-trip pipeline does at a format boundary — so
+    /// mixed plans stay bit-identical across both pipelines. A
+    /// same-format recode is the identity (copy).
+    pub fn recode(&self, dst: &ArithMode) -> EncodedTensor {
+        let (dfmt, table) = match dst {
+            ArithMode::Posit { fmt, table, .. } => (*fmt, table.as_deref()),
+            ArithMode::Float32 => panic!("plane recode requires a posit mode"),
+        };
+        let mut mat = EncodedMatrix::empty();
+        mat.reset_planes(self.mat.rows, self.mat.cols);
+        for r in 0..self.mat.rows {
+            let base = r * self.mat.cols;
+            let mut writer = PlaneRowWriter::new(&mut mat, r);
+            if dfmt == self.fmt {
+                for c in 0..self.mat.cols {
+                    writer.push(self.mat.scales[base + c], self.mat.sfracs[base + c]);
+                }
+            } else {
+                for c in 0..self.mat.cols {
+                    let e = recode_entry(
+                        dfmt,
+                        table,
+                        self.mat.scales[base + c],
+                        self.mat.sfracs[base + c],
+                    );
+                    writer.push(e.scale, e.sfrac());
+                }
+            }
+            writer.finish();
+        }
+        EncodedTensor {
+            shape: self.shape.clone(),
+            fmt: dfmt,
+            mat,
+        }
+    }
 }
 
 /// Reconstruct one plane element's f32 value (the output-boundary
-/// decode): the same exact `significand × 2^(scale − width)` f64
-/// computation as `Decoded::to_f64` (the FW-aligned significand shifts
-/// the exponent by exactly the alignment amount, so the products are
-/// identical doubles), followed by the same single f64→f32 rounding —
-/// so decoded values match `posit::to_f32` of the underlying bits.
+/// decode): the exact `significand × 2^(scale − width)` reconstruction
+/// shared with the recode pass — see `posit::tables::decoded_f32`.
+/// Decoded values match `posit::to_f32` of the underlying bits.
 #[inline]
 fn decode_elem(scale: i16, sfrac: u32) -> f32 {
-    if scale == SCALE_NAR {
-        return f64::NAN as f32;
-    }
-    if scale == SCALE_ZERO {
-        return 0.0;
-    }
-    let sig = sfrac_significand(sfrac) as f64; // [2^30, 2^31), exact
-    let v = sig * ((scale as i32 - FW as i32) as f64).exp2();
-    (if sfrac_sign(sfrac) { -v } else { v }) as f32
+    decoded_f32(scale, sfrac)
 }
 
 /// Sequential plane writer for one row of an [`EncodedMatrix`]: pushes
@@ -777,6 +811,79 @@ mod tests {
         assert_eq!(flat.shape(), [24]);
         assert_eq!(flat.features(), 24);
         assert_eq!(flat.mat.scales, before);
+    }
+
+    #[test]
+    fn recode_matches_decode_then_encode_planes() {
+        // recode(src → dst) must equal "decode the batch to f32, encode
+        // in dst" plane for plane, metadata included — for every format
+        // pair and with specials/extremes poisoned in. (The multiplier
+        // kind is irrelevant to planes; both families share them.)
+        let fmts = [
+            PositFormat::P8E0,
+            PositFormat::P8E2,
+            PositFormat::P16E1,
+            PositFormat::P32E2,
+        ];
+        for src_fmt in fmts {
+            for dst_fmt in fmts {
+                let src_mode = ArithMode::posit_plam(src_fmt);
+                let dst_mode = ArithMode::posit_exact(dst_fmt);
+                let mut rng = Rng::new(0x2EC0 + src_fmt.n as u64 * 64 + dst_fmt.n as u64);
+                let mut x = random_tensor(&mut rng, &[41]);
+                x.data[0] = f32::NAN;
+                x.data[1] = 0.0;
+                x.data[2] = -0.0;
+                x.data[3] = 1e38; // saturates every format
+                x.data[4] = -1e38;
+                x.data[5] = 1e-38; // below minpos for narrow formats
+                x.data[6] = to_f32(src_fmt, src_fmt.maxpos());
+                x.data[7] = to_f32(src_fmt, src_fmt.minpos());
+                let xs = vec![x, random_tensor(&mut rng, &[41])];
+                let enc = EncodedTensor::encode(&src_mode, &xs);
+                let got = enc.recode(&dst_mode);
+                assert_eq!(got.fmt(), dst_fmt);
+                let want = EncodedTensor::encode(&dst_mode, &enc.decode());
+                assert_planes_eq(
+                    got.matrix(),
+                    want.matrix(),
+                    &format!("{src_fmt}->{dst_fmt}"),
+                );
+                // Same-format recode is the identity.
+                let id = enc.recode(&ArithMode::posit_exact(src_fmt));
+                assert_planes_eq(id.matrix(), enc.matrix(), &format!("{src_fmt} identity"));
+            }
+        }
+    }
+
+    #[test]
+    fn recode_preserves_nar_and_refolds_metadata_across_panels() {
+        // A row longer than KB so the refold covers multiple panels.
+        let src = ArithMode::posit_plam(PositFormat::P16E1);
+        let dst = ArithMode::posit_plam(PositFormat::P8E0);
+        let mut rng = Rng::new(0x2EC1);
+        let mut x = random_tensor(&mut rng, &[KB + 7]);
+        x.data[3] = f32::NAN;
+        x.data[KB + 1] = f32::NAN;
+        x.data[10] = 0.0;
+        let enc = EncodedTensor::encode(&src, std::slice::from_ref(&x));
+        let got = enc.recode(&dst);
+        assert_eq!(got.mat.scales[3], SCALE_NAR, "NaR must survive recode");
+        assert_eq!(got.mat.scales[KB + 1], SCALE_NAR);
+        assert_eq!(got.mat.scales[10], SCALE_ZERO);
+        let want = EncodedTensor::encode(&dst, &enc.decode());
+        assert_planes_eq(got.matrix(), want.matrix(), "panel refold");
+        // The recoded tensor is immediately a valid GEMM operand.
+        let w = random_tensor(&mut rng, &[2 * (KB + 7)]);
+        let we = encode_matrix(&dst, 2, KB + 7, &w.data);
+        let mut ya = vec![0f32; 2];
+        let mut yb = vec![0f32; 2];
+        gemm_bt(&dst, got.matrix(), &we, None, &mut ya);
+        gemm_bt(&dst, want.matrix(), &we, None, &mut yb);
+        assert_eq!(
+            ya.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            yb.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
     }
 
     #[test]

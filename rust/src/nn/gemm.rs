@@ -361,6 +361,7 @@ pub struct PlaneCache {
     inner: Mutex<CacheInner>,
     hits: AtomicU64,
     misses: AtomicU64,
+    evictions: AtomicU64,
 }
 
 impl PlaneCache {
@@ -375,6 +376,7 @@ impl PlaneCache {
             }),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
         }
     }
 
@@ -442,6 +444,7 @@ impl PlaneCache {
                 .expect("non-empty cache");
             if let Some(e) = inner.map.remove(&oldest) {
                 inner.bytes -= e.bytes;
+                self.evictions.fetch_add(1, Ordering::Relaxed);
             }
         }
         plane
@@ -470,6 +473,11 @@ impl PlaneCache {
     /// Cache misses so far.
     pub fn misses(&self) -> u64 {
         self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Planes evicted over capacity so far.
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
     }
 
     /// Drop every cached plane (outstanding `Arc`s stay valid).
@@ -1662,6 +1670,7 @@ mod tests {
         }
         assert!(cache.bytes() <= 10 * 1024, "bytes={}", cache.bytes());
         assert!(cache.len() < 18);
+        assert!(cache.evictions() > 0, "over-capacity inserts must evict");
         assert_eq!(a.rows, 16);
         // The original entry was evicted, so re-encoding misses.
         let before = cache.misses();

@@ -79,6 +79,34 @@ impl ArithMode {
         (fmt.n <= 16).then(|| Arc::new(DecodeTable::new(fmt)))
     }
 
+    /// The posit format, or `None` for [`ArithMode::Float32`].
+    pub fn fmt(&self) -> Option<PositFormat> {
+        match self {
+            ArithMode::Float32 => None,
+            ArithMode::Posit { fmt, .. } => Some(*fmt),
+        }
+    }
+
+    /// The multiplier kind, or `None` for [`ArithMode::Float32`].
+    pub fn mul(&self) -> Option<MulKind> {
+        match self {
+            ArithMode::Float32 => None,
+            ArithMode::Posit { mul, .. } => Some(*mul),
+        }
+    }
+
+    /// The same arithmetic family rebound to another posit format
+    /// (builds the new format's decode table; Float32 is format-free
+    /// and returns itself). This is how a [`super::plan::FormatPlan`]
+    /// resolves per-layer modes out of a model-global one.
+    pub fn with_format(&self, fmt: PositFormat) -> ArithMode {
+        match self {
+            ArithMode::Float32 => ArithMode::Float32,
+            ArithMode::Posit { mul: MulKind::Exact, .. } => ArithMode::posit_exact(fmt),
+            ArithMode::Posit { mul: MulKind::Plam, .. } => ArithMode::posit_plam(fmt),
+        }
+    }
+
     /// Short display name (used in reports).
     pub fn name(&self) -> String {
         match self {

@@ -142,6 +142,41 @@ pub fn quantize_weights(model: &mut Model, fmt: crate::posit::PositFormat) {
     }
 }
 
+/// Per-layer [`quantize_weights`]: each dense/conv layer's parameters
+/// round-trip through *its own* plan-resolved format — the weight set a
+/// mixed-format deployment would train/export. Errors when the plan
+/// does not resolve against the model (e.g. a per-layer table whose
+/// length mismatches the model's GEMM layer count).
+pub fn quantize_weights_plan(model: &mut Model, plan: &super::plan::FormatPlan) -> Result<()> {
+    let gemm_layers = model
+        .layers
+        .iter()
+        .filter(|l| matches!(l, Layer::Dense { .. } | Layer::Conv2d { .. }))
+        .count();
+    let fmts = plan.resolve(gemm_layers)?;
+    let mut fmts = fmts.into_iter();
+    for l in model.layers.iter_mut() {
+        if let Layer::Dense { w, b } | Layer::Conv2d { w, b, .. } = l {
+            let fmt = fmts.next().expect("resolve yields one format per GEMM layer");
+            for v in w.data.iter_mut().chain(b.data.iter_mut()) {
+                *v = crate::posit::to_f32(fmt, crate::posit::from_f32(fmt, *v));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Load a [`FormatPlan`](super::plan::FormatPlan) from a model-spec
+/// JSON file (optional per-layer `"format"` fields with a
+/// `"default_format"` fallback, or a `"format_plan"` spec string — see
+/// `nn::plan`). Malformed JSON and unknown format strings are rejected
+/// with a clear error naming the file.
+pub fn load_format_plan(path: &Path) -> Result<super::plan::FormatPlan> {
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("read format plan {path:?}"))?;
+    super::plan::FormatPlan::from_json(&text).with_context(|| format!("parse format plan {path:?}"))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -204,6 +239,68 @@ mod tests {
         let once = model_weights(&m);
         quantize_weights(&mut m, crate::posit::PositFormat::P16E1);
         assert_eq!(once, model_weights(&m));
+    }
+
+    #[test]
+    fn quantize_plan_applies_per_layer_formats() {
+        use crate::nn::plan::FormatPlan;
+        use crate::posit::PositFormat;
+        let mut rng = Rng::new(7);
+        let mut m = Model::init(ModelKind::MlpIsolet, &mut rng);
+        let plan = FormatPlan::PerLayer(vec![
+            PositFormat::P16E1,
+            PositFormat::P8E0,
+            PositFormat::P16E1,
+        ]);
+        quantize_weights_plan(&mut m, &plan).unwrap();
+        // Idempotent: a second pass through the same plan is a no-op.
+        let once = model_weights(&m);
+        quantize_weights_plan(&mut m, &plan).unwrap();
+        assert_eq!(once, model_weights(&m));
+        // The middle layer really went through P8E0: every value must
+        // round-trip P8E0 exactly (a P16E1-only quantisation would not).
+        if let Layer::Dense { w, .. } = &m.layers[2] {
+            for v in &w.data {
+                let q = crate::posit::to_f32(
+                    PositFormat::P8E0,
+                    crate::posit::from_f32(PositFormat::P8E0, *v),
+                );
+                assert_eq!(v.to_bits(), q.to_bits());
+            }
+        } else {
+            panic!("layer 2 of the ISOLET MLP is dense");
+        }
+        // Wrong table length → clear error.
+        let bad = FormatPlan::PerLayer(vec![PositFormat::P8E0]);
+        assert!(quantize_weights_plan(&mut m, &bad).is_err());
+    }
+
+    #[test]
+    fn format_plan_loads_from_json_file() {
+        use crate::nn::plan::FormatPlan;
+        use crate::posit::PositFormat;
+        let dir = unique_test_dir("plan_json");
+        let path = dir.join("model.json");
+        std::fs::write(
+            &path,
+            r#"{ "default_format": "p8e0",
+                 "layers": [ { "format": "p16e1" }, {}, { "format": "p16e1" } ] }"#,
+        )
+        .unwrap();
+        let plan = load_format_plan(&path).unwrap();
+        assert_eq!(
+            plan,
+            FormatPlan::PerLayer(vec![
+                PositFormat::P16E1,
+                PositFormat::P8E0,
+                PositFormat::P16E1
+            ])
+        );
+        // Unknown format string → error mentioning the file and spec.
+        std::fs::write(&path, r#"{ "layers": [ { "format": "q8e0" } ] }"#).unwrap();
+        let e = format!("{:#}", load_format_plan(&path).unwrap_err());
+        assert!(e.contains("q8e0"), "{e}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -11,9 +11,13 @@
 //! single rounding, elementwise/pool layers run in the decoded domain,
 //! conv im2col is an index gather, and `f32` appears only at the model
 //! input/output boundary — bit-identical to the classic round-trip
-//! path. [`pool`] shards the GEMM across a work-stealing worker pool
-//! (bit-identical results, one row band per task), and
-//! [`gemm::PlaneCache`] shares encoded weight planes across models.
+//! path. [`plan`] lifts the arithmetic from model-global to per-layer:
+//! a [`plan::FormatPlan`] binds each dense/conv layer to its own posit
+//! format, with plane-domain recoding at format boundaries (uniform
+//! plans stay bit-identical to the model-global path). [`pool`] shards
+//! the GEMM across a work-stealing worker pool (bit-identical results,
+//! one row band per task), and [`gemm::PlaneCache`] shares encoded
+//! weight planes across models, keyed by each layer's format.
 
 pub mod gemm;
 pub mod encoded;
@@ -22,6 +26,7 @@ pub mod tensor;
 pub mod layers;
 pub mod model;
 pub mod loader;
+pub mod plan;
 pub mod prepared;
 
 pub use encoded::EncodedTensor;
@@ -31,6 +36,7 @@ pub use gemm::{
     AccPolicy, EncodedMatrix, PanelMeta, PlaneCache,
 };
 pub use layers::{ArithMode, Layer, MulKind};
+pub use plan::{format_slug, parse_format, FormatPlan, LayerArith};
 pub use pool::{PoolStats, WorkerPool};
 pub use prepared::{ActivationPipeline, PreparedModel};
 pub use model::{Model, ModelKind};

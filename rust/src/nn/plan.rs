@@ -1,0 +1,675 @@
+//! Per-layer format plans — mixed-format inference.
+//!
+//! The Deep Positron / posit-DNN literature shows that per-layer
+//! precision is the natural next step after approximate multipliers:
+//! most layers tolerate tiny formats (P⟨8,0⟩) while the first and last
+//! layers — which see raw inputs and produce logits — want a wider one
+//! (P⟨16,1⟩/P⟨32,2⟩). A [`FormatPlan`] describes that assignment and a
+//! [`LayerArith`] is the per-GEMM-layer resolution of the plan against
+//! a model: `PreparedModel::with_plan` binds each dense/conv layer to
+//! its own posit format (weights encoded in that format, GEMM windows
+//! planned per layer, read-out emitted in that format), and layer
+//! boundaries whose formats differ recode activations directly in the
+//! decode-plane domain (`EncodedTensor::recode` — one rounding,
+//! bit-identical to the decode→f32→encode reference).
+//!
+//! A **uniform** plan is bit-identical to the pre-plan model-global
+//! path by construction: every layer resolves to the same mode the
+//! old code used, and no recode pass ever runs.
+//!
+//! Plan spec syntax (CLI `--format-plan`, tests, JSON):
+//!
+//! ```text
+//! uniform:p16e1                    every GEMM layer in P⟨16,1⟩
+//! first-last-wide:p16e1/p8e0       first+last GEMM layer wide, rest narrow
+//! layers:p16e1,p8e0,p8e0,p16e1     explicit per-GEMM-layer table
+//! ```
+//!
+//! The JSON form (`FormatPlan::from_json`, `loader::load_format_plan`)
+//! is a model-spec object where each layer may carry an optional
+//! `"format"` field:
+//!
+//! ```json
+//! { "default_format": "p8e0",
+//!   "layers": [ { "format": "p16e1" }, {}, { "format": "p16e1" } ] }
+//! ```
+//!
+//! or simply `{ "format_plan": "first-last-wide:p16e1/p8e0" }`.
+//! Malformed or unknown format strings are rejected with a clear error.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::posit::PositFormat;
+
+use super::layers::ArithMode;
+
+/// Lower-case slug of a format (`p16e1`), the spelling plan specs use.
+pub fn format_slug(fmt: PositFormat) -> String {
+    format!("p{}e{}", fmt.n, fmt.es)
+}
+
+/// Parse a posit format spec: `p<n>e<es>` (case-insensitive, e.g.
+/// `p8e0`, `P16E1`) or `posit<n,es>`. Rejects out-of-range or
+/// malformed strings with an error naming the offending spec.
+pub fn parse_format(spec: &str) -> Result<PositFormat> {
+    let err = || {
+        anyhow!(
+            "unknown posit format '{spec}' (expected p<n>e<es> with 2 <= n <= 32 and es <= 4, \
+             e.g. p8e0, p16e1, p32e2)"
+        )
+    };
+    let s = spec.trim().to_ascii_lowercase();
+    let (n_str, es_str) = if let Some(rest) = s.strip_prefix("posit<") {
+        let rest = rest.strip_suffix('>').ok_or_else(err)?;
+        rest.split_once(',').ok_or_else(err)?
+    } else if let Some(rest) = s.strip_prefix('p') {
+        rest.split_once('e').ok_or_else(err)?
+    } else {
+        return Err(err());
+    };
+    let n: u32 = n_str.trim().parse().map_err(|_| err())?;
+    let es: u32 = es_str.trim().parse().map_err(|_| err())?;
+    if !(2..=32).contains(&n) || es > 4 {
+        return Err(err());
+    }
+    Ok(PositFormat { n, es })
+}
+
+/// Which posit format each GEMM (dense/conv) layer of a model runs in.
+///
+/// Plans are *per-GEMM-layer*: elementwise/pool/flatten layers carry no
+/// arithmetic of their own (they run in whatever format the activations
+/// currently are), so only dense and conv layers are counted.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FormatPlan {
+    /// Every GEMM layer in one format — bit-identical to the
+    /// pre-plan model-global path.
+    Uniform(PositFormat),
+    /// First and last GEMM layer in `wide`, everything between in
+    /// `narrow` (a 1-GEMM model is all-`wide`).
+    FirstLastWide {
+        wide: PositFormat,
+        narrow: PositFormat,
+    },
+    /// Explicit per-GEMM-layer table; its length must equal the
+    /// model's GEMM layer count.
+    PerLayer(Vec<PositFormat>),
+}
+
+impl FormatPlan {
+    /// Display name (`uniform-p16e1`, `first-last-wide(p16e1/p8e0)`,
+    /// `layers(p16e1,p8e0,…)`) — echoed in prepared-model names, the
+    /// serve routing table, and bench series.
+    pub fn name(&self) -> String {
+        match self {
+            FormatPlan::Uniform(f) => format!("uniform-{}", format_slug(*f)),
+            FormatPlan::FirstLastWide { wide, narrow } => {
+                format!(
+                    "first-last-wide({}/{})",
+                    format_slug(*wide),
+                    format_slug(*narrow)
+                )
+            }
+            FormatPlan::PerLayer(v) => {
+                let parts: Vec<String> = v.iter().map(|f| format_slug(*f)).collect();
+                format!("layers({})", parts.join(","))
+            }
+        }
+    }
+
+    /// A representative format for contexts that need one before the
+    /// model's GEMM layer count is known (CLI base-mode selection):
+    /// the uniform format, the wide format, or the first table entry.
+    pub fn representative_format(&self) -> Option<PositFormat> {
+        match self {
+            FormatPlan::Uniform(f) => Some(*f),
+            FormatPlan::FirstLastWide { wide, .. } => Some(*wide),
+            FormatPlan::PerLayer(v) => v.first().copied(),
+        }
+    }
+
+    /// The single format every layer resolves to, if the plan is
+    /// effectively uniform (a `FirstLastWide` with `wide == narrow`
+    /// and a constant `PerLayer` table count as uniform).
+    pub fn uniform_format(&self) -> Option<PositFormat> {
+        match self {
+            FormatPlan::Uniform(f) => Some(*f),
+            FormatPlan::FirstLastWide { wide, narrow } if wide == narrow => Some(*wide),
+            FormatPlan::PerLayer(v) => match v.split_first() {
+                Some((first, rest)) if rest.iter().all(|f| f == first) => Some(*first),
+                _ => None,
+            },
+            _ => None,
+        }
+    }
+
+    /// Resolve the plan against a model with `gemm_layers` dense/conv
+    /// layers: one format per GEMM layer, in model order. Rejects
+    /// per-layer tables whose length does not match and empty models
+    /// given a non-empty table.
+    pub fn resolve(&self, gemm_layers: usize) -> Result<Vec<PositFormat>> {
+        match self {
+            FormatPlan::Uniform(f) => Ok(vec![*f; gemm_layers]),
+            FormatPlan::FirstLastWide { wide, narrow } => Ok((0..gemm_layers)
+                .map(|i| {
+                    if i == 0 || i + 1 == gemm_layers {
+                        *wide
+                    } else {
+                        *narrow
+                    }
+                })
+                .collect()),
+            FormatPlan::PerLayer(v) => {
+                if v.len() != gemm_layers {
+                    bail!(
+                        "format plan lists {} layer formats but the model has {} dense/conv layers",
+                        v.len(),
+                        gemm_layers
+                    );
+                }
+                Ok(v.clone())
+            }
+        }
+    }
+
+    /// Parse a plan spec string (see the module docs for the syntax).
+    pub fn parse(spec: &str) -> Result<FormatPlan> {
+        let s = spec.trim();
+        if let Some(rest) = s.strip_prefix("uniform:") {
+            return Ok(FormatPlan::Uniform(parse_format(rest)?));
+        }
+        if let Some(rest) = s.strip_prefix("first-last-wide:") {
+            let (wide, narrow) = rest.split_once('/').ok_or_else(|| {
+                anyhow!("first-last-wide needs 'wide/narrow' formats, got '{rest}'")
+            })?;
+            return Ok(FormatPlan::FirstLastWide {
+                wide: parse_format(wide)?,
+                narrow: parse_format(narrow)?,
+            });
+        }
+        if let Some(rest) = s.strip_prefix("layers:") {
+            let fmts: Result<Vec<PositFormat>> = rest.split(',').map(parse_format).collect();
+            let fmts = fmts?;
+            if fmts.is_empty() {
+                bail!("'layers:' plan lists no formats");
+            }
+            return Ok(FormatPlan::PerLayer(fmts));
+        }
+        bail!(
+            "unknown format plan '{spec}' (expected 'uniform:<fmt>', \
+             'first-last-wide:<wide>/<narrow>' or 'layers:<fmt>,<fmt>,…')"
+        )
+    }
+
+    /// Parse a plan from model-spec JSON. Accepts either a
+    /// `"format_plan"` spec string, or a `"layers"` array whose objects
+    /// each carry an optional per-layer `"format"` field (layers
+    /// without one fall back to `"default_format"`, which must then be
+    /// present). Malformed JSON and unknown format strings are
+    /// rejected with a clear error.
+    pub fn from_json(text: &str) -> Result<FormatPlan> {
+        let doc = json::parse(text)?;
+        let obj = match &doc {
+            json::Value::Object(kv) => kv,
+            _ => bail!("model JSON must be an object"),
+        };
+        let get = |key: &str| obj.iter().find(|(k, _)| k == key).map(|(_, v)| v);
+        if let Some(v) = get("format_plan") {
+            let spec = match v {
+                json::Value::String(s) => s,
+                _ => bail!("\"format_plan\" must be a string"),
+            };
+            return FormatPlan::parse(spec);
+        }
+        let layers = match get("layers") {
+            Some(json::Value::Array(items)) => items,
+            Some(_) => bail!("\"layers\" must be an array"),
+            None => bail!("model JSON needs \"format_plan\" or a \"layers\" array"),
+        };
+        let default = match get("default_format") {
+            Some(json::Value::String(s)) => Some(parse_format(s)?),
+            Some(_) => bail!("\"default_format\" must be a string"),
+            None => None,
+        };
+        let mut fmts = Vec::with_capacity(layers.len());
+        for (i, l) in layers.iter().enumerate() {
+            let lobj = match l {
+                json::Value::Object(kv) => kv,
+                _ => bail!("layer {i} must be an object"),
+            };
+            let fmt = lobj.iter().find(|(k, _)| k == "format").map(|(_, v)| v);
+            match fmt {
+                Some(json::Value::String(s)) => fmts.push(parse_format(s)?),
+                Some(_) => bail!("layer {i}: \"format\" must be a string"),
+                None => match default {
+                    Some(d) => fmts.push(d),
+                    None => bail!(
+                        "layer {i} has no \"format\" and the model JSON has no \"default_format\""
+                    ),
+                },
+            }
+        }
+        if fmts.is_empty() {
+            bail!("\"layers\" array is empty");
+        }
+        Ok(FormatPlan::PerLayer(fmts))
+    }
+}
+
+impl core::fmt::Display for FormatPlan {
+    fn fmt(&self, f: &mut core::fmt::Formatter<'_>) -> core::fmt::Result {
+        f.write_str(&self.name())
+    }
+}
+
+/// Arithmetic resolved for one GEMM layer of a prepared model: the
+/// layer's own format bound to the model's multiplier family (or
+/// float32, which has no format and ignores plans).
+#[derive(Clone)]
+pub struct LayerArith {
+    /// The resolved per-layer mode the GEMM kernels run with.
+    pub mode: ArithMode,
+}
+
+impl LayerArith {
+    /// The layer's posit format (None for float32).
+    pub fn fmt(&self) -> Option<PositFormat> {
+        self.mode.fmt()
+    }
+}
+
+/// Resolve a plan against a model's layer sequence into per-GEMM-layer
+/// arithmetics. Decode tables are shared across layers of one format
+/// (an `ArithMode` clone shares its `Arc`'d table).
+pub(crate) fn resolve_layer_ariths(
+    base: &ArithMode,
+    plan: &FormatPlan,
+    gemm_layers: usize,
+) -> Result<Vec<LayerArith>> {
+    // Resolving validates the plan against the model (per-layer table
+    // length) for every mode family.
+    let fmts = plan.resolve(gemm_layers)?;
+    match base {
+        ArithMode::Float32 => {
+            // Float32 carries no posit format; only a (format-free)
+            // uniform assignment is meaningful.
+            let uniform = match fmts.split_first() {
+                None => true,
+                Some((f, rest)) => rest.iter().all(|g| g == f),
+            };
+            if !uniform {
+                bail!("non-uniform format plans require a posit mode (float32 has no format)");
+            }
+            Ok(vec![
+                LayerArith {
+                    mode: ArithMode::Float32,
+                };
+                gemm_layers
+            ])
+        }
+        ArithMode::Posit { .. } => {
+            // Layers resolving to the base mode's format reuse its
+            // (already built, Arc-shared) decode table; other formats
+            // build one table each, shared across their layers.
+            let mut cache: Vec<(PositFormat, ArithMode)> = Vec::new();
+            if let Some(f) = base.fmt() {
+                cache.push((f, base.clone()));
+            }
+            Ok(fmts
+                .into_iter()
+                .map(|fmt| {
+                    let mode = if let Some(i) = cache.iter().position(|(f, _)| *f == fmt) {
+                        cache[i].1.clone()
+                    } else {
+                        let m = base.with_format(fmt);
+                        cache.push((fmt, m.clone()));
+                        m
+                    };
+                    LayerArith { mode }
+                })
+                .collect())
+        }
+    }
+}
+
+/// Minimal JSON parser (objects/arrays/strings/numbers/bools/null) —
+/// serde is unavailable offline, and the plan spec needs only this
+/// subset. Duplicate keys are kept in order (first lookup wins).
+mod json {
+    use anyhow::{bail, Result};
+
+    #[derive(Debug, Clone, PartialEq)]
+    pub enum Value {
+        Object(Vec<(String, Value)>),
+        Array(Vec<Value>),
+        String(String),
+        Number(f64),
+        Bool(bool),
+        Null,
+    }
+
+    pub fn parse(text: &str) -> Result<Value> {
+        let b = text.as_bytes();
+        let mut pos = 0usize;
+        let v = value(b, &mut pos)?;
+        skip_ws(b, &mut pos);
+        if pos != b.len() {
+            bail!("malformed JSON: trailing data at byte {pos}");
+        }
+        Ok(v)
+    }
+
+    fn skip_ws(b: &[u8], pos: &mut usize) {
+        while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+            *pos += 1;
+        }
+    }
+
+    fn value(b: &[u8], pos: &mut usize) -> Result<Value> {
+        skip_ws(b, pos);
+        match b.get(*pos) {
+            Some(b'{') => object(b, pos),
+            Some(b'[') => array(b, pos),
+            Some(b'"') => Ok(Value::String(string(b, pos)?)),
+            Some(b't') => lit(b, pos, "true", Value::Bool(true)),
+            Some(b'f') => lit(b, pos, "false", Value::Bool(false)),
+            Some(b'n') => lit(b, pos, "null", Value::Null),
+            Some(c) if c.is_ascii_digit() || *c == b'-' => number(b, pos),
+            Some(c) => bail!("malformed JSON: unexpected byte {:?} at {}", *c as char, pos),
+            None => bail!("malformed JSON: unexpected end of input"),
+        }
+    }
+
+    fn lit(b: &[u8], pos: &mut usize, word: &str, v: Value) -> Result<Value> {
+        if b[*pos..].starts_with(word.as_bytes()) {
+            *pos += word.len();
+            Ok(v)
+        } else {
+            bail!("malformed JSON: bad literal at byte {pos}")
+        }
+    }
+
+    fn number(b: &[u8], pos: &mut usize) -> Result<Value> {
+        let start = *pos;
+        while *pos < b.len()
+            && matches!(b[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        {
+            *pos += 1;
+        }
+        let s = core::str::from_utf8(&b[start..*pos]).expect("ascii digits");
+        match s.parse::<f64>() {
+            Ok(n) => Ok(Value::Number(n)),
+            Err(_) => bail!("malformed JSON: bad number '{s}' at byte {start}"),
+        }
+    }
+
+    fn string(b: &[u8], pos: &mut usize) -> Result<String> {
+        debug_assert_eq!(b[*pos], b'"');
+        *pos += 1;
+        let mut out = String::new();
+        while let Some(&c) = b.get(*pos) {
+            match c {
+                b'"' => {
+                    *pos += 1;
+                    return Ok(out);
+                }
+                b'\\' => {
+                    *pos += 1;
+                    match b.get(*pos) {
+                        Some(b'"') => out.push('"'),
+                        Some(b'\\') => out.push('\\'),
+                        Some(b'/') => out.push('/'),
+                        Some(b'n') => out.push('\n'),
+                        Some(b't') => out.push('\t'),
+                        Some(b'r') => out.push('\r'),
+                        Some(b'b') => out.push('\u{8}'),
+                        Some(b'f') => out.push('\u{c}'),
+                        Some(b'u') => {
+                            let hex = b
+                                .get(*pos + 1..*pos + 5)
+                                .ok_or_else(|| anyhow::anyhow!("truncated \\u escape"))?;
+                            let code = u32::from_str_radix(
+                                core::str::from_utf8(hex).map_err(|_| {
+                                    anyhow::anyhow!("malformed \\u escape")
+                                })?,
+                                16,
+                            )?;
+                            out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                            *pos += 4;
+                        }
+                        _ => bail!("malformed JSON: bad escape at byte {pos}"),
+                    }
+                    *pos += 1;
+                }
+                _ => {
+                    // Multi-byte UTF-8 sequences pass through verbatim.
+                    let s = &b[*pos..];
+                    let ch_len = match s[0] {
+                        0x00..=0x7F => 1,
+                        0xC0..=0xDF => 2,
+                        0xE0..=0xEF => 3,
+                        _ => 4,
+                    };
+                    let chunk = s.get(..ch_len).unwrap_or(&s[..1]);
+                    out.push_str(core::str::from_utf8(chunk).unwrap_or("\u{fffd}"));
+                    *pos += ch_len;
+                }
+            }
+        }
+        bail!("malformed JSON: unterminated string")
+    }
+
+    fn object(b: &[u8], pos: &mut usize) -> Result<Value> {
+        *pos += 1; // '{'
+        let mut kv = Vec::new();
+        skip_ws(b, pos);
+        if b.get(*pos) == Some(&b'}') {
+            *pos += 1;
+            return Ok(Value::Object(kv));
+        }
+        loop {
+            skip_ws(b, pos);
+            if b.get(*pos) != Some(&b'"') {
+                bail!("malformed JSON: expected object key at byte {pos}");
+            }
+            let key = string(b, pos)?;
+            skip_ws(b, pos);
+            if b.get(*pos) != Some(&b':') {
+                bail!("malformed JSON: expected ':' at byte {pos}");
+            }
+            *pos += 1;
+            kv.push((key, value(b, pos)?));
+            skip_ws(b, pos);
+            match b.get(*pos) {
+                Some(b',') => *pos += 1,
+                Some(b'}') => {
+                    *pos += 1;
+                    return Ok(Value::Object(kv));
+                }
+                _ => bail!("malformed JSON: expected ',' or '}}' at byte {pos}"),
+            }
+        }
+    }
+
+    fn array(b: &[u8], pos: &mut usize) -> Result<Value> {
+        *pos += 1; // '['
+        let mut items = Vec::new();
+        skip_ws(b, pos);
+        if b.get(*pos) == Some(&b']') {
+            *pos += 1;
+            return Ok(Value::Array(items));
+        }
+        loop {
+            items.push(value(b, pos)?);
+            skip_ws(b, pos);
+            match b.get(*pos) {
+                Some(b',') => *pos += 1,
+                Some(b']') => {
+                    *pos += 1;
+                    return Ok(Value::Array(items));
+                }
+                _ => bail!("malformed JSON: expected ',' or ']' at byte {pos}"),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_format_accepts_slugs_and_rejects_garbage() {
+        assert_eq!(parse_format("p8e0").unwrap(), PositFormat::P8E0);
+        assert_eq!(parse_format("P16E1").unwrap(), PositFormat::P16E1);
+        assert_eq!(parse_format("posit<32,2>").unwrap(), PositFormat::P32E2);
+        assert_eq!(parse_format(" p8e2 ").unwrap(), PositFormat::P8E2);
+        for bad in ["p64e1", "p1e0", "p16e9", "float32", "p16", "16e1", ""] {
+            let e = parse_format(bad).unwrap_err().to_string();
+            assert!(e.contains(bad) || bad.is_empty(), "{bad}: {e}");
+        }
+    }
+
+    #[test]
+    fn plan_specs_round_trip() {
+        let u = FormatPlan::parse("uniform:p16e1").unwrap();
+        assert_eq!(u, FormatPlan::Uniform(PositFormat::P16E1));
+        assert_eq!(u.name(), "uniform-p16e1");
+        assert_eq!(u.uniform_format(), Some(PositFormat::P16E1));
+
+        let flw = FormatPlan::parse("first-last-wide:p16e1/p8e0").unwrap();
+        assert_eq!(
+            flw,
+            FormatPlan::FirstLastWide {
+                wide: PositFormat::P16E1,
+                narrow: PositFormat::P8E0
+            }
+        );
+        assert_eq!(flw.name(), "first-last-wide(p16e1/p8e0)");
+        assert_eq!(flw.uniform_format(), None);
+        assert_eq!(flw.representative_format(), Some(PositFormat::P16E1));
+
+        let per = FormatPlan::parse("layers:p16e1,p8e0,p32e2").unwrap();
+        assert_eq!(
+            per,
+            FormatPlan::PerLayer(vec![
+                PositFormat::P16E1,
+                PositFormat::P8E0,
+                PositFormat::P32E2
+            ])
+        );
+        assert!(FormatPlan::parse("nope:p8e0").is_err());
+        assert!(FormatPlan::parse("layers:").is_err());
+        assert!(FormatPlan::parse("first-last-wide:p16e1").is_err());
+        assert!(FormatPlan::parse("uniform:p99e9").is_err());
+    }
+
+    #[test]
+    fn resolve_assigns_layers() {
+        let flw = FormatPlan::FirstLastWide {
+            wide: PositFormat::P16E1,
+            narrow: PositFormat::P8E0,
+        };
+        assert_eq!(
+            flw.resolve(4).unwrap(),
+            vec![
+                PositFormat::P16E1,
+                PositFormat::P8E0,
+                PositFormat::P8E0,
+                PositFormat::P16E1
+            ]
+        );
+        assert_eq!(flw.resolve(1).unwrap(), vec![PositFormat::P16E1]);
+        assert_eq!(
+            flw.resolve(2).unwrap(),
+            vec![PositFormat::P16E1, PositFormat::P16E1]
+        );
+        let per = FormatPlan::PerLayer(vec![PositFormat::P8E0; 3]);
+        assert!(per.resolve(2).is_err());
+        assert_eq!(per.resolve(3).unwrap().len(), 3);
+        assert_eq!(per.uniform_format(), Some(PositFormat::P8E0));
+    }
+
+    #[test]
+    fn json_plans_parse_with_defaults_and_reject_bad_formats() {
+        let p = FormatPlan::from_json(
+            r#"{ "default_format": "p8e0",
+                 "layers": [ { "format": "p16e1" }, {}, { "format": "p16e1" } ] }"#,
+        )
+        .unwrap();
+        assert_eq!(
+            p,
+            FormatPlan::PerLayer(vec![
+                PositFormat::P16E1,
+                PositFormat::P8E0,
+                PositFormat::P16E1
+            ])
+        );
+        let p = FormatPlan::from_json(r#"{ "format_plan": "uniform:p32e2" }"#).unwrap();
+        assert_eq!(p, FormatPlan::Uniform(PositFormat::P32E2));
+
+        // Unknown format string → clear error naming the spec.
+        let e = FormatPlan::from_json(r#"{ "layers": [ { "format": "p40e1" } ] }"#)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("p40e1"), "{e}");
+        // Missing format with no default.
+        assert!(FormatPlan::from_json(r#"{ "layers": [ {} ] }"#).is_err());
+        // Malformed JSON.
+        assert!(FormatPlan::from_json("{ \"layers\": [").is_err());
+        assert!(FormatPlan::from_json("[]").is_err());
+        assert!(FormatPlan::from_json("{}").is_err());
+        // Wrong types.
+        assert!(FormatPlan::from_json(r#"{ "format_plan": 3 }"#).is_err());
+        assert!(FormatPlan::from_json(r#"{ "layers": [ { "format": 7 } ] }"#).is_err());
+    }
+
+    #[test]
+    fn json_parser_handles_nesting_and_rejects_trailing() {
+        use super::json::{parse, Value};
+        let v = parse(r#"{ "a": [1, true, null, "s\n"], "b": { "c": -2.5e1 } }"#).unwrap();
+        match v {
+            Value::Object(kv) => assert_eq!(kv.len(), 2),
+            _ => panic!("expected object"),
+        }
+        assert!(parse("{} x").is_err());
+        assert!(parse("{\"a\":}").is_err());
+        assert!(parse("\"unterminated").is_err());
+    }
+
+    #[test]
+    fn float32_rejects_mixed_plans() {
+        let flw = FormatPlan::parse("first-last-wide:p16e1/p8e0").unwrap();
+        assert!(resolve_layer_ariths(&ArithMode::Float32, &flw, 3).is_err());
+        let uni = FormatPlan::Uniform(PositFormat::P16E1);
+        let v = resolve_layer_ariths(&ArithMode::Float32, &uni, 3).unwrap();
+        assert_eq!(v.len(), 3);
+        assert!(v.iter().all(|a| a.fmt().is_none()));
+        // A constant per-layer table is format-uniform, but a wrong
+        // length is still a resolution error under float32.
+        let long = FormatPlan::PerLayer(vec![PositFormat::P8E0; 4]);
+        assert!(resolve_layer_ariths(&ArithMode::Float32, &long, 3).is_err());
+        let exact = FormatPlan::PerLayer(vec![PositFormat::P8E0; 3]);
+        assert!(resolve_layer_ariths(&ArithMode::Float32, &exact, 3).is_ok());
+    }
+
+    #[test]
+    fn layer_ariths_share_tables_per_format() {
+        let base = ArithMode::posit_plam(PositFormat::P16E1);
+        let plan = FormatPlan::FirstLastWide {
+            wide: PositFormat::P16E1,
+            narrow: PositFormat::P8E0,
+        };
+        let v = resolve_layer_ariths(&base, &plan, 4).unwrap();
+        assert_eq!(v.len(), 4);
+        assert_eq!(v[0].fmt(), Some(PositFormat::P16E1));
+        assert_eq!(v[1].fmt(), Some(PositFormat::P8E0));
+        assert_eq!(v[3].fmt(), Some(PositFormat::P16E1));
+        // First and last layer share one decode table Arc.
+        let table_of = |a: &LayerArith| match &a.mode {
+            ArithMode::Posit { table, .. } => table.clone().unwrap(),
+            _ => unreachable!(),
+        };
+        assert!(std::sync::Arc::ptr_eq(&table_of(&v[0]), &table_of(&v[3])));
+    }
+}

@@ -1,6 +1,8 @@
-//! PreparedModel — a model bound to one arithmetic mode with weights
+//! PreparedModel — a model bound to an arithmetic family with weights
 //! pre-encoded once into GEMM decode planes (perf pass,
-//! EXPERIMENTS.md §Perf).
+//! EXPERIMENTS.md §Perf), and — since the mixed-format refactor — each
+//! dense/conv layer bound to its *own* posit format via a
+//! [`FormatPlan`].
 //!
 //! `Model::forward` re-encodes every weight tensor on every sample; for
 //! the ISOLET MLP that is ~90 k `from_f32` + table lookups per
@@ -17,20 +19,32 @@
 //! from its single rounding, elementwise/pool layers run in the
 //! decoded domain, and conv im2col becomes an index gather over the
 //! input planes. `f32` appears only at the model boundary: inputs are
-//! quantised once on entry, and the *last* dense/conv layer reads out
-//! through the classic `to_f32` path (so final logits carry no extra
-//! storage round-trip — load-bearing for n > 16 formats). Outputs are
-//! **bit-identical** to [`ActivationPipeline::F32Roundtrip`] (the seed
-//! path, kept as a knob for benches and the equivalence suite).
+//! quantised once on entry (in the *first* GEMM layer's format), and
+//! the *last* dense/conv layer reads out through the classic `to_f32`
+//! path (so final logits carry no extra rounding — load-bearing for
+//! n > 16 formats). Outputs are **bit-identical** to
+//! [`ActivationPipeline::F32Roundtrip`] (the seed path, kept as a knob
+//! for benches and the equivalence suite).
+//!
+//! ## Per-layer formats
+//!
+//! [`PreparedModel::with_plan`] resolves a [`FormatPlan`] into one
+//! [`LayerArith`] per dense/conv layer: the layer's weights encode in
+//! its own format (the [`PlaneCache`] key carries that format), its
+//! GEMM plans scale windows against its own panels, and its read-out
+//! emits planes in its own format. Where two consecutive GEMM layers
+//! disagree, the encoded pipeline recodes activations **directly in
+//! the decode-plane domain** ([`EncodedTensor::recode`] — one RNE
+//! re-rounding per element, bit-identical to the decode→f32→encode
+//! reference), while the round-trip pipeline simply encodes the f32
+//! activations with each layer's own mode — so the two pipelines stay
+//! bit-identical under any plan. A **uniform** plan never recodes and
+//! is bit-identical to the pre-plan model-global path by construction.
 //!
 //! Weight planes come from the shared [`PlaneCache`], so preparing the
 //! same model twice (or under exact *and* PLAM modes of one format,
 //! which share decode planes) re-uses the existing `Arc`'d plane
-//! instead of re-decoding. Planes are SoA (scale + sign-packed
-//! fraction) with per-panel scale-window metadata, so a prepared
-//! weight matrix also carries everything the GEMM's windowed
-//! accumulator planner needs — encoding happens exactly once per
-//! distinct weight set, window analysis included.
+//! instead of re-decoding.
 //! [`PreparedModel::forward_batch_pooled`] additionally shards the
 //! dense GEMMs (and per-sample conv GEMMs) across a [`WorkerPool`];
 //! results stay bit-identical to the single-threaded path.
@@ -42,8 +56,9 @@ use crate::nn::gemm::{
     conv2d_gemm, encode_matrix, gemm_bt, gemm_bt_planes, gemm_bt_planes_pool, gemm_bt_pool,
     EncodedMatrix, PlaneCache,
 };
-use crate::nn::layers::{ArithMode, Layer};
+use crate::nn::layers::{ArithMode, Layer, MulKind};
 use crate::nn::model::Model;
+use crate::nn::plan::{resolve_layer_ariths, FormatPlan, LayerArith};
 use crate::nn::pool::WorkerPool;
 use crate::nn::tensor::Tensor;
 
@@ -51,21 +66,26 @@ use crate::nn::tensor::Tensor;
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ActivationPipeline {
     /// Decode-plane activations end to end (the default for posit
-    /// modes): `f32` only at the model input/output boundary.
+    /// modes): `f32` only at the model input/output boundary, format
+    /// boundaries recoded in the plane domain.
     Encoded,
     /// The seed path: every layer boundary rounds to a posit, converts
-    /// to `f32`, and re-encodes at the next layer. Kept for benches
-    /// and the bit-identity equivalence suite. (Float32 mode always
-    /// runs this path — it has no decode planes.)
+    /// to `f32`, and re-encodes at the next layer (in that layer's own
+    /// format under a mixed plan). Kept for benches and the
+    /// bit-identity equivalence suite. (Float32 mode always runs this
+    /// path — it has no decode planes.)
     F32Roundtrip,
 }
 
-/// Per-layer prepared state (weights already encoded for the mode).
+/// Per-layer prepared state (weights already encoded for the layer's
+/// resolved arithmetic).
 enum Prepared {
     Dense {
         /// `[out, in]` weight plane (shared via the plane cache).
         w: Arc<EncodedMatrix>,
         b: Vec<f32>,
+        /// This layer's resolved arithmetic (format + multiplier).
+        arith: LayerArith,
     },
     Conv2d {
         /// `[oc, ic·kh·kw]` filter plane (shared via the plane cache).
@@ -76,6 +96,8 @@ enum Prepared {
         kw: usize,
         stride: usize,
         pad: usize,
+        /// This layer's resolved arithmetic (format + multiplier).
+        arith: LayerArith,
     },
     MaxPool2d {
         k: usize,
@@ -85,44 +107,104 @@ enum Prepared {
     Flatten,
 }
 
-/// A model fixed to one arithmetic mode, weights encoded once.
+impl Prepared {
+    /// The layer's resolved arithmetic, if it is a GEMM layer.
+    fn arith(&self) -> Option<&LayerArith> {
+        match self {
+            Prepared::Dense { arith, .. } | Prepared::Conv2d { arith, .. } => Some(arith),
+            _ => None,
+        }
+    }
+}
+
+/// A model fixed to one arithmetic family, weights encoded once, each
+/// GEMM layer resolved to its own format by a [`FormatPlan`].
 pub struct PreparedModel {
-    /// Display name (`<model>[<mode>]`).
+    /// Display name (`<model>[<mode>]`, or `<model>[<mul>@<plan>]` for
+    /// an explicit plan) — echoed by backends into the serve routing
+    /// table and metrics.
     pub name: String,
     /// Input shape of one sample.
     pub input_shape: Vec<usize>,
     mode: ArithMode,
+    plan: FormatPlan,
     pipeline: ActivationPipeline,
     layers: Vec<Prepared>,
 }
 
 impl PreparedModel {
-    /// Encode a model's parameters for a mode (planes shared through
-    /// the global [`PlaneCache`]).
+    /// Encode a model's parameters for a model-global mode — a uniform
+    /// [`FormatPlan`] of the mode's format (planes shared through the
+    /// global [`PlaneCache`]). Bit-identical to the pre-plan path.
     pub fn new(model: &Model, mode: ArithMode) -> Self {
+        let plan = match mode.fmt() {
+            Some(fmt) => FormatPlan::Uniform(fmt),
+            // Float32 is format-free; the plan is a placeholder that
+            // resolves every layer to Float32.
+            None => FormatPlan::Uniform(crate::posit::PositFormat::P16E1),
+        };
+        let name = format!("{}[{}]", model.name, mode.name());
+        Self::build(model, mode, &plan, name).expect("uniform plans always resolve")
+    }
+
+    /// Encode a model with an explicit per-layer [`FormatPlan`]. Errors
+    /// when the plan does not resolve against the model (per-layer
+    /// table length mismatch, or a non-uniform plan under float32).
+    pub fn with_plan(model: &Model, mode: ArithMode, plan: &FormatPlan) -> anyhow::Result<Self> {
+        let family = match &mode {
+            ArithMode::Float32 => "float32".to_string(),
+            ArithMode::Posit { mul, .. } => match mul {
+                MulKind::Exact => "exact".into(),
+                MulKind::Plam => "plam".into(),
+            },
+        };
+        let name = format!("{}[{}@{}]", model.name, family, plan.name());
+        Self::build(model, mode, plan, name)
+    }
+
+    fn build(
+        model: &Model,
+        mode: ArithMode,
+        plan: &FormatPlan,
+        name: String,
+    ) -> anyhow::Result<Self> {
+        let gemm_layers = model
+            .layers
+            .iter()
+            .filter(|l| matches!(l, Layer::Dense { .. } | Layer::Conv2d { .. }))
+            .count();
+        let mut ariths = resolve_layer_ariths(&mode, plan, gemm_layers)?.into_iter();
         let cache = PlaneCache::global();
         let layers = model
             .layers
             .iter()
             .map(|l| match l {
-                Layer::Dense { w, b } => Prepared::Dense {
-                    w: cache.encode(&mode, w.shape[0], w.shape[1], &w.data),
-                    b: b.data.clone(),
-                },
-                Layer::Conv2d { w, b, stride, pad } => Prepared::Conv2d {
-                    w: cache.encode(
-                        &mode,
-                        w.shape[0],
-                        w.shape[1] * w.shape[2] * w.shape[3],
-                        &w.data,
-                    ),
-                    b: b.data.clone(),
-                    ic: w.shape[1],
-                    kh: w.shape[2],
-                    kw: w.shape[3],
-                    stride: *stride,
-                    pad: *pad,
-                },
+                Layer::Dense { w, b } => {
+                    let arith = ariths.next().expect("one arith per GEMM layer");
+                    Prepared::Dense {
+                        w: cache.encode(&arith.mode, w.shape[0], w.shape[1], &w.data),
+                        b: b.data.clone(),
+                        arith,
+                    }
+                }
+                Layer::Conv2d { w, b, stride, pad } => {
+                    let arith = ariths.next().expect("one arith per GEMM layer");
+                    Prepared::Conv2d {
+                        w: cache.encode(
+                            &arith.mode,
+                            w.shape[0],
+                            w.shape[1] * w.shape[2] * w.shape[3],
+                            &w.data,
+                        ),
+                        b: b.data.clone(),
+                        ic: w.shape[1],
+                        kh: w.shape[2],
+                        kw: w.shape[3],
+                        stride: *stride,
+                        pad: *pad,
+                        arith,
+                    }
+                }
                 Layer::MaxPool2d { k, stride } => Prepared::MaxPool2d {
                     k: *k,
                     stride: *stride,
@@ -131,13 +213,14 @@ impl PreparedModel {
                 Layer::Flatten => Prepared::Flatten,
             })
             .collect();
-        PreparedModel {
-            name: format!("{}[{}]", model.name, mode.name()),
+        Ok(PreparedModel {
+            name,
             input_shape: model.input_shape.clone(),
             mode,
+            plan: plan.clone(),
             pipeline: ActivationPipeline::Encoded,
             layers,
-        }
+        })
     }
 
     /// Select the activation pipeline (builder style). Posit modes
@@ -155,15 +238,42 @@ impl PreparedModel {
         self.pipeline
     }
 
+    /// The format plan this model was prepared with.
+    pub fn plan(&self) -> &FormatPlan {
+        &self.plan
+    }
+
+    /// The resolved per-GEMM-layer formats, in model order (empty for
+    /// float32 models).
+    pub fn layer_formats(&self) -> Vec<crate::posit::PositFormat> {
+        self.layers
+            .iter()
+            .filter_map(|l| l.arith().and_then(|a| a.fmt()))
+            .collect()
+    }
+
     /// Total heap footprint of this model's encoded weight planes
     /// (SoA scale/fraction planes + panel metadata — the same
-    /// accounting the [`PlaneCache`] evicts by). Planes shared with
-    /// other prepared models count fully here.
+    /// accounting the [`PlaneCache`] evicts by). Planes shared
+    /// *within* this model (two layers resolving to the same
+    /// format+weights, e.g. under a uniform plan over tied weights)
+    /// count once — mixed plans must not double-count shared planes —
+    /// while planes shared with other prepared models still count
+    /// fully here.
     pub fn encoded_bytes(&self) -> usize {
+        let mut seen: Vec<*const EncodedMatrix> = Vec::new();
         self.layers
             .iter()
             .map(|l| match l {
-                Prepared::Dense { w, .. } | Prepared::Conv2d { w, .. } => w.bytes(),
+                Prepared::Dense { w, .. } | Prepared::Conv2d { w, .. } => {
+                    let p = Arc::as_ptr(w);
+                    if seen.contains(&p) {
+                        0
+                    } else {
+                        seen.push(p);
+                        w.bytes()
+                    }
+                }
                 _ => 0,
             })
             .sum()
@@ -222,38 +332,53 @@ impl PreparedModel {
         hs
     }
 
-    /// The encoded-activation pipeline: quantise the batch once, keep
-    /// it in decode-plane form through every layer before `last_gemm`,
-    /// run `last_gemm` with the f32 read-out, and finish any trailing
+    /// The encoded-activation pipeline: quantise the batch once (in the
+    /// first GEMM layer's format), keep it in decode-plane form through
+    /// every layer before `last_gemm` — recoding planes wherever a
+    /// layer's format differs from the incoming activations' — run
+    /// `last_gemm` with the f32 read-out, and finish any trailing
     /// elementwise layers on f32 tensors. Bit-identical to the
     /// round-trip path: each intermediate output still rounds exactly
-    /// once, and re-decoding a freshly rounded posit (with the f32
-    /// storage round-trip applied for n > 16 formats) is exactly what
-    /// the round-trip path's next-layer encode would have produced.
+    /// once, re-decoding a freshly rounded posit (with the f32 storage
+    /// round-trip applied for n > 16 formats) is exactly what the
+    /// round-trip path's next-layer encode would have produced, and a
+    /// plane recode is exactly that next-layer encode fused into the
+    /// plane domain.
     fn forward_batch_encoded(
         &self,
         xs: &[Tensor],
         pool: Option<&WorkerPool>,
         last_gemm: usize,
     ) -> Vec<Tensor> {
-        let mut acts = EncodedTensor::encode(&self.mode, xs);
+        let entry_mode = self
+            .layers
+            .iter()
+            .find_map(|l| l.arith())
+            .map(|a| a.mode.clone())
+            .expect("encoded path requires a GEMM layer");
+        let mut acts = EncodedTensor::encode(&entry_mode, xs);
         for l in &self.layers[..last_gemm] {
             acts = match l {
-                Prepared::Dense { w, b } => {
+                Prepared::Dense { w, b, arith } => {
+                    let acts = recode_if_needed(acts, arith);
                     assert_eq!(acts.features(), w.cols, "dense input size");
                     let mut out = EncodedMatrix::empty();
                     match pool {
                         Some(p) => gemm_bt_planes_pool(
-                            &self.mode,
+                            &arith.mode,
                             acts.matrix(),
                             w.as_ref(),
                             Some(b),
                             &mut out,
                             p,
                         ),
-                        None => {
-                            gemm_bt_planes(&self.mode, acts.matrix(), w.as_ref(), Some(b), &mut out)
-                        }
+                        None => gemm_bt_planes(
+                            &arith.mode,
+                            acts.matrix(),
+                            w.as_ref(),
+                            Some(b),
+                            &mut out,
+                        ),
                     }
                     EncodedTensor::from_matrix(vec![w.rows], acts.fmt(), out)
                 }
@@ -265,9 +390,11 @@ impl PreparedModel {
                     kw,
                     stride,
                     pad,
+                    arith,
                 } => {
+                    let acts = recode_if_needed(acts, arith);
                     let g = conv_geom(acts.shape(), *ic, *kh, *kw, *stride, *pad, w.rows);
-                    conv2d_encoded(&self.mode, &acts, w.as_ref(), b, &g, pool)
+                    conv2d_encoded(&arith.mode, &acts, w.as_ref(), b, &g, pool)
                 }
                 Prepared::MaxPool2d { k, stride } => acts.maxpool2d(*k, *stride),
                 Prepared::Relu => {
@@ -278,15 +405,21 @@ impl PreparedModel {
             };
         }
         let mut hs: Vec<Tensor> = match &self.layers[last_gemm] {
-            Prepared::Dense { w, b } => {
+            Prepared::Dense { w, b, arith } => {
+                let acts = recode_if_needed(acts, arith);
                 assert_eq!(acts.features(), w.cols, "dense input size");
                 let (batch, out_dim) = (acts.batch(), w.rows);
                 let mut y = vec![0f32; batch * out_dim];
                 match pool {
-                    Some(p) => {
-                        gemm_bt_pool(&self.mode, acts.matrix(), w.as_ref(), Some(b), &mut y, p)
-                    }
-                    None => gemm_bt(&self.mode, acts.matrix(), w.as_ref(), Some(b), &mut y),
+                    Some(p) => gemm_bt_pool(
+                        &arith.mode,
+                        acts.matrix(),
+                        w.as_ref(),
+                        Some(b),
+                        &mut y,
+                        p,
+                    ),
+                    None => gemm_bt(&arith.mode, acts.matrix(), w.as_ref(), Some(b), &mut y),
                 }
                 (0..batch)
                     .map(|i| {
@@ -302,9 +435,11 @@ impl PreparedModel {
                 kw,
                 stride,
                 pad,
+                arith,
             } => {
+                let acts = recode_if_needed(acts, arith);
                 let g = conv_geom(acts.shape(), *ic, *kh, *kw, *stride, *pad, w.rows);
-                conv2d_encoded_to_f32(&self.mode, &acts, w.as_ref(), b, &g, pool)
+                conv2d_encoded_to_f32(&arith.mode, &acts, w.as_ref(), b, &g, pool)
             }
             _ => unreachable!("last_gemm indexes a dense/conv layer"),
         };
@@ -321,7 +456,7 @@ impl PreparedModel {
         pool: Option<&WorkerPool>,
     ) -> Vec<Tensor> {
         match l {
-            Prepared::Dense { w, b } => {
+            Prepared::Dense { w, b, arith } => {
                 let (out_dim, in_dim) = (w.rows, w.cols);
                 let batch = hs.len();
                 let mut flat = Vec::with_capacity(batch * in_dim);
@@ -329,11 +464,11 @@ impl PreparedModel {
                     assert_eq!(h.len(), in_dim, "dense input size");
                     flat.extend_from_slice(&h.data);
                 }
-                let xe = encode_matrix(&self.mode, batch, in_dim, &flat);
+                let xe = encode_matrix(&arith.mode, batch, in_dim, &flat);
                 let mut y = vec![0f32; batch * out_dim];
                 match pool {
-                    Some(p) => gemm_bt_pool(&self.mode, &xe, w.as_ref(), Some(b), &mut y, p),
-                    None => gemm_bt(&self.mode, &xe, w.as_ref(), Some(b), &mut y),
+                    Some(p) => gemm_bt_pool(&arith.mode, &xe, w.as_ref(), Some(b), &mut y, p),
+                    None => gemm_bt(&arith.mode, &xe, w.as_ref(), Some(b), &mut y),
                 }
                 (0..batch)
                     .map(|i| {
@@ -349,6 +484,7 @@ impl PreparedModel {
                 kw,
                 stride,
                 pad,
+                arith,
             } => {
                 let (ic, kh, kw, stride, pad) = (*ic, *kh, *kw, *stride, *pad);
                 match pool {
@@ -356,7 +492,7 @@ impl PreparedModel {
                         // One task per sample: conv GEMMs are already
                         // per-sample, so sample-level sharding keeps the
                         // im2col buffers worker-local.
-                        let mode = &self.mode;
+                        let mode = &arith.mode;
                         let mut outs: Vec<Option<Tensor>> = (0..hs.len()).map(|_| None).collect();
                         let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = outs
                             .iter_mut()
@@ -385,7 +521,7 @@ impl PreparedModel {
                     _ => hs
                         .iter()
                         .map(|h| {
-                            conv2d_gemm(&self.mode, h, w.as_ref(), b, ic, kh, kw, stride, pad)
+                            conv2d_gemm(&arith.mode, h, w.as_ref(), b, ic, kh, kw, stride, pad)
                         })
                         .collect(),
                 }
@@ -429,6 +565,17 @@ impl PreparedModel {
             }
         }
         hits as f64 / xs.len() as f64
+    }
+}
+
+/// Recode activations into a GEMM layer's format iff the formats
+/// differ — the mixed-plan layer boundary. Uniform plans never take
+/// the recode branch, which is what keeps them bit-identical (and
+/// cost-identical) to the pre-plan path.
+fn recode_if_needed(acts: EncodedTensor, arith: &LayerArith) -> EncodedTensor {
+    match arith.fmt() {
+        Some(fmt) if fmt != acts.fmt() => acts.recode(&arith.mode),
+        _ => acts,
     }
 }
 
@@ -611,6 +758,100 @@ mod tests {
     }
 
     #[test]
+    fn uniform_plan_is_bit_identical_to_model_global_path() {
+        // `with_plan(Uniform(f))` must run exactly the code the
+        // model-global constructor runs: same formats, no recode, same
+        // bits out (the cross-format acceptance sweep lives in
+        // tests/format_plan.rs).
+        let mut rng = Rng::new(28);
+        let model = Model::init(ModelKind::MlpIsolet, &mut rng);
+        let xs: Vec<Tensor> = (0..3)
+            .map(|_| {
+                Tensor::from_vec(
+                    &[617],
+                    (0..617).map(|_| rng.normal() as f32 * 0.5).collect(),
+                )
+            })
+            .collect();
+        let mode = ArithMode::posit_plam(PositFormat::P16E1);
+        let plain = PreparedModel::new(&model, mode.clone());
+        let plan =
+            PreparedModel::with_plan(&model, mode, &FormatPlan::Uniform(PositFormat::P16E1))
+                .unwrap();
+        assert_eq!(plan.layer_formats(), vec![PositFormat::P16E1; 3]);
+        for (a, b) in plain
+            .forward_batch(&xs)
+            .iter()
+            .zip(plan.forward_batch(&xs).iter())
+        {
+            let same = a
+                .data
+                .iter()
+                .zip(b.data.iter())
+                .all(|(x, y)| x.to_bits() == y.to_bits());
+            assert!(same, "uniform plan must match the model-global path");
+        }
+    }
+
+    #[test]
+    fn mixed_plan_encoded_matches_roundtrip() {
+        // A first-last-wide plan recodes at the wide→narrow and
+        // narrow→wide boundaries; both pipelines must agree bit for
+        // bit (the deep sweep incl. the per-layer seed reference lives
+        // in tests/format_plan.rs).
+        let mut rng = Rng::new(29);
+        let model = Model::init(ModelKind::MlpIsolet, &mut rng);
+        let plan = FormatPlan::FirstLastWide {
+            wide: PositFormat::P16E1,
+            narrow: PositFormat::P8E0,
+        };
+        let mode = ArithMode::posit_plam(PositFormat::P16E1);
+        let enc = PreparedModel::with_plan(&model, mode.clone(), &plan).unwrap();
+        assert_eq!(
+            enc.layer_formats(),
+            vec![PositFormat::P16E1, PositFormat::P8E0, PositFormat::P16E1]
+        );
+        assert!(enc.name.contains("first-last-wide"), "{}", enc.name);
+        let rt = PreparedModel::with_plan(&model, mode, &plan)
+            .unwrap()
+            .with_pipeline(ActivationPipeline::F32Roundtrip);
+        let xs: Vec<Tensor> = (0..5)
+            .map(|_| {
+                Tensor::from_vec(
+                    &[617],
+                    (0..617).map(|_| rng.normal() as f32 * 0.5).collect(),
+                )
+            })
+            .collect();
+        for (a, b) in enc
+            .forward_batch(&xs)
+            .iter()
+            .zip(rt.forward_batch(&xs).iter())
+        {
+            let same = a
+                .data
+                .iter()
+                .zip(b.data.iter())
+                .all(|(x, y)| x.to_bits() == y.to_bits());
+            assert!(same, "mixed plan: encoded must equal roundtrip");
+        }
+    }
+
+    #[test]
+    fn per_layer_plan_rejects_wrong_length() {
+        let model = Model::new(ModelKind::MlpIsolet); // 3 dense layers
+        let bad = FormatPlan::PerLayer(vec![PositFormat::P8E0; 2]);
+        let err = PreparedModel::with_plan(
+            &model,
+            ArithMode::posit_plam(PositFormat::P16E1),
+            &bad,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("2") && err.contains("3"), "{err}");
+    }
+
+    #[test]
     fn encoded_bytes_reports_plane_footprint() {
         let mut rng = Rng::new(26);
         let model = Model::init(ModelKind::MlpIsolet, &mut rng);
@@ -629,6 +870,44 @@ mod tests {
         let bytes = pm.encoded_bytes();
         assert!(bytes >= params * 6, "bytes={bytes} params={params}");
         assert!(bytes <= params * 6 + params, "metadata should be small");
+    }
+
+    #[test]
+    fn encoded_bytes_does_not_double_count_shared_planes() {
+        // Two layers with identical weights under one format resolve to
+        // the same cached Arc; the footprint must count it once. Under
+        // a mixed plan the same weights in two formats are two planes.
+        let mut rng = Rng::new(30);
+        let mut w = Tensor::zeros(&[8, 8]);
+        for v in w.data.iter_mut() {
+            *v = rng.normal() as f32 * 0.5;
+        }
+        let model = Model {
+            name: "tied".into(),
+            layers: vec![
+                Layer::Dense { w: w.clone(), b: Tensor::zeros(&[8]) },
+                Layer::Relu,
+                Layer::Dense { w, b: Tensor::zeros(&[8]) },
+            ],
+            input_shape: vec![8],
+        };
+        let uni = PreparedModel::new(&model, ArithMode::posit_plam(PositFormat::P16E1));
+        let one_plane = match &uni.layers[0] {
+            Prepared::Dense { w, .. } => w.bytes(),
+            _ => unreachable!(),
+        };
+        assert_eq!(uni.encoded_bytes(), one_plane, "shared plane counts once");
+        let mixed = PreparedModel::with_plan(
+            &model,
+            ArithMode::posit_plam(PositFormat::P16E1),
+            &FormatPlan::PerLayer(vec![PositFormat::P16E1, PositFormat::P8E0]),
+        )
+        .unwrap();
+        assert_eq!(
+            mixed.encoded_bytes(),
+            2 * one_plane,
+            "distinct formats are distinct planes (same SoA layout width)"
+        );
     }
 
     #[test]

@@ -19,7 +19,10 @@ pub struct PositFormat {
 }
 
 impl PositFormat {
-    /// Create a new format. Panics on out-of-range parameters.
+    /// Create a new format. Panics on out-of-range parameters: the
+    /// whole stack assumes `2 <= n <= 32` (bit patterns live in the
+    /// low `n` bits of a `u64`, and [`PositFormat::mask`] relies on
+    /// `n < 64` never wrapping the shift) and `es <= 4`.
     pub const fn new(n: u32, es: u32) -> Self {
         assert!(n >= 2 && n <= 32, "posit width must be in 2..=32");
         assert!(es <= 4, "es must be <= 4");
@@ -37,10 +40,11 @@ impl PositFormat {
     /// `Posit⟨32,2⟩` — the format of the paper's Fig. 1 / 32-bit synthesis.
     pub const P32E2: PositFormat = PositFormat::new(32, 2);
 
-    /// Mask selecting the low `n` bits.
+    /// Mask selecting the low `n` bits (`n <= 32` by the constructor
+    /// invariant, so the shift never wraps).
     #[inline(always)]
     pub const fn mask(&self) -> u64 {
-        if self.n == 64 { u64::MAX } else { (1u64 << self.n) - 1 }
+        (1u64 << self.n) - 1
     }
 
     /// The sign bit of an `n`-bit pattern.

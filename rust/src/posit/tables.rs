@@ -132,6 +132,69 @@ pub fn readout_entry(fmt: PositFormat, table: Option<&DecodeTable>, bits: u64) -
     }
 }
 
+/// Exact `f32` value of one SoA plane element (NaR → NaN, zero → 0).
+/// The same `significand × 2^(scale − FW)` reconstruction as
+/// `Decoded::to_f64`, computed exactly in f64 and rounded once to f32.
+/// Every plane the engine produces holds values that are exactly
+/// f32-representable (encode rounds *from* an f32; the n > 16 read-out
+/// applies the f32 storage round-trip in [`readout_entry`]), so for
+/// engine-produced planes the final f64→f32 conversion is lossless and
+/// this is the activation value the f32-round-trip pipeline would
+/// carry at the same point.
+#[inline]
+pub fn decoded_f32(scale: i16, sfrac: u32) -> f32 {
+    if scale == SCALE_NAR {
+        return f32::NAN;
+    }
+    if scale == SCALE_ZERO {
+        return 0.0;
+    }
+    let sig = sfrac_significand(sfrac) as f64; // [2^30, 2^31), exact
+    let v = sig * ((scale as i32 - FW as i32) as f64).exp2();
+    (if sfrac_sign(sfrac) { -v } else { v }) as f32
+}
+
+/// Recode one plane element from its source format into `dst`'s decode
+/// plane — the mixed-format pipeline's layer-boundary step.
+///
+/// **Single-rounding contract:** the element's value reconstructs
+/// exactly (see [`decoded_f32`] — engine planes are f32-exact), and
+/// `from_f32` rounds it into `dst` once (RNE, saturating at
+/// maxpos/minpos). The result is bit-identical to the
+/// decode→f32→encode reference — i.e. to what the f32-round-trip
+/// pipeline's next-layer `encode_matrix` would have produced from the
+/// stored activation — because it *is* that computation, fused per
+/// element. NaR and zero sentinels pass through unchanged (NaR is
+/// preserved across every recode; `from_f32(NaN)` would produce the
+/// same NaR, but short-circuiting keeps the sentinels exact without a
+/// float trip).
+pub fn recode_entry(
+    dst: PositFormat,
+    dst_table: Option<&DecodeTable>,
+    scale: i16,
+    sfrac: u32,
+) -> DecEntry {
+    if scale == SCALE_NAR {
+        return DecEntry {
+            scale: SCALE_NAR,
+            sign: true,
+            frac: 0,
+        };
+    }
+    if scale == SCALE_ZERO {
+        return DecEntry {
+            scale: SCALE_ZERO,
+            sign: false,
+            frac: 0,
+        };
+    }
+    let bits = from_f32(dst, decoded_f32(scale, sfrac));
+    match dst_table {
+        Some(t) => t.get(bits),
+        None => decode_entry(dst, bits),
+    }
+}
+
 /// Total-order key of a decoded plane entry: `decoded_key(a) <
 /// decoded_key(b)` iff posit `a < b` as reals. Zero maps to 0,
 /// negatives below, positives above; within one sign, a larger scale
@@ -339,6 +402,65 @@ mod tests {
             let want = decode_entry(fmt, from_f32(fmt, to_f32(fmt, bits)));
             assert_eq!(readout_entry(fmt, None, bits), want, "bits={bits:#x}");
         }
+    }
+
+    #[test]
+    fn recode_entry_matches_decode_encode_reference() {
+        // recode(src → dst) must equal "reconstruct the f32, encode in
+        // dst" for every element of an exhaustive narrow-format source
+        // and for sampled wide sources — specials included.
+        let fmts = [
+            PositFormat::P8E0,
+            PositFormat::P8E2,
+            PositFormat::P16E1,
+            PositFormat::P32E2,
+        ];
+        for src in fmts {
+            for dst in fmts {
+                let dst_table = (dst.n <= 16).then(|| DecodeTable::new(dst));
+                let check = |bits: u64| {
+                    let e = decode_entry(src, bits);
+                    let got = recode_entry(dst, dst_table.as_ref(), e.scale, e.sfrac());
+                    let v = decoded_f32(e.scale, e.sfrac());
+                    let want = decode_entry(dst, from_f32(dst, v));
+                    assert_eq!(got, want, "{src}->{dst} bits={bits:#x}");
+                };
+                if src.n <= 8 {
+                    for bits in 0u64..256 {
+                        check(bits);
+                    }
+                } else {
+                    let mut state = 0x5EC0DEu64 ^ ((src.n as u64) << 8) ^ dst.n as u64;
+                    for _ in 0..4096 {
+                        state = state
+                            .wrapping_mul(6364136223846793005)
+                            .wrapping_add(1442695040888963407);
+                        check((state >> 32) & src.mask());
+                    }
+                    // Extremes: maxpos/minpos and their negations.
+                    for bits in [src.minpos(), src.maxpos(), src.negate(src.minpos()),
+                                 src.negate(src.maxpos())] {
+                        check(bits);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn recode_entry_preserves_sentinels() {
+        let dst = PositFormat::P8E0;
+        let nar = recode_entry(dst, None, SCALE_NAR, SFRAC_SIGN);
+        assert!(nar.is_nar());
+        let zero = recode_entry(dst, None, SCALE_ZERO, 0);
+        assert!(zero.is_zero());
+        assert!(!zero.sign);
+        // An out-of-range scale saturates (from_f32 clamps to maxpos),
+        // it never wraps or panics.
+        let wide = PositFormat::P32E2;
+        let e = decode_entry(wide, wide.maxpos());
+        let down = recode_entry(dst, None, e.scale, e.sfrac());
+        assert_eq!(down, decode_entry(dst, dst.maxpos()), "saturate to maxpos");
     }
 
     #[test]

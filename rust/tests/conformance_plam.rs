@@ -21,7 +21,7 @@
 //!   fallback), so the exhaustive sweep re-proves the windowed kernel
 //!   against the same oracle that validated the original one.
 
-use plam::nn::{encode_matrix, gemm_bt_with_policy, AccPolicy, ArithMode};
+use plam::nn::{encode_matrix, gemm_bt_with_policy, AccPolicy, ArithMode, EncodedTensor, Tensor};
 use plam::posit::{from_f64, plam_mul, plam_value_f64, to_f32, PositFormat};
 use plam::prng::Rng;
 
@@ -97,6 +97,105 @@ fn exhaustive_p8e0_gemm_plam_mac_matches_plam_mul() {
         }
     }
     assert_eq!(mismatches, 0, "{mismatches} GEMM products disagree with plam_mul");
+}
+
+#[test]
+fn exhaustive_p8e2_plam_matches_eq23_oracle() {
+    // P⟨8,2⟩ (the 2022-standard 8-bit posit) is declared in format.rs
+    // but was never conformance-tested: same exhaustive sweep as P⟨8,0⟩.
+    // Its wider useed (2^4) stresses the regime/exponent split of the
+    // Eq. 17 datapath harder than P⟨8,0⟩'s es = 0 ever can.
+    let fmt = PositFormat::P8E2;
+    let mut checked = 0u64;
+    let mut mismatches = 0u64;
+    for a in 0u64..256 {
+        for b in 0u64..256 {
+            let got = plam_mul(fmt, a, b);
+            let want = eq23_oracle(fmt, a, b);
+            if got != want {
+                mismatches += 1;
+                if mismatches <= 8 {
+                    eprintln!("mismatch: {a:#04x} ×̃ {b:#04x}: got {got:#04x} want {want:#04x}");
+                }
+            }
+            checked += 1;
+        }
+    }
+    assert_eq!(checked, 65_536, "must cover the whole input space");
+    assert_eq!(
+        mismatches, 0,
+        "{mismatches}/{checked} pairs disagree with the Eq. 23 oracle"
+    );
+}
+
+/// Recode-equivalence: `EncodedTensor::recode(src → dst)` must equal
+/// the decode→f32→encode reference for every format pair and both
+/// multiplier families, on batches poisoned with NaR/zero/extreme
+/// scales. (The plane/metadata-level equality is pinned by unit tests
+/// next to the implementation; this integration-level check holds the
+/// decoded values — and a GEMM consuming the recoded planes — to the
+/// reference bit for bit through the public API.)
+#[test]
+fn recode_matches_decode_encode_reference_all_formats() {
+    let fmts = [
+        PositFormat::P8E0,
+        PositFormat::P8E2,
+        PositFormat::P16E1,
+        PositFormat::P16E2,
+        PositFormat::P32E2,
+    ];
+    for src_fmt in fmts {
+        for dst_fmt in fmts {
+            for (src_mode, dst_mode) in [
+                (
+                    ArithMode::posit_exact(src_fmt),
+                    ArithMode::posit_exact(dst_fmt),
+                ),
+                (
+                    ArithMode::posit_plam(src_fmt),
+                    ArithMode::posit_plam(dst_fmt),
+                ),
+            ] {
+                let mut rng = Rng::new(0x2EC0DE + src_fmt.n as u64 * 97 + dst_fmt.n as u64);
+                let mut data: Vec<f32> =
+                    (0..37).map(|_| rng.normal() as f32 * 2.0).collect();
+                // Poison: NaR, ±zero, saturating magnitudes, sub-minpos
+                // values, and the source format's exact extremes.
+                data[0] = f32::NAN;
+                data[1] = 0.0;
+                data[2] = -0.0;
+                data[3] = 3.0e38;
+                data[4] = -3.0e38;
+                data[5] = 1.0e-38;
+                data[6] = to_f32(src_fmt, src_fmt.maxpos());
+                data[7] = to_f32(src_fmt, src_fmt.minpos());
+                data[8] = -to_f32(src_fmt, src_fmt.maxpos());
+                let xs = vec![Tensor::from_vec(&[37], data)];
+                let enc = EncodedTensor::encode(&src_mode, &xs);
+                let got = enc.recode(&dst_mode);
+                assert_eq!(got.fmt(), dst_fmt);
+                // Reference: decode the source planes to f32, encode in
+                // the destination mode.
+                let want = EncodedTensor::encode(&dst_mode, &enc.decode());
+                for (a, b) in got.decode()[0].data.iter().zip(want.decode()[0].data.iter()) {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "{src_fmt}->{dst_fmt}: recode must equal decode->f32->encode"
+                    );
+                }
+                // The recoded planes must also behave identically as a
+                // GEMM operand (metadata consistency).
+                let w: Vec<f32> = (0..37).map(|_| rng.normal() as f32 * 0.5).collect();
+                let we = encode_matrix(&dst_mode, 1, 37, &w);
+                let mut ya = vec![0f32; 1];
+                let mut yb = vec![0f32; 1];
+                gemm_bt_with_policy(&dst_mode, got.matrix(), &we, None, &mut ya, AccPolicy::Auto);
+                gemm_bt_with_policy(&dst_mode, want.matrix(), &we, None, &mut yb, AccPolicy::Auto);
+                assert_eq!(ya[0].to_bits(), yb[0].to_bits(), "{src_fmt}->{dst_fmt} gemm");
+            }
+        }
+    }
 }
 
 /// 4k-sample PRNG sweep of `plam_mul` vs the Eq. 23 oracle.

@@ -1,0 +1,308 @@
+//! Mixed-format plan acceptance suite.
+//!
+//! Three contracts, held bit-for-bit:
+//!
+//! 1. **Uniform plans are the old path.** `with_plan(Uniform(f))` must
+//!    reproduce the pre-refactor model-global output exactly — against
+//!    the unprepared seed engine (`Model::forward`, which still takes
+//!    one mode for the whole pass) — across exact+PLAM ×
+//!    P8E0/P16E1/P32E2 × Encoded/F32Roundtrip × pooled/sequential.
+//! 2. **Mixed plans mean per-layer modes.** A mixed plan must equal a
+//!    hand-rolled per-layer reference that folds `Layer::forward` with
+//!    each GEMM layer's own resolved mode (the seed engine invoked
+//!    layer by layer), and the encoded pipeline (plane-domain recodes
+//!    at format boundaries) must equal the f32-round-trip pipeline.
+//! 3. **Mixed plans serve.** A first-last-wide model registered under
+//!    `NnBackend::with_plan` answers over TCP with exactly the local
+//!    forward's bits, and the routing table echoes the plan.
+
+use std::sync::Arc;
+
+use plam::coordinator::{serve, BatcherConfig, Client, NnBackend, Router, ServerConfig};
+use plam::nn::{
+    ActivationPipeline, ArithMode, FormatPlan, Layer, Model, ModelKind, PreparedModel, Tensor,
+    WorkerPool,
+};
+use plam::posit::PositFormat;
+use plam::prng::Rng;
+
+fn mlp_inputs(rng: &mut Rng, n: usize) -> Vec<Tensor> {
+    (0..n)
+        .map(|_| {
+            Tensor::from_vec(
+                &[617],
+                (0..617).map(|_| rng.normal() as f32 * 0.5).collect(),
+            )
+        })
+        .collect()
+}
+
+fn lenet_inputs(rng: &mut Rng, n: usize) -> Vec<Tensor> {
+    (0..n)
+        .map(|_| Tensor::from_vec(&[1, 28, 28], (0..784).map(|_| rng.f32()).collect()))
+        .collect()
+}
+
+fn assert_bits_eq(a: &[Tensor], b: &[Tensor], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: batch size");
+    for (i, (ta, tb)) in a.iter().zip(b.iter()).enumerate() {
+        assert_eq!(ta.shape, tb.shape, "{ctx}: sample {i} shape");
+        let same = ta
+            .data
+            .iter()
+            .zip(tb.data.iter())
+            .all(|(x, y)| x.to_bits() == y.to_bits());
+        assert!(same, "{ctx}: sample {i} differs");
+    }
+}
+
+/// Seed-engine reference with per-layer modes: fold `Layer::forward`,
+/// resolving each dense/conv layer to its plan format (elementwise and
+/// pool layers are arithmetic-free in the seed engine too).
+fn per_layer_reference(
+    model: &Model,
+    base: &ArithMode,
+    plan: &FormatPlan,
+    xs: &[Tensor],
+) -> Vec<Tensor> {
+    let gemm_layers = model
+        .layers
+        .iter()
+        .filter(|l| matches!(l, Layer::Dense { .. } | Layer::Conv2d { .. }))
+        .count();
+    let fmts = plan.resolve(gemm_layers).expect("plan resolves");
+    xs.iter()
+        .map(|x| {
+            let mut h = x.clone();
+            let mut gi = 0usize;
+            for l in &model.layers {
+                let mode = match l {
+                    Layer::Dense { .. } | Layer::Conv2d { .. } => {
+                        let m = base.with_format(fmts[gi]);
+                        gi += 1;
+                        m
+                    }
+                    _ => ArithMode::float32(), // ignored by relu/pool/flatten
+                };
+                h = l.forward(&h, &mode);
+            }
+            h
+        })
+        .collect()
+}
+
+#[test]
+fn uniform_plans_are_bit_identical_to_seed_engine() {
+    let pool = WorkerPool::new(3);
+    let mut rng = Rng::new(0xFA_0001);
+    let mlp = Model::init(ModelKind::MlpIsolet, &mut rng);
+    let xs = mlp_inputs(&mut rng, 4);
+    for fmt in [PositFormat::P8E0, PositFormat::P16E1, PositFormat::P32E2] {
+        for mode in [ArithMode::posit_exact(fmt), ArithMode::posit_plam(fmt)] {
+            // Seed reference: the unprepared engine, one mode globally.
+            let want: Vec<Tensor> = xs.iter().map(|x| mlp.forward(x, &mode)).collect();
+            let plan = FormatPlan::Uniform(fmt);
+            for pipeline in [ActivationPipeline::Encoded, ActivationPipeline::F32Roundtrip] {
+                let pm = PreparedModel::with_plan(&mlp, mode.clone(), &plan)
+                    .unwrap()
+                    .with_pipeline(pipeline);
+                let ctx = format!("{} {pipeline:?}", pm.name);
+                assert_bits_eq(&pm.forward_batch(&xs), &want, &ctx);
+                assert_bits_eq(
+                    &pm.forward_batch_pooled(&xs, Some(&pool)),
+                    &want,
+                    &format!("{ctx} pooled"),
+                );
+            }
+        }
+    }
+    pool.shutdown();
+}
+
+#[test]
+fn uniform_plan_conv_matches_seed_engine() {
+    // The conv path (gather + plane-emitting GEMM + scatter) under a
+    // uniform plan vs the seed engine, for a narrow and a wide format.
+    let mut rng = Rng::new(0xFA_0002);
+    let lenet = Model::init(ModelKind::LeNet5 { in_ch: 1, in_hw: 28 }, &mut rng);
+    let xs = lenet_inputs(&mut rng, 2);
+    for mode in [
+        ArithMode::posit_plam(PositFormat::P8E0),
+        ArithMode::posit_exact(PositFormat::P16E1),
+        ArithMode::posit_plam(PositFormat::P32E2),
+    ] {
+        let want: Vec<Tensor> = xs.iter().map(|x| lenet.forward(x, &mode)).collect();
+        let fmt = mode.fmt().unwrap();
+        let pm =
+            PreparedModel::with_plan(&lenet, mode.clone(), &FormatPlan::Uniform(fmt)).unwrap();
+        assert_bits_eq(&pm.forward_batch(&xs), &want, &pm.name);
+    }
+}
+
+#[test]
+fn mixed_plans_match_per_layer_reference_mlp() {
+    let pool = WorkerPool::new(4);
+    let mut rng = Rng::new(0xFA_0003);
+    let mlp = Model::init(ModelKind::MlpIsolet, &mut rng);
+    let xs = mlp_inputs(&mut rng, 5);
+    let plans = [
+        FormatPlan::FirstLastWide {
+            wide: PositFormat::P16E1,
+            narrow: PositFormat::P8E0,
+        },
+        FormatPlan::PerLayer(vec![
+            PositFormat::P32E2,
+            PositFormat::P8E0,
+            PositFormat::P16E1,
+        ]),
+    ];
+    for plan in &plans {
+        for base in [
+            ArithMode::posit_exact(PositFormat::P16E1),
+            ArithMode::posit_plam(PositFormat::P16E1),
+        ] {
+            let want = per_layer_reference(&mlp, &base, plan, &xs);
+            let enc = PreparedModel::with_plan(&mlp, base.clone(), plan).unwrap();
+            let ctx = enc.name.clone();
+            assert_bits_eq(&enc.forward_batch(&xs), &want, &format!("{ctx} encoded"));
+            assert_bits_eq(
+                &enc.forward_batch_pooled(&xs, Some(&pool)),
+                &want,
+                &format!("{ctx} encoded pooled"),
+            );
+            let rt = PreparedModel::with_plan(&mlp, base, plan)
+                .unwrap()
+                .with_pipeline(ActivationPipeline::F32Roundtrip);
+            assert_bits_eq(&rt.forward_batch(&xs), &want, &format!("{ctx} roundtrip"));
+            assert_bits_eq(
+                &rt.forward_batch_pooled(&xs, Some(&pool)),
+                &want,
+                &format!("{ctx} roundtrip pooled"),
+            );
+            // Per-sample forward agrees with the batch path.
+            for (i, x) in xs.iter().enumerate() {
+                assert_bits_eq(
+                    std::slice::from_ref(&enc.forward(x)),
+                    std::slice::from_ref(&want[i]),
+                    &format!("{ctx} sample {i}"),
+                );
+            }
+        }
+    }
+    pool.shutdown();
+}
+
+#[test]
+fn mixed_plan_matches_per_layer_reference_lenet() {
+    // Conv model: first-last-wide puts conv1 and the logits layer in
+    // P16E1 with P8E0 between, so the pipeline recodes conv activations
+    // (wide→narrow after conv1's pool, narrow→wide before the logits
+    // GEMM), exercising the plane recode against the gather path and
+    // the wide f32 read-out boundary.
+    let pool = WorkerPool::new(3);
+    let mut rng = Rng::new(0xFA_0004);
+    let lenet = Model::init(ModelKind::LeNet5 { in_ch: 1, in_hw: 28 }, &mut rng);
+    let xs = lenet_inputs(&mut rng, 3);
+    let plan = FormatPlan::FirstLastWide {
+        wide: PositFormat::P16E1,
+        narrow: PositFormat::P8E0,
+    };
+    let base = ArithMode::posit_plam(PositFormat::P16E1);
+    let want = per_layer_reference(&lenet, &base, &plan, &xs);
+    let enc = PreparedModel::with_plan(&lenet, base.clone(), &plan).unwrap();
+    assert_eq!(
+        enc.layer_formats(),
+        vec![
+            PositFormat::P16E1, // conv1 (first)
+            PositFormat::P8E0,  // conv2
+            PositFormat::P8E0,  // fc120
+            PositFormat::P8E0,  // fc84
+            PositFormat::P16E1, // logits (last)
+        ]
+    );
+    assert_bits_eq(&enc.forward_batch(&xs), &want, "lenet mixed encoded");
+    assert_bits_eq(
+        &enc.forward_batch_pooled(&xs, Some(&pool)),
+        &want,
+        "lenet mixed encoded pooled",
+    );
+    let rt = PreparedModel::with_plan(&lenet, base, &plan)
+        .unwrap()
+        .with_pipeline(ActivationPipeline::F32Roundtrip);
+    assert_bits_eq(&rt.forward_batch(&xs), &want, "lenet mixed roundtrip");
+    pool.shutdown();
+}
+
+#[test]
+fn plan_errors_are_clear() {
+    let model = Model::new(ModelKind::MlpIsolet); // 3 GEMM layers
+    let base = ArithMode::posit_plam(PositFormat::P16E1);
+    let short = FormatPlan::PerLayer(vec![PositFormat::P8E0; 4]);
+    let e = PreparedModel::with_plan(&model, base.clone(), &short)
+        .unwrap_err()
+        .to_string();
+    assert!(e.contains("4") && e.contains("3"), "{e}");
+    let e = FormatPlan::parse("uniform:p7e9").unwrap_err().to_string();
+    assert!(e.contains("p7e9"), "{e}");
+    let e = FormatPlan::from_json(r#"{ "layers": [ { "format": "posit<64,1>" } ] }"#)
+        .unwrap_err()
+        .to_string();
+    assert!(e.contains("posit<64,1>"), "{e}");
+    // Float32 accepts uniform plans only.
+    assert!(PreparedModel::with_plan(&model, ArithMode::float32(), &short).is_err());
+    let flw = FormatPlan::parse("first-last-wide:p16e1/p8e0").unwrap();
+    assert!(PreparedModel::with_plan(&model, ArithMode::float32(), &flw).is_err());
+}
+
+#[test]
+fn mixed_plan_serves_end_to_end() {
+    // The acceptance scenario: a mixed plan registered on the server,
+    // driven over TCP, bit-identical to the local forward — and the
+    // plan echoed in the routing table.
+    let mut rng = Rng::new(0xFA_0005);
+    let model = Model::init(ModelKind::MlpIsolet, &mut rng);
+    let plan = FormatPlan::FirstLastWide {
+        wide: PositFormat::P16E1,
+        narrow: PositFormat::P8E0,
+    };
+    let base = ArithMode::posit_plam(PositFormat::P16E1);
+    let local = PreparedModel::with_plan(&model, base.clone(), &plan).unwrap();
+
+    let mut router = Router::new();
+    router.register(
+        "isolet-mixed",
+        Arc::new(NnBackend::with_plan(model.clone(), base, &plan).unwrap()),
+        BatcherConfig::default(),
+    );
+    assert!(
+        router.table().contains("first-last-wide(p16e1/p8e0)"),
+        "plan must be echoed in the routing table:\n{}",
+        router.table()
+    );
+    let h = serve(
+        router,
+        &ServerConfig {
+            workers: 2,
+            ..ServerConfig::default()
+        },
+    )
+    .unwrap();
+    let mut c = Client::connect(h.addr).unwrap();
+    let xs = mlp_inputs(&mut rng, 3);
+    for x in &xs {
+        let got = c.infer("isolet-mixed", &x.data).unwrap();
+        let want = local.forward(x);
+        assert_eq!(got.len(), want.len());
+        let same = got
+            .iter()
+            .zip(want.data.iter())
+            .all(|(a, b)| a.to_bits() == b.to_bits());
+        assert!(same, "served mixed-plan logits must match local forward");
+    }
+    // The served model's metrics carry the shared plane-cache gauges
+    // once batches have run.
+    let b = h.router().get("isolet-mixed").unwrap();
+    let s = b.metrics.summary();
+    assert!(s.contains("plane_cache["), "{s}");
+    h.shutdown();
+}
