@@ -1,6 +1,7 @@
 #!/usr/bin/env python3
 """Bench regression guard for the GEMM hot path, the encoded-activation
-pipeline, and the mixed-format plan series.
+pipeline, the mixed-format plan series, and the event-loop serving
+latency series.
 
 Compares freshly produced ``BENCH_*.json`` files (written by
 ``cargo bench``) against the committed baseline in
@@ -52,6 +53,7 @@ Design notes:
 Usage:
     python3 ci/check_bench_regression.py \
         [--bench rust/BENCH_gemm_formats.json] [--bench rust/BENCH_e2e_inference.json] \
+        [--bench rust/BENCH_serving.json] \
         [--baseline ci/bench_baseline.json] [--update]
 """
 
@@ -60,7 +62,11 @@ import json
 import sys
 from pathlib import Path
 
-DEFAULT_BENCHES = ["rust/BENCH_gemm_formats.json", "rust/BENCH_e2e_inference.json"]
+DEFAULT_BENCHES = [
+    "rust/BENCH_gemm_formats.json",
+    "rust/BENCH_e2e_inference.json",
+    "rust/BENCH_serving.json",
+]
 DEFAULT_BASELINE = "ci/bench_baseline.json"
 # Series without an explicit "from" predate multi-file support and all
 # came from the GEMM bench.

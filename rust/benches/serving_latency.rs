@@ -1,0 +1,200 @@
+//! Bench: serving latency under open-loop load against the event-loop
+//! front-end.
+//!
+//! Closed-loop driving (send, wait, send) hides queueing collapse: a
+//! saturated server slows its clients down, so the measured rate
+//! self-limits. Here requests follow a fixed arrival schedule
+//! (request k fires at `t0 + k/rate`) regardless of how fast responses
+//! come back, and latency is measured from the *scheduled* arrival —
+//! queueing delay counts. The sweep reports p50/p95/p99 per offered
+//! rate plus the throughput knee (highest offered rate the server
+//! sustains at ≥ 0.9× achieved/offered).
+//!
+//! Exports BENCH_serving.json for ci/check_bench_regression.py. The
+//! rate grid is fixed (fast mode shortens duration and connection
+//! count only) so series names stay stable for the baseline.
+//!
+//! Run: cargo bench --bench serving_latency
+
+use std::net::TcpStream;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use plam::bench::{black_box, Bench};
+use plam::coordinator::{serve, wire, BatcherConfig, Client, NnBackend, Router, ServerConfig};
+use plam::nn::{ArithMode, Model, ModelKind};
+use plam::prng::Rng;
+
+const INPUT_LEN: usize = 617;
+
+fn percentile(sorted: &[Duration], p: f64) -> Duration {
+    if sorted.is_empty() {
+        return Duration::ZERO;
+    }
+    let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
+    sorted[idx]
+}
+
+/// Drive `rate` req/s split round-robin across `conns` pipelined
+/// connections for `duration`. Each connection runs a writer thread
+/// (paces the schedule, streams request frames) and a reader thread
+/// (responses come back in order; the schedule instants cross over an
+/// mpsc channel). Returns (latencies, achieved req/s).
+fn open_loop(
+    addr: std::net::SocketAddr,
+    route: &str,
+    rate: u32,
+    conns: usize,
+    duration: Duration,
+) -> (Vec<Duration>, f64) {
+    let total = (rate as f64 * duration.as_secs_f64()).round() as usize;
+    let period = Duration::from_secs_f64(1.0 / rate as f64);
+    // Small lead time so every connection is set up before t0.
+    let start = Instant::now() + Duration::from_millis(50);
+    let mut handles = vec![];
+    for c in 0..conns {
+        let route = route.to_string();
+        handles.push(std::thread::spawn(move || {
+            let stream = TcpStream::connect(addr).unwrap();
+            stream.set_nodelay(true).unwrap();
+            let mut wtr = stream.try_clone().unwrap();
+            let (tx, rx) = mpsc::channel::<Instant>();
+            let n_mine = (c..total).step_by(conns).count();
+            let writer = std::thread::spawn(move || {
+                let input = vec![0.1f32; INPUT_LEN];
+                let mut k = c;
+                while k < total {
+                    let at = start + period * k as u32;
+                    loop {
+                        let now = Instant::now();
+                        if now >= at {
+                            break;
+                        }
+                        std::thread::sleep((at - now).min(Duration::from_micros(200)));
+                    }
+                    // Latency clock starts at the SCHEDULED instant: if
+                    // this writer falls behind, that lag is queueing
+                    // delay the client experienced.
+                    tx.send(at).unwrap();
+                    wire::write_request(
+                        &mut wtr,
+                        &wire::Request {
+                            model: route.clone(),
+                            input: input.clone(),
+                        },
+                    )
+                    .unwrap();
+                    k += conns;
+                }
+            });
+            let mut rdr = stream;
+            let mut lats = Vec::with_capacity(n_mine);
+            for _ in 0..n_mine {
+                let at = rx.recv().unwrap();
+                let out = wire::read_response(&mut rdr)
+                    .expect("read response")
+                    .expect("server-side success");
+                assert_eq!(out.len(), 26);
+                lats.push(Instant::now().saturating_duration_since(at));
+            }
+            writer.join().unwrap();
+            lats
+        }));
+    }
+    let mut lats: Vec<Duration> = Vec::with_capacity(total);
+    for h in handles {
+        lats.extend(h.join().unwrap());
+    }
+    let elapsed = Instant::now().saturating_duration_since(start);
+    let achieved = lats.len() as f64 / elapsed.as_secs_f64();
+    (lats, achieved)
+}
+
+fn main() {
+    let fast = std::env::var("PLAM_BENCH_FAST").is_ok();
+    let (conns, duration) = if fast {
+        (4usize, Duration::from_millis(400))
+    } else {
+        (8usize, Duration::from_secs(2))
+    };
+    // Fixed rate grid in both modes: series names feed the regression
+    // baseline and must not depend on PLAM_BENCH_FAST.
+    let rates: [u32; 4] = [250, 500, 1000, 2000];
+
+    let mut rng = Rng::new(7);
+    let model = Model::init(ModelKind::MlpIsolet, &mut rng);
+    let mut router = Router::new();
+    router.register(
+        "m",
+        Arc::new(NnBackend::new(model, ArithMode::float32())),
+        BatcherConfig {
+            max_batch: 16,
+            max_wait: Duration::from_millis(1),
+        },
+    );
+    let h = serve(
+        router,
+        &ServerConfig {
+            workers: 2,
+            ..ServerConfig::default()
+        },
+    )
+    .unwrap();
+
+    let mut bench = Bench::new();
+
+    // Closed-loop round trip: one connection, send-wait-send. This is
+    // the machine-speed calibration series for the regression guard.
+    let mut cl = Client::connect(h.addr).unwrap();
+    let input = vec![0.1f32; INPUT_LEN];
+    bench.run("serving closed-loop rtt", || {
+        black_box(cl.infer("m", &input).unwrap());
+    });
+    drop(cl);
+
+    println!("\nopen-loop sweep ({conns} connections, {duration:?} per rate):");
+    println!(
+        "{:>10} {:>12} {:>10} {:>10} {:>10}",
+        "offered", "achieved", "p50 µs", "p95 µs", "p99 µs"
+    );
+    let mut knee: Option<u32> = None;
+    for rate in rates {
+        let (mut lats, achieved) = open_loop(h.addr, "m", rate, conns, duration);
+        lats.sort();
+        let p50 = percentile(&lats, 0.50);
+        let p95 = percentile(&lats, 0.95);
+        let p99 = percentile(&lats, 0.99);
+        println!(
+            "{:>7}rps {:>9.1}rps {:>10} {:>10} {:>10}",
+            rate,
+            achieved,
+            p50.as_micros(),
+            p95.as_micros(),
+            p99.as_micros()
+        );
+        bench.record(&format!("serving open-loop p50 @{rate}rps"), p50);
+        bench.record(&format!("serving open-loop p95 @{rate}rps"), p95);
+        bench.record(&format!("serving open-loop p99 @{rate}rps"), p99);
+        if achieved >= 0.9 * rate as f64 {
+            knee = Some(rate);
+        }
+    }
+    // The knee is exported as a *period* (ns per request at the highest
+    // sustained rate) so that, like every other series, smaller = better.
+    match knee {
+        Some(k) => {
+            println!("throughput knee: sustains {k} rps (achieved ≥ 0.9× offered)");
+            bench.record(
+                "serving knee period",
+                Duration::from_nanos((1e9 / k as f64) as u64),
+            );
+        }
+        None => println!("throughput knee: below {} rps on this machine", rates[0]),
+    }
+
+    let m = &h.router().get("m").unwrap().metrics;
+    println!("server metrics: {}", m.summary());
+    h.shutdown();
+
+    bench.write_json("serving").expect("write BENCH_serving.json");
+}

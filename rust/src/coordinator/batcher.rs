@@ -2,6 +2,16 @@
 //! backend batches under a size/deadline policy (the same policy shape
 //! as vLLM's router: fire when the batch is full OR the oldest request
 //! has waited `max_wait`).
+//!
+//! Two submission paths share the queue: [`Batcher::infer`] blocks the
+//! calling thread for the result (thread-per-connection front-end,
+//! tests), and [`Batcher::submit`] enqueues with a completion callback
+//! and returns immediately — the event-loop front-end uses it to
+//! coalesce requests from many connections into one batch without ever
+//! blocking the loop. Submitted requests may carry a deadline: if it
+//! passes while the request is still queued (a slow batch ahead of it),
+//! the request is answered with a timeout error instead of occupying
+//! batch capacity.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
@@ -39,11 +49,35 @@ impl Default for BatcherConfig {
     }
 }
 
+/// Where a finished request's result goes.
+enum Reply {
+    /// Blocking caller parked on a channel ([`Batcher::infer`]).
+    Channel(Sender<Result<Vec<f32>>>),
+    /// Completion callback ([`Batcher::submit`]); runs on the batching
+    /// worker thread, so it must be quick (encode + enqueue, no IO
+    /// waits).
+    Callback(Box<dyn FnOnce(Result<Vec<f32>>) + Send>),
+}
+
+impl Reply {
+    fn send(self, r: Result<Vec<f32>>) {
+        match self {
+            Reply::Channel(tx) => {
+                let _ = tx.send(r);
+            }
+            Reply::Callback(f) => f(r),
+        }
+    }
+}
+
 /// One queued request.
 struct Pending {
     input: Vec<f32>,
     enqueued: Instant,
-    reply: Sender<Result<Vec<f32>>>,
+    /// Drop-dead time: if still queued past this, answer with a
+    /// timeout error instead of executing.
+    deadline: Option<Instant>,
+    reply: Reply,
 }
 
 /// Handle for submitting requests to a batching worker.
@@ -99,7 +133,8 @@ impl Batcher {
             .send(Pending {
                 input,
                 enqueued: start,
-                reply: rtx,
+                deadline: None,
+                reply: Reply::Channel(rtx),
             })
             .map_err(|_| anyhow::anyhow!("batcher shut down"))?;
         let out = rrx
@@ -112,6 +147,38 @@ impl Batcher {
             }
         }
         out
+    }
+
+    /// Submit one request without blocking: `reply` runs on the batching
+    /// worker thread once the request completes (or times out / fails).
+    /// Latency and failure metrics are recorded exactly as for
+    /// [`Batcher::infer`]. `deadline` bounds the total queue+execute
+    /// wait — a request still queued when it passes is answered with a
+    /// timeout error (counted in `timed_out` *and* `failed`).
+    pub fn submit<F>(&self, input: Vec<f32>, deadline: Option<Instant>, reply: F) -> Result<()>
+    where
+        F: FnOnce(Result<Vec<f32>>) + Send + 'static,
+    {
+        let start = Instant::now();
+        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        let metrics = self.metrics.clone();
+        let wrapped = move |r: Result<Vec<f32>>| {
+            match &r {
+                Ok(_) => metrics.record_latency(start.elapsed()),
+                Err(_) => {
+                    metrics.failed.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            reply(r);
+        };
+        self.tx
+            .send(Pending {
+                input,
+                enqueued: start,
+                deadline,
+                reply: Reply::Callback(Box::new(wrapped)),
+            })
+            .map_err(|_| anyhow::anyhow!("batcher shut down"))
     }
 
     /// Stop the worker (in-flight requests finish first).
@@ -176,15 +243,32 @@ fn worker_loop(
         // re-check that request would miss the batch it raced with and
         // sit stranded until the next tick.
         drain_ready(&rx, &mut queue, max_batch);
+        // Per-request deadline sweep: a request whose drop-dead time
+        // passed while it sat behind a slow batch gets a timeout error
+        // instead of occupying batch capacity (the caller has already
+        // given up on it).
+        let now = Instant::now();
+        let (batch, expired): (Vec<Pending>, Vec<Pending>) = queue
+            .drain(..)
+            .partition(|p| p.deadline.map_or(true, |d| now < d));
+        for p in expired {
+            metrics.timed_out.fetch_add(1, Ordering::Relaxed);
+            let waited = p.enqueued.elapsed();
+            p.reply.send(Err(anyhow::anyhow!(
+                "request timed out after {waited:?} in the batch queue"
+            )));
+        }
         // Phase 3: execute and scatter results.
-        let batch: Vec<Pending> = queue.drain(..).collect();
+        if batch.is_empty() {
+            continue;
+        }
         let inputs: Vec<Vec<f32>> = batch.iter().map(|p| p.input.clone()).collect();
         metrics.record_batch(inputs.len());
         let pool = pool.lock().unwrap().clone();
         match backend.infer_batch_pooled(&inputs, pool.as_deref()) {
             Ok(outputs) => {
                 for (p, out) in batch.into_iter().zip(outputs.into_iter()) {
-                    let _ = p.reply.send(Ok(out));
+                    p.reply.send(Ok(out));
                 }
             }
             Err(e) => {
@@ -194,7 +278,7 @@ fn worker_loop(
                     let r = backend
                         .infer_batch_pooled(std::slice::from_ref(&p.input), pool.as_deref())
                         .map(|mut v| v.remove(0));
-                    let _ = p.reply.send(r.map_err(|se| se.context(e.to_string())));
+                    p.reply.send(r.map_err(|se| se.context(e.to_string())));
                 }
             }
         }
@@ -386,6 +470,99 @@ mod tests {
         assert_eq!(b.infer(vec![-0.5; 617]).unwrap(), want[1]);
         b.shutdown();
         pool.shutdown();
+    }
+
+    #[test]
+    fn submit_callback_fires_with_result_and_metrics() {
+        let b = Batcher::spawn(
+            Arc::new(EchoBackend {
+                fail_on_negative: false,
+            }),
+            BatcherConfig::default(),
+        );
+        let (tx, rx) = channel();
+        b.submit(vec![3.0, 4.0], None, move |r| {
+            tx.send(r).unwrap();
+        })
+        .unwrap();
+        let out = rx.recv().unwrap().unwrap();
+        assert_eq!(out, vec![6.0, 8.0]);
+        assert_eq!(b.metrics.completed.load(Ordering::Relaxed), 1);
+        assert_eq!(b.metrics.requests.load(Ordering::Relaxed), 1);
+        assert!(b.metrics.latency_percentile_us(0.5).is_some());
+        b.shutdown();
+    }
+
+    #[test]
+    fn submit_deadline_expires_in_queue() {
+        // One-at-a-time slow backend: the first request occupies the
+        // worker for 200 ms, so the second (deadline 30 ms) expires in
+        // the queue and must get a timeout error, not execute.
+        struct SlowOne;
+        impl InferenceBackend for SlowOne {
+            fn input_len(&self) -> usize {
+                1
+            }
+            fn output_len(&self) -> usize {
+                1
+            }
+            fn max_batch(&self) -> usize {
+                1
+            }
+            fn infer_batch(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+                std::thread::sleep(Duration::from_millis(200));
+                Ok(inputs.to_vec())
+            }
+            fn describe(&self) -> String {
+                "slow-one".into()
+            }
+        }
+        let b = Batcher::spawn(Arc::new(SlowOne), BatcherConfig::default());
+        let (tx1, rx1) = channel();
+        b.submit(vec![1.0], None, move |r| {
+            tx1.send(r).unwrap();
+        })
+        .unwrap();
+        // Let the first batch start executing before queueing the doomed
+        // request behind it.
+        std::thread::sleep(Duration::from_millis(50));
+        let (tx2, rx2) = channel();
+        b.submit(
+            vec![2.0],
+            Some(Instant::now() + Duration::from_millis(30)),
+            move |r| {
+                tx2.send(r).unwrap();
+            },
+        )
+        .unwrap();
+        assert_eq!(rx1.recv().unwrap().unwrap(), vec![1.0]);
+        let err = rx2.recv().unwrap().unwrap_err();
+        assert!(err.to_string().contains("timed out"), "{err}");
+        assert_eq!(b.metrics.timed_out.load(Ordering::Relaxed), 1);
+        assert_eq!(b.metrics.failed.load(Ordering::Relaxed), 1);
+        b.shutdown();
+    }
+
+    #[test]
+    fn submit_with_future_deadline_executes_normally() {
+        let b = Batcher::spawn(
+            Arc::new(EchoBackend {
+                fail_on_negative: false,
+            }),
+            BatcherConfig::default(),
+        );
+        let (tx, rx) = channel();
+        b.submit(
+            vec![1.0, 1.0],
+            Some(Instant::now() + Duration::from_secs(30)),
+            move |r| {
+                tx.send(r).unwrap();
+            },
+        )
+        .unwrap();
+        assert_eq!(rx.recv().unwrap().unwrap(), vec![2.0, 2.0]);
+        assert_eq!(b.metrics.timed_out.load(Ordering::Relaxed), 0);
+        b.shutdown();
     }
 
     #[test]

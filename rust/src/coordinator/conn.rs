@@ -1,0 +1,286 @@
+//! Per-connection state for the event-loop front-end: a nonblocking
+//! socket with an incremental request parser on the read side and an
+//! in-order response assembly queue on the write side.
+//!
+//! Ordering contract: the wire protocol has no request ids, so
+//! responses MUST leave a connection in request order. The event loop
+//! assigns each parsed request a per-connection sequence number; because
+//! requests on one connection may complete out of order (different
+//! models batch independently, batches finish whenever they finish),
+//! finished frames park in [`Conn::ready`] until every earlier sequence
+//! number has been promoted into the write buffer.
+
+use std::collections::BTreeMap;
+use std::io::{ErrorKind, Read, Write};
+use std::net::TcpStream;
+use std::time::Instant;
+
+use super::wire::{Request, RequestParser};
+
+/// What one readiness-driven read pass produced.
+pub(crate) struct ReadOutcome {
+    /// Complete frames parsed this pass (usually 0 or 1; a pipelining
+    /// client can deliver many in one read).
+    pub requests: Vec<Request>,
+    /// Read side finished cleanly (EOF). Outstanding responses still
+    /// drain before the connection closes.
+    pub eof: bool,
+}
+
+/// One nonblocking connection owned by the event loop.
+pub(crate) struct Conn {
+    pub stream: TcpStream,
+    /// Generation stamp: completions carry (slot, gen) so a response
+    /// for a closed connection can never reach a new connection that
+    /// reused its slot.
+    pub gen: u64,
+    parser: RequestParser,
+    /// Outgoing bytes not yet accepted by the socket.
+    out: Vec<u8>,
+    out_pos: usize,
+    /// Next request sequence number to assign.
+    next_seq: u64,
+    /// Next sequence number eligible to enter the write buffer.
+    next_write: u64,
+    /// Finished frames waiting for earlier responses (seq → frame).
+    ready: BTreeMap<u64, Vec<u8>>,
+    /// Last instant bytes moved on this socket (either direction).
+    pub last_activity: Instant,
+    /// Read side saw EOF; close once responses drain.
+    pub closing: bool,
+    /// Unrecoverable error (protocol violation, IO failure): tear down
+    /// now, dropping any outstanding work.
+    pub dead: bool,
+}
+
+impl Conn {
+    pub fn new(stream: TcpStream, gen: u64) -> Self {
+        Conn {
+            stream,
+            gen,
+            parser: RequestParser::new(),
+            out: Vec::new(),
+            out_pos: 0,
+            next_seq: 0,
+            next_write: 0,
+            ready: BTreeMap::new(),
+            last_activity: Instant::now(),
+            closing: false,
+            dead: false,
+        }
+    }
+
+    /// Claim the next request sequence number.
+    pub fn alloc_seq(&mut self) -> u64 {
+        let s = self.next_seq;
+        self.next_seq += 1;
+        s
+    }
+
+    /// Requests that have a sequence number but no response frame yet.
+    pub fn outstanding(&self) -> u64 {
+        self.next_seq - self.next_write - self.ready.len() as u64
+    }
+
+    /// Drain the socket until `WouldBlock`, parsing as frames complete.
+    /// Protocol violations and hard IO errors mark the connection dead.
+    pub fn handle_readable(&mut self) -> ReadOutcome {
+        let mut outcome = ReadOutcome {
+            requests: Vec::new(),
+            eof: false,
+        };
+        loop {
+            match self.parser.read_from(&mut self.stream) {
+                Ok(0) => {
+                    outcome.eof = true;
+                    self.closing = true;
+                    break;
+                }
+                Ok(_) => {
+                    self.last_activity = Instant::now();
+                    loop {
+                        match self.parser.next_frame() {
+                            Ok(Some(req)) => outcome.requests.push(req),
+                            Ok(None) => break,
+                            Err(_) => {
+                                self.dead = true;
+                                return outcome;
+                            }
+                        }
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.dead = true;
+                    break;
+                }
+            }
+        }
+        outcome
+    }
+
+    /// Deliver the finished frame for `seq`, promoting every in-order
+    /// frame into the write buffer.
+    pub fn push_response(&mut self, seq: u64, frame: Vec<u8>) {
+        self.ready.insert(seq, frame);
+        while let Some(f) = self.ready.remove(&self.next_write) {
+            self.out.extend_from_slice(&f);
+            self.next_write += 1;
+        }
+    }
+
+    /// True when buffered response bytes are waiting on the socket.
+    pub fn wants_write(&self) -> bool {
+        self.out_pos < self.out.len()
+    }
+
+    /// Write buffered bytes until `WouldBlock` or empty.
+    pub fn flush(&mut self) {
+        while self.out_pos < self.out.len() {
+            match self.stream.write(&self.out[self.out_pos..]) {
+                Ok(0) => {
+                    self.dead = true;
+                    break;
+                }
+                Ok(n) => {
+                    self.out_pos += n;
+                    self.last_activity = Instant::now();
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.dead = true;
+                    break;
+                }
+            }
+        }
+        if self.out_pos == self.out.len() {
+            self.out.clear();
+            self.out_pos = 0;
+        }
+    }
+
+    /// The connection has nothing left to do: hard error, or a clean
+    /// EOF with every response written out.
+    pub fn should_close(&self) -> bool {
+        self.dead || (self.closing && self.outstanding() == 0 && !self.wants_write())
+    }
+
+    /// Idle according to the slow-loris rule: no socket activity since
+    /// `cutoff` AND nothing in flight that would explain the silence (a
+    /// request waiting on a slow backend keeps its connection alive).
+    pub fn idle_since(&self, cutoff: Instant) -> bool {
+        self.last_activity < cutoff && self.outstanding() == 0 && !self.wants_write()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::wire;
+    use std::net::TcpListener;
+
+    /// Loopback nonblocking pair: (event-loop side, client side).
+    fn pair() -> (TcpStream, TcpStream) {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let client = TcpStream::connect(l.local_addr().unwrap()).unwrap();
+        let (server, _) = l.accept().unwrap();
+        server.set_nonblocking(true).unwrap();
+        (server, client)
+    }
+
+    #[test]
+    fn out_of_order_responses_are_written_in_request_order() {
+        let (server, client) = pair();
+        let mut c = Conn::new(server, 1);
+        let s0 = c.alloc_seq();
+        let s1 = c.alloc_seq();
+        let s2 = c.alloc_seq();
+        assert_eq!(c.outstanding(), 3);
+
+        let enc = |v: f32| {
+            let mut f = Vec::new();
+            wire::write_ok(&mut f, &[v]).unwrap();
+            f
+        };
+        // Completions arrive 2, 0, 1 — writes must come out 0, 1, 2.
+        c.push_response(s2, enc(2.0));
+        assert!(!c.wants_write(), "seq 2 must wait for 0 and 1");
+        c.push_response(s0, enc(0.0));
+        assert!(c.wants_write());
+        c.push_response(s1, enc(1.0));
+        assert_eq!(c.outstanding(), 0);
+        c.flush();
+        assert!(!c.wants_write());
+
+        let mut r = client;
+        for want in [0.0f32, 1.0, 2.0] {
+            let got = wire::read_response(&mut r).unwrap().unwrap();
+            assert_eq!(got, vec![want]);
+        }
+    }
+
+    #[test]
+    fn fragmented_then_pipelined_reads_parse() {
+        let (server, mut client) = pair();
+        let mut c = Conn::new(server, 1);
+        let req = wire::Request {
+            model: "m".into(),
+            input: vec![1.0, 2.0],
+        };
+        let mut bytes = Vec::new();
+        wire::write_request(&mut bytes, &req).unwrap();
+
+        client.write_all(&bytes[..7]).unwrap();
+        // Wait for delivery, then read: partial frame, no request yet.
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let o = c.handle_readable();
+        assert!(o.requests.is_empty());
+        assert!(!c.dead && !c.closing);
+
+        // Rest of frame 1 plus two whole extra frames in one write.
+        let mut tail = bytes[7..].to_vec();
+        tail.extend_from_slice(&bytes);
+        tail.extend_from_slice(&bytes);
+        client.write_all(&tail).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let o = c.handle_readable();
+        assert_eq!(o.requests.len(), 3);
+        assert!(o.requests.iter().all(|r| *r == req));
+    }
+
+    #[test]
+    fn eof_drains_before_close_and_garbage_kills() {
+        let (server, mut client) = pair();
+        let mut c = Conn::new(server, 1);
+        let req = wire::Request {
+            model: "m".into(),
+            input: vec![1.0],
+        };
+        let mut bytes = Vec::new();
+        wire::write_request(&mut bytes, &req).unwrap();
+        client.write_all(&bytes).unwrap();
+        drop(client); // half-close after one full request
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let o = c.handle_readable();
+        assert_eq!(o.requests.len(), 1);
+        assert!(o.eof && c.closing);
+        let seq = c.alloc_seq();
+        assert!(!c.should_close(), "response still outstanding");
+        let mut f = Vec::new();
+        wire::write_ok(&mut f, &[1.0]).unwrap();
+        c.push_response(seq, f);
+        c.flush();
+        assert!(c.should_close(), "drained + EOF = close");
+
+        // Garbage marks a fresh connection dead immediately.
+        let (server, mut client) = pair();
+        let mut c = Conn::new(server, 2);
+        client.write_all(b"GET / HTTP/1.1\r\n").unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let _ = c.handle_readable();
+        assert!(c.dead);
+        assert!(c.should_close());
+    }
+}

@@ -13,6 +13,14 @@ pub struct Metrics {
     pub completed: AtomicU64,
     /// Requests failed.
     pub failed: AtomicU64,
+    /// Requests shed by the front-end for overload (no admission slot
+    /// freed up before the admission deadline). Shed requests never
+    /// reach the batch queue, so they are counted here and not in
+    /// `failed`.
+    pub shed: AtomicU64,
+    /// Requests whose per-request deadline expired while queued in the
+    /// batcher (also counted in `failed`: the caller sees an error).
+    pub timed_out: AtomicU64,
     /// Batches executed.
     pub batches: AtomicU64,
     /// Total samples across all executed batches.
@@ -124,15 +132,23 @@ impl Metrics {
     /// One-line human-readable summary.
     pub fn summary(&self) -> String {
         let mut s = format!(
-            "requests={} completed={} failed={} batches={} mean_batch={:.2} p50={}µs p99={}µs",
+            "requests={} completed={} failed={} batches={} mean_batch={:.2} p50={}µs p95={}µs p99={}µs",
             self.requests.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.failed.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.mean_batch_size(),
             self.latency_percentile_us(0.5).unwrap_or(0),
+            self.latency_percentile_us(0.95).unwrap_or(0),
             self.latency_percentile_us(0.99).unwrap_or(0),
         );
+        let (shed, timed_out) = (
+            self.shed.load(Ordering::Relaxed),
+            self.timed_out.load(Ordering::Relaxed),
+        );
+        if shed + timed_out > 0 {
+            s.push_str(&format!(" shed={shed} timed_out={timed_out}"));
+        }
         let workers = self.pool_workers.load(Ordering::Relaxed);
         if workers > 0 {
             s.push_str(&format!(
@@ -188,6 +204,29 @@ mod tests {
     #[test]
     fn empty_percentile_is_none() {
         assert_eq!(Metrics::new().latency_percentile_us(0.5), None);
+    }
+
+    #[test]
+    fn shed_and_timeout_counters_surface_in_summary() {
+        let m = Metrics::new();
+        assert!(
+            !m.summary().contains("shed="),
+            "quiet server keeps the summary bare"
+        );
+        m.shed.fetch_add(3, Ordering::Relaxed);
+        m.timed_out.fetch_add(1, Ordering::Relaxed);
+        let s = m.summary();
+        assert!(s.contains("shed=3 timed_out=1"), "{s}");
+    }
+
+    #[test]
+    fn summary_reports_p95() {
+        let m = Metrics::new();
+        for i in 1..=100u64 {
+            m.record_latency(Duration::from_micros(i));
+        }
+        let s = m.summary();
+        assert!(s.contains("p95=95µs"), "{s}");
     }
 
     #[test]

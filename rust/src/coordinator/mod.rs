@@ -19,9 +19,20 @@
 //! `ServerConfig::max_inflight` adds admission-control backpressure in
 //! front of the batch queues: over-limit requests wait bounded time for
 //! a slot, then get a clean "server overloaded" error frame.
+//!
+//! Front-ends: the default [`server::Frontend::EventLoop`] multiplexes
+//! every connection on one readiness-driven thread (`event_loop` +
+//! `conn` modules: nonblocking sockets behind a poll(2) shim,
+//! incremental frame parsing, in-order response assembly, parked
+//! admission with deadline shedding, idle-connection timeouts), so
+//! connection count is decoupled from thread count. The original
+//! thread-per-connection front-end remains as
+//! [`server::Frontend::Threaded`].
 
 pub mod backend;
 pub mod batcher;
+mod conn;
+mod event_loop;
 pub mod metrics;
 pub mod router;
 pub mod server;
@@ -29,9 +40,10 @@ pub mod wire;
 
 pub use backend::{InferenceBackend, NnBackend};
 pub use batcher::{Batcher, BatcherConfig};
+pub use event_loop::LoopStats;
 pub use metrics::Metrics;
 pub use router::Router;
-pub use server::{serve, Admission, Client, ServerConfig};
+pub use server::{serve, Admission, Client, Frontend, ServerConfig};
 
 #[cfg(feature = "pjrt")]
 pub use backend::PjrtBackend;

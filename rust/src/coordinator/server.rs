@@ -1,16 +1,29 @@
-//! TCP inference server + client: thread-per-connection over the
-//! [`super::wire`] protocol, requests funneled through the router's
-//! dynamic batchers. (std::net + threads — tokio is unavailable offline;
-//! see DESIGN.md §5 — and a thread pool is entirely adequate for the
-//! request rates the experiments drive.)
+//! TCP inference server + client.
+//!
+//! Two front-ends share the router/batcher stack behind one
+//! [`ServerConfig`]:
+//!
+//! * [`Frontend::EventLoop`] (default) — a readiness-driven event loop
+//!   over nonblocking sockets (see [`super::event_loop`]): one thread
+//!   multiplexes every connection, coalesces requests from all of them
+//!   into the per-model batchers, sheds overload at the admission
+//!   deadline without blocking, and times out stalled (slow-loris)
+//!   connections. This is the "millions of users" front-end: connection
+//!   count no longer implies thread count.
+//! * [`Frontend::Threaded`] — the original thread-per-connection
+//!   front-end (std::net + blocking IO), kept as the simple reference
+//!   implementation and for platforms where the poll shim's fallback
+//!   path is undesirable.
 //!
 //! Scaling controls ([`ServerConfig`]): `workers` sizes one shared
 //! [`WorkerPool`] that every batcher shards its GEMMs across, and
-//! `max_inflight` is the admission valve — requests beyond it wait up
-//! to `admission_timeout` for a slot and are then rejected with a
-//! clean "server overloaded" error response instead of piling onto the
-//! batch queues.
+//! `max_inflight` is the admission valve — over-limit requests wait up
+//! to `admission_timeout` for a slot (parked in the event loop, blocked
+//! in the threaded front-end) and are then rejected with a clean
+//! "server overloaded" error response instead of piling onto the batch
+//! queues.
 
+use std::io;
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -18,9 +31,22 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use super::event_loop::{self, LoopStats, Waker};
 use super::router::Router;
 use super::wire;
 use crate::nn::pool::WorkerPool;
+
+/// Which front-end accepts and parses connections.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Frontend {
+    /// Readiness-driven event loop over nonblocking sockets (default):
+    /// one thread, any number of connections, non-blocking admission
+    /// with deadline shedding.
+    #[default]
+    EventLoop,
+    /// Thread-per-connection with blocking IO (the original front-end).
+    Threaded,
+}
 
 /// Server configuration.
 #[derive(Debug, Clone)]
@@ -37,6 +63,18 @@ pub struct ServerConfig {
     /// How long an over-limit request waits for an inflight slot before
     /// being rejected with a "server overloaded" error response.
     pub admission_timeout: Duration,
+    /// Which front-end to run.
+    pub frontend: Frontend,
+    /// Optional per-request deadline covering queue wait + execution
+    /// start: a request still waiting in the batch queue when it
+    /// expires gets a timeout error. `None` disables. (Event-loop
+    /// front-end only; the threaded front-end's requests never outlive
+    /// their blocked handler thread.)
+    pub request_timeout: Option<Duration>,
+    /// Close a connection with no socket activity and nothing in
+    /// flight after this long — the slow-loris bound, matching the
+    /// threaded front-end's blocking read timeout.
+    pub idle_timeout: Duration,
 }
 
 impl Default for ServerConfig {
@@ -46,6 +84,9 @@ impl Default for ServerConfig {
             workers: 0,
             max_inflight: 0,
             admission_timeout: Duration::from_secs(10),
+            frontend: Frontend::default(),
+            request_timeout: None,
+            idle_timeout: Duration::from_secs(30),
         }
     }
 }
@@ -60,6 +101,7 @@ pub struct Admission {
     freed: Condvar,
     peak: AtomicU64,
     rejected: AtomicU64,
+    abandoned: AtomicU64,
 }
 
 impl Admission {
@@ -71,6 +113,7 @@ impl Admission {
             freed: Condvar::new(),
             peak: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
+            abandoned: AtomicU64::new(0),
         }
     }
 
@@ -78,6 +121,19 @@ impl Admission {
     /// `None` means the server is saturated and the request must be
     /// rejected. The slot is released when the guard drops.
     pub fn try_enter(&self) -> Option<AdmissionGuard<'_>> {
+        self.enter_watching(None)
+    }
+
+    /// [`Admission::try_enter`], but abandon the wait early if `peer`
+    /// hangs up: a handler thread blocked on a saturated valve must not
+    /// keep waiting the full admission timeout for a client that has
+    /// already disconnected (the response would go nowhere). Hangups
+    /// are counted in [`Admission::abandoned`], not `rejected`.
+    pub fn try_enter_watching(&self, peer: &TcpStream) -> Option<AdmissionGuard<'_>> {
+        self.enter_watching(Some(peer))
+    }
+
+    fn enter_watching(&self, peer: Option<&TcpStream>) -> Option<AdmissionGuard<'_>> {
         let mut n = self.inflight.lock().unwrap();
         if self.max > 0 {
             let deadline = Instant::now() + self.timeout;
@@ -87,13 +143,55 @@ impl Admission {
                     self.rejected.fetch_add(1, Ordering::Relaxed);
                     return None;
                 }
-                let (g, _) = self.freed.wait_timeout(n, deadline - now).unwrap();
+                // Wait in short slices so a departed client is noticed
+                // within ~25 ms instead of after the full timeout.
+                let slice = (deadline - now).min(Duration::from_millis(25));
+                let (g, _) = self.freed.wait_timeout(n, slice).unwrap();
                 n = g;
+                if *n < self.max {
+                    break;
+                }
+                if let Some(p) = peer {
+                    if peer_hung_up(p) {
+                        self.abandoned.fetch_add(1, Ordering::Relaxed);
+                        return None;
+                    }
+                }
             }
         }
         *n += 1;
         self.peak.fetch_max(*n as u64, Ordering::Relaxed);
         Some(AdmissionGuard(self))
+    }
+
+    /// Non-blocking acquire for the event loop: a slot now or `None`
+    /// (the caller parks the request with its own deadline instead of
+    /// blocking). The owned guard can cross threads — it is released
+    /// wherever the request finishes.
+    pub fn try_acquire_owned(self: &Arc<Self>) -> Option<OwnedAdmissionGuard> {
+        let mut n = self.inflight.lock().unwrap();
+        if self.max > 0 && *n >= self.max {
+            return None;
+        }
+        *n += 1;
+        self.peak.fetch_max(*n as u64, Ordering::Relaxed);
+        Some(OwnedAdmissionGuard(self.clone()))
+    }
+
+    /// Record an overload rejection decided outside the valve (the
+    /// event loop sheds parked requests on its own deadline).
+    pub(crate) fn note_rejected(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Configured inflight bound (0 = unlimited).
+    pub fn max(&self) -> usize {
+        self.max
+    }
+
+    /// Configured admission wait.
+    pub(crate) fn timeout(&self) -> Duration {
+        self.timeout
     }
 
     /// Requests currently past admission.
@@ -110,6 +208,37 @@ impl Admission {
     pub fn rejected(&self) -> u64 {
         self.rejected.load(Ordering::Relaxed)
     }
+
+    /// Admission waits abandoned because the client hung up first.
+    pub fn abandoned(&self) -> u64 {
+        self.abandoned.load(Ordering::Relaxed)
+    }
+
+    fn release(&self) {
+        let mut n = self.inflight.lock().unwrap();
+        *n -= 1;
+        drop(n);
+        self.freed.notify_one();
+    }
+}
+
+/// Did the peer close or reset the connection? (Nonblocking 1-byte
+/// peek: `Ok(0)` is an orderly shutdown, most errors mean the socket is
+/// gone, `WouldBlock` means still connected and quiet. Pending request
+/// bytes also mean "alive".)
+fn peer_hung_up(s: &TcpStream) -> bool {
+    if s.set_nonblocking(true).is_err() {
+        return false;
+    }
+    let mut b = [0u8; 1];
+    let gone = match s.peek(&mut b) {
+        Ok(0) => true,
+        Ok(_) => false,
+        Err(e) if e.kind() == io::ErrorKind::WouldBlock => false,
+        Err(_) => true,
+    };
+    let _ = s.set_nonblocking(false);
+    gone
 }
 
 /// RAII inflight slot; dropping it frees the slot and wakes one waiter.
@@ -117,10 +246,17 @@ pub struct AdmissionGuard<'a>(&'a Admission);
 
 impl Drop for AdmissionGuard<'_> {
     fn drop(&mut self) {
-        let mut n = self.0.inflight.lock().unwrap();
-        *n -= 1;
-        drop(n);
-        self.0.freed.notify_one();
+        self.0.release();
+    }
+}
+
+/// Owned inflight slot for completions that outlive the acquiring
+/// stack frame (event-loop requests finish on a batcher thread).
+pub struct OwnedAdmissionGuard(Arc<Admission>);
+
+impl Drop for OwnedAdmissionGuard {
+    fn drop(&mut self) {
+        self.0.release();
     }
 }
 
@@ -133,14 +269,22 @@ pub struct ServerHandle {
     router: Arc<Router>,
     pool: Option<Arc<WorkerPool>>,
     admission: Arc<Admission>,
+    waker: Option<Arc<Waker>>,
+    loop_stats: Option<Arc<LoopStats>>,
 }
 
 impl ServerHandle {
-    /// Request shutdown and join the acceptor.
+    /// Request shutdown and join the front-end thread.
     pub fn shutdown(mut self) {
         self.stop.store(true, Ordering::SeqCst);
-        // Poke the acceptor loose from accept().
-        let _ = TcpStream::connect(self.addr);
+        match &self.waker {
+            // Event loop: wake poll() directly.
+            Some(w) => w.wake(),
+            // Threaded: poke the acceptor loose from accept().
+            None => {
+                let _ = TcpStream::connect(self.addr);
+            }
+        }
         if let Some(h) = self.accept_thread.take() {
             let _ = h.join();
         }
@@ -164,6 +308,12 @@ impl ServerHandle {
     pub fn admission(&self) -> &Arc<Admission> {
         &self.admission
     }
+
+    /// Event-loop counters (connections accepted/closed, idle sheds…);
+    /// `None` under the threaded front-end.
+    pub fn loop_stats(&self) -> Option<&Arc<LoopStats>> {
+        self.loop_stats.as_ref()
+    }
 }
 
 /// Start serving a router over TCP. Returns once the socket is bound.
@@ -178,30 +328,22 @@ pub fn serve(router: Router, cfg: &ServerConfig) -> Result<ServerHandle> {
     let admission = Arc::new(Admission::new(cfg.max_inflight, cfg.admission_timeout));
     let router = Arc::new(router);
 
-    let accept_thread = {
-        let stop = stop.clone();
-        let router = router.clone();
-        let admission = admission.clone();
-        std::thread::Builder::new()
-            .name("plam-accept".into())
-            .spawn(move || {
-                for conn in listener.incoming() {
-                    if stop.load(Ordering::SeqCst) {
-                        break;
-                    }
-                    match conn {
-                        Ok(stream) => {
-                            let router = router.clone();
-                            let admission = admission.clone();
-                            let _ = std::thread::Builder::new()
-                                .name("plam-conn".into())
-                                .spawn(move || handle_connection(stream, router, admission));
-                        }
-                        Err(_) => continue,
-                    }
-                }
-            })
-            .expect("spawn acceptor")
+    let (accept_thread, waker, loop_stats) = match cfg.frontend {
+        Frontend::EventLoop => {
+            let handle = event_loop::spawn(
+                listener,
+                router.clone(),
+                admission.clone(),
+                stop.clone(),
+                cfg,
+            )?;
+            (handle.thread, Some(handle.waker), Some(handle.stats))
+        }
+        Frontend::Threaded => {
+            let thread =
+                spawn_threaded_acceptor(listener, router.clone(), admission.clone(), stop.clone());
+            (thread, None, None)
+        }
     };
 
     Ok(ServerHandle {
@@ -211,7 +353,37 @@ pub fn serve(router: Router, cfg: &ServerConfig) -> Result<ServerHandle> {
         router,
         pool,
         admission,
+        waker,
+        loop_stats,
     })
+}
+
+fn spawn_threaded_acceptor(
+    listener: TcpListener,
+    router: Arc<Router>,
+    admission: Arc<Admission>,
+    stop: Arc<AtomicBool>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::Builder::new()
+        .name("plam-accept".into())
+        .spawn(move || {
+            for conn in listener.incoming() {
+                if stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                match conn {
+                    Ok(stream) => {
+                        let router = router.clone();
+                        let admission = admission.clone();
+                        let _ = std::thread::Builder::new()
+                            .name("plam-conn".into())
+                            .spawn(move || handle_connection(stream, router, admission));
+                    }
+                    Err(_) => continue,
+                }
+            }
+        })
+        .expect("spawn acceptor")
 }
 
 /// Serve one connection: a stream of request/response pairs until EOF.
@@ -223,7 +395,7 @@ fn handle_connection(mut stream: TcpStream, router: Arc<Router>, admission: Arc<
             Ok(r) => r,
             Err(_) => return, // EOF or garbage: close the connection
         };
-        let result = match admission.try_enter() {
+        let result = match admission.try_enter_watching(&stream) {
             Some(_slot) => router.get(&req.model).and_then(|b| b.infer(req.input)),
             None => Err(anyhow::anyhow!(
                 "server overloaded: {} requests in flight (max {})",
@@ -277,7 +449,7 @@ mod tests {
     use crate::coordinator::batcher::BatcherConfig;
     use crate::nn::{ArithMode, Model, ModelKind};
 
-    fn test_server() -> ServerHandle {
+    fn test_router() -> Router {
         let mut router = Router::new();
         router.register(
             "isolet",
@@ -287,7 +459,11 @@ mod tests {
             )),
             BatcherConfig::default(),
         );
-        serve(router, &ServerConfig::default()).unwrap()
+        router
+    }
+
+    fn test_server() -> ServerHandle {
+        serve(test_router(), &ServerConfig::default()).unwrap()
     }
 
     #[test]
@@ -299,6 +475,25 @@ mod tests {
         // Second request on the same connection.
         let out2 = c.infer("isolet", &vec![0.2; 617]).unwrap();
         assert_eq!(out2.len(), 26);
+        h.shutdown();
+    }
+
+    #[test]
+    fn threaded_frontend_round_trip() {
+        // The legacy thread-per-connection front-end stays serviceable.
+        let h = serve(
+            test_router(),
+            &ServerConfig {
+                frontend: Frontend::Threaded,
+                ..ServerConfig::default()
+            },
+        )
+        .unwrap();
+        assert!(h.loop_stats().is_none());
+        let mut c = Client::connect(h.addr).unwrap();
+        for _ in 0..3 {
+            assert_eq!(c.infer("isolet", &vec![0.1; 617]).unwrap().len(), 26);
+        }
         h.shutdown();
     }
 
@@ -393,15 +588,19 @@ mod tests {
         }
     }
 
-    #[test]
-    fn admission_control_rejects_over_limit_requests() {
+    fn sleepy_router() -> Router {
         let mut router = Router::new();
         router.register("sleepy", Arc::new(Sleepy), BatcherConfig::default());
+        router
+    }
+
+    fn admission_scenario(frontend: Frontend) {
         let h = serve(
-            router,
+            sleepy_router(),
             &ServerConfig {
                 max_inflight: 1,
                 admission_timeout: Duration::from_millis(5),
+                frontend,
                 ..ServerConfig::default()
             },
         )
@@ -433,16 +632,24 @@ mod tests {
     }
 
     #[test]
-    fn admission_backpressure_blocks_then_admits() {
+    fn admission_control_rejects_over_limit_requests() {
+        admission_scenario(Frontend::EventLoop);
+    }
+
+    #[test]
+    fn admission_control_rejects_over_limit_requests_threaded() {
+        admission_scenario(Frontend::Threaded);
+    }
+
+    fn backpressure_scenario(frontend: Frontend) {
         // With a generous timeout the valve serialises rather than
         // rejects: all requests eventually succeed, peak stays ≤ max.
-        let mut router = Router::new();
-        router.register("sleepy", Arc::new(Sleepy), BatcherConfig::default());
         let h = serve(
-            router,
+            sleepy_router(),
             &ServerConfig {
                 max_inflight: 2,
                 admission_timeout: Duration::from_secs(30),
+                frontend,
                 ..ServerConfig::default()
             },
         )
@@ -461,5 +668,68 @@ mod tests {
         assert!(h.admission().peak() <= 2, "peak={}", h.admission().peak());
         assert_eq!(h.admission().rejected(), 0);
         h.shutdown();
+    }
+
+    #[test]
+    fn admission_backpressure_blocks_then_admits() {
+        backpressure_scenario(Frontend::EventLoop);
+    }
+
+    #[test]
+    fn admission_backpressure_blocks_then_admits_threaded() {
+        backpressure_scenario(Frontend::Threaded);
+    }
+
+    #[test]
+    fn watching_admission_releases_on_peer_hangup() {
+        // Regression: a handler blocked on a saturated valve used to
+        // wait the full admission timeout even after its client had
+        // disconnected, pinning the thread (and, at scale, the whole
+        // accept pool) on work nobody would receive.
+        let adm = Arc::new(Admission::new(1, Duration::from_secs(10)));
+        let _held = adm.try_enter().expect("first slot");
+
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let client = TcpStream::connect(l.local_addr().unwrap()).unwrap();
+        let (server_side, _) = l.accept().unwrap();
+        drop(client); // client hangs up while the wait is saturated
+        std::thread::sleep(Duration::from_millis(50)); // let the FIN land
+
+        let t = Instant::now();
+        assert!(adm.try_enter_watching(&server_side).is_none());
+        assert!(
+            t.elapsed() < Duration::from_secs(2),
+            "hangup must abandon the wait early, not after the 10 s timeout (took {:?})",
+            t.elapsed()
+        );
+        assert_eq!(adm.abandoned(), 1);
+        assert_eq!(adm.rejected(), 0, "hangup is not an overload rejection");
+    }
+
+    #[test]
+    fn watching_admission_still_times_out_for_live_peers() {
+        let adm = Arc::new(Admission::new(1, Duration::from_millis(60)));
+        let _held = adm.try_enter().expect("first slot");
+
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let _client = TcpStream::connect(l.local_addr().unwrap()).unwrap();
+        let (server_side, _) = l.accept().unwrap();
+
+        assert!(adm.try_enter_watching(&server_side).is_none());
+        assert_eq!(adm.rejected(), 1, "live peer waits out the full timeout");
+        assert_eq!(adm.abandoned(), 0);
+    }
+
+    #[test]
+    fn owned_guard_releases_across_threads() {
+        let adm = Arc::new(Admission::new(2, Duration::from_millis(5)));
+        let g1 = adm.try_acquire_owned().unwrap();
+        let g2 = adm.try_acquire_owned().unwrap();
+        assert!(adm.try_acquire_owned().is_none(), "valve full");
+        assert_eq!(adm.inflight(), 2);
+        std::thread::spawn(move || drop(g1)).join().unwrap();
+        drop(g2);
+        assert_eq!(adm.inflight(), 0);
+        assert_eq!(adm.peak(), 2);
     }
 }

@@ -3,6 +3,19 @@
 //! Request:  magic `PLRQ` | name_len u32 | name utf-8 | count u32 | f32×count
 //! Response: magic `PLRS` | status u32 (0 ok) | count u32 | payload
 //!           (f32×count on ok, utf-8 error message bytes on error)
+//!
+//! Two parse entry points share one validation path:
+//!
+//! * [`read_request`] — blocking, for thread-per-connection handlers and
+//!   tests: loops a reader into a [`RequestParser`] until one frame
+//!   completes.
+//! * [`RequestParser`] — incremental, for the nonblocking event-loop
+//!   front-end: accepts arbitrarily fragmented reads (a frame may arrive
+//!   one byte at a time, or several frames in one read), validates
+//!   headers as soon as their bytes are present (garbage is rejected
+//!   without waiting for a full frame), and parses payload floats in a
+//!   single pass straight out of its internal buffer — no intermediate
+//!   per-frame copy.
 
 use std::io::{Read, Write};
 
@@ -10,6 +23,12 @@ use anyhow::{bail, Context, Result};
 
 /// Maximum accepted payload elements (sanity bound against garbage).
 const MAX_COUNT: u32 = 16 * 1024 * 1024;
+
+/// Maximum accepted model-name bytes.
+const MAX_NAME: u32 = 4096;
+
+/// Bytes pulled from the socket per [`RequestParser::read_from`] call.
+const READ_CHUNK: usize = 16 * 1024;
 
 /// A parsed inference request.
 #[derive(Debug, Clone, PartialEq)]
@@ -31,26 +50,133 @@ pub fn write_request(w: &mut impl Write, req: &Request) -> Result<()> {
     Ok(())
 }
 
-/// Parse a request.
+/// Incremental request parser: feed fragmented bytes, pull complete
+/// frames. Header fields are validated the moment their bytes arrive,
+/// so a garbage connection is rejected after at most 8 bytes instead of
+/// stalling in "waiting for more" forever (the slow-loris window is
+/// then bounded by the connection idle timeout alone).
+#[derive(Default)]
+pub struct RequestParser {
+    buf: Vec<u8>,
+    pos: usize,
+}
+
+impl RequestParser {
+    /// Empty parser.
+    pub fn new() -> Self {
+        RequestParser {
+            buf: Vec::with_capacity(4096),
+            pos: 0,
+        }
+    }
+
+    /// Append raw bytes (one fragmented read's worth) to the buffer.
+    pub fn feed(&mut self, bytes: &[u8]) {
+        self.compact();
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Read once from `r` directly into the internal buffer (no
+    /// intermediate scratch copy) and return the byte count. `Ok(0)`
+    /// means EOF; `WouldBlock` surfaces unchanged for nonblocking
+    /// sockets.
+    pub fn read_from(&mut self, r: &mut impl Read) -> std::io::Result<usize> {
+        self.compact();
+        let start = self.buf.len();
+        self.buf.resize(start + READ_CHUNK, 0);
+        match r.read(&mut self.buf[start..]) {
+            Ok(n) => {
+                self.buf.truncate(start + n);
+                Ok(n)
+            }
+            Err(e) => {
+                self.buf.truncate(start);
+                Err(e)
+            }
+        }
+    }
+
+    /// Unconsumed buffered bytes.
+    pub fn buffered(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// True when a frame has started arriving but is not yet complete —
+    /// the state a slow-loris connection parks itself in.
+    pub fn mid_frame(&self) -> bool {
+        self.buffered() > 0
+    }
+
+    /// Drop consumed bytes once they dominate the buffer (cheap when
+    /// everything is consumed; a bounded memmove otherwise).
+    fn compact(&mut self) {
+        if self.pos == self.buf.len() {
+            self.buf.clear();
+            self.pos = 0;
+        } else if self.pos > 64 * 1024 {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+    }
+
+    /// Extract the next complete frame. `Ok(None)` means "need more
+    /// bytes"; `Err` is a protocol violation and the connection must be
+    /// closed.
+    pub fn next_frame(&mut self) -> Result<Option<Request>> {
+        let b = &self.buf[self.pos..];
+        // Magic: validated byte-by-byte as it arrives.
+        let probe = b.len().min(4);
+        if b[..probe] != b"PLRQ"[..probe] {
+            bail!("bad request magic {:?}", &b[..probe]);
+        }
+        if b.len() < 8 {
+            return Ok(None);
+        }
+        let name_len = u32::from_le_bytes([b[4], b[5], b[6], b[7]]);
+        if name_len > MAX_NAME {
+            bail!("model name too long: {name_len}");
+        }
+        let name_end = 8 + name_len as usize;
+        if b.len() < name_end + 4 {
+            return Ok(None);
+        }
+        let count = u32::from_le_bytes([
+            b[name_end],
+            b[name_end + 1],
+            b[name_end + 2],
+            b[name_end + 3],
+        ]);
+        if count > MAX_COUNT {
+            bail!("input too large: {count}");
+        }
+        let total = name_end + 4 + count as usize * 4;
+        if b.len() < total {
+            return Ok(None);
+        }
+        let model = std::str::from_utf8(&b[8..name_end])
+            .context("model name utf-8")?
+            .to_string();
+        let input = b[name_end + 4..total]
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        self.pos += total;
+        Ok(Some(Request { model, input }))
+    }
+}
+
+/// Parse a request, blocking until one full frame has been read.
 pub fn read_request(r: &mut impl Read) -> Result<Request> {
-    let mut magic = [0u8; 4];
-    r.read_exact(&mut magic).context("read request magic")?;
-    if &magic != b"PLRQ" {
-        bail!("bad request magic {magic:?}");
+    let mut parser = RequestParser::new();
+    loop {
+        if let Some(req) = parser.next_frame()? {
+            return Ok(req);
+        }
+        let n = parser.read_from(r).context("read request")?;
+        if n == 0 {
+            bail!("connection closed mid-request ({} bytes buffered)", parser.buffered());
+        }
     }
-    let name_len = read_u32(r)?;
-    if name_len > 4096 {
-        bail!("model name too long: {name_len}");
-    }
-    let mut name = vec![0u8; name_len as usize];
-    r.read_exact(&mut name)?;
-    let model = String::from_utf8(name).context("model name utf-8")?;
-    let count = read_u32(r)?;
-    if count > MAX_COUNT {
-        bail!("input too large: {count}");
-    }
-    let input = read_f32s(r, count as usize)?;
-    Ok(Request { model, input })
 }
 
 /// Serialise a success response.
@@ -115,6 +241,12 @@ fn read_f32s(r: &mut impl Read, n: usize) -> Result<Vec<f32>> {
 mod tests {
     use super::*;
 
+    fn frame(req: &Request) -> Vec<u8> {
+        let mut buf = vec![];
+        write_request(&mut buf, req).unwrap();
+        buf
+    }
+
     #[test]
     fn request_round_trip() {
         let req = Request {
@@ -158,5 +290,192 @@ mod tests {
         buf.push(b'm');
         buf.extend_from_slice(&u32::MAX.to_le_bytes());
         assert!(read_request(&mut buf.as_slice()).is_err());
+    }
+
+    // ------------------------------------------------------------------
+    // Incremental parser: fragmentation, coalesced frames, early errors.
+    // ------------------------------------------------------------------
+
+    #[test]
+    fn incremental_every_split_boundary() {
+        // Every 2-fragment split of a full frame must yield exactly the
+        // same request: feed bytes [..split], expect None; feed the
+        // rest, expect the frame. Covers the header split (split < 12),
+        // the name split, and the payload split in one sweep.
+        let req = Request {
+            model: "m0".into(),
+            input: vec![1.5, -0.25, 3.0e-5, f32::NAN, 0.0],
+        };
+        let bytes = frame(&req);
+        for split in 1..bytes.len() {
+            let mut p = RequestParser::new();
+            p.feed(&bytes[..split]);
+            assert!(
+                p.next_frame().unwrap().is_none(),
+                "split {split}: partial frame must not parse"
+            );
+            assert!(p.mid_frame(), "split {split}: mid-frame state");
+            p.feed(&bytes[split..]);
+            let got = p.next_frame().unwrap().expect("complete frame");
+            assert_eq!(got.model, req.model);
+            assert_eq!(got.input.len(), req.input.len());
+            let same = got
+                .input
+                .iter()
+                .zip(req.input.iter())
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(same, "split {split}: payload must survive bit-exactly");
+            assert_eq!(p.buffered(), 0);
+            assert!(p.next_frame().unwrap().is_none());
+        }
+    }
+
+    #[test]
+    fn incremental_byte_at_a_time() {
+        let req = Request {
+            model: "drip".into(),
+            input: vec![0.5; 7],
+        };
+        let bytes = frame(&req);
+        let mut p = RequestParser::new();
+        let mut parsed = None;
+        for (i, b) in bytes.iter().enumerate() {
+            p.feed(std::slice::from_ref(b));
+            if let Some(r) = p.next_frame().unwrap() {
+                assert_eq!(i, bytes.len() - 1, "frame completed early");
+                parsed = Some(r);
+            }
+        }
+        assert_eq!(parsed.unwrap(), req);
+    }
+
+    #[test]
+    fn incremental_two_frames_in_one_read() {
+        let a = Request {
+            model: "a".into(),
+            input: vec![1.0],
+        };
+        let b = Request {
+            model: "bb".into(),
+            input: vec![2.0, 3.0],
+        };
+        let mut bytes = frame(&a);
+        bytes.extend_from_slice(&frame(&b));
+        let mut p = RequestParser::new();
+        p.feed(&bytes);
+        assert_eq!(p.next_frame().unwrap().unwrap(), a);
+        assert_eq!(p.next_frame().unwrap().unwrap(), b);
+        assert!(p.next_frame().unwrap().is_none());
+        assert_eq!(p.buffered(), 0);
+    }
+
+    #[test]
+    fn incremental_frame_then_partial_tail() {
+        let a = Request {
+            model: "head".into(),
+            input: vec![4.0; 3],
+        };
+        let b = Request {
+            model: "tail".into(),
+            input: vec![5.0; 2],
+        };
+        let (fa, fb) = (frame(&a), frame(&b));
+        let mut p = RequestParser::new();
+        let mut bytes = fa.clone();
+        bytes.extend_from_slice(&fb[..5]);
+        p.feed(&bytes);
+        assert_eq!(p.next_frame().unwrap().unwrap(), a);
+        assert!(p.next_frame().unwrap().is_none(), "tail is partial");
+        p.feed(&fb[5..]);
+        assert_eq!(p.next_frame().unwrap().unwrap(), b);
+    }
+
+    #[test]
+    fn incremental_rejects_garbage_before_full_frame() {
+        // A wrong magic byte is detected immediately, not after a full
+        // (unbounded) frame arrives.
+        let mut p = RequestParser::new();
+        p.feed(b"PL");
+        assert!(p.next_frame().unwrap().is_none(), "prefix of magic is fine");
+        p.feed(b"RX");
+        assert!(p.next_frame().is_err(), "wrong magic fails at byte 4");
+
+        let mut p = RequestParser::new();
+        p.feed(b"G");
+        assert!(p.next_frame().is_err(), "wrong first byte fails at byte 1");
+    }
+
+    #[test]
+    fn incremental_rejects_oversized_header_fields_early() {
+        // Oversized name_len fails as soon as the 8 header bytes are in.
+        let mut p = RequestParser::new();
+        p.feed(b"PLRQ");
+        p.feed(&(MAX_NAME + 1).to_le_bytes());
+        assert!(p.next_frame().is_err());
+
+        // Oversized count fails as soon as the count word is in.
+        let mut p = RequestParser::new();
+        p.feed(b"PLRQ");
+        p.feed(&1u32.to_le_bytes());
+        p.feed(b"m");
+        p.feed(&u32::MAX.to_le_bytes());
+        assert!(p.next_frame().is_err());
+    }
+
+    #[test]
+    fn incremental_rejects_bad_utf8_name() {
+        let mut bytes = vec![];
+        bytes.extend_from_slice(b"PLRQ");
+        bytes.extend_from_slice(&2u32.to_le_bytes());
+        bytes.extend_from_slice(&[0xff, 0xfe]);
+        bytes.extend_from_slice(&0u32.to_le_bytes());
+        let mut p = RequestParser::new();
+        p.feed(&bytes);
+        assert!(p.next_frame().is_err());
+    }
+
+    #[test]
+    fn incremental_read_from_reader() {
+        // read_from pulls straight from a Read into the parser buffer;
+        // a 1-byte-per-call reader exercises the same split tolerance
+        // through the io path read_request uses.
+        struct Dribble<'a>(&'a [u8]);
+        impl Read for Dribble<'_> {
+            fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+                if self.0.is_empty() || out.is_empty() {
+                    return Ok(0);
+                }
+                out[0] = self.0[0];
+                self.0 = &self.0[1..];
+                Ok(1)
+            }
+        }
+        let req = Request {
+            model: "dribble".into(),
+            input: vec![9.0, -9.0],
+        };
+        let got = read_request(&mut Dribble(&frame(&req))).unwrap();
+        assert_eq!(got, req);
+
+        // Truncated stream errors instead of hanging.
+        let bytes = frame(&req);
+        assert!(read_request(&mut Dribble(&bytes[..bytes.len() - 1])).is_err());
+    }
+
+    #[test]
+    fn parser_compacts_consumed_bytes() {
+        let req = Request {
+            model: "c".into(),
+            input: vec![1.0; 16],
+        };
+        let bytes = frame(&req);
+        let mut p = RequestParser::new();
+        for _ in 0..100 {
+            p.feed(&bytes);
+            assert!(p.next_frame().unwrap().is_some());
+        }
+        assert_eq!(p.buffered(), 0);
+        // Internal buffer must not have grown by 100 frames' worth.
+        assert!(p.buf.len() <= 2 * 64 * 1024, "buf len {}", p.buf.len());
     }
 }

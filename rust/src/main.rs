@@ -12,7 +12,7 @@
 
 use std::sync::Arc;
 
-use plam::coordinator::{serve, BatcherConfig, NnBackend, Router, ServerConfig};
+use plam::coordinator::{serve, BatcherConfig, Frontend, NnBackend, Router, ServerConfig};
 use plam::experiments;
 use plam::nn::{ArithMode, Model};
 use plam::posit::PositFormat;
@@ -48,6 +48,8 @@ USAGE: plam <command> [flags]
 
 COMMANDS:
   serve      [--addr HOST:PORT] [--workers N] [--max-inflight N]
+             [--frontend event-loop|threaded] [--request-timeout-ms N]
+             [--idle-timeout-ms N] [--admission-timeout-ms N]
              [--format-plan SPEC] [--artifact PATH --batch N --in N --out N]
              Start the batched inference server. Registers the Table I
              models in float32 / posit<16,1> / posit<16,1>+PLAM modes;
@@ -56,10 +58,18 @@ COMMANDS:
              per-layer mixed-format plan ('<name>-mixed' routes, PLAM
              multiplier). SPEC is 'uniform:p16e1',
              'first-last-wide:p16e1/p8e0', 'layers:p16e1,p8e0,...', or
-             '@model.json' (per-layer "format" fields, see README).
+             '@model.json' (per-layer 'format' fields, see README).
              --workers sizes the shared GEMM worker pool (default: the
              machine's parallelism; 0 disables it); --max-inflight is
              the admission-control bound (default 256, 0 = unlimited).
+             --frontend picks the connection front-end: 'event-loop'
+             (default; one readiness-driven thread multiplexes every
+             connection) or 'threaded' (one thread per connection).
+             --request-timeout-ms bounds a request's batch-queue wait
+             (0 = none, default 0; event-loop only); --idle-timeout-ms
+             sheds silent idle connections (default 30000);
+             --admission-timeout-ms bounds the wait for an inflight
+             slot before shedding (default 10000).
   table2     [--quick | --full] [--plans]
              Reproduce Table II (inference accuracy across formats).
              --plans adds the mixed-format grid: accuracy + encoded
@@ -212,6 +222,27 @@ fn cmd_serve(args: &[String]) -> i32 {
     let max_inflight: usize = flag_value(args, "--max-inflight")
         .and_then(|v| v.parse().ok())
         .unwrap_or(256);
+    let frontend = match flag_value(args, "--frontend").unwrap_or("event-loop") {
+        "event-loop" => Frontend::EventLoop,
+        "threaded" => Frontend::Threaded,
+        other => {
+            eprintln!("bad --frontend '{other}' (expected 'event-loop' or 'threaded')");
+            return 2;
+        }
+    };
+    let ms_flag = |flag: &str, default: u64| -> u64 {
+        flag_value(args, flag)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    };
+    // 0 means "no per-request deadline".
+    let request_timeout = match ms_flag("--request-timeout-ms", 0) {
+        0 => None,
+        ms => Some(std::time::Duration::from_millis(ms)),
+    };
+    let idle_timeout = std::time::Duration::from_millis(ms_flag("--idle-timeout-ms", 30_000));
+    let admission_timeout =
+        std::time::Duration::from_millis(ms_flag("--admission-timeout-ms", 10_000));
 
     println!("routing table:\n{}", router.table());
     match serve(
@@ -220,12 +251,16 @@ fn cmd_serve(args: &[String]) -> i32 {
             addr: addr.into(),
             workers,
             max_inflight,
-            ..ServerConfig::default()
+            admission_timeout,
+            frontend,
+            request_timeout,
+            idle_timeout,
         },
     ) {
         Ok(h) => {
             println!(
-                "plam server listening on {} (workers={workers}, max_inflight={max_inflight})",
+                "plam server listening on {} (frontend={frontend:?}, workers={workers}, \
+                 max_inflight={max_inflight})",
                 h.addr
             );
             loop {

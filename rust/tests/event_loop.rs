@@ -1,0 +1,262 @@
+//! Integration tests for the readiness-driven event-loop front-end:
+//! fragmented writes, pipelining, slow-loris shedding, overload
+//! shedding, per-request timeouts, and half-close draining — all over
+//! real TCP against the default `Frontend::EventLoop` server.
+
+use std::io::Write;
+use std::net::{Shutdown, TcpStream};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use plam::coordinator::{
+    serve, wire, BatcherConfig, Client, InferenceBackend, Router, ServerConfig,
+};
+
+/// Echoes its input, so responses are attributable to requests.
+struct Echo;
+
+impl InferenceBackend for Echo {
+    fn input_len(&self) -> usize {
+        2
+    }
+    fn output_len(&self) -> usize {
+        2
+    }
+    fn max_batch(&self) -> usize {
+        8
+    }
+    fn infer_batch(&self, inputs: &[Vec<f32>]) -> anyhow::Result<Vec<Vec<f32>>> {
+        Ok(inputs.to_vec())
+    }
+    fn describe(&self) -> String {
+        "echo".into()
+    }
+}
+
+/// Echo, but each batch takes `ms` milliseconds and runs alone.
+struct SlowEcho {
+    ms: u64,
+}
+
+impl InferenceBackend for SlowEcho {
+    fn input_len(&self) -> usize {
+        1
+    }
+    fn output_len(&self) -> usize {
+        1
+    }
+    fn max_batch(&self) -> usize {
+        1
+    }
+    fn infer_batch(&self, inputs: &[Vec<f32>]) -> anyhow::Result<Vec<Vec<f32>>> {
+        std::thread::sleep(Duration::from_millis(self.ms));
+        Ok(inputs.to_vec())
+    }
+    fn describe(&self) -> String {
+        "slow-echo".into()
+    }
+}
+
+fn echo_router() -> Router {
+    let mut r = Router::new();
+    r.register("echo", Arc::new(Echo), BatcherConfig::default());
+    r
+}
+
+fn request_bytes(model: &str, input: &[f32]) -> Vec<u8> {
+    let mut v = Vec::new();
+    wire::write_request(
+        &mut v,
+        &wire::Request {
+            model: model.into(),
+            input: input.to_vec(),
+        },
+    )
+    .unwrap();
+    v
+}
+
+#[test]
+fn byte_at_a_time_request_parses_and_answers() {
+    let h = serve(echo_router(), &ServerConfig::default()).unwrap();
+    let mut s = TcpStream::connect(h.addr).unwrap();
+    s.set_nodelay(true).unwrap();
+    let bytes = request_bytes("echo", &[3.5, -1.25]);
+    // Worst-case fragmentation: one byte per packet, with pauses, so
+    // the loop sees dozens of partial reads for a single frame.
+    for b in &bytes {
+        s.write_all(std::slice::from_ref(b)).unwrap();
+        s.flush().unwrap();
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let out = wire::read_response(&mut s).unwrap().unwrap();
+    assert_eq!(out, vec![3.5, -1.25]);
+    h.shutdown();
+}
+
+#[test]
+fn pipelined_requests_answer_in_order() {
+    let h = serve(echo_router(), &ServerConfig::default()).unwrap();
+    let mut s = TcpStream::connect(h.addr).unwrap();
+    // Ten distinguishable requests in one burst, no reads in between.
+    let mut burst = Vec::new();
+    for i in 0..10 {
+        burst.extend_from_slice(&request_bytes("echo", &[i as f32, 0.5]));
+    }
+    s.write_all(&burst).unwrap();
+    for i in 0..10 {
+        let out = wire::read_response(&mut s).unwrap().unwrap();
+        assert_eq!(out, vec![i as f32, 0.5], "responses must keep request order");
+    }
+    h.shutdown();
+}
+
+#[test]
+fn slow_loris_is_shed_without_hurting_healthy_connections() {
+    let h = serve(
+        echo_router(),
+        &ServerConfig {
+            idle_timeout: Duration::from_millis(200),
+            ..ServerConfig::default()
+        },
+    )
+    .unwrap();
+
+    // The loris: half a frame, then silence.
+    let mut loris = TcpStream::connect(h.addr).unwrap();
+    let bytes = request_bytes("echo", &[1.0, 2.0]);
+    loris.write_all(&bytes[..5]).unwrap();
+
+    // A healthy client keeps getting service the whole time.
+    let mut c = Client::connect(h.addr).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(5);
+    let mut loris_dead = false;
+    while Instant::now() < deadline && !loris_dead {
+        assert_eq!(c.infer("echo", &[9.0, 9.0]).unwrap(), vec![9.0, 9.0]);
+        // The server must eventually hang up on the stalled connection:
+        // its next read returns EOF (Ok(0)) instead of blocking forever.
+        loris.set_read_timeout(Some(Duration::from_millis(50))).unwrap();
+        let mut buf = [0u8; 1];
+        use std::io::Read;
+        match loris.read(&mut buf) {
+            Ok(0) => loris_dead = true,
+            Ok(_) => panic!("loris got response bytes for half a request"),
+            Err(_) => {} // still open, keep waiting
+        }
+    }
+    assert!(loris_dead, "stalled connection was never shed");
+    let stats = h.loop_stats().expect("event loop exports stats");
+    assert!(stats.idle_shed.load(Ordering::Relaxed) >= 1);
+    // Healthy connection still lives after the shed.
+    assert_eq!(c.infer("echo", &[4.0, 4.0]).unwrap(), vec![4.0, 4.0]);
+    h.shutdown();
+}
+
+#[test]
+fn overload_shed_counts_and_answers() {
+    let mut r = Router::new();
+    r.register(
+        "slow",
+        Arc::new(SlowEcho { ms: 300 }),
+        BatcherConfig::default(),
+    );
+    let h = serve(
+        r,
+        &ServerConfig {
+            max_inflight: 1,
+            admission_timeout: Duration::from_millis(5),
+            ..ServerConfig::default()
+        },
+    )
+    .unwrap();
+    let addr = h.addr;
+    let mut joins = vec![];
+    for _ in 0..3 {
+        joins.push(std::thread::spawn(move || {
+            Client::connect(addr).unwrap().infer("slow", &[1.0])
+        }));
+    }
+    let results: Vec<_> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+    let ok = results.iter().filter(|r| r.is_ok()).count();
+    let shed = results
+        .iter()
+        .filter(|r| {
+            r.as_ref()
+                .err()
+                .is_some_and(|e| e.to_string().contains("overloaded"))
+        })
+        .count();
+    assert_eq!(ok, 1);
+    assert_eq!(shed, 2);
+    let b = h.router().get("slow").unwrap();
+    assert_eq!(b.metrics.shed.load(Ordering::Relaxed), 2);
+    let stats = h.loop_stats().unwrap();
+    assert_eq!(stats.shed_overload.load(Ordering::Relaxed), 2);
+    h.shutdown();
+}
+
+#[test]
+fn request_timeout_expires_queued_requests() {
+    let mut r = Router::new();
+    r.register(
+        "slow",
+        Arc::new(SlowEcho { ms: 300 }),
+        BatcherConfig::default(),
+    );
+    let h = serve(
+        r,
+        &ServerConfig {
+            request_timeout: Some(Duration::from_millis(50)),
+            ..ServerConfig::default()
+        },
+    )
+    .unwrap();
+    let addr = h.addr;
+    // Two concurrent requests; SlowEcho runs them one at a time, so the
+    // second waits ~300 ms in the queue — past its 50 ms deadline.
+    let a = std::thread::spawn(move || Client::connect(addr).unwrap().infer("slow", &[1.0]));
+    std::thread::sleep(Duration::from_millis(30));
+    let b = std::thread::spawn(move || Client::connect(addr).unwrap().infer("slow", &[2.0]));
+    let ra = a.join().unwrap();
+    let rb = b.join().unwrap();
+    let timed_out = [&ra, &rb]
+        .iter()
+        .filter(|r| {
+            r.as_ref()
+                .err()
+                .is_some_and(|e| e.to_string().contains("timed out"))
+        })
+        .count();
+    assert!(timed_out >= 1, "queued request must hit its deadline (a={ra:?} b={rb:?})");
+    let b = h.router().get("slow").unwrap();
+    assert!(b.metrics.timed_out.load(Ordering::Relaxed) >= 1);
+    h.shutdown();
+}
+
+#[test]
+fn half_close_drains_pending_responses() {
+    let h = serve(echo_router(), &ServerConfig::default()).unwrap();
+    let mut s = TcpStream::connect(h.addr).unwrap();
+    let mut burst = Vec::new();
+    for i in 0..3 {
+        burst.extend_from_slice(&request_bytes("echo", &[i as f32, 1.0]));
+    }
+    s.write_all(&burst).unwrap();
+    // Close the write side immediately: the server sees EOF with three
+    // requests still in flight and must answer all of them first.
+    s.shutdown(Shutdown::Write).unwrap();
+    for i in 0..3 {
+        let out = wire::read_response(&mut s).unwrap().unwrap();
+        assert_eq!(out, vec![i as f32, 1.0]);
+    }
+    // Then the server closes: EOF on our read side.
+    use std::io::Read;
+    let mut buf = [0u8; 1];
+    s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    assert_eq!(s.read(&mut buf).unwrap(), 0, "server closes after draining");
+    let stats = h.loop_stats().unwrap();
+    assert!(stats.accepted.load(Ordering::Relaxed) >= 1);
+    assert!(stats.closed.load(Ordering::Relaxed) >= 1);
+    h.shutdown();
+}

@@ -9,7 +9,12 @@
 //! matter how requests are batched together or how the batch is
 //! sharded across pool workers, every response must equal the
 //! sequential reference to the last bit. Worker count defaults to 8
-//! and can be pinned via `PLAM_STRESS_WORKERS` (CI runs 4).
+//! and can be pinned via `PLAM_STRESS_WORKERS` (CI runs 2 and 4).
+//!
+//! The server comes up with the default front-end — since PR 6 that is
+//! the readiness-driven event loop (`coordinator::event_loop`), so this
+//! harness doubles as the conformance bar for the single-threaded
+//! multiplexed I/O path: 64 blocking clients against one loop thread.
 
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
