@@ -12,7 +12,11 @@ first-last-wide mixed plans) — regresses beyond the baseline's
 tolerance. The plan self-checks additionally pin two refactor
 invariants within one run: the uniform-plan path must not be slower
 than the pre-plan encoded path beyond noise, and a mixed plan's
-plane-recode boundary tax must stay bounded relative to uniform.
+plane-recode boundary tax must stay bounded relative to uniform. The
+narrow-plane series (``gemm plam p8e0 256^3 windowed`` — the
+2 B/element SIMD-dispatched kernel) is guarded the same way, with a
+soft self-check pinning it ≥ 1.5× faster than the wide-forced scalar
+layout of the same operands (``… windowed wide``).
 
 Design notes:
 

@@ -3,14 +3,17 @@
 //! posit vs PLAM, quire vs f32 accumulation), the scalar-dot vs
 //! batched-GEMM comparison across P8E0/P16E1/P32E2, the windowed
 //! single-limb vs FastQuire accumulator ablation (exact + PLAM, plus a
-//! skinny M=1 GEMV), plus the AOT PJRT kernel when artifacts are
-//! present. The exported `BENCH_gemm_formats.json` feeds
+//! skinny M=1 GEMV), the narrow/SIMD vs wide-forced P8E0 plane
+//! ablation, plus the AOT PJRT kernel when artifacts are present. The
+//! exported `BENCH_gemm_formats.json` feeds
 //! `ci/check_bench_regression.py` — keep series names stable.
 //!
 //! Run: cargo bench --bench gemm_formats   (PLAM_BENCH_FAST=1 for smoke)
 
 use plam::bench::{black_box, Bench};
-use plam::nn::gemm::{encode_matrix, gemm_bt, gemm_bt_pool, gemm_bt_with_policy, AccPolicy};
+use plam::nn::gemm::{
+    encode_matrix, encode_matrix_wide, gemm_bt, gemm_bt_pool, gemm_bt_with_policy, AccPolicy,
+};
 use plam::nn::{ArithMode, Layer, Tensor, WorkerPool};
 use plam::posit::PositFormat;
 use plam::prng::Rng;
@@ -300,6 +303,39 @@ fn main() {
                     },
                 );
             }
+        }
+
+        // Narrow-vs-wide ablation: the same 256³ P8E0 operands forced
+        // into the wide (6 B/element) scalar layout — the reference
+        // the SIMD narrow-plane series above is measured against
+        // (n ≤ 8 encodes pick 2 B/element narrow planes, AVX2-eligible
+        // under AccPolicy::Auto).
+        for (mname, mk) in muls {
+            let mode = mk(PositFormat::P8E0);
+            let xe = encode_matrix_wide(&mode, m_dim, k_dim, &flat);
+            let we = encode_matrix_wide(&mode, n_dim, k_dim, &wt.data);
+            let mut y = vec![0f32; m_dim * n_dim];
+            let wide_name = format!("gemm {mname} p8e0 256^3 windowed wide");
+            let r = bench
+                .run(&wide_name, || {
+                    gemm_bt_with_policy(
+                        &mode,
+                        &xe,
+                        &we,
+                        Some(&bt.data),
+                        &mut y,
+                        AccPolicy::Auto,
+                    );
+                    black_box(&y);
+                })
+                .clone();
+            let narrow_name = format!("gemm {mname} p8e0 256^3 windowed");
+            let speedup = bench.speedup(&wide_name, &narrow_name).unwrap_or(1.0);
+            println!(
+                "  {mname:<5} p8e0   wide planes {:>12.0} MAC/s   narrow/SIMD speedup \
+                 {speedup:.2}× (soft target ≥ 1.5×)",
+                r.ops_per_sec(macs),
+            );
         }
 
         // Skinny GEMV (M=1): the per-request serving shape — the

@@ -46,6 +46,12 @@ pub struct Metrics {
     pub plane_cache_bytes: AtomicU64,
     /// Latency samples (µs), bounded reservoir.
     latencies_us: Mutex<Vec<u64>>,
+    /// Monotone tick driving reservoir slot selection once full. The
+    /// replaced slot must not depend on the sample's *value*: indexing
+    /// by the latency itself maps every identical steady-state sample
+    /// to one slot, freezing the other 65 535 at whatever the warm-up
+    /// phase wrote and biasing every percentile forever.
+    reservoir_seq: AtomicU64,
 }
 
 /// Reservoir cap: keeps percentile math O(small) on long runs.
@@ -62,8 +68,14 @@ impl Metrics {
         self.completed.fetch_add(1, Ordering::Relaxed);
         let mut l = self.latencies_us.lock().unwrap();
         if l.len() >= RESERVOIR {
-            // Replace a pseudo-random slot (cheap decimation).
-            let idx = (d.as_micros() as usize).wrapping_mul(2654435761) % RESERVOIR;
+            // Replace a pseudo-random slot (cheap decimation), chosen
+            // by an LCG over a monotone tick — never by the sample
+            // value (see `reservoir_seq`).
+            let t = self.reservoir_seq.fetch_add(1, Ordering::Relaxed);
+            let mixed = t
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(1442695040888963407);
+            let idx = (mixed >> 33) as usize % RESERVOIR;
             l[idx] = d.as_micros() as u64;
         } else {
             l.push(d.as_micros() as u64);
@@ -190,6 +202,24 @@ mod tests {
         assert_eq!(m.latency_percentile_us(1.0), Some(100));
         let p50 = m.latency_percentile_us(0.5).unwrap();
         assert!((49..=51).contains(&p50), "p50={p50}");
+    }
+
+    #[test]
+    fn full_reservoir_percentiles_track_steady_state() {
+        // Regression: the replaced slot used to be derived from the
+        // sample's own value, so identical steady-state latencies all
+        // collapsed into one slot and every percentile stayed pinned
+        // to the first 65 536 (warm-up) samples forever.
+        let m = Metrics::new();
+        for _ in 0..RESERVOIR {
+            m.record_latency(Duration::from_micros(1_000_000));
+        }
+        assert_eq!(m.latency_percentile_us(0.5), Some(1_000_000));
+        for _ in 0..4 * RESERVOIR {
+            m.record_latency(Duration::from_micros(100));
+        }
+        let p50 = m.latency_percentile_us(0.5).unwrap();
+        assert_eq!(p50, 100, "p50 must move to the steady-state latency");
     }
 
     #[test]

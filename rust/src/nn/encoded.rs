@@ -8,9 +8,10 @@
 //! full `f32` im2col matrix per sample before re-encoding it. An
 //! [`EncodedTensor`] removes that tax: a whole activation batch lives
 //! as one `[batch, features]` [`EncodedMatrix`] (the same
-//! `scales: Vec<i16>` + sign-packed Q30 `sfracs: Vec<u32>` planes the
-//! GEMM consumes, panel metadata folded at write time), and flows
-//! between layers without ever touching `f32`:
+//! width-dispatched SoA planes the GEMM consumes — wide `i16` scales +
+//! sign-packed Q30 `u32` fractions, or the 2 B/element narrow
+//! `i8`/`u8` pair that n ≤ 8 formats select — panel metadata folded at
+//! write time), and flows between layers without ever touching `f32`:
 //!
 //! * dense layers feed the batch matrix straight into the GEMM and
 //!   receive the next activation via the plane-emitting read-out
@@ -48,7 +49,8 @@ use crate::posit::tables::{
 use crate::posit::PositFormat;
 
 use super::gemm::{
-    encode_matrix_into, gemm_bt, gemm_bt_planes, EncodedMatrix, PanelMeta, CONV_SCRATCH, KB,
+    encode_matrix_into, gemm_bt, gemm_bt_planes, plane_width, EncodedMatrix, PanelMeta,
+    PlaneWidth, PlanesMut, PlanesRef, CONV_SCRATCH, KB,
 };
 use super::layers::ArithMode;
 use super::pool::WorkerPool;
@@ -101,11 +103,15 @@ impl EncodedTensor {
     /// for bit.
     pub fn decode(&self) -> Vec<Tensor> {
         let features = self.mat.cols;
+        let planes = self.mat.planes();
         (0..self.mat.rows)
             .map(|s| {
                 let base = s * features;
                 let data = (base..base + features)
-                    .map(|i| decode_elem(self.mat.scales[i], self.mat.sfracs[i]))
+                    .map(|i| {
+                        let (scale, sfrac) = planes.get(i);
+                        decode_elem(scale, sfrac)
+                    })
                     .collect();
                 Tensor::from_vec(&self.shape, data)
             })
@@ -170,12 +176,13 @@ impl EncodedTensor {
                 let mut pm = PanelMeta::EMPTY;
                 for c in c0..(c0 + KB).min(cols) {
                     let i = base + c;
-                    let s = self.mat.scales[i];
-                    if s != SCALE_NAR && s != SCALE_ZERO && sfrac_sign(self.mat.sfracs[i]) {
-                        self.mat.scales[i] = SCALE_ZERO;
-                        self.mat.sfracs[i] = 0;
+                    let (s, f) = self.mat.elem(i);
+                    if s != SCALE_NAR && s != SCALE_ZERO && sfrac_sign(f) {
+                        self.mat.set_elem(i, SCALE_ZERO, 0);
+                        pm.fold_scale(SCALE_ZERO);
+                    } else {
+                        pm.fold_scale(s);
                     }
-                    pm.fold_scale(self.mat.scales[i]);
                 }
                 self.mat.panels[r * kc + c0 / KB] = pm;
                 rm.merge(&pm);
@@ -197,7 +204,8 @@ impl EncodedTensor {
         let ow = (w - k) / stride + 1;
         let feat = c * oh * ow;
         let mut mat = EncodedMatrix::empty();
-        mat.reset_planes(self.mat.rows, feat);
+        mat.reset_planes(self.mat.rows, feat, self.mat.width());
+        let planes = self.mat.planes();
         for r in 0..self.mat.rows {
             let base_in = r * self.mat.cols;
             let mut writer = PlaneRowWriter::new(&mut mat, r);
@@ -213,12 +221,11 @@ impl EncodedTensor {
                                     + (ch * h + oy * stride + ky) * w
                                     + ox * stride
                                     + kx;
-                                let s = self.mat.scales[j];
+                                let (s, f) = planes.get(j);
                                 if s == SCALE_NAR {
                                     nar = true;
                                     break 'win;
                                 }
-                                let f = self.mat.sfracs[j];
                                 let key = decoded_key(s, f);
                                 if key > best_key {
                                     best_key = key;
@@ -261,28 +268,33 @@ impl EncodedTensor {
     /// the f32-round-trip pipeline does at a format boundary — so
     /// mixed plans stay bit-identical across both pipelines. A
     /// same-format recode is the identity (copy).
+    ///
+    /// This pass (together with the read-out) is also the *only*
+    /// widen/narrow point of the pipeline: the destination planes take
+    /// the width `dst`'s format selects, elements widen on read and
+    /// narrow on store through the lossless `posit::tables` maps, so
+    /// wide and narrow tensors stay interchangeable at layer
+    /// boundaries.
     pub fn recode(&self, dst: &ArithMode) -> EncodedTensor {
         let (dfmt, table) = match dst {
             ArithMode::Posit { fmt, table, .. } => (*fmt, table.as_deref()),
             ArithMode::Float32 => panic!("plane recode requires a posit mode"),
         };
         let mut mat = EncodedMatrix::empty();
-        mat.reset_planes(self.mat.rows, self.mat.cols);
+        mat.reset_planes(self.mat.rows, self.mat.cols, plane_width(dfmt));
+        let planes = self.mat.planes();
         for r in 0..self.mat.rows {
             let base = r * self.mat.cols;
             let mut writer = PlaneRowWriter::new(&mut mat, r);
             if dfmt == self.fmt {
                 for c in 0..self.mat.cols {
-                    writer.push(self.mat.scales[base + c], self.mat.sfracs[base + c]);
+                    let (s, f) = planes.get(base + c);
+                    writer.push(s, f);
                 }
             } else {
                 for c in 0..self.mat.cols {
-                    let e = recode_entry(
-                        dfmt,
-                        table,
-                        self.mat.scales[base + c],
-                        self.mat.sfracs[base + c],
-                    );
+                    let (s, f) = planes.get(base + c);
+                    let e = recode_entry(dfmt, table, s, f);
                     writer.push(e.scale, e.sfrac());
                 }
             }
@@ -311,8 +323,7 @@ fn decode_elem(scale: i16, sfrac: u32) -> f32 {
 /// kernels above (pool, scatter, gather) all write through this so the
 /// metadata contract has a single implementation.
 struct PlaneRowWriter<'a> {
-    scales: &'a mut [i16],
-    sfracs: &'a mut [u32],
+    planes: PlanesMut<'a>,
     panels: &'a mut [PanelMeta],
     row_meta: &'a mut PanelMeta,
     cols: usize,
@@ -325,9 +336,18 @@ impl<'a> PlaneRowWriter<'a> {
     fn new(mat: &'a mut EncodedMatrix, row: usize) -> Self {
         let cols = mat.cols;
         let kc = cols.div_ceil(KB);
+        let planes = match mat.width() {
+            PlaneWidth::Wide => PlanesMut::Wide(
+                &mut mat.scales[row * cols..(row + 1) * cols],
+                &mut mat.sfracs[row * cols..(row + 1) * cols],
+            ),
+            PlaneWidth::Narrow => PlanesMut::Narrow(
+                &mut mat.scales8[row * cols..(row + 1) * cols],
+                &mut mat.sfracs8[row * cols..(row + 1) * cols],
+            ),
+        };
         PlaneRowWriter {
-            scales: &mut mat.scales[row * cols..(row + 1) * cols],
-            sfracs: &mut mat.sfracs[row * cols..(row + 1) * cols],
+            planes,
             panels: &mut mat.panels[row * kc..(row + 1) * kc],
             row_meta: &mut mat.row_meta[row],
             cols,
@@ -337,18 +357,16 @@ impl<'a> PlaneRowWriter<'a> {
         }
     }
 
-    /// Writer over pre-split row slices (the pooled conv path hands
+    /// Writer over a pre-split row view (the pooled conv path hands
     /// each worker its own disjoint sample row).
     fn over(
-        scales: &'a mut [i16],
-        sfracs: &'a mut [u32],
+        planes: PlanesMut<'a>,
         panels: &'a mut [PanelMeta],
         row_meta: &'a mut PanelMeta,
     ) -> Self {
-        let cols = scales.len();
+        let cols = planes.len();
         PlaneRowWriter {
-            scales,
-            sfracs,
+            planes,
             panels,
             row_meta,
             cols,
@@ -360,8 +378,7 @@ impl<'a> PlaneRowWriter<'a> {
 
     #[inline(always)]
     fn push(&mut self, scale: i16, sfrac: u32) {
-        self.scales[self.idx] = scale;
-        self.sfracs[self.idx] = sfrac;
+        self.planes.set(self.idx, scale, sfrac);
         self.pm.fold_scale(scale);
         self.idx += 1;
         if self.idx % KB == 0 {
@@ -417,15 +434,10 @@ impl ConvGeom {
 /// sentinel (exactly what encoding a padded 0.0 produces), and panel
 /// metadata folds during the gather, so the result is identical to
 /// `encode_matrix(im2col(x))` plane for plane.
-pub(crate) fn gather_patches_into(
-    scales: &[i16],
-    sfracs: &[u32],
-    g: &ConvGeom,
-    out: &mut EncodedMatrix,
-) {
+pub(crate) fn gather_patches_into(planes: PlanesRef<'_>, g: &ConvGeom, out: &mut EncodedMatrix) {
     let (oh, ow) = g.out_hw();
     let patch = g.patch();
-    out.reset_planes(oh * ow, patch);
+    out.reset_planes(oh * ow, patch, planes.width());
     for oy in 0..oh {
         for ox in 0..ow {
             let mut writer = PlaneRowWriter::new(out, oy * ow + ox);
@@ -438,7 +450,8 @@ pub(crate) fn gather_patches_into(
                             writer.push(SCALE_ZERO, 0);
                         } else {
                             let j = (c * g.h + (iy - g.pad)) * g.w + (ix - g.pad);
-                            writer.push(scales[j], sfracs[j]);
+                            let (s, f) = planes.get(j);
+                            writer.push(s, f);
                         }
                     }
                 }
@@ -456,13 +469,11 @@ pub(crate) fn gather_patches_into(
 /// thread-local.
 fn conv_sample_planes(
     mode: &ArithMode,
-    x_scales: &[i16],
-    x_sfracs: &[u32],
+    x_planes: PlanesRef<'_>,
     g: &ConvGeom,
     we: &EncodedMatrix,
     bias: &[f32],
-    out_scales: &mut [i16],
-    out_sfracs: &mut [u32],
+    out_planes: PlanesMut<'_>,
     out_panels: &mut [PanelMeta],
     out_row_meta: &mut PanelMeta,
 ) {
@@ -471,12 +482,14 @@ fn conv_sample_planes(
     CONV_SCRATCH.with(|cell| {
         let mut sc = cell.borrow_mut();
         let sc = &mut *sc;
-        gather_patches_into(x_scales, x_sfracs, g, &mut sc.patch);
+        gather_patches_into(x_planes, g, &mut sc.patch);
         gemm_bt_planes(mode, &sc.patch, we, Some(bias), &mut sc.out);
-        let mut writer = PlaneRowWriter::over(out_scales, out_sfracs, out_panels, out_row_meta);
+        let gemm_out = sc.out.planes();
+        let mut writer = PlaneRowWriter::over(out_planes, out_panels, out_row_meta);
         for o in 0..g.oc {
             for p in 0..hw {
-                writer.push(sc.out.scales[p * g.oc + o], sc.out.sfracs[p * g.oc + o]);
+                let (s, f) = gemm_out.get(p * g.oc + o);
+                writer.push(s, f);
             }
         }
         writer.finish();
@@ -502,30 +515,41 @@ pub(crate) fn conv2d_encoded(
     let batch = x.batch();
     let in_feat = x.features();
     let mut mat = EncodedMatrix::empty();
-    mat.reset_planes(batch, feat);
+    mat.reset_planes(batch, feat, x.mat.width());
     {
-        let rows = mat
-            .scales
-            .chunks_mut(feat)
-            .zip(mat.sfracs.chunks_mut(feat))
+        let x_planes = x.mat.planes();
+        let row_planes: Vec<PlanesMut<'_>> = match x.mat.width() {
+            PlaneWidth::Wide => mat
+                .scales
+                .chunks_mut(feat)
+                .zip(mat.sfracs.chunks_mut(feat))
+                .map(|(s, f)| PlanesMut::Wide(s, f))
+                .collect(),
+            PlaneWidth::Narrow => mat
+                .scales8
+                .chunks_mut(feat)
+                .zip(mat.sfracs8.chunks_mut(feat))
+                .map(|(s, f)| PlanesMut::Narrow(s, f))
+                .collect(),
+        };
+        let rows = row_planes
+            .into_iter()
             .zip(mat.panels.chunks_mut(kc))
             .zip(mat.row_meta.iter_mut())
             .enumerate();
         match pool {
             Some(p) if batch > 1 && p.workers() > 1 => {
                 let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = rows
-                    .map(|(s, (((oscales, osfracs), opanels), orm))| {
+                    .map(|(s, ((oplanes, opanels), orm))| {
                         Box::new(move || {
                             let base = s * in_feat;
                             conv_sample_planes(
                                 mode,
-                                &x.mat.scales[base..base + in_feat],
-                                &x.mat.sfracs[base..base + in_feat],
+                                x_planes.slice(base..base + in_feat),
                                 g,
                                 we,
                                 bias,
-                                oscales,
-                                osfracs,
+                                oplanes,
                                 opanels,
                                 orm,
                             );
@@ -535,17 +559,15 @@ pub(crate) fn conv2d_encoded(
                 p.run(tasks);
             }
             _ => {
-                for (s, (((oscales, osfracs), opanels), orm)) in rows {
+                for (s, ((oplanes, opanels), orm)) in rows {
                     let base = s * in_feat;
                     conv_sample_planes(
                         mode,
-                        &x.mat.scales[base..base + in_feat],
-                        &x.mat.sfracs[base..base + in_feat],
+                        x_planes.slice(base..base + in_feat),
                         g,
                         we,
                         bias,
-                        oscales,
-                        osfracs,
+                        oplanes,
                         opanels,
                         orm,
                     );
@@ -579,14 +601,11 @@ pub(crate) fn conv2d_encoded_to_f32(
     let in_feat = x.features();
     let run_one = |s: usize| -> Tensor {
         let base = s * in_feat;
-        let (x_scales, x_sfracs) = (
-            &x.mat.scales[base..base + in_feat],
-            &x.mat.sfracs[base..base + in_feat],
-        );
+        let x_planes = x.mat.planes().slice(base..base + in_feat);
         CONV_SCRATCH.with(|cell| {
             let mut sc = cell.borrow_mut();
             let sc = &mut *sc;
-            gather_patches_into(x_scales, x_sfracs, g, &mut sc.patch);
+            gather_patches_into(x_planes, g, &mut sc.patch);
             sc.y.clear();
             sc.y.resize(hw * g.oc, 0.0);
             gemm_bt(mode, &sc.patch, we, Some(bias), &mut sc.y);
@@ -723,6 +742,7 @@ mod tests {
         // The decoded-domain gather must equal "materialise f32 im2col,
         // then encode" plane for plane — including zero padding.
         for mode in [
+            ArithMode::posit_plam(PositFormat::P8E0),
             ArithMode::posit_plam(PositFormat::P16E1),
             ArithMode::posit_exact(PositFormat::P32E2),
         ] {
@@ -742,7 +762,7 @@ mod tests {
             };
             let enc = EncodedTensor::encode(&mode, std::slice::from_ref(&x));
             let mut got = EncodedMatrix::empty();
-            gather_patches_into(&enc.mat.scales, &enc.mat.sfracs, &g, &mut got);
+            gather_patches_into(enc.mat.planes(), &g, &mut got);
             let (cols, oh, ow) = im2col(&x, g.ic, g.kh, g.kw, g.stride, g.pad);
             let want = encode_matrix(&mode, oh * ow, g.patch(), &cols);
             assert_planes_eq(&got, &want, &mode.name());
@@ -752,6 +772,7 @@ mod tests {
     #[test]
     fn conv2d_encoded_matches_f32_conv_reencoded() {
         for mode in [
+            ArithMode::posit_plam(PositFormat::P8E0),
             ArithMode::posit_exact(PositFormat::P16E1),
             ArithMode::posit_plam(PositFormat::P16E1),
             ArithMode::posit_plam(PositFormat::P32E2),
@@ -868,9 +889,11 @@ mod tests {
         x.data[10] = 0.0;
         let enc = EncodedTensor::encode(&src, std::slice::from_ref(&x));
         let got = enc.recode(&dst);
-        assert_eq!(got.mat.scales[3], SCALE_NAR, "NaR must survive recode");
-        assert_eq!(got.mat.scales[KB + 1], SCALE_NAR);
-        assert_eq!(got.mat.scales[10], SCALE_ZERO);
+        // P8E0 recodes into narrow planes; read through the widening
+        // accessor.
+        assert_eq!(got.mat.elem(3).0, SCALE_NAR, "NaR must survive recode");
+        assert_eq!(got.mat.elem(KB + 1).0, SCALE_NAR);
+        assert_eq!(got.mat.elem(10).0, SCALE_ZERO);
         let want = EncodedTensor::encode(&dst, &enc.decode());
         assert_planes_eq(got.matrix(), want.matrix(), "panel refold");
         // The recoded tensor is immediately a valid GEMM operand.

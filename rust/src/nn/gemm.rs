@@ -12,10 +12,14 @@
 //! an `sfracs: Vec<u32>` plane (Q30 fraction, sign packed in bit 31).
 //! SoA planes carry 6 bytes/element instead of the 8-byte AoS
 //! `DecEntry` and keep each loaded cache line pure payload for the
-//! k-loop. The inner loop runs cache-blocked over `MB × NB` output
-//! tiles with either the exact (paper Fig. 3) or the PLAM (paper
-//! Fig. 4, Eq. 17) product rule — exact EMAC semantics, one rounding
-//! per output, whichever accumulator runs:
+//! k-loop. Formats with n ≤ 8 store **narrow planes** instead
+//! ([`PlaneWidth::Narrow`]: `i8` scale + `u8` sign-packed Q7 fraction,
+//! 2 bytes/element — see `posit::tables` for the lossless
+//! widen/narrow contract), tripling effective memory bandwidth on the
+//! 8-bit hot path. The inner loop runs cache-blocked over `MB × NB`
+//! output tiles with either the exact (paper Fig. 3) or the PLAM
+//! (paper Fig. 4, Eq. 17) product rule — exact EMAC semantics, one
+//! rounding per output, whichever accumulator runs:
 //!
 //! * **Scale-windowed single-limb accumulation** (the common case):
 //!   encoding records per-`row × KB` panel min/max scales and zero/NaR
@@ -59,8 +63,9 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::posit::tables::{
-    decode_entry, readout_entry, sfrac_sign, sfrac_significand, DecEntry, DecodeTable, FW,
-    SCALE_NAR, SCALE_ZERO, SFRAC_FRAC_MASK,
+    decode_entry, narrow_scale, narrow_sfrac, readout_entry, sfrac_sign, sfrac_significand,
+    widen_scale8, widen_sfrac8, DecEntry, DecodeTable, FW, NFW, SCALE8_ZERO, SCALE_NAR,
+    SCALE_ZERO, SFRAC_FRAC_MASK,
 };
 use crate::posit::{from_f32, to_f32, window_anchor, FastQuire, PositFormat, WindowedAcc};
 
@@ -143,10 +148,116 @@ impl PanelMeta {
     }
 }
 
+/// Storage width of an encoded posit plane pair. Selected per
+/// [`EncodedMatrix`] from the format alone, so two encodes of the same
+/// format always produce interchangeable operands.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlaneWidth {
+    /// `i16` scales + `u32` sign-packed Q30 fractions, 6 B/element —
+    /// every format up to n = 32.
+    Wide,
+    /// `i8` scales + `u8` sign-packed Q7 fractions, 2 B/element —
+    /// n ≤ 8 formats, where scales fit ±24 and fractions carry ≤ 5
+    /// bits (see `posit::tables` for the lossless widen/narrow maps).
+    Narrow,
+}
+
+/// The plane width a format's encodes select ([`PlaneWidth::Narrow`]
+/// iff `n ≤ 8`).
+pub fn plane_width(fmt: PositFormat) -> PlaneWidth {
+    if fmt.n <= 8 {
+        PlaneWidth::Narrow
+    } else {
+        PlaneWidth::Wide
+    }
+}
+
+/// Mutable width-dispatched view over one plane pair. Plane writers
+/// hold wide `(scale, sfrac)` pairs ([`DecEntry`] domain); the narrow
+/// arm narrows on store, which is lossless for the n ≤ 8 formats that
+/// select narrow planes.
+pub(crate) enum PlanesMut<'a> {
+    /// `i16` scales + `u32` sign-packed Q30 fractions.
+    Wide(&'a mut [i16], &'a mut [u32]),
+    /// `i8` scales + `u8` sign-packed Q7 fractions.
+    Narrow(&'a mut [i8], &'a mut [u8]),
+}
+
+impl PlanesMut<'_> {
+    /// Element count of the view.
+    pub(crate) fn len(&self) -> usize {
+        match self {
+            PlanesMut::Wide(s, _) => s.len(),
+            PlanesMut::Narrow(s, _) => s.len(),
+        }
+    }
+
+    /// Store element `i` from a wide `(scale, sfrac)` pair.
+    #[inline(always)]
+    pub(crate) fn set(&mut self, i: usize, scale: i16, sfrac: u32) {
+        match self {
+            PlanesMut::Wide(s, f) => {
+                s[i] = scale;
+                f[i] = sfrac;
+            }
+            PlanesMut::Narrow(s, f) => {
+                s[i] = narrow_scale(scale);
+                f[i] = narrow_sfrac(sfrac);
+            }
+        }
+    }
+}
+
+/// Shared width-dispatched view over one plane pair (or a subrange of
+/// one); reads widen narrow elements exactly.
+#[derive(Clone, Copy)]
+pub(crate) enum PlanesRef<'a> {
+    /// `i16` scales + `u32` sign-packed Q30 fractions.
+    Wide(&'a [i16], &'a [u32]),
+    /// `i8` scales + `u8` sign-packed Q7 fractions.
+    Narrow(&'a [i8], &'a [u8]),
+}
+
+impl<'a> PlanesRef<'a> {
+    /// Storage width of the viewed planes.
+    pub(crate) fn width(&self) -> PlaneWidth {
+        match self {
+            PlanesRef::Wide(..) => PlaneWidth::Wide,
+            PlanesRef::Narrow(..) => PlaneWidth::Narrow,
+        }
+    }
+
+    /// Read element `i` as a wide `(scale, sfrac)` pair.
+    #[inline(always)]
+    pub(crate) fn get(&self, i: usize) -> (i16, u32) {
+        match self {
+            PlanesRef::Wide(s, f) => (s[i], f[i]),
+            PlanesRef::Narrow(s, f) => (widen_scale8(s[i]), widen_sfrac8(f[i])),
+        }
+    }
+
+    /// Element count of the view.
+    pub(crate) fn len(&self) -> usize {
+        match self {
+            PlanesRef::Wide(s, _) => s.len(),
+            PlanesRef::Narrow(s, _) => s.len(),
+        }
+    }
+
+    /// Subrange view (same width).
+    pub(crate) fn slice(&self, range: std::ops::Range<usize>) -> PlanesRef<'a> {
+        match self {
+            PlanesRef::Wide(s, f) => PlanesRef::Wide(&s[range.clone()], &f[range]),
+            PlanesRef::Narrow(s, f) => PlanesRef::Narrow(&s[range.clone()], &f[range]),
+        }
+    }
+}
+
 /// A matrix pre-encoded for one arithmetic mode: f32 copy for the
-/// float path; for the posit paths, SoA decode planes (`scales` +
-/// sign-packed `sfracs`) plus per-panel scale-window/occupancy
-/// metadata that the kernel's accumulator planner reads.
+/// float path; for the posit paths, SoA decode planes (wide
+/// `scales`/`sfracs` or narrow `scales8`/`sfracs8`, per [`PlaneWidth`])
+/// plus per-panel scale-window/occupancy metadata that the kernel's
+/// accumulator planner reads.
 pub struct EncodedMatrix {
     /// Row count.
     pub rows: usize,
@@ -154,10 +265,18 @@ pub struct EncodedMatrix {
     pub cols: usize,
     pub(crate) f32s: Vec<f32>,
     /// Combined scales, one per element ([`SCALE_ZERO`]/[`SCALE_NAR`]
-    /// sentinels for specials).
+    /// sentinels for specials). Empty when `width` is `Narrow`.
     pub(crate) scales: Vec<i16>,
-    /// Sign-packed Q30 fractions ([`DecEntry::sfrac`] layout).
+    /// Sign-packed Q30 fractions ([`DecEntry::sfrac`] layout). Empty
+    /// when `width` is `Narrow`.
     pub(crate) sfracs: Vec<u32>,
+    /// Narrow scale plane (`SCALE8_ZERO`/`SCALE8_NAR` sentinels).
+    /// Empty when `width` is `Wide`.
+    pub(crate) scales8: Vec<i8>,
+    /// Narrow sign-packed Q7 fractions. Empty when `width` is `Wide`.
+    pub(crate) sfracs8: Vec<u8>,
+    /// Which plane pair carries this matrix's elements.
+    pub(crate) width: PlaneWidth,
     /// Per `row × KB-chunk` summaries, `rows × cols.div_ceil(KB)`
     /// row-major — chunked with the same `KB` as the GEMM k blocking.
     pub(crate) panels: Vec<PanelMeta>,
@@ -177,23 +296,38 @@ impl EncodedMatrix {
             f32s: Vec::new(),
             scales: Vec::new(),
             sfracs: Vec::new(),
+            scales8: Vec::new(),
+            sfracs8: Vec::new(),
+            width: PlaneWidth::Wide,
             panels: Vec::new(),
             row_meta: Vec::new(),
         }
     }
 
-    /// Reshape into a posit plane container for `rows × cols` elements:
-    /// planes sized (contents undefined until every element is
-    /// written), metadata reset to the inverted-empty fold. Capacity is
-    /// retained, so scratch matrices stop allocating after warm-up.
-    pub(crate) fn reset_planes(&mut self, rows: usize, cols: usize) {
+    /// Reshape into a posit plane container for `rows × cols` elements
+    /// at `width`: the active planes sized (contents undefined until
+    /// every element is written), the other pair emptied, metadata
+    /// reset to the inverted-empty fold. Capacity is retained, so
+    /// scratch matrices stop allocating after warm-up.
+    pub(crate) fn reset_planes(&mut self, rows: usize, cols: usize, width: PlaneWidth) {
         self.rows = rows;
         self.cols = cols;
+        self.width = width;
         self.f32s.clear();
         self.scales.clear();
-        self.scales.resize(rows * cols, SCALE_ZERO);
         self.sfracs.clear();
-        self.sfracs.resize(rows * cols, 0);
+        self.scales8.clear();
+        self.sfracs8.clear();
+        match width {
+            PlaneWidth::Wide => {
+                self.scales.resize(rows * cols, SCALE_ZERO);
+                self.sfracs.resize(rows * cols, 0);
+            }
+            PlaneWidth::Narrow => {
+                self.scales8.resize(rows * cols, SCALE8_ZERO);
+                self.sfracs8.resize(rows * cols, 0);
+            }
+        }
         let kc = if cols == 0 { 0 } else { cols.div_ceil(KB) };
         self.panels.clear();
         self.panels.resize(rows * kc, PanelMeta::EMPTY);
@@ -201,22 +335,73 @@ impl EncodedMatrix {
         self.row_meta.resize(rows, PanelMeta::EMPTY);
     }
     /// Heap footprint of the encoded plane including panel metadata
-    /// (cache accounting).
+    /// (cache accounting). Narrow planes report 2 B/element against
+    /// the wide layout's 6.
     pub fn bytes(&self) -> usize {
         self.f32s.len() * std::mem::size_of::<f32>()
             + self.scales.len() * std::mem::size_of::<i16>()
             + self.sfracs.len() * std::mem::size_of::<u32>()
+            + self.scales8.len() * std::mem::size_of::<i8>()
+            + self.sfracs8.len() * std::mem::size_of::<u8>()
             + (self.panels.len() + self.row_meta.len()) * std::mem::size_of::<PanelMeta>()
     }
 
     /// Number of KB-sized k chunks per row (0 for empty posit planes
     /// and for float planes, which carry no panel metadata).
     pub fn k_chunks(&self) -> usize {
-        if self.scales.is_empty() {
+        if self.scales.is_empty() && self.scales8.is_empty() {
             0
         } else {
             self.cols.div_ceil(KB)
         }
+    }
+
+    /// Storage width of this matrix's posit planes.
+    pub fn width(&self) -> PlaneWidth {
+        self.width
+    }
+
+    /// Shared width-dispatched view of the active plane pair.
+    pub(crate) fn planes(&self) -> PlanesRef<'_> {
+        match self.width {
+            PlaneWidth::Wide => PlanesRef::Wide(&self.scales, &self.sfracs),
+            PlaneWidth::Narrow => PlanesRef::Narrow(&self.scales8, &self.sfracs8),
+        }
+    }
+
+    /// Read posit plane element `i` as a wide `(scale, sfrac)` pair.
+    #[inline(always)]
+    pub(crate) fn elem(&self, i: usize) -> (i16, u32) {
+        match self.width {
+            PlaneWidth::Wide => (self.scales[i], self.sfracs[i]),
+            PlaneWidth::Narrow => (widen_scale8(self.scales8[i]), widen_sfrac8(self.sfracs8[i])),
+        }
+    }
+
+    /// Write posit plane element `i` from a wide `(scale, sfrac)` pair
+    /// (narrowed losslessly when this matrix stores narrow planes).
+    #[inline(always)]
+    pub(crate) fn set_elem(&mut self, i: usize, scale: i16, sfrac: u32) {
+        match self.width {
+            PlaneWidth::Wide => {
+                self.scales[i] = scale;
+                self.sfracs[i] = sfrac;
+            }
+            PlaneWidth::Narrow => {
+                self.scales8[i] = narrow_scale(scale);
+                self.sfracs8[i] = narrow_sfrac(sfrac);
+            }
+        }
+    }
+
+    /// Split borrows for the plane-emitting writers: the active plane
+    /// pair plus the panel and row metadata slices.
+    pub(crate) fn writer_parts(&mut self) -> (PlanesMut<'_>, &mut [PanelMeta], &mut [PanelMeta]) {
+        let planes = match self.width {
+            PlaneWidth::Wide => PlanesMut::Wide(&mut self.scales, &mut self.sfracs),
+            PlaneWidth::Narrow => PlanesMut::Narrow(&mut self.scales8, &mut self.sfracs8),
+        };
+        (planes, &mut self.panels, &mut self.row_meta)
     }
 
     /// Scale/specials summary of one `row × KB` panel.
@@ -257,38 +442,105 @@ pub fn encode_matrix_into(
     out.f32s.clear();
     out.scales.clear();
     out.sfracs.clear();
+    out.scales8.clear();
+    out.sfracs8.clear();
+    out.width = PlaneWidth::Wide;
     out.panels.clear();
     out.row_meta.clear();
     match mode {
         ArithMode::Float32 => out.f32s.extend_from_slice(data),
         ArithMode::Posit { fmt, table, .. } => {
-            let dec_one = |v: f32| -> DecEntry {
-                match table {
-                    Some(t) => t.get(from_f32(*fmt, v)),
-                    None => decode_entry(*fmt, from_f32(*fmt, v)),
-                }
-            };
-            let kc = cols.div_ceil(KB);
+            encode_posit_planes(*fmt, table.as_deref(), rows, cols, data, out, plane_width(*fmt))
+        }
+    }
+}
+
+/// [`encode_matrix`] forcing the wide (`i16`/`u32`) plane layout even
+/// for n ≤ 8 formats — the scalar wide-plane reference operand for the
+/// SIMD benches and the narrow-vs-wide equivalence suites. GEMM
+/// operands must share one width, so pair this with another
+/// wide-forced encode; engine paths never produce mixed widths on
+/// their own.
+pub fn encode_matrix_wide(
+    mode: &ArithMode,
+    rows: usize,
+    cols: usize,
+    data: &[f32],
+) -> EncodedMatrix {
+    assert_eq!(rows * cols, data.len(), "matrix shape/data mismatch");
+    let mut out = EncodedMatrix::empty();
+    out.rows = rows;
+    out.cols = cols;
+    match mode {
+        ArithMode::Float32 => out.f32s.extend_from_slice(data),
+        ArithMode::Posit { fmt, table, .. } => encode_posit_planes(
+            *fmt,
+            table.as_deref(),
+            rows,
+            cols,
+            data,
+            &mut out,
+            PlaneWidth::Wide,
+        ),
+    }
+    out
+}
+
+/// Shared posit-plane encode at an explicit width. The narrow branch
+/// stores elements through the lossless `tables::narrow_*` maps; panel
+/// metadata folds identically either way (wide-scale domain), so the
+/// accumulator planner is width-blind.
+fn encode_posit_planes(
+    fmt: PositFormat,
+    table: Option<&DecodeTable>,
+    rows: usize,
+    cols: usize,
+    data: &[f32],
+    out: &mut EncodedMatrix,
+    width: PlaneWidth,
+) {
+    let dec_one = |v: f32| -> DecEntry {
+        match table {
+            Some(t) => t.get(from_f32(fmt, v)),
+            None => decode_entry(fmt, from_f32(fmt, v)),
+        }
+    };
+    out.width = width;
+    let kc = cols.div_ceil(KB);
+    match width {
+        PlaneWidth::Wide => {
             out.scales.reserve(rows * cols);
             out.sfracs.reserve(rows * cols);
-            out.panels.reserve(rows * kc);
-            out.row_meta.reserve(rows);
-            for r in 0..rows {
-                let mut rm = PanelMeta::EMPTY;
-                for c0 in (0..cols).step_by(KB) {
-                    let mut pm = PanelMeta::EMPTY;
-                    for c in c0..(c0 + KB).min(cols) {
-                        let e = dec_one(data[r * cols + c]);
+        }
+        PlaneWidth::Narrow => {
+            out.scales8.reserve(rows * cols);
+            out.sfracs8.reserve(rows * cols);
+        }
+    }
+    out.panels.reserve(rows * kc);
+    out.row_meta.reserve(rows);
+    for r in 0..rows {
+        let mut rm = PanelMeta::EMPTY;
+        for c0 in (0..cols).step_by(KB) {
+            let mut pm = PanelMeta::EMPTY;
+            for c in c0..(c0 + KB).min(cols) {
+                let e = dec_one(data[r * cols + c]);
+                match width {
+                    PlaneWidth::Wide => {
                         out.scales.push(e.scale);
                         out.sfracs.push(e.sfrac());
-                        pm.fold(&e);
                     }
-                    rm.merge(&pm);
-                    out.panels.push(pm);
+                    PlaneWidth::Narrow => {
+                        out.scales8.push(narrow_scale(e.scale));
+                        out.sfracs8.push(narrow_sfrac(e.sfrac()));
+                    }
                 }
-                out.row_meta.push(rm);
+                pm.fold(&e);
             }
+            rm.merge(&pm);
+            out.panels.push(pm);
         }
+        out.row_meta.push(rm);
     }
 }
 
@@ -320,28 +572,42 @@ struct PlaneKey {
     mode: ModeKey,
     rows: usize,
     cols: usize,
-    /// FNV-1a over the f32 bit patterns. The cache trusts this 64-bit
-    /// fingerprint (plus the shape) for identity; at cache-scale entry
-    /// counts a collision is vanishingly unlikely, and a collision
-    /// would only ever swap one weight plane for another's.
+    /// FNV-1a over the f32 bit patterns — the lookup fingerprint. A
+    /// 64-bit digest is not identity: hits are confirmed against the
+    /// entry's independent second digest ([`CacheEntry::verify`]) and
+    /// fall through to a fresh encode on mismatch, so a collision can
+    /// never serve one model's weight planes to another.
     fnv: u64,
 }
 
-fn fnv64(data: &[f32]) -> u64 {
-    let mut h = 0xcbf2_9ce4_8422_2325u64;
+/// Two independent 64-bit digests of the f32 bit patterns in one pass:
+/// FNV-1a (the map key) and a murmur3-style multiply-xor mix (the hit
+/// verifier). A pair collision needs both 64-bit digests *and* the
+/// shape to collide at once.
+fn fingerprints(data: &[f32]) -> (u64, u64) {
+    let mut h1 = 0xcbf2_9ce4_8422_2325u64;
+    let mut h2 = 0x9e37_79b9_7f4a_7c15u64;
     for v in data {
-        for b in v.to_bits().to_le_bytes() {
-            h ^= b as u64;
-            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        let bits = v.to_bits();
+        for b in bits.to_le_bytes() {
+            h1 ^= b as u64;
+            h1 = h1.wrapping_mul(0x0000_0100_0000_01b3);
         }
+        h2 = (h2 ^ bits as u64).wrapping_mul(0xff51_afd7_ed55_8ccd);
+        h2 ^= h2 >> 33;
     }
-    h
+    h2 = h2.wrapping_mul(0xc4ce_b9fe_1a85_ec53) ^ (data.len() as u64);
+    (h1, h2)
 }
 
 struct CacheEntry {
     plane: Arc<EncodedMatrix>,
     bytes: usize,
     last_used: u64,
+    /// Second, independent digest of the source data
+    /// ([`fingerprints`].1): confirms on every hit that the entry
+    /// really came from the same bytes as the probe.
+    verify: u64,
 }
 
 struct CacheInner {
@@ -362,6 +628,7 @@ pub struct PlaneCache {
     hits: AtomicU64,
     misses: AtomicU64,
     evictions: AtomicU64,
+    collisions: AtomicU64,
 }
 
 impl PlaneCache {
@@ -377,6 +644,7 @@ impl PlaneCache {
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
+            collisions: AtomicU64::new(0),
         }
     }
 
@@ -397,20 +665,46 @@ impl PlaneCache {
         cols: usize,
         data: &[f32],
     ) -> Arc<EncodedMatrix> {
+        let (fnv, verify) = fingerprints(data);
         let key = PlaneKey {
             mode: mode_key(mode),
             rows,
             cols,
-            fnv: fnv64(data),
+            fnv,
         };
+        self.encode_keyed(key, verify, mode, rows, cols, data)
+    }
+
+    /// [`PlaneCache::encode`] below the fingerprinting step — the seam
+    /// the collision regression test uses to force two different data
+    /// sets onto one key.
+    fn encode_keyed(
+        &self,
+        key: PlaneKey,
+        verify: u64,
+        mode: &ArithMode,
+        rows: usize,
+        cols: usize,
+        data: &[f32],
+    ) -> Arc<EncodedMatrix> {
         {
             let mut inner = self.inner.lock().unwrap();
             inner.tick += 1;
             let tick = inner.tick;
             if let Some(e) = inner.map.get_mut(&key) {
-                e.last_used = tick;
-                self.hits.fetch_add(1, Ordering::Relaxed);
-                return e.plane.clone();
+                if e.verify == verify {
+                    e.last_used = tick;
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    return e.plane.clone();
+                }
+                // Lookup-fingerprint collision: the cached plane was
+                // built from different bytes. Serving it would silently
+                // hand one model another's weights — drop it and fall
+                // through to a fresh encode.
+                self.collisions.fetch_add(1, Ordering::Relaxed);
+                if let Some(e) = inner.map.remove(&key) {
+                    inner.bytes -= e.bytes;
+                }
             }
         }
         // Encode outside the lock: concurrent misses on the same key may
@@ -422,9 +716,16 @@ impl PlaneCache {
         inner.tick += 1;
         let tick = inner.tick;
         if let Some(e) = inner.map.get_mut(&key) {
-            // Lost the encode race; adopt the winner's plane.
-            e.last_used = tick;
-            return e.plane.clone();
+            if e.verify == verify {
+                // Lost the encode race; adopt the winner's plane.
+                e.last_used = tick;
+                return e.plane.clone();
+            }
+            // Raced with a colliding key: replace with our entry.
+            self.collisions.fetch_add(1, Ordering::Relaxed);
+            if let Some(e) = inner.map.remove(&key) {
+                inner.bytes -= e.bytes;
+            }
         }
         inner.bytes += bytes;
         inner.map.insert(
@@ -433,6 +734,7 @@ impl PlaneCache {
                 plane: plane.clone(),
                 bytes,
                 last_used: tick,
+                verify,
             },
         );
         while inner.bytes > self.cap_bytes && inner.map.len() > 1 {
@@ -480,6 +782,13 @@ impl PlaneCache {
         self.evictions.load(Ordering::Relaxed)
     }
 
+    /// Lookup-fingerprint collisions caught by the hit verifier so far
+    /// (each one fell through to a fresh encode instead of serving the
+    /// wrong plane).
+    pub fn collisions(&self) -> u64 {
+        self.collisions.load(Ordering::Relaxed)
+    }
+
     /// Drop every cached plane (outstanding `Arc`s stay valid).
     pub fn clear(&self) {
         let mut inner = self.inner.lock().unwrap();
@@ -502,6 +811,13 @@ pub enum AccPolicy {
     /// [`FastQuire`] everywhere — the pre-windowing kernel. Baseline
     /// for benches and for fallback-equivalence tests.
     ForceQuire,
+    /// Windowed/quire planning exactly as [`AccPolicy::Auto`], but the
+    /// windowed MAC always runs the portable scalar loop — the SIMD
+    /// kernel is never planned. In-process counterpart of the
+    /// `PLAM_FORCE_SCALAR` env knob (which is latched once per
+    /// process); the equivalence suites use it to pin SIMD ≡ scalar
+    /// bit-identity within one run.
+    ForcePortable,
 }
 
 /// `Y[M, N] = X[M, K] · Wᵀ (+ bias)`, `W` row-major `[N, K]`, `bias`
@@ -628,16 +944,16 @@ pub fn gemm_bt_planes_with_policy(
     if let Some(b) = bias {
         assert_eq!(b.len(), n_dim, "gemm bias length mismatch");
     }
-    out.reset_planes(m_dim, n_dim);
+    out.reset_planes(m_dim, n_dim, plane_width(fmt));
     if m_dim == 0 || n_dim == 0 {
         return;
     }
     let kc = n_dim.div_ceil(KB);
+    let (planes, panels, row_meta) = out.writer_parts();
     let mut sink = PlaneSink {
-        scales: &mut out.scales,
-        sfracs: &mut out.sfracs,
-        panels: &mut out.panels,
-        row_meta: &mut out.row_meta,
+        planes,
+        panels,
+        row_meta,
         n_dim,
         kc,
         fmt,
@@ -664,18 +980,18 @@ pub fn gemm_bt_planes_pool(
     if let Some(b) = bias {
         assert_eq!(b.len(), n_dim, "gemm bias length mismatch");
     }
-    out.reset_planes(m_dim, n_dim);
+    out.reset_planes(m_dim, n_dim, plane_width(fmt));
     if m_dim == 0 || n_dim == 0 {
         return;
     }
     let kc = n_dim.div_ceil(KB);
     let workers = pool.workers();
     if workers <= 1 || m_dim <= MB {
+        let (planes, panels, row_meta) = out.writer_parts();
         let mut sink = PlaneSink {
-            scales: &mut out.scales,
-            sfracs: &mut out.sfracs,
-            panels: &mut out.panels,
-            row_meta: &mut out.row_meta,
+            planes,
+            panels,
+            row_meta,
             n_dim,
             kc,
             fmt,
@@ -698,20 +1014,33 @@ pub fn gemm_bt_planes_pool(
     }
     let bands = (workers * 4).min(m_dim.div_ceil(MB));
     let rows_per = m_dim.div_ceil(bands).div_ceil(MB) * MB;
-    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = out
-        .scales
-        .chunks_mut(rows_per * n_dim)
-        .zip(out.sfracs.chunks_mut(rows_per * n_dim))
+    // Chunk whichever plane pair is active into per-band mutable views;
+    // panel/row metadata chunk alongside on their own fields.
+    let band_planes: Vec<PlanesMut<'_>> = match out.width {
+        PlaneWidth::Wide => out
+            .scales
+            .chunks_mut(rows_per * n_dim)
+            .zip(out.sfracs.chunks_mut(rows_per * n_dim))
+            .map(|(s, f)| PlanesMut::Wide(s, f))
+            .collect(),
+        PlaneWidth::Narrow => out
+            .scales8
+            .chunks_mut(rows_per * n_dim)
+            .zip(out.sfracs8.chunks_mut(rows_per * n_dim))
+            .map(|(s, f)| PlanesMut::Narrow(s, f))
+            .collect(),
+    };
+    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = band_planes
+        .into_iter()
         .zip(out.panels.chunks_mut(rows_per * kc))
         .zip(out.row_meta.chunks_mut(rows_per))
         .enumerate()
-        .map(|(i, (((scales, sfracs), panels), row_meta))| {
+        .map(|(i, ((planes, panels), row_meta))| {
             let row0 = i * rows_per;
             Box::new(move || {
                 let rows = row_meta.len();
                 let mut sink = PlaneSink {
-                    scales,
-                    sfracs,
+                    planes,
                     panels,
                     row_meta,
                     n_dim,
@@ -826,6 +1155,55 @@ const PLAN_WINDOWED: u8 = 1;
 /// Windowed output that hit NaR: remaining chunks are skipped (NaR is
 /// absorbing) and read-out emits NaR directly.
 const PLAN_NAR: u8 = 2;
+/// Windowed output whose specials-free chunks run the narrow-plane
+/// AVX2 kernel (specials chunks still take the scalar sentinel loop
+/// into the same accumulator). Planned only for narrow operands under
+/// [`AccPolicy::Auto`] when [`simd_enabled`] and the row pair passes
+/// [`simd_window_fits`].
+const PLAN_WINDOWED_SIMD: u8 = 3;
+
+/// Largest combined row-pair scale span the SIMD lanes accept. Each
+/// lane carries `signed_product << (sa + sb − lo)` in an `i64`: exact
+/// products are ≤ 16 bits, the shift is ≤ span, and `KB/8 = 64`
+/// per-lane accumulations add 6 bits — `16 + 38 + 6 = 60` keeps two
+/// bits of headroom below the sign (the PLAM rule is smaller still:
+/// `8 + 39 + 6`). Every P8E0 row pair fits (span ≤ 24); adversarial
+/// P8E2 spreads fall back to the portable windowed loop.
+const SIMD_MAX_SPAN: i32 = 38;
+
+/// Lane-budget gate for [`PLAN_WINDOWED_SIMD`]: per-element vector
+/// shifts are bounded by the row pair's combined scale span relative
+/// to its minimum. Inverted (no-normals) metas never vectorize — all
+/// their chunks are specials anyway.
+#[inline(always)]
+fn simd_window_fits(xm: &PanelMeta, wm: &PanelMeta) -> bool {
+    if xm.min_scale > xm.max_scale || wm.min_scale > wm.max_scale {
+        return false;
+    }
+    let span = (xm.max_scale as i32 + wm.max_scale as i32)
+        - (xm.min_scale as i32 + wm.min_scale as i32);
+    span <= SIMD_MAX_SPAN
+}
+
+/// Runtime gate for the narrow-plane vector kernel: true when the host
+/// has AVX2 and `PLAM_FORCE_SCALAR` is unset in the environment. Both
+/// are latched on first use (the CI matrix sets the env to pin the
+/// portable loop for a whole process; in-process tests use
+/// [`AccPolicy::ForcePortable`] instead). Always false off x86_64.
+fn simd_enabled() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        static ENABLED: OnceLock<bool> = OnceLock::new();
+        *ENABLED.get_or_init(|| {
+            std::env::var_os("PLAM_FORCE_SCALAR").is_none()
+                && std::arch::is_x86_64_feature_detected!("avx2")
+        })
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
 
 /// Per-thread accumulator scratch: each pool worker (and the caller,
 /// for sequential runs) reuses one allocation across every shard it
@@ -925,8 +1303,9 @@ impl ReadoutSink for F32Sink<'_> {
 /// scale-window metadata as it writes, so the emitted matrix is
 /// immediately consumable as the next layer's GEMM operand.
 struct PlaneSink<'a> {
-    scales: &'a mut [i16],
-    sfracs: &'a mut [u32],
+    /// Width-dispatched view of the output's active plane pair —
+    /// [`readout_entry`] stays the single widen/narrow point.
+    planes: PlanesMut<'a>,
     panels: &'a mut [PanelMeta],
     row_meta: &'a mut [PanelMeta],
     n_dim: usize,
@@ -940,8 +1319,7 @@ impl ReadoutSink for PlaneSink<'_> {
     #[inline(always)]
     fn emit(&mut self, row: usize, col: usize, bits: u64) {
         let e = readout_entry(self.fmt, self.table, bits);
-        self.scales[row * self.n_dim + col] = e.scale;
-        self.sfracs[row * self.n_dim + col] = e.sfrac();
+        self.planes.set(row * self.n_dim + col, e.scale, e.sfrac());
         self.panels[row * self.kc + col / KB].fold_scale(e.scale);
         self.row_meta[row].fold_scale(e.scale);
     }
@@ -978,12 +1356,45 @@ fn gemm_posit_band_sink<S: ReadoutSink>(
     n_dim: usize,
     policy: AccPolicy,
 ) {
+    assert_eq!(
+        x.width, w.width,
+        "gemm operands must share one plane width (recode at the layer boundary)"
+    );
+    match x.width {
+        PlaneWidth::Wide => gemm_posit_band_impl::<WidePlanes, S>(
+            fmt, mul, x, w, bias, sink, row0, rows, k_dim, n_dim, policy,
+        ),
+        PlaneWidth::Narrow => gemm_posit_band_impl::<NarrowPlanes, S>(
+            fmt, mul, x, w, bias, sink, row0, rows, k_dim, n_dim, policy,
+        ),
+    }
+}
+
+fn gemm_posit_band_impl<P: PlaneElems, S: ReadoutSink>(
+    fmt: PositFormat,
+    mul: MulKind,
+    x: &EncodedMatrix,
+    w: &EncodedMatrix,
+    bias: Option<&[f32]>,
+    sink: &mut S,
+    row0: usize,
+    rows: usize,
+    k_dim: usize,
+    n_dim: usize,
+    policy: AccPolicy,
+) {
     // Bias pre-decoded once per band into Q30-aligned entries (the old
     // path ran a full `add_posit` decode per output per band).
     let bias_dec: Option<Vec<DecEntry>> =
         bias.map(|b| b.iter().map(|&v| decode_entry(fmt, from_f32(fmt, v))).collect());
     let x_kc = x.cols.div_ceil(KB);
     let w_kc = w.cols.div_ceil(KB);
+    let (x_scales, x_sfracs) = (P::scales(x), P::fracs(x));
+    let (w_scales, w_sfracs) = (P::scales(w), P::fracs(w));
+    // One latch per band: narrow operands on an AVX2 host vectorize
+    // their clean chunks unless the policy (or the env knob) pins the
+    // portable loop.
+    let simd = P::SIMD && policy == AccPolicy::Auto && simd_enabled();
     // Scratch sized to the rows actually used: an M=1 per-sample call
     // touches one tile row, not the full MB×NB panel.
     let scratch = rows.min(MB) * NB;
@@ -1003,14 +1414,21 @@ fn gemm_posit_band_sink<S: ReadoutSink>(
                     let xm = &x.row_meta[row0 + m0 + mi];
                     for ni in 0..nw {
                         let idx = mi * NB + ni;
+                        let wm = &w.row_meta[n0 + ni];
                         let anchor = match policy {
                             AccPolicy::ForceQuire => None,
-                            AccPolicy::Auto => product_window(mul, xm, &w.row_meta[n0 + ni], k_dim),
+                            AccPolicy::Auto | AccPolicy::ForcePortable => {
+                                product_window(mul, xm, wm, k_dim)
+                            }
                         };
                         match anchor {
                             Some(a) => {
                                 winds[idx].reset(a);
-                                plans[idx] = PLAN_WINDOWED;
+                                plans[idx] = if simd && simd_window_fits(xm, wm) {
+                                    PLAN_WINDOWED_SIMD
+                                } else {
+                                    PLAN_WINDOWED
+                                };
                             }
                             None => {
                                 quires[idx].clear();
@@ -1024,24 +1442,36 @@ fn gemm_posit_band_sink<S: ReadoutSink>(
                     let kc = k0 / KB;
                     for mi in 0..mh {
                         let xoff = (row0 + m0 + mi) * k_dim + k0;
-                        let xs = &x.scales[xoff..xoff + kw];
-                        let xf = &x.sfracs[xoff..xoff + kw];
+                        let xs = &x_scales[xoff..xoff + kw];
+                        let xf = &x_sfracs[xoff..xoff + kw];
                         let x_specials = x.panels[(row0 + m0 + mi) * x_kc + kc].specials;
                         for ni in 0..nw {
                             let idx = mi * NB + ni;
                             let woff = (n0 + ni) * k_dim + k0;
-                            let ws = &w.scales[woff..woff + kw];
-                            let wf = &w.sfracs[woff..woff + kw];
+                            let ws = &w_scales[woff..woff + kw];
+                            let wf = &w_sfracs[woff..woff + kw];
                             match plans[idx] {
                                 PLAN_NAR => {}
-                                PLAN_QUIRE => quire_dot(mul, &mut quires[idx], xs, xf, ws, wf),
+                                PLAN_QUIRE => {
+                                    quire_dot::<P>(mul, &mut quires[idx], xs, xf, ws, wf)
+                                }
+                                PLAN_WINDOWED_SIMD => {
+                                    let wa = &mut winds[idx];
+                                    let specials =
+                                        x_specials | w.panels[(n0 + ni) * w_kc + kc].specials;
+                                    if specials == 0 {
+                                        P::simd_dot(mul, wa, xs, xf, ws, wf);
+                                    } else if windowed_dot_specials::<P>(mul, wa, xs, xf, ws, wf) {
+                                        plans[idx] = PLAN_NAR;
+                                    }
+                                }
                                 _ => {
                                     let wa = &mut winds[idx];
                                     let specials =
                                         x_specials | w.panels[(n0 + ni) * w_kc + kc].specials;
                                     if specials == 0 {
-                                        windowed_dot_clean(mul, wa, xs, xf, ws, wf);
-                                    } else if windowed_dot_specials(mul, wa, xs, xf, ws, wf) {
+                                        windowed_dot_clean::<P>(mul, wa, xs, xf, ws, wf);
+                                    } else if windowed_dot_specials::<P>(mul, wa, xs, xf, ws, wf) {
                                         plans[idx] = PLAN_NAR;
                                     }
                                 }
@@ -1142,27 +1572,172 @@ fn quire_mac(product: impl ProductRule, q: &mut FastQuire, sa: i16, fa: u32, sb:
     q.add_product64(sig, scale, neg);
 }
 
+/// Plane-width abstraction for the band kernel: one impl per
+/// [`PlaneWidth`]. The scalar MAC loops monomorphize over the element
+/// types and widen each element to the wide `(scale, sfrac)` pair the
+/// product rules consume — exact by construction for narrow elements —
+/// so wide and narrow operands produce bit-identical accumulations.
+trait PlaneElems {
+    /// Scale plane element (`i16` wide, `i8` narrow).
+    type Scale: Copy;
+    /// Sign+fraction plane element (`u32` wide, `u8` narrow).
+    type Frac: Copy;
+    /// Whether [`PLAN_WINDOWED_SIMD`] may be selected for this width
+    /// on this compilation target.
+    const SIMD: bool;
+    /// The active scale plane of `m` at this width.
+    fn scales(m: &EncodedMatrix) -> &[Self::Scale];
+    /// The active sign+fraction plane of `m` at this width.
+    fn fracs(m: &EncodedMatrix) -> &[Self::Frac];
+    /// Widen one element to the wide `(scale, sfrac)` pair.
+    fn widen(s: Self::Scale, f: Self::Frac) -> (i16, u32);
+    /// Vector dot over one specials-free chunk at the windowed anchor.
+    /// Only reachable through [`PLAN_WINDOWED_SIMD`], which the planner
+    /// emits solely for narrow operands after runtime AVX2 detection.
+    fn simd_dot(
+        mul: MulKind,
+        wa: &mut WindowedAcc,
+        xs: &[Self::Scale],
+        xf: &[Self::Frac],
+        ws: &[Self::Scale],
+        wf: &[Self::Frac],
+    );
+}
+
+/// Wide (`i16`/`u32`) plane access — the scalar loops as they were.
+struct WidePlanes;
+
+impl PlaneElems for WidePlanes {
+    type Scale = i16;
+    type Frac = u32;
+    const SIMD: bool = false;
+
+    #[inline(always)]
+    fn scales(m: &EncodedMatrix) -> &[i16] {
+        &m.scales
+    }
+
+    #[inline(always)]
+    fn fracs(m: &EncodedMatrix) -> &[u32] {
+        &m.sfracs
+    }
+
+    #[inline(always)]
+    fn widen(s: i16, f: u32) -> (i16, u32) {
+        (s, f)
+    }
+
+    fn simd_dot(
+        _mul: MulKind,
+        _wa: &mut WindowedAcc,
+        _xs: &[i16],
+        _xf: &[u32],
+        _ws: &[i16],
+        _wf: &[u32],
+    ) {
+        unreachable!("SIMD plan requires narrow planes")
+    }
+}
+
+/// Narrow (`i8`/`u8`) plane access: scalar loops widen per element;
+/// clean windowed chunks may take the AVX2 kernel.
+struct NarrowPlanes;
+
+impl PlaneElems for NarrowPlanes {
+    type Scale = i8;
+    type Frac = u8;
+    const SIMD: bool = cfg!(target_arch = "x86_64");
+
+    #[inline(always)]
+    fn scales(m: &EncodedMatrix) -> &[i8] {
+        &m.scales8
+    }
+
+    #[inline(always)]
+    fn fracs(m: &EncodedMatrix) -> &[u8] {
+        &m.sfracs8
+    }
+
+    #[inline(always)]
+    fn widen(s: i8, f: u8) -> (i16, u32) {
+        (widen_scale8(s), widen_sfrac8(f))
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    fn simd_dot(
+        mul: MulKind,
+        wa: &mut WindowedAcc,
+        xs: &[i8],
+        xf: &[u8],
+        ws: &[i8],
+        wf: &[u8],
+    ) {
+        // The lanes sum on the narrow grid relative to the row pair's
+        // combined minimum scale `lo`; the chunk sum folds back to the
+        // wide-grid anchor in one shift (`sig30 = sig7 << (FW − NFW)`,
+        // so exact products widen by 2·(FW − NFW) and PLAM sums by
+        // FW − NFW — see `WindowedAcc::accumulate`). The anchor itself
+        // encodes `lo` per product rule ([`product_window`]).
+        //
+        // SAFETY: the planner emits PLAN_WINDOWED_SIMD only after
+        // `simd_enabled()` confirmed runtime AVX2 support.
+        match mul {
+            MulKind::Exact => {
+                let lo = wa.anchor() + 2 * FW as i32;
+                let s = unsafe { simd::dot_chunk_exact(xs, xf, ws, wf, lo) };
+                wa.accumulate(s << (2 * (FW - NFW)));
+            }
+            MulKind::Plam => {
+                let lo = wa.anchor() + FW as i32;
+                let s = unsafe { simd::dot_chunk_plam(xs, xf, ws, wf, lo) };
+                wa.accumulate(s << (FW - NFW));
+            }
+        }
+    }
+
+    #[cfg(not(target_arch = "x86_64"))]
+    fn simd_dot(
+        _mul: MulKind,
+        _wa: &mut WindowedAcc,
+        _xs: &[i8],
+        _xf: &[u8],
+        _ws: &[i8],
+        _wf: &[u8],
+    ) {
+        unreachable!("SIMD plan requires an x86_64 AVX2 host")
+    }
+}
+
 /// FastQuire fallback dot over one panel chunk: sentinel branches per
 /// element, offset computation and two limb writes per MAC.
 #[inline(always)]
-fn quire_dot(mul: MulKind, q: &mut FastQuire, xs: &[i16], xf: &[u32], ws: &[i16], wf: &[u32]) {
+fn quire_dot<P: PlaneElems>(
+    mul: MulKind,
+    q: &mut FastQuire,
+    xs: &[P::Scale],
+    xf: &[P::Frac],
+    ws: &[P::Scale],
+    wf: &[P::Frac],
+) {
     match mul {
-        MulKind::Exact => quire_dot_with(exact_product, q, xs, xf, ws, wf),
-        MulKind::Plam => quire_dot_with(plam_product, q, xs, xf, ws, wf),
+        MulKind::Exact => quire_dot_with::<P>(exact_product, q, xs, xf, ws, wf),
+        MulKind::Plam => quire_dot_with::<P>(plam_product, q, xs, xf, ws, wf),
     }
 }
 
 #[inline(always)]
-fn quire_dot_with(
+fn quire_dot_with<P: PlaneElems>(
     product: impl ProductRule,
     q: &mut FastQuire,
-    xs: &[i16],
-    xf: &[u32],
-    ws: &[i16],
-    wf: &[u32],
+    xs: &[P::Scale],
+    xf: &[P::Frac],
+    ws: &[P::Scale],
+    wf: &[P::Frac],
 ) {
     for k in 0..xs.len() {
-        quire_mac(product, q, xs[k], xf[k], ws[k], wf[k]);
+        let (sa, fa) = P::widen(xs[k], xf[k]);
+        let (sb, fb) = P::widen(ws[k], wf[k]);
+        quire_mac(product, q, sa, fa, sb, fb);
     }
 }
 
@@ -1182,33 +1757,35 @@ fn signed_shifted(sig: u64, scale: i32, neg: bool, anchor: i32) -> i128 {
 /// once; exactness is guaranteed by the window feasibility check (the
 /// whole row's |sum| stays below 2^126, so every partial sum does).
 #[inline(always)]
-fn windowed_dot_clean(
+fn windowed_dot_clean<P: PlaneElems>(
     mul: MulKind,
     wa: &mut WindowedAcc,
-    xs: &[i16],
-    xf: &[u32],
-    ws: &[i16],
-    wf: &[u32],
+    xs: &[P::Scale],
+    xf: &[P::Frac],
+    ws: &[P::Scale],
+    wf: &[P::Frac],
 ) {
     match mul {
-        MulKind::Exact => windowed_dot_clean_with(exact_product, wa, xs, xf, ws, wf),
-        MulKind::Plam => windowed_dot_clean_with(plam_product, wa, xs, xf, ws, wf),
+        MulKind::Exact => windowed_dot_clean_with::<P>(exact_product, wa, xs, xf, ws, wf),
+        MulKind::Plam => windowed_dot_clean_with::<P>(plam_product, wa, xs, xf, ws, wf),
     }
 }
 
 #[inline(always)]
-fn windowed_dot_clean_with(
+fn windowed_dot_clean_with<P: PlaneElems>(
     product: impl ProductRule,
     wa: &mut WindowedAcc,
-    xs: &[i16],
-    xf: &[u32],
-    ws: &[i16],
-    wf: &[u32],
+    xs: &[P::Scale],
+    xf: &[P::Frac],
+    ws: &[P::Scale],
+    wf: &[P::Frac],
 ) {
     let n = xs.len();
     let anchor = wa.anchor();
     let term = |k: usize| {
-        let (sig, scale, neg) = product(xs[k], xf[k], ws[k], wf[k]);
+        let (sa, fa) = P::widen(xs[k], xf[k]);
+        let (sb, fb) = P::widen(ws[k], wf[k]);
+        let (sig, scale, neg) = product(sa, fa, sb, fb);
         signed_shifted(sig, scale, neg, anchor)
     };
     let mut sum = 0i128;
@@ -1228,30 +1805,31 @@ fn windowed_dot_clean_with(
 /// NaRs: per-element sentinel branches, NaR checked first (`0 × NaR`
 /// poisons) and short-circuiting — it is absorbing, so the caller
 /// flips the output's plan to `PLAN_NAR` when this returns true.
-fn windowed_dot_specials(
+fn windowed_dot_specials<P: PlaneElems>(
     mul: MulKind,
     wa: &mut WindowedAcc,
-    xs: &[i16],
-    xf: &[u32],
-    ws: &[i16],
-    wf: &[u32],
+    xs: &[P::Scale],
+    xf: &[P::Frac],
+    ws: &[P::Scale],
+    wf: &[P::Frac],
 ) -> bool {
     match mul {
-        MulKind::Exact => windowed_dot_specials_with(exact_product, wa, xs, xf, ws, wf),
-        MulKind::Plam => windowed_dot_specials_with(plam_product, wa, xs, xf, ws, wf),
+        MulKind::Exact => windowed_dot_specials_with::<P>(exact_product, wa, xs, xf, ws, wf),
+        MulKind::Plam => windowed_dot_specials_with::<P>(plam_product, wa, xs, xf, ws, wf),
     }
 }
 
-fn windowed_dot_specials_with(
+fn windowed_dot_specials_with<P: PlaneElems>(
     product: impl ProductRule,
     wa: &mut WindowedAcc,
-    xs: &[i16],
-    xf: &[u32],
-    ws: &[i16],
-    wf: &[u32],
+    xs: &[P::Scale],
+    xf: &[P::Frac],
+    ws: &[P::Scale],
+    wf: &[P::Frac],
 ) -> bool {
     for k in 0..xs.len() {
-        let (sa, sb) = (xs[k], ws[k]);
+        let (sa, fa) = P::widen(xs[k], xf[k]);
+        let (sb, fb) = P::widen(ws[k], wf[k]);
         if sa == SCALE_NAR || sb == SCALE_NAR {
             wa.set_nar();
             return true;
@@ -1259,10 +1837,185 @@ fn windowed_dot_specials_with(
         if sa == SCALE_ZERO || sb == SCALE_ZERO {
             continue;
         }
-        let (sig, scale, neg) = product(sa, xf[k], sb, wf[k]);
+        let (sig, scale, neg) = product(sa, fa, sb, fb);
         wa.add_product64(sig, scale, neg);
     }
     false
+}
+
+/// AVX2 lanes for the narrow-plane windowed MAC. Both kernels compute
+/// bit-exactly what the scalar loops compute — eight elements per
+/// step, each lane holding `±sig · 2^(shift)` on the narrow grid; the
+/// caller folds the chunk sum back to the wide anchor (see
+/// [`NarrowPlanes::simd_dot`]).
+#[cfg(target_arch = "x86_64")]
+mod simd {
+    use std::arch::x86_64::*;
+
+    use crate::posit::tables::{NFW, SFRAC8_FRAC_MASK, SFRAC8_SIGN};
+
+    /// Sum the signed `i64` lanes of two accumulators into one `i128`.
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum(a: __m256i, b: __m256i) -> i128 {
+        let mut buf = [0i64; 4];
+        _mm256_storeu_si256(buf.as_mut_ptr() as *mut __m256i, a);
+        let mut s: i128 = buf.iter().map(|&v| v as i128).sum();
+        _mm256_storeu_si256(buf.as_mut_ptr() as *mut __m256i, b);
+        s += buf.iter().map(|&v| v as i128).sum::<i128>();
+        s
+    }
+
+    /// Load 8 narrow scales sign-extended to `i32` lanes.
+    #[target_feature(enable = "avx2")]
+    unsafe fn load_scales(p: *const i8) -> __m256i {
+        _mm256_cvtepi8_epi32(_mm_loadl_epi64(p as *const __m128i))
+    }
+
+    /// Load 8 narrow sign+frac bytes zero-extended to `u32` lanes.
+    #[target_feature(enable = "avx2")]
+    unsafe fn load_sfracs(p: *const u8) -> __m256i {
+        _mm256_cvtepu8_epi32(_mm_loadl_epi64(p as *const __m128i))
+    }
+
+    /// Apply per-lane signs (bit 7 of `xf ^ wf`) to `v` branch-free:
+    /// `(v ^ m) − m` with `m` the sign stretched to a full lane mask.
+    #[target_feature(enable = "avx2")]
+    unsafe fn apply_sign(v: __m256i, xfv: __m256i, wfv: __m256i) -> __m256i {
+        let m = _mm256_srai_epi32::<31>(_mm256_slli_epi32::<24>(_mm256_xor_si256(xfv, wfv)));
+        _mm256_sub_epi32(_mm256_xor_si256(v, m), m)
+    }
+
+    /// Widen 8 signed `i32` lanes to `i64`, shift each left by its
+    /// `i32` lane count, and add into the two accumulators.
+    #[target_feature(enable = "avx2")]
+    unsafe fn shift_accumulate(
+        acc0: __m256i,
+        acc1: __m256i,
+        signed: __m256i,
+        shift: __m256i,
+    ) -> (__m256i, __m256i) {
+        let lo = _mm256_sllv_epi64(
+            _mm256_cvtepi32_epi64(_mm256_castsi256_si128(signed)),
+            _mm256_cvtepi32_epi64(_mm256_castsi256_si128(shift)),
+        );
+        let hi = _mm256_sllv_epi64(
+            _mm256_cvtepi32_epi64(_mm256_extracti128_si256::<1>(signed)),
+            _mm256_cvtepi32_epi64(_mm256_extracti128_si256::<1>(shift)),
+        );
+        (_mm256_add_epi64(acc0, lo), _mm256_add_epi64(acc1, hi))
+    }
+
+    /// Exact-rule dot over one specials-free narrow chunk: the chunk
+    /// sum in narrow product units (`· 2^(lo − 2·NFW)`), where `lo` is
+    /// the row pair's combined minimum scale. Bit-equal to the scalar
+    /// terms by `sig30a · sig30b = (sig7a · sig7b) << 2·(FW − NFW)`.
+    ///
+    /// # Safety
+    /// Requires runtime AVX2. All four slices must share one length;
+    /// every element must be a normal (no sentinels) with
+    /// `xs[k] + ws[k] − lo ∈ [0, SIMD_MAX_SPAN]`.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn dot_chunk_exact(
+        xs: &[i8],
+        xf: &[u8],
+        ws: &[i8],
+        wf: &[u8],
+        lo: i32,
+    ) -> i128 {
+        let n = xs.len();
+        let frac = _mm256_set1_epi32(SFRAC8_FRAC_MASK as i32);
+        let hidden = _mm256_set1_epi32(1 << NFW);
+        let lo_v = _mm256_set1_epi32(lo);
+        let mut acc0 = _mm256_setzero_si256();
+        let mut acc1 = _mm256_setzero_si256();
+        let mut k = 0;
+        while k + 8 <= n {
+            let xsv = load_scales(xs.as_ptr().add(k));
+            let wsv = load_scales(ws.as_ptr().add(k));
+            let xfv = load_sfracs(xf.as_ptr().add(k));
+            let wfv = load_sfracs(wf.as_ptr().add(k));
+            let siga = _mm256_or_si256(_mm256_and_si256(xfv, frac), hidden);
+            let sigb = _mm256_or_si256(_mm256_and_si256(wfv, frac), hidden);
+            let prod = _mm256_mullo_epi32(siga, sigb);
+            let signed = apply_sign(prod, xfv, wfv);
+            let shift = _mm256_sub_epi32(_mm256_add_epi32(xsv, wsv), lo_v);
+            (acc0, acc1) = shift_accumulate(acc0, acc1, signed, shift);
+            k += 8;
+        }
+        let mut sum = hsum(acc0, acc1);
+        while k < n {
+            let siga = ((1u32 << NFW) | (xf[k] & SFRAC8_FRAC_MASK) as u32) as i64;
+            let sigb = ((1u32 << NFW) | (wf[k] & SFRAC8_FRAC_MASK) as u32) as i64;
+            let shift = (xs[k] as i32 + ws[k] as i32 - lo) as u32;
+            let v = (siga * sigb) << shift;
+            sum += if (xf[k] ^ wf[k]) & SFRAC8_SIGN != 0 {
+                -(v as i128)
+            } else {
+                v as i128
+            };
+            k += 1;
+        }
+        sum
+    }
+
+    /// PLAM-rule dot (paper Eq. 17 with the Eq. 20/21 carry) over one
+    /// specials-free narrow chunk: the chunk sum in narrow units
+    /// (`· 2^(lo − NFW)`). Bit-equal to the scalar terms because
+    /// `fsum30 = fsum7 << (FW − NFW)` keeps the same carry bit and the
+    /// same retained fraction bits in both widths.
+    ///
+    /// # Safety
+    /// Same contract as [`dot_chunk_exact`].
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn dot_chunk_plam(
+        xs: &[i8],
+        xf: &[u8],
+        ws: &[i8],
+        wf: &[u8],
+        lo: i32,
+    ) -> i128 {
+        let n = xs.len();
+        let frac = _mm256_set1_epi32(SFRAC8_FRAC_MASK as i32);
+        let hidden = _mm256_set1_epi32(1 << NFW);
+        let lo_v = _mm256_set1_epi32(lo);
+        let mut acc0 = _mm256_setzero_si256();
+        let mut acc1 = _mm256_setzero_si256();
+        let mut k = 0;
+        while k + 8 <= n {
+            let xsv = load_scales(xs.as_ptr().add(k));
+            let wsv = load_scales(ws.as_ptr().add(k));
+            let xfv = load_sfracs(xf.as_ptr().add(k));
+            let wfv = load_sfracs(wf.as_ptr().add(k));
+            let fsum = _mm256_add_epi32(
+                _mm256_and_si256(xfv, frac),
+                _mm256_and_si256(wfv, frac),
+            );
+            let carry = _mm256_srli_epi32::<{ NFW as i32 }>(fsum);
+            let sig = _mm256_or_si256(_mm256_and_si256(fsum, frac), hidden);
+            let signed = apply_sign(sig, xfv, wfv);
+            let shift = _mm256_add_epi32(
+                _mm256_sub_epi32(_mm256_add_epi32(xsv, wsv), lo_v),
+                carry,
+            );
+            (acc0, acc1) = shift_accumulate(acc0, acc1, signed, shift);
+            k += 8;
+        }
+        let mut sum = hsum(acc0, acc1);
+        while k < n {
+            let fsum = (xf[k] & SFRAC8_FRAC_MASK) as u32 + (wf[k] & SFRAC8_FRAC_MASK) as u32;
+            let carry = (fsum >> NFW) as i32;
+            let sig = ((1u32 << NFW) | (fsum & SFRAC8_FRAC_MASK as u32)) as i64;
+            let shift = (xs[k] as i32 + ws[k] as i32 + carry - lo) as u32;
+            let v = sig << shift;
+            sum += if (xf[k] ^ wf[k]) & SFRAC8_SIGN != 0 {
+                -(v as i128)
+            } else {
+                v as i128
+            };
+            k += 1;
+        }
+        sum
+    }
 }
 
 /// im2col: gather `[ic, h, w]` input patches into a row-major
@@ -1388,8 +2141,11 @@ pub fn conv2d_gemm(
 pub(crate) fn assert_planes_eq(a: &EncodedMatrix, b: &EncodedMatrix, ctx: &str) {
     assert_eq!(a.rows, b.rows, "{ctx}: rows");
     assert_eq!(a.cols, b.cols, "{ctx}: cols");
+    assert_eq!(a.width, b.width, "{ctx}: plane width");
     assert_eq!(a.scales, b.scales, "{ctx}: scale plane");
     assert_eq!(a.sfracs, b.sfracs, "{ctx}: sfrac plane");
+    assert_eq!(a.scales8, b.scales8, "{ctx}: narrow scale plane");
+    assert_eq!(a.sfracs8, b.sfracs8, "{ctx}: narrow sfrac plane");
     assert_eq!(a.panels, b.panels, "{ctx}: panel metadata");
     assert_eq!(a.row_meta, b.row_meta, "{ctx}: row metadata");
 }
@@ -1870,6 +2626,110 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    #[test]
+    fn narrow_planes_are_selected_and_widen_to_the_wide_encode() {
+        use std::mem::size_of;
+        // n ≤ 8 formats store 2 B/element narrow planes whose widened
+        // elements — and panel metadata — match the wide-forced encode
+        // of the same data exactly.
+        for fmt in [PositFormat::P8E0, PositFormat::P8E2] {
+            let mode = ArithMode::posit_plam(fmt);
+            let mut rng = Rng::new(0x8B + fmt.es as u64);
+            let (rows, cols) = (4, 150);
+            let mut data = random_matrix(&mut rng, rows, cols);
+            data[0] = 0.0;
+            data[151] = f32::NAN;
+            let narrow = encode_matrix(&mode, rows, cols, &data);
+            assert_eq!(narrow.width(), PlaneWidth::Narrow);
+            assert!(narrow.scales.is_empty() && narrow.sfracs.is_empty());
+            let wide = encode_matrix_wide(&mode, rows, cols, &data);
+            assert_eq!(wide.width(), PlaneWidth::Wide);
+            assert!(wide.scales8.is_empty() && wide.sfracs8.is_empty());
+            assert_eq!(narrow.panels, wide.panels, "panel metadata is width-blind");
+            assert_eq!(narrow.row_meta, wide.row_meta);
+            for i in 0..rows * cols {
+                assert_eq!(narrow.elem(i), wide.elem(i), "{fmt} elem {i}");
+            }
+            let meta = (narrow.panels.len() + narrow.row_meta.len()) * size_of::<PanelMeta>();
+            assert_eq!(narrow.bytes(), rows * cols * 2 + meta, "2 B/element narrow");
+            assert_eq!(wide.bytes(), rows * cols * 6 + meta, "6 B/element wide");
+        }
+        // Wider formats keep the wide layout.
+        let w16 = encode_matrix(&ArithMode::posit_plam(PositFormat::P16E1), 1, 4, &[1.0; 4]);
+        assert_eq!(w16.width(), PlaneWidth::Wide);
+    }
+
+    #[test]
+    fn plane_cache_collision_falls_through_to_fresh_encode() {
+        let cache = PlaneCache::new(1 << 20);
+        let mode = ArithMode::posit_plam(PositFormat::P16E1);
+        let a = vec![1.0f32, 2.0, 3.0, 4.0];
+        let b = vec![5.0f32, 6.0, 7.0, 8.0];
+        // Force both data sets onto one lookup key — the seam emulates
+        // a 64-bit FNV collision, which the verifier digest must catch
+        // (pre-fix, the cache would silently serve `a`'s planes as
+        // `b`'s).
+        let key = PlaneKey {
+            mode: mode_key(&mode),
+            rows: 2,
+            cols: 2,
+            fnv: 0xDEAD_BEEF,
+        };
+        let (_, va) = fingerprints(&a);
+        let (_, vb) = fingerprints(&b);
+        assert_ne!(va, vb, "distinct data must have distinct verifiers");
+        let pa = cache.encode_keyed(key, va, &mode, 2, 2, &a);
+        let pa2 = cache.encode_keyed(key, va, &mode, 2, 2, &a);
+        assert!(Arc::ptr_eq(&pa, &pa2), "same data still hits");
+        assert_eq!(cache.collisions(), 0);
+        let pb = cache.encode_keyed(key, vb, &mode, 2, 2, &b);
+        assert!(!Arc::ptr_eq(&pa, &pb), "colliding key must not serve the old plane");
+        assert_planes_eq(&pb, &encode_matrix(&mode, 2, 2, &b), "collision re-encode");
+        assert_eq!(cache.collisions(), 1);
+        assert_eq!(cache.len(), 1, "colliding entry replaced, not duplicated");
+        let pb2 = cache.encode_keyed(key, vb, &mode, 2, 2, &b);
+        assert!(Arc::ptr_eq(&pb, &pb2), "replacement entry hits for the new data");
+    }
+
+    #[test]
+    fn narrow_simd_portable_quire_and_wide_agree_bit_for_bit() {
+        // The SIMD plan, the portable scalar loop, the quire fallback,
+        // and the wide-forced encode of the same data must all round
+        // to the same bits. K = 600 spans two KB chunks; the specials
+        // sprinkled into x knock chunks off the vector path mid-row.
+        for mode in [
+            ArithMode::posit_exact(PositFormat::P8E0),
+            ArithMode::posit_plam(PositFormat::P8E0),
+            ArithMode::posit_exact(PositFormat::P8E2),
+            ArithMode::posit_plam(PositFormat::P8E2),
+        ] {
+            let (m, k, n) = (5, 600, 9);
+            let mut rng = Rng::new(0x51D);
+            let mut x = random_matrix(&mut rng, m, k);
+            x[3] = 0.0;
+            x[k + 7] = f32::NAN;
+            let w = random_matrix(&mut rng, n, k);
+            let bias: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 0.1).collect();
+            let xe = encode_matrix(&mode, m, k, &x);
+            let we = encode_matrix(&mode, n, k, &w);
+            assert_eq!(xe.width(), PlaneWidth::Narrow);
+            let mut auto = vec![0f32; m * n];
+            gemm_bt_with_policy(&mode, &xe, &we, Some(&bias), &mut auto, AccPolicy::Auto);
+            for policy in [AccPolicy::ForcePortable, AccPolicy::ForceQuire] {
+                let mut got = vec![0f32; m * n];
+                gemm_bt_with_policy(&mode, &xe, &we, Some(&bias), &mut got, policy);
+                let same = auto.iter().zip(got.iter()).all(|(a, b)| a.to_bits() == b.to_bits());
+                assert!(same, "{} {policy:?}", mode.name());
+            }
+            let xw = encode_matrix_wide(&mode, m, k, &x);
+            let ww = encode_matrix_wide(&mode, n, k, &w);
+            let mut wide = vec![0f32; m * n];
+            gemm_bt(&mode, &xw, &ww, Some(&bias), &mut wide);
+            let same = auto.iter().zip(wide.iter()).all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(same, "{} wide operands", mode.name());
         }
     }
 

@@ -31,9 +31,9 @@ pub mod prepared;
 
 pub use encoded::EncodedTensor;
 pub use gemm::{
-    encode_matrix, encode_matrix_into, gemm_bt, gemm_bt_planes, gemm_bt_planes_pool,
-    gemm_bt_planes_with_policy, gemm_bt_pool, gemm_bt_pool_with_policy, gemm_bt_with_policy,
-    AccPolicy, EncodedMatrix, PanelMeta, PlaneCache,
+    encode_matrix, encode_matrix_into, encode_matrix_wide, gemm_bt, gemm_bt_planes,
+    gemm_bt_planes_pool, gemm_bt_planes_with_policy, gemm_bt_pool, gemm_bt_pool_with_policy,
+    gemm_bt_with_policy, plane_width, AccPolicy, EncodedMatrix, PanelMeta, PlaneCache, PlaneWidth,
 };
 pub use layers::{ArithMode, Layer, MulKind};
 pub use plan::{format_slug, parse_format, FormatPlan, LayerArith};

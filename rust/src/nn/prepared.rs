@@ -903,10 +903,23 @@ mod tests {
             &FormatPlan::PerLayer(vec![PositFormat::P16E1, PositFormat::P8E0]),
         )
         .unwrap();
+        let p16 = match &mixed.layers[0] {
+            Prepared::Dense { w, .. } => w.bytes(),
+            _ => unreachable!(),
+        };
+        let p8 = match &mixed.layers[2] {
+            Prepared::Dense { w, .. } => w.bytes(),
+            _ => unreachable!(),
+        };
+        assert_eq!(p16, one_plane);
+        assert!(
+            p8 < p16,
+            "P8E0 selects the 2 B/element narrow planes ({p8} vs {p16})"
+        );
         assert_eq!(
             mixed.encoded_bytes(),
-            2 * one_plane,
-            "distinct formats are distinct planes (same SoA layout width)"
+            p16 + p8,
+            "distinct formats are distinct planes"
         );
     }
 

@@ -325,6 +325,14 @@ impl WindowedAcc {
     /// Add a pre-shifted partial sum in accumulator units
     /// (`delta · 2^anchor`). The unrolled GEMM inner loops build a
     /// chunk-local sum and fold it in once.
+    ///
+    /// This is also the SIMD kernel's fold-in point: a narrow-plane
+    /// chunk sum accumulated at a *coarser* grid (`S · 2^(anchor + g)`
+    /// for some fixed `g ≥ 0` — the vector lanes shift by
+    /// `scale − anchor − g`, keeping lane magnitudes in `i64`) folds in
+    /// exactly as `accumulate(S << g)`. The window contract covers the
+    /// shifted value because it is the same real sum the scalar loop
+    /// would have built.
     #[inline(always)]
     pub fn accumulate(&mut self, delta: i128) {
         self.acc += delta;
@@ -572,5 +580,39 @@ mod tests {
         a.add_product64(9, 0, true);
         b.accumulate((7i128 << 3) - 9);
         assert_eq!(a.to_posit(P16), b.to_posit(P16));
+    }
+
+    #[test]
+    fn accumulate_folds_coarse_grid_partial_sums() {
+        // The SIMD contract: a chunk sum S built on a grid 2^g coarser
+        // than the anchor folds in as `accumulate(S << g)` and lands on
+        // exactly the per-product accumulation. Mirror the narrow GEMM
+        // kernel: products of Q7 significands (≤ 16 bits) summed at the
+        // row-minimum product scale, folded at g = 46 (exact rule's
+        // 2·(FW − NFW)) into an anchor 60 below — plus a signed mix.
+        let (g, lo) = (46u32, -12i32);
+        let anchor = lo - 60;
+        let mut per_product = WindowedAcc::new(anchor);
+        let mut folded = WindowedAcc::new(anchor);
+        let mut s: i128 = 0;
+        let terms: [(u64, i32, bool); 4] = [
+            (0x81 * 0xff, 0, false),
+            (0x80 * 0x80, 5, true),
+            (0xaa * 0x91, 2, false),
+            (0xff * 0xff, 7, true),
+        ];
+        for &(sig7prod, rel, neg) in &terms {
+            // Scalar reference: the same product widened to the Q30
+            // grid (sig30a·sig30b = (sig7a·sig7b) << 46) at its true
+            // product scale `lo + rel − 60`, exactly as the scalar
+            // windowed loop adds it.
+            per_product.add_product64(sig7prod << g, lo + rel - 60, neg);
+            // SIMD lane: narrow-unit product shifted by its scale
+            // relative to the row minimum.
+            let v = (sig7prod as i128) << rel;
+            s += if neg { -v } else { v };
+        }
+        folded.accumulate(s << g);
+        assert_eq!(per_product.to_posit(P16), folded.to_posit(P16));
     }
 }

@@ -83,6 +83,82 @@ pub fn sfrac_significand(sf: u32) -> u32 {
     (1u32 << FW) | (sf & SFRAC_FRAC_MASK)
 }
 
+// ---------------------------------------------------------------------
+// Narrow plane element layout (n ≤ 8 formats)
+// ---------------------------------------------------------------------
+//
+// Every n ≤ 8 posit format fits a 2-byte plane element: scales stay
+// within ±(n−2)·2^es ≤ 24 (i8 range) and fractions carry at most
+// n − 3 − es ≤ 5 bits (≤ NFW). The narrow layout is the wide one with
+// the fraction re-aligned from FW = 30 to NFW = 7 bits — frac30's low
+// FW − NFW = 23 bits are provably zero for these formats, so
+// narrowing is lossless and widening is an exact shift.
+
+/// Fraction alignment of narrow plane elements: fractions are
+/// left-aligned to 7 bits so significands fit `u8` and products fit
+/// `u16`. Mirrors [`FW`] for the wide layout.
+pub const NFW: u32 = 7;
+
+/// Sentinel scale for posit zero in a narrow (`i8`) scale plane.
+pub const SCALE8_ZERO: i8 = i8::MIN;
+/// Sentinel scale for NaR in a narrow (`i8`) scale plane.
+pub const SCALE8_NAR: i8 = i8::MAX;
+
+/// Sign bit of a narrow packed sign+frac byte: the NFW-bit fraction
+/// occupies bits `0..NFW`, the sign rides in bit 7.
+pub const SFRAC8_SIGN: u8 = 1 << NFW;
+/// Mask selecting the NFW-bit fraction out of a narrow sign+frac byte.
+pub const SFRAC8_FRAC_MASK: u8 = (1 << NFW) - 1;
+
+/// Narrow a wide plane scale to the `i8` plane, sentinel-preserving.
+/// The caller guarantees the element came from an n ≤ 8 format (scales
+/// within ±24); out-of-range normal scales are a contract violation.
+#[inline(always)]
+pub fn narrow_scale(s: i16) -> i8 {
+    match s {
+        SCALE_ZERO => SCALE8_ZERO,
+        SCALE_NAR => SCALE8_NAR,
+        _ => {
+            debug_assert!(
+                s > SCALE8_ZERO as i16 && s < SCALE8_NAR as i16,
+                "scale {s} does not fit the narrow plane"
+            );
+            s as i8
+        }
+    }
+}
+
+/// Widen a narrow plane scale back to the `i16` plane,
+/// sentinel-preserving. Exact inverse of [`narrow_scale`].
+#[inline(always)]
+pub fn widen_scale8(s: i8) -> i16 {
+    match s {
+        SCALE8_ZERO => SCALE_ZERO,
+        SCALE8_NAR => SCALE_NAR,
+        _ => s as i16,
+    }
+}
+
+/// Narrow a wide packed sign+frac word to the `u8` plane. Lossless for
+/// n ≤ 8 formats: their frac30 payload lives entirely in the top NFW
+/// fraction bits (the low `FW − NFW` bits are zero by construction).
+#[inline(always)]
+pub fn narrow_sfrac(sf: u32) -> u8 {
+    debug_assert_eq!(
+        sf & ((1 << (FW - NFW)) - 1),
+        0,
+        "fraction payload below the narrow alignment"
+    );
+    (((sf >> 24) & 0x80) as u8) | ((sf & SFRAC_FRAC_MASK) >> (FW - NFW)) as u8
+}
+
+/// Widen a narrow packed sign+frac byte back to the `u32` plane. Exact
+/// inverse of [`narrow_sfrac`].
+#[inline(always)]
+pub fn widen_sfrac8(sf: u8) -> u32 {
+    (((sf & SFRAC8_SIGN) as u32) << 24) | (((sf & SFRAC8_FRAC_MASK) as u32) << (FW - NFW))
+}
+
 /// Decode one bit pattern into a pre-aligned [`DecEntry`] without a
 /// table. This is the table builder's kernel, exposed so wide formats
 /// (`n > 16`, where a 2^n table is impractical) can still pre-decode
@@ -461,6 +537,45 @@ mod tests {
         let e = decode_entry(wide, wide.maxpos());
         let down = recode_entry(dst, None, e.scale, e.sfrac());
         assert_eq!(down, decode_entry(dst, dst.maxpos()), "saturate to maxpos");
+    }
+
+    #[test]
+    fn narrow_plane_round_trips_every_n8_element() {
+        // Every n ≤ 8 format's decoded (scale, sfrac) must survive the
+        // narrow 2-byte plane layout exactly — including P8E2, whose
+        // scales reach ±24 — and the narrow value must re-decode to the
+        // same real (the SIMD kernel's correctness precondition).
+        for fmt in [PositFormat::P8E0, PositFormat::P8E2] {
+            assert!(fmt.max_scale() < SCALE8_NAR as i32);
+            assert!(fmt.max_frac_bits() <= NFW);
+            let t = DecodeTable::new(fmt);
+            for bits in 0u64..256 {
+                let e = t.get(bits);
+                let (s8, f8) = (narrow_scale(e.scale), narrow_sfrac(e.sfrac()));
+                assert_eq!(widen_scale8(s8), e.scale, "{fmt} bits={bits:#x}");
+                assert_eq!(widen_sfrac8(f8), e.sfrac(), "{fmt} bits={bits:#x}");
+                if !e.is_zero() && !e.is_nar() {
+                    // Narrow significand relates to the wide one by an
+                    // exact shift — the SIMD fold-in identity.
+                    let sig8 = (1u32 << NFW) | (f8 & SFRAC8_FRAC_MASK) as u32;
+                    assert_eq!(sig8 << (FW - NFW), e.significand(), "{fmt} bits={bits:#x}");
+                    assert_eq!(f8 & SFRAC8_SIGN != 0, e.sign);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn narrow_sentinels_map_both_ways() {
+        assert_eq!(narrow_scale(SCALE_ZERO), SCALE8_ZERO);
+        assert_eq!(narrow_scale(SCALE_NAR), SCALE8_NAR);
+        assert_eq!(widen_scale8(SCALE8_ZERO), SCALE_ZERO);
+        assert_eq!(widen_scale8(SCALE8_NAR), SCALE_NAR);
+        // NaR's sfrac is the bare sign bit in both layouts.
+        assert_eq!(narrow_sfrac(SFRAC_SIGN), SFRAC8_SIGN);
+        assert_eq!(widen_sfrac8(SFRAC8_SIGN), SFRAC_SIGN);
+        assert_eq!(narrow_sfrac(0), 0);
+        assert_eq!(widen_sfrac8(0), 0);
     }
 
     #[test]

@@ -16,12 +16,17 @@
 //!   `gemm_bt`) against `plam_mul` on 1×1×1 products, exhaustively for
 //!   P⟨8,0⟩ and sampled for P⟨16,1⟩ — proving the batched engine and
 //!   the scalar datapath implement the same multiplier bit for bit.
-//!   Both GEMM checks run under **both accumulator policies** (the
-//!   scale-windowed single-limb default and the forced-FastQuire
-//!   fallback), so the exhaustive sweep re-proves the windowed kernel
-//!   against the same oracle that validated the original one.
+//!   Both GEMM checks run under **every accumulator policy** (the
+//!   scale-windowed default — SIMD-eligible on narrow planes — the
+//!   forced portable scalar loop, and the forced-FastQuire fallback),
+//!   and the exhaustive P⟨8,0⟩ sweep additionally re-runs on
+//!   wide-forced planes, so narrow ≡ wide ≡ quire is proven against
+//!   the same oracle that validated the original kernel.
 
-use plam::nn::{encode_matrix, gemm_bt_with_policy, AccPolicy, ArithMode, EncodedTensor, Tensor};
+use plam::nn::{
+    encode_matrix, encode_matrix_wide, gemm_bt_with_policy, AccPolicy, ArithMode, EncodedTensor,
+    Tensor,
+};
 use plam::posit::{from_f64, plam_mul, plam_value_f64, to_f32, PositFormat};
 use plam::prng::Rng;
 
@@ -75,11 +80,16 @@ fn exhaustive_p8e0_gemm_plam_mac_matches_plam_mul() {
     for a in 0u64..256 {
         let xa = [to_f32(fmt, a)]; // exact for n ≤ 16
         let xe = encode_matrix(&mode, 1, 1, &xa);
+        let xe_wide = encode_matrix_wide(&mode, 1, 1, &xa);
         for b in 0u64..256 {
             let wb = [to_f32(fmt, b)];
             let we = encode_matrix(&mode, 1, 1, &wb);
             let want = to_f32(fmt, plam_mul(fmt, a, b));
-            for policy in [AccPolicy::Auto, AccPolicy::ForceQuire] {
+            for policy in [
+                AccPolicy::Auto,
+                AccPolicy::ForcePortable,
+                AccPolicy::ForceQuire,
+            ] {
                 let mut y = [0f32; 1];
                 gemm_bt_with_policy(&mode, &xe, &we, None, &mut y, policy);
                 if y[0].to_bits() != want.to_bits() {
@@ -92,6 +102,22 @@ fn exhaustive_p8e0_gemm_plam_mac_matches_plam_mul() {
                             want.to_bits()
                         );
                     }
+                }
+            }
+            // Wide-forced planes of the same pair: the layouts must be
+            // interchangeable bit for bit.
+            let we_wide = encode_matrix_wide(&mode, 1, 1, &wb);
+            let mut y = [0f32; 1];
+            gemm_bt_with_policy(&mode, &xe_wide, &we_wide, None, &mut y, AccPolicy::Auto);
+            if y[0].to_bits() != want.to_bits() {
+                mismatches += 1;
+                if mismatches <= 8 {
+                    eprintln!(
+                        "gemm mismatch (wide planes): {a:#04x} ×̃ {b:#04x}: \
+                         got {:#010x} want {:#010x}",
+                        y[0].to_bits(),
+                        want.to_bits()
+                    );
                 }
             }
         }
@@ -253,7 +279,11 @@ fn sweep_p16e1_gemm_plam_mac_matches_plam_mul() {
         let xe = encode_matrix(&mode, 1, 1, &[to_f32(fmt, a)]);
         let we = encode_matrix(&mode, 1, 1, &[to_f32(fmt, b)]);
         let want = to_f32(fmt, plam_mul(fmt, a, b));
-        for policy in [AccPolicy::Auto, AccPolicy::ForceQuire] {
+        for policy in [
+            AccPolicy::Auto,
+            AccPolicy::ForcePortable,
+            AccPolicy::ForceQuire,
+        ] {
             let mut y = [0f32; 1];
             gemm_bt_with_policy(&mode, &xe, &we, None, &mut y, policy);
             assert_eq!(

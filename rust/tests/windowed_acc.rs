@@ -1,9 +1,12 @@
 //! Property suite pinning the scale-windowed single-limb GEMM
-//! accumulator ([`plam::posit::WindowedAcc`], `AccPolicy::Auto`)
-//! bit-identical to the FastQuire kernel (`AccPolicy::ForceQuire`) on
-//! adversarial inputs: extreme scale spreads (window-infeasible panels
-//! forcing the per-output fallback), dense zeros, NaR poisoning, and
-//! random mixes — across P⟨8,0⟩ / P⟨16,1⟩ / P⟨32,2⟩, exact and PLAM
+//! accumulator ([`plam::posit::WindowedAcc`], `AccPolicy::Auto` —
+//! which may take the AVX2 kernel on narrow planes) bit-identical to
+//! the forced portable scalar loop (`AccPolicy::ForcePortable`), the
+//! FastQuire kernel (`AccPolicy::ForceQuire`), and — for n ≤ 8
+//! formats — the wide-forced plane encode, on adversarial inputs:
+//! extreme scale spreads (window-infeasible panels forcing the
+//! per-output fallback), dense zeros, NaR poisoning, and random mixes
+//! — across P⟨8,0⟩ / P⟨8,2⟩ / P⟨16,1⟩ / P⟨32,2⟩, exact and PLAM
 //! multipliers, sequential and pooled execution.
 //!
 //! Both accumulators hold the mathematically exact dot-product value
@@ -11,7 +14,8 @@
 //! one-bit divergence is a kernel bug; these tests tolerate none.
 
 use plam::nn::{
-    encode_matrix, gemm_bt_pool_with_policy, gemm_bt_with_policy, AccPolicy, ArithMode, WorkerPool,
+    encode_matrix, encode_matrix_wide, gemm_bt_pool_with_policy, gemm_bt_with_policy, AccPolicy,
+    ArithMode, PlaneWidth, WorkerPool,
 };
 use plam::posit::{to_f32, PositFormat};
 use plam::prng::Rng;
@@ -27,7 +31,11 @@ fn all_posit_modes() -> Vec<ArithMode> {
     ]
 }
 
-/// Run one GEMM under both policies and assert bitwise equality.
+/// Run one GEMM under every policy (Auto — SIMD-eligible on narrow
+/// planes — vs the forced portable scalar loop vs the quire fallback)
+/// and assert bitwise equality; n ≤ 8 formats additionally cross-check
+/// against wide-forced planes of the same data, so narrow ≡ wide ≡
+/// quire holds bit for bit.
 fn assert_policies_agree(
     mode: &ArithMode,
     m: usize,
@@ -41,16 +49,32 @@ fn assert_policies_agree(
     let xe = encode_matrix(mode, m, k, x);
     let we = encode_matrix(mode, n, k, w);
     let mut auto = vec![0f32; m * n];
-    let mut forced = vec![0f32; m * n];
     gemm_bt_with_policy(mode, &xe, &we, bias, &mut auto, AccPolicy::Auto);
-    gemm_bt_with_policy(mode, &xe, &we, bias, &mut forced, AccPolicy::ForceQuire);
-    for (i, (a, f)) in auto.iter().zip(forced.iter()).enumerate() {
-        assert_eq!(
-            a.to_bits(),
-            f.to_bits(),
-            "{label} {}: output {i} diverges (windowed {a} vs quire {f})",
-            mode.name()
-        );
+    for policy in [AccPolicy::ForceQuire, AccPolicy::ForcePortable] {
+        let mut forced = vec![0f32; m * n];
+        gemm_bt_with_policy(mode, &xe, &we, bias, &mut forced, policy);
+        for (i, (a, f)) in auto.iter().zip(forced.iter()).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                f.to_bits(),
+                "{label} {} {policy:?}: output {i} diverges (auto {a} vs forced {f})",
+                mode.name()
+            );
+        }
+    }
+    if xe.width() == PlaneWidth::Narrow {
+        let xw = encode_matrix_wide(mode, m, k, x);
+        let ww = encode_matrix_wide(mode, n, k, w);
+        let mut wide = vec![0f32; m * n];
+        gemm_bt_with_policy(mode, &xw, &ww, bias, &mut wide, AccPolicy::Auto);
+        for (i, (a, f)) in auto.iter().zip(wide.iter()).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                f.to_bits(),
+                "{label} {}: output {i} diverges between narrow ({a}) and wide ({f}) planes",
+                mode.name()
+            );
+        }
     }
 }
 
@@ -233,6 +257,47 @@ fn pooled_windowed_gemm_matches_sequential_quire() {
         }
     }
     pool.shutdown();
+}
+
+#[test]
+fn specials_dense_narrow_panels_fall_off_the_vector_path() {
+    // Narrow n ≤ 8 operands whose panels are riddled with zeros (and
+    // one NaR row): the SIMD plan must detect specials per chunk, fall
+    // back to the sentinel-checked scalar loop mid-row, and still
+    // match the portable and quire kernels — and the wide-forced
+    // encode — exactly. k spans multiple KB chunks so clean and
+    // specials chunks coexist under one accumulator.
+    for mode in [
+        ArithMode::posit_exact(PositFormat::P8E0),
+        ArithMode::posit_plam(PositFormat::P8E0),
+        ArithMode::posit_exact(PositFormat::P8E2),
+        ArithMode::posit_plam(PositFormat::P8E2),
+    ] {
+        let (m, k, n) = (4usize, 530usize, 11usize);
+        let mut rng = Rng::new(0x05BE);
+        let mut x: Vec<f32> = (0..m * k)
+            .map(|i| {
+                // Alternate 64-element stretches of ~2/3 zeros with
+                // fully dense stretches.
+                if (i / 64) % 2 == 0 && i % 3 != 0 {
+                    0.0
+                } else {
+                    rng.normal() as f32
+                }
+            })
+            .collect();
+        x[3 * k + 100] = f32::NAN; // output row 3 poisons via NaR
+        let w: Vec<f32> = (0..n * k)
+            .map(|i| {
+                if i % 5 == 0 {
+                    0.0
+                } else {
+                    rng.normal() as f32
+                }
+            })
+            .collect();
+        assert_policies_agree(&mode, m, k, n, &x, &w, None, "specials-dense");
+    }
 }
 
 #[test]
