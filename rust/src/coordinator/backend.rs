@@ -101,6 +101,11 @@ impl InferenceBackend for NnBackend {
         inputs: &[Vec<f32>],
         pool: Option<&WorkerPool>,
     ) -> Result<Vec<Vec<f32>>> {
+        // Fault seam: fail the whole batch. The batcher's retry-alone
+        // path must convert this into per-request outcomes.
+        if crate::faults::fire(crate::faults::Site::BackendError) {
+            return Err(crate::faults::injected_error(crate::faults::Site::BackendError));
+        }
         let mut xs = Vec::with_capacity(inputs.len());
         for data in inputs {
             if data.len() != self.input_len() {

@@ -13,6 +13,7 @@
 //! the request is answered with a timeout error instead of occupying
 //! batch capacity.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
@@ -23,6 +24,7 @@ use anyhow::Result;
 
 use super::backend::InferenceBackend;
 use super::metrics::Metrics;
+use crate::faults;
 use crate::nn::pool::WorkerPool;
 
 /// Runtime-swappable pool slot shared with the batching worker: the
@@ -50,7 +52,7 @@ impl Default for BatcherConfig {
 }
 
 /// Where a finished request's result goes.
-enum Reply {
+enum ReplyKind {
     /// Blocking caller parked on a channel ([`Batcher::infer`]).
     Channel(Sender<Result<Vec<f32>>>),
     /// Completion callback ([`Batcher::submit`]); runs on the batching
@@ -59,13 +61,73 @@ enum Reply {
     Callback(Box<dyn FnOnce(Result<Vec<f32>>) + Send>),
 }
 
+/// Drop-guarded reply slot. A `Reply` dropped without [`Reply::send`] —
+/// a batcher bug, a panic unwinding the worker loop, a request still
+/// queued at shutdown, or the injected `callback_drop` fault — answers
+/// its caller with an internal error instead of leaving it waiting
+/// forever, upholding the exactly-one-response invariant against the
+/// batcher itself.
+struct Reply {
+    kind: Option<ReplyKind>,
+    /// Set when the `callback_drop` fault swallowed a `send`, so the
+    /// drop guard can attribute its rescue to the injection.
+    injected_drop: bool,
+}
+
 impl Reply {
-    fn send(self, r: Result<Vec<f32>>) {
-        match self {
-            Reply::Channel(tx) => {
+    fn channel(tx: Sender<Result<Vec<f32>>>) -> Reply {
+        Reply {
+            kind: Some(ReplyKind::Channel(tx)),
+            injected_drop: false,
+        }
+    }
+
+    fn callback(f: Box<dyn FnOnce(Result<Vec<f32>>) + Send>) -> Reply {
+        Reply {
+            kind: Some(ReplyKind::Callback(f)),
+            injected_drop: false,
+        }
+    }
+
+    fn send(mut self, r: Result<Vec<f32>>) {
+        // Fault seam: swallow the dispatch and leave the slot armed; the
+        // drop guard below must convert the loss into a clean error.
+        if faults::fire(faults::Site::CallbackDrop) {
+            self.injected_drop = true;
+            return;
+        }
+        if let Some(kind) = self.kind.take() {
+            Self::dispatch(kind, r);
+        }
+    }
+
+    fn dispatch(kind: ReplyKind, r: Result<Vec<f32>>) {
+        match kind {
+            ReplyKind::Channel(tx) => {
                 let _ = tx.send(r);
             }
-            Reply::Callback(f) => f(r),
+            ReplyKind::Callback(f) => {
+                // A panicking completion callback must not unwind into
+                // the batcher loop — and must never unwind out of the
+                // drop guard (a panic during unwind aborts the process).
+                let _ = catch_unwind(AssertUnwindSafe(move || f(r)));
+            }
+        }
+    }
+}
+
+impl Drop for Reply {
+    fn drop(&mut self) {
+        if let Some(kind) = self.kind.take() {
+            if self.injected_drop {
+                faults::contained(faults::Site::CallbackDrop);
+            }
+            Self::dispatch(
+                kind,
+                Err(anyhow::anyhow!(
+                    "internal error: request dropped without a response"
+                )),
+            );
         }
     }
 }
@@ -134,7 +196,7 @@ impl Batcher {
                 input,
                 enqueued: start,
                 deadline: None,
-                reply: Reply::Channel(rtx),
+                reply: Reply::channel(rtx),
             })
             .map_err(|_| anyhow::anyhow!("batcher shut down"))?;
         let out = rrx
@@ -176,7 +238,7 @@ impl Batcher {
                 input,
                 enqueued: start,
                 deadline,
-                reply: Reply::Callback(Box::new(wrapped)),
+                reply: Reply::callback(Box::new(wrapped)),
             })
             .map_err(|_| anyhow::anyhow!("batcher shut down"))
     }
@@ -187,6 +249,17 @@ impl Batcher {
         if let Some(h) = self.worker.lock().unwrap().take() {
             let _ = h.join();
         }
+    }
+}
+
+/// Attribute an injected `backend_error` to its containment point — the
+/// conversion into per-request errors here in the batcher. Checked on
+/// the *leaf* message before any `.context(...)` wrapping so one
+/// injection counts exactly once. Injected worker panics are attributed
+/// at the pool's own catch point, not here.
+fn note_contained_backend(e: &anyhow::Error) {
+    if faults::injected_site(&e.to_string()) == Some(faults::Site::BackendError) {
+        faults::contained(faults::Site::BackendError);
     }
 }
 
@@ -265,20 +338,41 @@ fn worker_loop(
         let inputs: Vec<Vec<f32>> = batch.iter().map(|p| p.input.clone()).collect();
         metrics.record_batch(inputs.len());
         let pool = pool.lock().unwrap().clone();
-        match backend.infer_batch_pooled(&inputs, pool.as_deref()) {
+        // Panic-contained backend call: a poisoned shard (organic or
+        // injected) unwinds out of `infer_batch_pooled` on this thread;
+        // convert it to an error so the retry-alone path below fails
+        // only the faulted requests and the batcher thread survives.
+        let run = |inputs: &[Vec<f32>]| -> Result<Vec<Vec<f32>>> {
+            match catch_unwind(AssertUnwindSafe(|| {
+                backend.infer_batch_pooled(inputs, pool.as_deref())
+            })) {
+                Ok(r) => r,
+                Err(p) => {
+                    metrics.worker_panics.fetch_add(1, Ordering::Relaxed);
+                    Err(anyhow::anyhow!(
+                        "inference panicked: {}",
+                        faults::panic_message(p.as_ref())
+                    ))
+                }
+            }
+        };
+        match run(&inputs) {
             Ok(outputs) => {
                 for (p, out) in batch.into_iter().zip(outputs.into_iter()) {
                     p.reply.send(Ok(out));
                 }
             }
             Err(e) => {
-                // Batch-level failure: retry each request alone so one
-                // malformed request cannot poison its batch peers.
+                note_contained_backend(&e);
+                // Batch-level failure (error or panic): retry each
+                // request alone so one faulted request cannot poison its
+                // batch peers.
                 for p in batch {
-                    let r = backend
-                        .infer_batch_pooled(std::slice::from_ref(&p.input), pool.as_deref())
-                        .map(|mut v| v.remove(0));
-                    p.reply.send(r.map_err(|se| se.context(e.to_string())));
+                    let r = run(std::slice::from_ref(&p.input)).map(|mut v| v.remove(0));
+                    p.reply.send(r.map_err(|se| {
+                        note_contained_backend(&se);
+                        se.context(e.to_string())
+                    }));
                 }
             }
         }
@@ -562,6 +656,88 @@ mod tests {
         .unwrap();
         assert_eq!(rx.recv().unwrap().unwrap(), vec![2.0, 2.0]);
         assert_eq!(b.metrics.timed_out.load(Ordering::Relaxed), 0);
+        b.shutdown();
+    }
+
+    #[test]
+    fn dropped_reply_answers_an_internal_error() {
+        // Channel flavor: the parked `infer` caller gets an error, not
+        // a RecvError.
+        let (tx, rx) = channel();
+        drop(Reply::channel(tx));
+        let err = rx.recv().unwrap().unwrap_err();
+        assert!(err.to_string().contains("dropped without a response"), "{err}");
+        // Callback flavor: the completion runs with the error.
+        let (tx, rx) = channel();
+        drop(Reply::callback(Box::new(move |r: Result<Vec<f32>>| {
+            tx.send(r.map_err(|e| e.to_string())).unwrap();
+        })));
+        let err = rx.recv().unwrap().unwrap_err();
+        assert!(err.contains("dropped without a response"), "{err}");
+    }
+
+    #[test]
+    fn panicking_callback_does_not_kill_the_batcher() {
+        let b = Batcher::spawn(
+            Arc::new(EchoBackend {
+                fail_on_negative: false,
+            }),
+            BatcherConfig::default(),
+        );
+        b.submit(vec![1.0, 1.0], None, |_r| panic!("client callback bug"))
+            .unwrap();
+        // The worker thread must survive the panicking callback and
+        // keep serving.
+        assert_eq!(b.infer(vec![2.0, 2.0]).unwrap(), vec![4.0, 4.0]);
+        b.shutdown();
+    }
+
+    #[test]
+    fn panicking_backend_fails_requests_cleanly() {
+        struct PanicOnNegative;
+        impl InferenceBackend for PanicOnNegative {
+            fn input_len(&self) -> usize {
+                2
+            }
+            fn output_len(&self) -> usize {
+                2
+            }
+            fn max_batch(&self) -> usize {
+                8
+            }
+            fn infer_batch(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+                if inputs.iter().any(|x| x[0] < 0.0) {
+                    panic!("poisoned band");
+                }
+                Ok(inputs.to_vec())
+            }
+            fn describe(&self) -> String {
+                "panic-on-negative".into()
+            }
+        }
+        let b = Batcher::spawn(
+            Arc::new(PanicOnNegative),
+            BatcherConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(30),
+            },
+        );
+        let good = {
+            let b = b.clone();
+            std::thread::spawn(move || b.infer(vec![1.0, 1.0]))
+        };
+        let bad = {
+            let b = b.clone();
+            std::thread::spawn(move || b.infer(vec![-1.0, 1.0]))
+        };
+        // The good request survives whether or not it shared a batch
+        // with the poisoned one (retry-alone covers the shared case).
+        assert_eq!(good.join().unwrap().unwrap(), vec![1.0, 1.0]);
+        let err = bad.join().unwrap().unwrap_err();
+        assert!(err.to_string().contains("panicked"), "{err}");
+        assert!(b.metrics.worker_panics.load(Ordering::Relaxed) >= 1);
+        // Still serviceable after the panic.
+        assert_eq!(b.infer(vec![3.0, 3.0]).unwrap(), vec![3.0, 3.0]);
         b.shutdown();
     }
 

@@ -16,6 +16,7 @@ use std::net::TcpStream;
 use std::time::Instant;
 
 use super::wire::{Request, RequestParser};
+use crate::faults;
 
 /// What one readiness-driven read pass produced.
 pub(crate) struct ReadOutcome {
@@ -51,6 +52,9 @@ pub(crate) struct Conn {
     /// Unrecoverable error (protocol violation, IO failure): tear down
     /// now, dropping any outstanding work.
     pub dead: bool,
+    /// `dead` was caused by an injected `conn_reset` fault; the reap
+    /// step attributes the teardown to the injection.
+    pub faulted: bool,
 }
 
 impl Conn {
@@ -67,6 +71,7 @@ impl Conn {
             last_activity: Instant::now(),
             closing: false,
             dead: false,
+            faulted: false,
         }
     }
 
@@ -138,7 +143,17 @@ impl Conn {
     /// Write buffered bytes until `WouldBlock` or empty.
     pub fn flush(&mut self) {
         while self.out_pos < self.out.len() {
-            match self.stream.write(&self.out[self.out_pos..]) {
+            // Fault seam: the socket "accepts" one byte of the pending
+            // frame and stalls. `wants_write` stays true, so the event
+            // loop keeps write interest and resumes the flush on the
+            // next writable tick — no bytes lost, no frame torn.
+            let cap = if faults::fire(faults::Site::ShortWrite) {
+                self.out_pos + 1
+            } else {
+                self.out.len()
+            };
+            let short = cap < self.out.len();
+            match self.stream.write(&self.out[self.out_pos..cap]) {
                 Ok(0) => {
                     self.dead = true;
                     break;
@@ -146,6 +161,9 @@ impl Conn {
                 Ok(n) => {
                     self.out_pos += n;
                     self.last_activity = Instant::now();
+                    if short {
+                        break;
+                    }
                 }
                 Err(e) if e.kind() == ErrorKind::WouldBlock => break,
                 Err(e) if e.kind() == ErrorKind::Interrupted => continue,

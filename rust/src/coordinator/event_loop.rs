@@ -38,6 +38,7 @@ use super::conn::Conn;
 use super::router::Router;
 use super::server::{Admission, OwnedAdmissionGuard, ServerConfig};
 use super::wire;
+use crate::faults;
 
 /// poll(2) via hand-declared FFI — std exposes nonblocking sockets but
 /// no readiness API, and the offline build budget has no room for mio.
@@ -228,6 +229,11 @@ pub struct LoopStats {
     pub shed_overload: AtomicU64,
     /// Ticks triggered by the waker (completions ready).
     pub wakeups: AtomicU64,
+    /// Connections torn down by an injected `conn_reset` fault.
+    pub conn_resets: AtomicU64,
+    /// Accept-path failures absorbed per-connection (peer hung up
+    /// between accept and socket setup, transient accept errors).
+    pub accept_errors: AtomicU64,
 }
 
 /// A finished request: an encoded response frame bound for
@@ -506,6 +512,10 @@ fn run(ctx: Ctx) {
         for idx in 0..conns.len() {
             let close = conns[idx].as_ref().is_some_and(|c| c.should_close());
             if close {
+                if conns[idx].as_ref().is_some_and(|c| c.faulted) {
+                    ctx.stats.conn_resets.fetch_add(1, Ordering::Relaxed);
+                    faults::contained(faults::Site::ConnReset);
+                }
                 conns[idx] = None;
                 free.push(idx);
                 ctx.stats.closed.fetch_add(1, Ordering::Relaxed);
@@ -548,6 +558,23 @@ fn run(ctx: Ctx) {
                     let Some(c) = conns.get_mut(idx).and_then(|s| s.as_mut()) else {
                         continue;
                     };
+                    // Fault seam: tear this connection down mid-frame,
+                    // as if the peer reset it. The reap step recycles
+                    // the slot; generation stamps keep in-flight
+                    // completions for it harmless, and healthy
+                    // connections never notice.
+                    if faults::fire(faults::Site::ConnReset) {
+                        c.dead = true;
+                        c.faulted = true;
+                        continue;
+                    }
+                    // Fault seam: swallow this readiness report (a
+                    // spurious-wakeup storm). Level-triggered poll
+                    // re-reports the same readiness next tick, so
+                    // nothing is lost — servicing is delayed one tick.
+                    if faults::fire(faults::Site::SpuriousWake) {
+                        continue;
+                    }
                     if ev.readable && !c.closing && !c.dead {
                         let outcome = c.handle_readable();
                         for req in outcome.requests {
@@ -577,7 +604,12 @@ fn accept_ready(
     loop {
         match ctx.listener.accept() {
             Ok((stream, _)) => {
-                if stream.set_nonblocking(true).is_err() {
+                if let Err(e) = stream.set_nonblocking(true) {
+                    // A peer that hung up between accept and socket
+                    // setup costs that connection only — log it, keep
+                    // accepting.
+                    eprintln!("plam-serve: accepted socket setup failed: {e}");
+                    ctx.stats.accept_errors.fetch_add(1, Ordering::Relaxed);
                     continue;
                 }
                 let _ = stream.set_nodelay(true);
@@ -592,7 +624,14 @@ fn accept_ready(
             }
             Err(e) if e.kind() == ErrorKind::WouldBlock => break,
             Err(e) if e.kind() == ErrorKind::Interrupted => continue,
-            Err(_) => break,
+            Err(e) => {
+                // Hard accept error (fd exhaustion, aborted handshake):
+                // never aborts the front-end; the listener is retried on
+                // the next readiness tick.
+                eprintln!("plam-serve: accept failed: {e}");
+                ctx.stats.accept_errors.fetch_add(1, Ordering::Relaxed);
+                break;
+            }
         }
     }
 }

@@ -21,6 +21,10 @@ pub struct Metrics {
     /// Requests whose per-request deadline expired while queued in the
     /// batcher (also counted in `failed`: the caller sees an error).
     pub timed_out: AtomicU64,
+    /// Inference calls that panicked under the batcher's catch_unwind
+    /// (organic or injected; the affected requests are also counted in
+    /// `failed` unless their solo retry succeeded).
+    pub worker_panics: AtomicU64,
     /// Batches executed.
     pub batches: AtomicU64,
     /// Total samples across all executed batches.
@@ -161,6 +165,10 @@ impl Metrics {
         if shed + timed_out > 0 {
             s.push_str(&format!(" shed={shed} timed_out={timed_out}"));
         }
+        let panics = self.worker_panics.load(Ordering::Relaxed);
+        if panics > 0 {
+            s.push_str(&format!(" worker_panics={panics}"));
+        }
         let workers = self.pool_workers.load(Ordering::Relaxed);
         if workers > 0 {
             s.push_str(&format!(
@@ -183,6 +191,10 @@ impl Metrics {
                 e,
                 self.plane_cache_bytes.load(Ordering::Relaxed),
             ));
+        }
+        if let Some(frag) = crate::faults::summary_fragment() {
+            s.push(' ');
+            s.push_str(&frag);
         }
         s
     }
@@ -247,6 +259,21 @@ mod tests {
         m.timed_out.fetch_add(1, Ordering::Relaxed);
         let s = m.summary();
         assert!(s.contains("shed=3 timed_out=1"), "{s}");
+    }
+
+    #[test]
+    fn worker_panics_surface_in_summary() {
+        let m = Metrics::new();
+        assert!(
+            !m.summary().contains("worker_panics="),
+            "panic-free server keeps the summary bare"
+        );
+        m.worker_panics.fetch_add(2, Ordering::Relaxed);
+        let s = m.summary();
+        assert!(s.contains("worker_panics=2"), "{s}");
+        // No fault plan installed in unit tests, so the faults fragment
+        // must stay absent (the chaos soak asserts the inverse).
+        assert!(!s.contains("faults["), "{s}");
     }
 
     #[test]

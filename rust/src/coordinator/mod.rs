@@ -28,6 +28,26 @@
 //! connection count is decoupled from thread count. The original
 //! thread-per-connection front-end remains as
 //! [`server::Frontend::Threaded`].
+//!
+//! # Failure containment
+//!
+//! Every serving layer upholds one invariant, end to end: **every
+//! accepted request gets exactly one response — a correct result frame
+//! or a clean error frame ([`wire::write_err`]) — and no fault kills
+//! the process or wedges a connection.** Concretely: the worker pool
+//! catches per-task panics and reports them per-band
+//! ([`crate::nn::PoolPanic`]) while staying serviceable; the batcher
+//! converts backend panics and batch-level errors into per-request
+//! outcomes via its retry-alone path, isolates panicking completion
+//! callbacks, and drop-guards every reply slot so even a lost reply
+//! answers an internal-error frame; the event loop resets faulted
+//! connections without touching healthy ones (generation-stamped slots
+//! make late completions for a recycled slot harmless) and absorbs
+//! accept-time races per-connection. The invariant is exercised — not
+//! assumed — by the seeded fault-injection subsystem in
+//! [`crate::faults`] and the chaos soak test
+//! (`rust/tests/chaos_soak.rs`); injected-vs-contained counts surface
+//! in [`Metrics::summary`].
 
 pub mod backend;
 pub mod batcher;

@@ -375,11 +375,22 @@ fn spawn_threaded_acceptor(
                     Ok(stream) => {
                         let router = router.clone();
                         let admission = admission.clone();
-                        let _ = std::thread::Builder::new()
+                        // Spawn failure (thread exhaustion) drops the
+                        // stream — that peer sees a close, the acceptor
+                        // keeps serving everyone else.
+                        if let Err(e) = std::thread::Builder::new()
                             .name("plam-conn".into())
-                            .spawn(move || handle_connection(stream, router, admission));
+                            .spawn(move || handle_connection(stream, router, admission))
+                        {
+                            eprintln!("plam-serve: connection thread spawn failed: {e}");
+                        }
                     }
-                    Err(_) => continue,
+                    Err(e) => {
+                        // A peer that resets between SYN and accept is
+                        // that connection's problem, not the front-end's.
+                        eprintln!("plam-serve: accept failed: {e}");
+                        continue;
+                    }
                 }
             }
         })

@@ -191,7 +191,13 @@ pub fn write_ok(w: &mut impl Write, output: &[f32]) -> Result<()> {
     Ok(())
 }
 
-/// Serialise an error response.
+/// Serialise an error response — the wire half of the failure-model
+/// contract (see [`crate::coordinator`] module docs): any fault the
+/// server contains on a live connection (backend error, worker panic,
+/// overload shed, queue timeout) is answered with exactly one of these
+/// frames in the request's response slot, so in-order delivery and
+/// client framing survive the failure. Status 1, payload = utf-8
+/// message; clients surface it verbatim as `Err(message)`.
 pub fn write_err(w: &mut impl Write, msg: &str) -> Result<()> {
     w.write_all(b"PLRS")?;
     w.write_all(&1u32.to_le_bytes())?;

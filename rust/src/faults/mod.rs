@@ -1,0 +1,568 @@
+//! Seeded, deterministic fault injection for the serving stack.
+//!
+//! The serving layers ([`crate::nn::pool`], [`crate::coordinator`])
+//! promise one containment invariant, end to end: **every accepted
+//! request gets exactly one response — a correct frame or a clean error
+//! frame — and no fault kills the process or wedges a connection.**
+//! This module is how that promise is *exercised* instead of assumed: a
+//! [`FaultPlan`] names instrumented seams ([`Site`]s) and a firing
+//! [`Schedule`] per seam, and the layers call [`fire`] at each seam to
+//! ask "does the configured fault happen here, now?".
+//!
+//! # Sites
+//!
+//! | site            | seam                                               | containment                                  |
+//! |-----------------|----------------------------------------------------|----------------------------------------------|
+//! | `worker_panic`  | GEMM shard start in the worker pool                | pool catches per task; batcher → error frames |
+//! | `backend_error` | `InferenceBackend::infer_batch_pooled`             | batcher retry-alone → per-request errors     |
+//! | `callback_drop` | batcher reply dispatch                             | reply drop-guard answers an error frame      |
+//! | `short_write`   | connection flush (socket accepts 1 byte)           | write-interest re-poll resumes the flush     |
+//! | `spurious_wake` | event-loop readable tick (read skipped once)       | level-triggered poll re-reports next tick    |
+//! | `conn_reset`    | event-loop readable tick (connection torn down)    | loop reaps the slot; peers unaffected        |
+//! | `cache_evict`   | plane-cache encode (full eviction storm)           | misses re-encode; results stay bit-exact     |
+//!
+//! `worker_panic`, `backend_error`, `callback_drop`, and `conn_reset`
+//! have an explicit catch point in the serving stack; that point calls
+//! [`contained`], so for those sites a chaos run can assert
+//! `injected == contained` exactly. The remaining sites are benign by
+//! construction — the normal code path absorbs them — and are accounted
+//! by their `injected` counters plus the behavioral assertions of the
+//! chaos soak (`rust/tests/chaos_soak.rs`).
+//!
+//! # Plan syntax
+//!
+//! A plan is parsed from the `PLAM_FAULT_PLAN` env var or the
+//! `plam serve --fault-plan` flag:
+//!
+//! ```text
+//! seed=42;worker_panic=every:7;backend_error=rate:0.05;short_write=every:3
+//! ```
+//!
+//! `;`-separated `key=value` pairs: `seed=<u64>` seeds the rate hash
+//! (optional, default 0), every other key is a site name mapped to a
+//! schedule — `every:N` fires on every Nth call to that seam (N ≥ 1,
+//! deterministic, guaranteed to fire given ≥ N calls), `rate:F` fires a
+//! pseudo-random F fraction of calls (0 < F ≤ 1, decided by a seeded
+//! hash of the per-site call index, so a given seed always faults the
+//! same calls). An empty spec parses to an empty plan, which
+//! [`install`] treats as "fault injection off".
+//!
+//! # Zero cost when off
+//!
+//! With no plan installed, [`fire`] is a single relaxed atomic load and
+//! a branch — no lock, no allocation — so the instrumented seams cost
+//! nothing in production. Installation is process-global (the chaos
+//! harness serializes tests that install plans).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use anyhow::{bail, Context, Result};
+
+/// Prefix of the marker embedded in every injected error / panic
+/// message, so catch points can attribute a failure to injection (and
+/// record [`contained`]) without miscounting organic faults. The full
+/// tag is `[injected-fault:<site>]` — see [`injected_error`] /
+/// [`injected_site`].
+pub const INJECTED_MARKER: &str = "[injected-fault";
+
+/// Environment variable holding the fault-plan spec.
+pub const ENV_VAR: &str = "PLAM_FAULT_PLAN";
+
+/// An instrumented seam in the serving stack.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Site {
+    /// A GEMM shard panics at the start of its pool task.
+    WorkerPanic,
+    /// `infer_batch_pooled` returns an error for the whole batch.
+    BackendError,
+    /// The batcher "loses" a reply instead of dispatching it.
+    CallbackDrop,
+    /// The socket accepts a single byte of a response flush.
+    ShortWrite,
+    /// A readable event is reported but the read is skipped this tick.
+    SpuriousWake,
+    /// A connection is torn down mid-frame (peer reset).
+    ConnReset,
+    /// The shared plane cache is fully evicted before an encode.
+    CacheEvict,
+}
+
+/// Every site, in display order.
+pub const ALL_SITES: [Site; 7] = [
+    Site::WorkerPanic,
+    Site::BackendError,
+    Site::CallbackDrop,
+    Site::ShortWrite,
+    Site::SpuriousWake,
+    Site::ConnReset,
+    Site::CacheEvict,
+];
+
+impl Site {
+    /// Spec / display name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Site::WorkerPanic => "worker_panic",
+            Site::BackendError => "backend_error",
+            Site::CallbackDrop => "callback_drop",
+            Site::ShortWrite => "short_write",
+            Site::SpuriousWake => "spurious_wake",
+            Site::ConnReset => "conn_reset",
+            Site::CacheEvict => "cache_evict",
+        }
+    }
+
+    fn index(self) -> usize {
+        match self {
+            Site::WorkerPanic => 0,
+            Site::BackendError => 1,
+            Site::CallbackDrop => 2,
+            Site::ShortWrite => 3,
+            Site::SpuriousWake => 4,
+            Site::ConnReset => 5,
+            Site::CacheEvict => 6,
+        }
+    }
+
+    fn parse(s: &str) -> Option<Site> {
+        ALL_SITES.iter().copied().find(|site| site.name() == s)
+    }
+}
+
+/// When a configured site actually fires.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Schedule {
+    /// Fire on every Nth call to the seam (calls `N-1, 2N-1, …`,
+    /// 0-indexed). Deterministic regardless of seed.
+    Every(u64),
+    /// Fire on a pseudo-random fraction of calls, decided by a seeded
+    /// hash of the per-site call index — the same seed always faults
+    /// the same call indices.
+    Rate(f64),
+}
+
+impl Schedule {
+    fn parse(spec: &str) -> Result<Schedule> {
+        if let Some(n) = spec.strip_prefix("every:") {
+            let n: u64 = n.parse().with_context(|| format!("bad every:N in '{spec}'"))?;
+            if n == 0 {
+                bail!("every:0 never fires; use at least every:1");
+            }
+            return Ok(Schedule::Every(n));
+        }
+        if let Some(f) = spec.strip_prefix("rate:") {
+            let f: f64 = f.parse().with_context(|| format!("bad rate:F in '{spec}'"))?;
+            if !(f > 0.0 && f <= 1.0) {
+                bail!("rate must be in (0, 1], got {f}");
+            }
+            return Ok(Schedule::Rate(f));
+        }
+        bail!("schedule '{spec}' is neither 'every:N' nor 'rate:F'");
+    }
+}
+
+/// SplitMix64 finalizer: decorrelates (seed, site, call) → uniform bits
+/// for the `rate:` schedule (same mixer family as [`crate::prng`]).
+fn mix(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Per-site schedule plus its lifetime counters.
+struct SiteState {
+    schedule: Schedule,
+    calls: AtomicU64,
+    injected: AtomicU64,
+    contained: AtomicU64,
+}
+
+/// A parsed fault plan: seed + per-site schedules and counters.
+pub struct FaultPlan {
+    seed: u64,
+    sites: [Option<SiteState>; 7],
+}
+
+impl FaultPlan {
+    /// Parse a `;`-separated spec (see the module docs for the syntax).
+    /// An all-whitespace spec yields an empty plan.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan {
+            seed: 0,
+            sites: Default::default(),
+        };
+        for part in spec.split(';') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (key, value) = part
+                .split_once('=')
+                .with_context(|| format!("'{part}' is not key=value"))?;
+            let (key, value) = (key.trim(), value.trim());
+            if key == "seed" {
+                plan.seed = value.parse().with_context(|| format!("bad seed '{value}'"))?;
+                continue;
+            }
+            let site = Site::parse(key).with_context(|| {
+                let names: Vec<_> = ALL_SITES.iter().map(|s| s.name()).collect();
+                format!("unknown fault site '{key}' (expected one of {})", names.join(", "))
+            })?;
+            if plan.sites[site.index()].is_some() {
+                bail!("fault site '{key}' configured twice");
+            }
+            plan.sites[site.index()] = Some(SiteState {
+                schedule: Schedule::parse(value)?,
+                calls: AtomicU64::new(0),
+                injected: AtomicU64::new(0),
+                contained: AtomicU64::new(0),
+            });
+        }
+        Ok(plan)
+    }
+
+    /// True when no site is configured (parse of an empty spec).
+    pub fn is_empty(&self) -> bool {
+        self.sites.iter().all(|s| s.is_none())
+    }
+
+    /// Sites this plan configures.
+    pub fn sites(&self) -> Vec<Site> {
+        ALL_SITES
+            .iter()
+            .copied()
+            .filter(|s| self.sites[s.index()].is_some())
+            .collect()
+    }
+
+    /// Decide whether this call to `site` faults. Deterministic: each
+    /// site keeps its own call counter, and the decision depends only
+    /// on (seed, site, call index).
+    pub fn decide(&self, site: Site) -> bool {
+        let Some(state) = &self.sites[site.index()] else {
+            return false;
+        };
+        let call = state.calls.fetch_add(1, Ordering::Relaxed);
+        let fires = match state.schedule {
+            Schedule::Every(n) => call % n == n - 1,
+            Schedule::Rate(f) => {
+                let key = self.seed.wrapping_mul(0x9E3779B97F4A7C15);
+                let key = key.wrapping_add(site.index() as u64).rotate_left(17);
+                let h = mix(key.wrapping_add(call));
+                (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64) < f
+            }
+        };
+        if fires {
+            state.injected.fetch_add(1, Ordering::Relaxed);
+        }
+        fires
+    }
+
+    fn note_contained(&self, site: Site) {
+        if let Some(state) = &self.sites[site.index()] {
+            state.contained.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> FaultStats {
+        FaultStats {
+            sites: ALL_SITES
+                .iter()
+                .filter_map(|s| {
+                    self.sites[s.index()].as_ref().map(|st| SiteStats {
+                        site: *s,
+                        calls: st.calls.load(Ordering::Relaxed),
+                        injected: st.injected.load(Ordering::Relaxed),
+                        contained: st.contained.load(Ordering::Relaxed),
+                    })
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Lifetime counters for one configured site.
+#[derive(Debug, Clone)]
+pub struct SiteStats {
+    /// The instrumented seam.
+    pub site: Site,
+    /// Times the seam asked [`fire`].
+    pub calls: u64,
+    /// Times the fault fired.
+    pub injected: u64,
+    /// Times a catch point converted the injected fault into a clean
+    /// error (only meaningful for sites with a catch point; see the
+    /// module docs).
+    pub contained: u64,
+}
+
+/// Snapshot of every configured site's counters.
+#[derive(Debug, Clone)]
+pub struct FaultStats {
+    /// Per-site counters, in [`ALL_SITES`] order.
+    pub sites: Vec<SiteStats>,
+}
+
+impl FaultStats {
+    /// Total faults injected across all sites.
+    pub fn total_injected(&self) -> u64 {
+        self.sites.iter().map(|s| s.injected).sum()
+    }
+
+    /// Counters for one site, if configured.
+    pub fn site(&self, site: Site) -> Option<&SiteStats> {
+        self.sites.iter().find(|s| s.site == site)
+    }
+
+    /// `faults[injected=… site=inj/cont …]` fragment for
+    /// `Metrics::summary`.
+    pub fn summary_fragment(&self) -> String {
+        let mut s = format!("faults[injected={}", self.total_injected());
+        for site in &self.sites {
+            s.push_str(&format!(
+                " {}={}/{}",
+                site.site.name(),
+                site.injected,
+                site.contained
+            ));
+        }
+        s.push(']');
+        s
+    }
+}
+
+/// Fast-path gate: true iff a non-empty plan is installed.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+/// The installed plan. Only read when [`ENABLED`] is set, so the lock
+/// is never touched in production.
+static PLAN: RwLock<Option<Arc<FaultPlan>>> = RwLock::new(None);
+
+/// Install `plan` process-wide (replacing any previous plan). An empty
+/// plan uninstalls. Returns whether injection is now active.
+pub fn install(plan: FaultPlan) -> bool {
+    let active = !plan.is_empty();
+    let mut slot = PLAN.write().unwrap();
+    *slot = active.then(|| Arc::new(plan));
+    // Order: flag flips only while the slot is consistent (guarded by
+    // the write lock held across both).
+    ENABLED.store(active, Ordering::SeqCst);
+    active
+}
+
+/// Remove any installed plan (fault injection off).
+pub fn clear() {
+    let mut slot = PLAN.write().unwrap();
+    ENABLED.store(false, Ordering::SeqCst);
+    *slot = None;
+}
+
+/// Install from the `PLAM_FAULT_PLAN` env var. Returns `Ok(true)` if a
+/// non-empty plan was installed, `Ok(false)` if the variable is unset
+/// or empty, and an error on a malformed spec.
+pub fn install_from_env() -> Result<bool> {
+    match std::env::var(ENV_VAR) {
+        Ok(spec) if !spec.trim().is_empty() => {
+            let plan = FaultPlan::parse(&spec)
+                .with_context(|| format!("parsing {ENV_VAR}='{spec}'"))?;
+            Ok(install(plan))
+        }
+        _ => Ok(false),
+    }
+}
+
+/// The installed plan, if any (for stats inspection).
+pub fn installed() -> Option<Arc<FaultPlan>> {
+    if !ENABLED.load(Ordering::SeqCst) {
+        return None;
+    }
+    PLAN.read().unwrap().clone()
+}
+
+/// Does the configured fault fire at this call to `site`? The
+/// production fast path (no plan installed) is one relaxed load.
+#[inline]
+pub fn fire(site: Site) -> bool {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return false;
+    }
+    fire_slow(site)
+}
+
+#[cold]
+fn fire_slow(site: Site) -> bool {
+    match &*PLAN.read().unwrap() {
+        Some(plan) => plan.decide(site),
+        None => false,
+    }
+}
+
+/// Record that a catch point converted an injected fault at `site` into
+/// a clean per-request error. No-op when no plan is installed.
+pub fn contained(site: Site) {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return;
+    }
+    if let Some(plan) = &*PLAN.read().unwrap() {
+        plan.note_contained(site);
+    }
+}
+
+/// Full `[injected-fault:<site>]` tag for one site.
+fn tag(site: Site) -> String {
+    format!("{INJECTED_MARKER}:{}]", site.name())
+}
+
+/// Build the error an injection seam returns when its fault fires. The
+/// message carries the site tag so the catch point that converts it
+/// into a per-request error can attribute it (see [`injected_site`]).
+pub fn injected_error(site: Site) -> anyhow::Error {
+    anyhow::anyhow!("{} deterministic fault injection", tag(site))
+}
+
+/// Which site's tag does this error text carry, if any? Catch points
+/// call this on the *leaf* error message (before adding their own
+/// context) to record [`contained`] only for faults they own.
+pub fn injected_site(text: &str) -> Option<Site> {
+    ALL_SITES.iter().copied().find(|s| text.contains(&tag(*s)))
+}
+
+/// Panic with the injected marker if the `worker_panic` fault fires.
+/// Called at the start of every pool task, inside the pool's
+/// catch_unwind scope.
+#[inline]
+pub fn maybe_worker_panic() {
+    if fire(Site::WorkerPanic) {
+        panic!("{} worker task panic", tag(Site::WorkerPanic));
+    }
+}
+
+/// Does this caught panic payload carry the injected marker?
+pub fn is_injected_panic(payload: &(dyn std::any::Any + Send)) -> bool {
+    panic_message(payload).contains(INJECTED_MARKER)
+}
+
+/// Best-effort text of a caught panic payload (`panic!` produces
+/// `&'static str` or `String`; anything else is opaque).
+pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        s
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s
+    } else {
+        "non-string panic payload"
+    }
+}
+
+/// `faults[…]` summary fragment of the installed plan, or `None` when
+/// injection is off (so production summaries stay bare).
+pub fn summary_fragment() -> Option<String> {
+    installed().map(|p| p.stats().summary_fragment())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_and_whitespace_specs_parse_to_empty_plans() {
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse("  ; ;; ").unwrap().is_empty());
+        assert!(FaultPlan::parse("seed=9").unwrap().is_empty());
+    }
+
+    #[test]
+    fn full_spec_parses_every_site() {
+        let spec = "seed=42;worker_panic=every:7;backend_error=rate:0.05;\
+                    callback_drop=every:3;short_write=rate:0.5;\
+                    spurious_wake=every:1;conn_reset=every:100;cache_evict=rate:1.0";
+        let plan = FaultPlan::parse(spec).unwrap();
+        assert!(!plan.is_empty());
+        assert_eq!(plan.sites().len(), 7);
+        assert_eq!(plan.seed, 42);
+    }
+
+    #[test]
+    fn malformed_specs_are_rejected() {
+        for bad in [
+            "worker_panic",               // no '='
+            "worker_panic=sometimes",     // unknown schedule
+            "worker_panic=every:0",       // never fires
+            "worker_panic=rate:0.0",      // never fires
+            "worker_panic=rate:1.5",      // out of range
+            "typo_site=every:2",          // unknown site
+            "seed=notanumber",            // bad seed
+            "worker_panic=every:2;worker_panic=every:3", // duplicate
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "'{bad}' must not parse");
+        }
+    }
+
+    #[test]
+    fn every_schedule_fires_deterministically() {
+        let plan = FaultPlan::parse("backend_error=every:3").unwrap();
+        let fired: Vec<bool> = (0..9).map(|_| plan.decide(Site::BackendError)).collect();
+        assert_eq!(
+            fired,
+            [false, false, true, false, false, true, false, false, true]
+        );
+        // Unconfigured sites never fire and stay uncounted.
+        assert!(!plan.decide(Site::ShortWrite));
+        let st = plan.stats();
+        assert_eq!(st.total_injected(), 3);
+        let be = st.site(Site::BackendError).unwrap();
+        assert_eq!((be.calls, be.injected, be.contained), (9, 3, 0));
+        assert!(st.site(Site::ShortWrite).is_none());
+    }
+
+    #[test]
+    fn rate_schedule_is_seed_deterministic_and_roughly_calibrated() {
+        let decide_all = |seed: u64| -> Vec<bool> {
+            let plan = FaultPlan::parse(&format!("seed={seed};conn_reset=rate:0.25")).unwrap();
+            (0..4000).map(|_| plan.decide(Site::ConnReset)).collect()
+        };
+        let a = decide_all(7);
+        assert_eq!(a, decide_all(7), "same seed, same fault pattern");
+        assert_ne!(a, decide_all(8), "different seed, different pattern");
+        let hits = a.iter().filter(|f| **f).count();
+        assert!(
+            (700..=1300).contains(&hits),
+            "rate:0.25 over 4000 calls fired {hits} times"
+        );
+    }
+
+    #[test]
+    fn contained_accounting_and_summary_fragment() {
+        let plan = FaultPlan::parse("worker_panic=every:1;short_write=every:2").unwrap();
+        assert!(plan.decide(Site::WorkerPanic));
+        plan.note_contained(Site::WorkerPanic);
+        let st = plan.stats();
+        let frag = st.summary_fragment();
+        assert!(frag.starts_with("faults[injected=1"), "{frag}");
+        assert!(frag.contains("worker_panic=1/1"), "{frag}");
+        assert!(frag.contains("short_write=0/0"), "{frag}");
+    }
+
+    #[test]
+    fn injected_error_tags_roundtrip_to_their_site() {
+        for site in ALL_SITES {
+            let e = injected_error(site);
+            assert_eq!(injected_site(&e.to_string()), Some(site), "{site:?}");
+        }
+        assert_eq!(injected_site("organic failure"), None);
+    }
+
+    #[test]
+    fn panic_payload_marker_roundtrip() {
+        let r = std::panic::catch_unwind(|| panic!("{INJECTED_MARKER} boom"));
+        let payload = r.unwrap_err();
+        assert!(is_injected_panic(payload.as_ref()));
+        let r = std::panic::catch_unwind(|| panic!("organic failure"));
+        assert!(!is_injected_panic(r.unwrap_err().as_ref()));
+    }
+
+    // Global install/clear is exercised in `tests/chaos_soak.rs`, which
+    // owns its own process — installing a plan here would leak faults
+    // into sibling unit tests running in parallel threads.
+}

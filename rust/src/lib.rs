@@ -13,6 +13,8 @@
 //! * [`data`] — synthetic dataset generators standing in for MNIST /
 //!   SVHN / CIFAR-10 / ISOLET / UCI-HAR (see DESIGN.md §5);
 //! * [`coordinator`] — batching inference server (L3);
+//! * [`faults`] — seeded deterministic fault injection driving the
+//!   serving stack's failure-containment guarantees (chaos testing);
 //! * `runtime` — PJRT loader for the AOT-compiled JAX/Pallas artifacts
 //!   (behind the `pjrt` cargo feature; the default build has zero
 //!   native dependencies);
@@ -35,6 +37,7 @@ pub mod bench;
 pub mod coordinator;
 pub mod data;
 pub mod experiments;
+pub mod faults;
 pub mod hardware;
 pub mod nn;
 pub mod posit;

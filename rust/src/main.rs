@@ -50,7 +50,8 @@ COMMANDS:
   serve      [--addr HOST:PORT] [--workers N] [--max-inflight N]
              [--frontend event-loop|threaded] [--request-timeout-ms N]
              [--idle-timeout-ms N] [--admission-timeout-ms N]
-             [--format-plan SPEC] [--artifact PATH --batch N --in N --out N]
+             [--format-plan SPEC] [--fault-plan SPEC]
+             [--artifact PATH --batch N --in N --out N]
              Start the batched inference server. Registers the Table I
              models in float32 / posit<16,1> / posit<16,1>+PLAM modes;
              optionally also a PJRT artifact backend (--features pjrt).
@@ -70,6 +71,14 @@ COMMANDS:
              sheds silent idle connections (default 30000);
              --admission-timeout-ms bounds the wait for an inflight
              slot before shedding (default 10000).
+             --fault-plan enables seeded deterministic fault injection
+             for chaos testing (also read from the PLAM_FAULT_PLAN env
+             var; the flag wins). SPEC is ';'-separated 'site=schedule'
+             pairs plus an optional 'seed=N', e.g.
+             'seed=42;worker_panic=every:7;backend_error=rate:0.05';
+             schedules are 'every:N' or 'rate:F'. Sites: worker_panic,
+             backend_error, callback_drop, short_write, spurious_wake,
+             conn_reset, cache_evict. See README 'Failure model'.
   table2     [--quick | --full] [--plans]
              Reproduce Table II (inference accuracy across formats).
              --plans adds the mixed-format grid: accuracy + encoded
@@ -99,6 +108,32 @@ fn cmd_serve(args: &[String]) -> i32 {
     let addr = flag_value(args, "--addr").unwrap_or("127.0.0.1:7070");
     let mut router = Router::new();
     let cfg = BatcherConfig::default();
+
+    // Fault injection (chaos testing): --fault-plan wins over the
+    // PLAM_FAULT_PLAN env var; neither means injection stays a no-op.
+    let installed = match flag_value(args, "--fault-plan") {
+        Some(spec) => match plam::faults::FaultPlan::parse(spec) {
+            Ok(plan) => Ok(plam::faults::install(plan)),
+            Err(e) => {
+                eprintln!("bad --fault-plan: {e:#}");
+                return 2;
+            }
+        },
+        None => plam::faults::install_from_env(),
+    };
+    match installed {
+        Ok(true) => {
+            let sites: Vec<&str> = plam::faults::installed()
+                .map(|p| p.sites().iter().map(|s| s.name()).collect())
+                .unwrap_or_default();
+            println!("FAULT INJECTION ACTIVE (chaos mode): sites [{}]", sites.join(", "));
+        }
+        Ok(false) => {}
+        Err(e) => {
+            eprintln!("bad {}: {e:#}", plam::faults::ENV_VAR);
+            return 2;
+        }
+    }
 
     // Optional per-layer format plan: every registered NN model gains a
     // '<name>-mixed' route running the plan (PLAM multiplier).

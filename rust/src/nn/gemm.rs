@@ -665,6 +665,13 @@ impl PlaneCache {
         cols: usize,
         data: &[f32],
     ) -> Arc<EncodedMatrix> {
+        // Fault seam: eviction storm — the whole cache vanishes before
+        // this encode. Benign by construction: misses re-encode, and
+        // planes already handed out as Arcs stay valid, so results are
+        // bit-exact either way.
+        if crate::faults::fire(crate::faults::Site::CacheEvict) {
+            self.clear();
+        }
         let (fnv, verify) = fingerprints(data);
         let key = PlaneKey {
             mode: mode_key(mode),

@@ -37,7 +37,7 @@ pub use gemm::{
 };
 pub use layers::{ArithMode, Layer, MulKind};
 pub use plan::{format_slug, parse_format, FormatPlan, LayerArith};
-pub use pool::{PoolStats, WorkerPool};
+pub use pool::{PoolPanic, PoolStats, WorkerPool};
 pub use prepared::{ActivationPipeline, PreparedModel};
 pub use model::{Model, ModelKind};
 pub use tensor::Tensor;

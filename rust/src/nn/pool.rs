@@ -27,16 +27,27 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
+use crate::faults;
+
 /// A type-erased shard body. `'static` here is a lie told once, in
 /// [`WorkerPool::run`], and made true by the completion latch.
 type Task = Box<dyn FnOnce() + Send>;
 
 /// Countdown latch: `run` blocks on it until every shard of the
 /// submission has executed (or panicked).
+///
+/// Leak-freedom invariant (the containment story depends on it): a
+/// panicking task reaches `count_down` exactly like a successful one —
+/// the catch in [`Shared::execute`] is *inside* the active-gauge
+/// bracket and *before* the count-down, so a poisoned shard can never
+/// strand `remaining > 0` and deadlock the fork-join, and the pool's
+/// gauges stay exact.
 struct Latch {
     remaining: Mutex<usize>,
     done: Condvar,
-    panicked: AtomicBool,
+    /// Tasks of this submission that panicked (not just a flag: the
+    /// submitter reports the count in [`PoolPanic`]).
+    panics: AtomicUsize,
 }
 
 impl Latch {
@@ -44,13 +55,13 @@ impl Latch {
         Latch {
             remaining: Mutex::new(n),
             done: Condvar::new(),
-            panicked: AtomicBool::new(false),
+            panics: AtomicUsize::new(0),
         }
     }
 
     fn count_down(&self, panicked: bool) {
         if panicked {
-            self.panicked.store(true, Ordering::Release);
+            self.panics.fetch_add(1, Ordering::Release);
         }
         let mut r = self.remaining.lock().unwrap();
         *r -= 1;
@@ -147,8 +158,19 @@ impl Shared {
     fn execute(&self, job: Job) {
         let n = self.active.fetch_add(1, Ordering::SeqCst) + 1;
         self.active_peak.fetch_max(n, Ordering::Relaxed);
-        let r = catch_unwind(AssertUnwindSafe(job.task));
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            // Fault seam: an injected panic fires before the task body,
+            // so it never interrupts a shard mid-write (no lock is held
+            // and no partial output row exists at this point).
+            faults::maybe_worker_panic();
+            (job.task)()
+        }));
         self.active.fetch_sub(1, Ordering::SeqCst);
+        if let Err(p) = &r {
+            if faults::is_injected_panic(p.as_ref()) {
+                faults::contained(faults::Site::WorkerPanic);
+            }
+        }
         job.latch.count_down(r.is_err());
     }
 }
@@ -215,6 +237,40 @@ impl PoolStats {
     }
 }
 
+/// One or more shards of a fork-join submission panicked. The
+/// submission still ran to completion — every task was attempted, all
+/// latch/gauge state was released — so the pool remains serviceable;
+/// this error only reports that some shard outputs are missing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolPanic {
+    /// Tasks in the submission.
+    pub tasks: usize,
+    /// Tasks that panicked.
+    pub panicked: usize,
+}
+
+impl PoolPanic {
+    fn check(tasks: usize, panicked: usize) -> Result<(), PoolPanic> {
+        if panicked == 0 {
+            Ok(())
+        } else {
+            Err(PoolPanic { tasks, panicked })
+        }
+    }
+}
+
+impl std::fmt::Display for PoolPanic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "worker pool task panicked ({} of {} shards)",
+            self.panicked, self.tasks
+        )
+    }
+}
+
+impl std::error::Error for PoolPanic {}
+
 /// Fixed-size work-stealing thread pool for GEMM shards.
 pub struct WorkerPool {
     shared: Arc<Shared>,
@@ -265,29 +321,61 @@ impl WorkerPool {
     ///
     /// Blocks until every task has executed; panics if any task
     /// panicked (after all of them finished). Tasks may borrow from the
-    /// caller's stack — the blocking is what makes that sound.
+    /// caller's stack — the blocking is what makes that sound. Callers
+    /// that must stay alive across a poisoned shard (the batcher) use
+    /// [`WorkerPool::try_run`] instead.
     pub fn run<'scope>(&self, tasks: Vec<Box<dyn FnOnce() + Send + 'scope>>) {
-        if tasks.is_empty() {
-            return;
+        if let Err(e) = self.try_run(tasks) {
+            panic!("{e}");
+        }
+    }
+
+    /// [`WorkerPool::run`] that reports task panics as an error instead
+    /// of re-panicking on the submitter thread.
+    ///
+    /// Containment contract: *every* task is attempted regardless of
+    /// sibling panics (on the inline path too — a panicking shard does
+    /// not starve the shards queued after it), every panic is caught,
+    /// and active/latch/queue state is fully released before this
+    /// returns — the pool stays serviceable and nothing leaks. The
+    /// error carries how many shards panicked; outputs of non-panicking
+    /// shards are intact (shards write disjoint regions).
+    pub fn try_run<'scope>(
+        &self,
+        tasks: Vec<Box<dyn FnOnce() + Send + 'scope>>,
+    ) -> Result<(), PoolPanic> {
+        let total = tasks.len();
+        if total == 0 {
+            return Ok(());
         }
         let inline = self.workers() == 0
-            || tasks.len() == 1
+            || total == 1
             || self.shared.shutdown.load(Ordering::SeqCst);
         if inline {
+            let mut panicked = 0;
             for t in tasks {
-                t();
+                let r = catch_unwind(AssertUnwindSafe(|| {
+                    faults::maybe_worker_panic();
+                    t()
+                }));
+                if let Err(p) = &r {
+                    if faults::is_injected_panic(p.as_ref()) {
+                        faults::contained(faults::Site::WorkerPanic);
+                    }
+                    panicked += 1;
+                }
             }
-            return;
+            return PoolPanic::check(total, panicked);
         }
-        let latch = Arc::new(Latch::new(tasks.len()));
+        let latch = Arc::new(Latch::new(total));
         let start = self.next.fetch_add(1, Ordering::Relaxed);
         for (i, task) in tasks.into_iter().enumerate() {
-            // SAFETY: the latch makes this a scoped spawn. `run` does
-            // not return until `latch.wait()` has observed every task's
-            // completion, so every borrow captured by `task` (with
-            // lifetime `'scope`) strictly outlives its execution; the
-            // transmute only erases the lifetime the queue cannot
-            // express, it never extends a task past `run`.
+            // SAFETY: the latch makes this a scoped spawn. `try_run`
+            // does not return until `latch.wait()` has observed every
+            // task's completion, so every borrow captured by `task`
+            // (with lifetime `'scope`) strictly outlives its execution;
+            // the transmute only erases the lifetime the queue cannot
+            // express, it never extends a task past `try_run`.
             let task: Task = unsafe {
                 std::mem::transmute::<Box<dyn FnOnce() + Send + 'scope>, Task>(task)
             };
@@ -312,9 +400,7 @@ impl WorkerPool {
             }
         }
         latch.wait();
-        if latch.panicked.load(Ordering::Acquire) {
-            panic!("worker pool task panicked");
-        }
+        PoolPanic::check(total, latch.panics.load(Ordering::Acquire))
     }
 
     /// Snapshot the gauges.
@@ -456,6 +542,81 @@ mod tests {
         }
         pool.run(tasks);
         assert_eq!(counter.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
+    fn panicking_band_leaks_nothing_and_reports_counts() {
+        // Satellite regression: a panicking band must still count down
+        // the latch (try_run returns instead of deadlocking), release
+        // the active gauge, and leave the other bands' output intact.
+        let pool = WorkerPool::new(2);
+        let mut data = vec![0u64; 4 * 8];
+        let tasks: Vec<_> = data
+            .chunks_mut(8)
+            .enumerate()
+            .map(|(i, band)| {
+                boxed(move || {
+                    if i == 2 {
+                        panic!("poisoned band");
+                    }
+                    for (j, v) in band.iter_mut().enumerate() {
+                        *v = (i * 8 + j) as u64 + 1;
+                    }
+                })
+            })
+            .collect();
+        let err = pool.try_run(tasks).unwrap_err();
+        assert_eq!(err, PoolPanic { tasks: 4, panicked: 1 });
+        assert!(err.to_string().contains("1 of 4"), "{err}");
+        for (i, v) in data.iter().enumerate() {
+            if i / 8 == 2 {
+                assert_eq!(*v, 0, "poisoned band wrote nothing");
+            } else {
+                assert_eq!(*v, i as u64 + 1, "healthy bands completed");
+            }
+        }
+        // Nothing leaked: gauges drained, and the pool still serves.
+        let st = pool.stats();
+        assert_eq!(st.queue_depth, 0);
+        assert_eq!(st.active, 0);
+        let counter = AtomicU32::new(0);
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..6)
+            .map(|_| {
+                boxed(|| {
+                    counter.fetch_add(1, Ordering::SeqCst);
+                })
+            })
+            .collect();
+        pool.try_run(tasks).unwrap();
+        assert_eq!(counter.load(Ordering::SeqCst), 6);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn inline_path_attempts_every_task_despite_panics() {
+        // The unpooled (workers == 0) path must match the pooled
+        // containment semantics: all tasks attempted, panics counted,
+        // no early abort after the first poisoned task.
+        let pool = WorkerPool::new(0);
+        let counter = AtomicU32::new(0);
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..5)
+            .map(|i| {
+                let counter = &counter;
+                boxed(move || {
+                    if i % 2 == 0 {
+                        panic!("inline poison {i}");
+                    }
+                    counter.fetch_add(1, Ordering::SeqCst);
+                })
+            })
+            .collect();
+        let err = pool.try_run(tasks).unwrap_err();
+        assert_eq!(err, PoolPanic { tasks: 5, panicked: 3 });
+        assert_eq!(
+            counter.load(Ordering::SeqCst),
+            2,
+            "tasks after a panicking sibling must still run"
+        );
     }
 
     #[test]

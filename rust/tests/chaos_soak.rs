@@ -1,0 +1,439 @@
+//! Chaos soak: the 64-client TCP stress harness run under a seeded
+//! fault schedule covering every instrumented seam (worker panics,
+//! backend errors, callback drops, short writes, spurious wakeups,
+//! connection resets, plane-cache eviction storms).
+//!
+//! The containment invariant under test, end to end: **every accepted
+//! request gets exactly one response — a correct frame or a clean error
+//! frame — and no fault kills the process or wedges a connection.**
+//! Concretely the harness asserts:
+//!
+//! * success frames are bit-exact against a single-threaded reference;
+//! * a request never goes silent — a response, an error frame, or a
+//!   clean connection teardown (the client reconnects and retries); a
+//!   10 s read timeout counts as a wedged connection and fails the run;
+//! * frames never tear or desync (a non-IO protocol error on a live
+//!   connection fails the run);
+//! * every injected fault is accounted: per-site `injected` counters
+//!   are non-zero for each configured site, `injected == contained`
+//!   for the four sites with an explicit catch point, and the fault
+//!   counters surface in `Metrics::summary`;
+//! * the server drains: requests == completed + failed per model, the
+//!   admission valve and the worker pool end empty, and a fresh
+//!   connection per model gets bit-exact service once injection stops.
+//!
+//! The schedule comes from `PLAM_FAULT_PLAN` when set (the CI `chaos`
+//! job runs three fixed seeds) and falls back to a default that fires
+//! every site. Schedules should use `every:N` so firing is guaranteed
+//! regardless of timing.
+
+use std::io::ErrorKind;
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use plam::coordinator::{serve, wire, BatcherConfig, NnBackend, Router, ServerConfig};
+use plam::faults::{self, Site};
+use plam::nn::{ArithMode, Layer, Model, PreparedModel, Tensor};
+use plam::posit::PositFormat;
+use plam::prng::Rng;
+
+const CLIENTS: usize = 64;
+const REQUESTS_PER_CLIENT: usize = 16;
+const MAX_ATTEMPTS: usize = 20;
+
+/// Fires every site; `every:N` periods chosen so each seam triggers
+/// several times over ~1k requests without drowning the run in faults.
+const DEFAULT_SPEC: &str = "seed=42;worker_panic=every:97;backend_error=every:41;\
+                            callback_drop=every:53;short_write=every:7;\
+                            spurious_wake=every:13;conn_reset=every:151;cache_evict=every:2";
+
+/// Sites with an explicit catch point, where every injection must be
+/// matched by a containment record (see `plam::faults` module docs).
+const TRACKED: [Site; 4] = [
+    Site::WorkerPanic,
+    Site::BackendError,
+    Site::CallbackDrop,
+    Site::ConnReset,
+];
+
+/// Fault plans are process-global: tests in this binary serialize.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+struct FaultGuard;
+
+impl FaultGuard {
+    fn install(spec: &str) -> FaultGuard {
+        assert!(
+            faults::install(faults::FaultPlan::parse(spec).unwrap()),
+            "soak spec must configure at least one site"
+        );
+        FaultGuard
+    }
+}
+
+impl Drop for FaultGuard {
+    fn drop(&mut self) {
+        faults::clear();
+    }
+}
+
+fn random_tensor(rng: &mut Rng, shape: &[usize]) -> Tensor {
+    Tensor::from_vec(
+        shape,
+        (0..shape.iter().product::<usize>())
+            .map(|_| rng.normal() as f32 * 0.5)
+            .collect(),
+    )
+}
+
+/// Small two-layer MLP so the soak budget goes into faults, not MACs.
+fn small_model(name: &str, in_dim: usize, hidden: usize, out_dim: usize, seed: u64) -> Model {
+    let mut rng = Rng::new(seed);
+    Model {
+        name: name.into(),
+        input_shape: vec![in_dim],
+        layers: vec![
+            Layer::Dense {
+                w: random_tensor(&mut rng, &[hidden, in_dim]),
+                b: random_tensor(&mut rng, &[hidden]),
+            },
+            Layer::Relu,
+            Layer::Dense {
+                w: random_tensor(&mut rng, &[out_dim, hidden]),
+                b: random_tensor(&mut rng, &[out_dim]),
+            },
+        ],
+    }
+}
+
+/// Deterministic input for one (client, request) pair.
+fn request_input(client: usize, req: usize, in_dim: usize) -> Vec<f32> {
+    let mut rng = Rng::new(0xC4A05 + (client as u64) * 1000 + req as u64);
+    (0..in_dim).map(|_| rng.normal() as f32 * 0.5).collect()
+}
+
+fn bits_equal(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b.iter()).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+fn reference_output(reference: &PreparedModel, in_dim: usize, input: &[f32]) -> Vec<f32> {
+    reference
+        .forward(&Tensor::from_vec(&[in_dim], input.to_vec()))
+        .data
+}
+
+/// One request/response exchange on an existing connection.
+fn attempt(
+    stream: &mut TcpStream,
+    model: &str,
+    input: &[f32],
+) -> anyhow::Result<Result<Vec<f32>, String>> {
+    wire::write_request(
+        stream,
+        &wire::Request {
+            model: model.into(),
+            input: input.to_vec(),
+        },
+    )?;
+    wire::read_response(stream)
+}
+
+fn connect(addr: SocketAddr) -> TcpStream {
+    let s = TcpStream::connect(addr).expect("server must stay accepting under faults");
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    s
+}
+
+/// A failed exchange is only acceptable as a clean connection death
+/// (injected reset, or a frame cut short by one). A read *timeout*
+/// means the server wedged the connection; a non-IO parse error means
+/// frames tore or desynced — both fail the soak.
+fn assert_clean_conn_death(e: &anyhow::Error, client: usize, req: usize) {
+    let io = e.downcast_ref::<std::io::Error>();
+    assert!(io.is_some(), "client {client} req {req}: protocol desync: {e:#}");
+    let timed_out =
+        io.is_some_and(|io| matches!(io.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut));
+    assert!(!timed_out, "client {client} req {req}: wedged connection (10s of silence)");
+}
+
+/// Per-client soak loop: (ok frames, error frames, connection deaths).
+fn soak_client(addr: SocketAddr, client: usize, refs: &[Arc<PreparedModel>; 2]) -> (u64, u64, u64) {
+    let mut stream = connect(addr);
+    let (mut oks, mut err_frames, mut conn_deaths) = (0u64, 0u64, 0u64);
+    for req in 0..REQUESTS_PER_CLIENT {
+        let use_a = (client + req) % 2 == 0;
+        let (name, in_dim) = if use_a { ("chaos-a", 32) } else { ("chaos-b", 48) };
+        let reference = if use_a { &refs[0] } else { &refs[1] };
+        let input = request_input(client, req, in_dim);
+        let want = reference_output(reference, in_dim, &input);
+        let mut attempts = 0;
+        loop {
+            attempts += 1;
+            assert!(
+                attempts <= MAX_ATTEMPTS,
+                "client {client} req {req}: no outcome after {MAX_ATTEMPTS} attempts"
+            );
+            match attempt(&mut stream, name, &input) {
+                Ok(Ok(out)) => {
+                    // Exactly-one-response plus bit-exactness: a success
+                    // frame must match the single-threaded reference.
+                    assert!(
+                        bits_equal(&out, &want),
+                        "client {client} req {req}: response not bit-exact"
+                    );
+                    oks += 1;
+                    break;
+                }
+                Ok(Err(msg)) => {
+                    // A clean error frame is also a valid outcome.
+                    assert!(!msg.is_empty(), "client {client} req {req}: empty error frame");
+                    err_frames += 1;
+                    break;
+                }
+                Err(e) => {
+                    assert_clean_conn_death(&e, client, req);
+                    conn_deaths += 1;
+                    stream = connect(addr);
+                }
+            }
+        }
+    }
+    (oks, err_frames, conn_deaths)
+}
+
+#[test]
+fn chaos_soak_contains_every_injected_fault() {
+    let _s = serial();
+    let spec = std::env::var(faults::ENV_VAR)
+        .ok()
+        .filter(|s| !s.trim().is_empty())
+        .unwrap_or_else(|| DEFAULT_SPEC.to_string());
+
+    let model_a = small_model("chaos-a", 32, 24, 10, 0xA);
+    let model_b = small_model("chaos-b", 48, 20, 7, 0xB);
+    let mode_a = ArithMode::posit_plam(PositFormat::P16E1);
+    let mode_b = ArithMode::posit_exact(PositFormat::P16E1);
+    // Single-threaded references, prepared before injection starts.
+    let refs = [
+        Arc::new(PreparedModel::new(&model_a, mode_a.clone())),
+        Arc::new(PreparedModel::new(&model_b, mode_b.clone())),
+    ];
+
+    // Install before registration so `cache_evict` exercises the encode
+    // path while the backends prepare their weight planes.
+    let guard = FaultGuard::install(&spec);
+    let plan_sites = faults::installed().unwrap().sites();
+    println!("chaos soak: spec '{spec}' covers sites {plan_sites:?}");
+
+    let mut router = Router::new();
+    let cfg = BatcherConfig {
+        max_batch: 16,
+        max_wait: Duration::from_millis(2),
+    };
+    router.register("chaos-a", Arc::new(NnBackend::new(model_a, mode_a)), cfg);
+    router.register("chaos-b", Arc::new(NnBackend::new(model_b, mode_b)), cfg);
+
+    let h = serve(
+        router,
+        &ServerConfig {
+            workers: 4,
+            max_inflight: 256,
+            ..ServerConfig::default()
+        },
+    )
+    .unwrap();
+    let addr = h.addr;
+
+    let mut joins = vec![];
+    for client in 0..CLIENTS {
+        let refs = refs.clone();
+        joins.push(std::thread::spawn(move || soak_client(addr, client, &refs)));
+    }
+    let (mut oks, mut err_frames, mut conn_deaths) = (0u64, 0u64, 0u64);
+    for j in joins {
+        let (o, e, c) = j.join().unwrap();
+        oks += o;
+        err_frames += e;
+        conn_deaths += c;
+    }
+    println!("chaos soak: oks={oks} err_frames={err_frames} conn_deaths={conn_deaths}");
+    assert!(oks > 0, "soak produced no successful responses at all");
+
+    // Settle: requests whose connection was reset may still be in
+    // flight on batcher threads, and a reset's containment is recorded
+    // when the event loop reaps the slot on its next tick.
+    let totals = || -> (u64, u64) {
+        let mut req = 0;
+        let mut answered = 0;
+        for n in ["chaos-a", "chaos-b"] {
+            let m = &h.router().get(n).unwrap().metrics;
+            req += m.requests.load(Ordering::Relaxed);
+            answered += m.completed.load(Ordering::Relaxed) + m.failed.load(Ordering::Relaxed);
+        }
+        (req, answered)
+    };
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let st = faults::installed().unwrap().stats();
+        let contained_ok = TRACKED
+            .iter()
+            .all(|s| st.site(*s).map_or(true, |x| x.injected == x.contained));
+        let (req, answered) = totals();
+        if contained_ok && req == answered {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "soak never settled: requests={req} answered={answered} stats={:?}",
+            st.sites
+        );
+        std::thread::sleep(Duration::from_millis(100));
+    }
+
+    // Every configured site actually fired, and the catch-point sites
+    // contained exactly what was injected.
+    let st = faults::installed().unwrap().stats();
+    for s in &st.sites {
+        assert!(
+            s.injected >= 1,
+            "site {} was configured but never fired (calls={})",
+            s.site.name(),
+            s.calls
+        );
+    }
+    for site in TRACKED {
+        if let Some(s) = st.site(site) {
+            assert_eq!(
+                s.injected,
+                s.contained,
+                "site {}: {} injected but only {} contained",
+                site.name(),
+                s.injected,
+                s.contained
+            );
+        }
+    }
+
+    // The fault counters surface in the served metrics summary.
+    let summary = h.router().get("chaos-a").unwrap().metrics.summary();
+    assert!(summary.contains("faults[injected="), "{summary}");
+    for s in &st.sites {
+        assert!(summary.contains(s.site.name()), "{summary}");
+    }
+    if st.site(Site::WorkerPanic).is_some() {
+        let mut panics = 0;
+        for n in ["chaos-a", "chaos-b"] {
+            let m = &h.router().get(n).unwrap().metrics;
+            panics += m.worker_panics.load(Ordering::Relaxed);
+        }
+        assert!(panics >= 1, "injected worker panics must surface in metrics");
+    }
+    if let Some(stats) = h.loop_stats() {
+        if st.site(Site::ConnReset).is_some() {
+            assert!(stats.conn_resets.load(Ordering::Relaxed) >= 1);
+        }
+    }
+
+    // The server drained: no stuck admissions, no stuck pool shards.
+    assert_eq!(h.admission().inflight(), 0, "admission valve not drained");
+    let pst = h.pool().unwrap().stats();
+    assert_eq!(pst.queue_depth, 0, "pool queue not drained");
+    assert_eq!(pst.active, 0, "stuck pool shards");
+
+    // With injection off, fresh connections get bit-exact service on
+    // every model — nothing about the soak degraded the server.
+    drop(guard);
+    let checks = [("chaos-a", 32usize, &refs[0]), ("chaos-b", 48usize, &refs[1])];
+    for (name, in_dim, reference) in checks {
+        let mut s = connect(addr);
+        let input = request_input(999, 0, in_dim);
+        let want = reference_output(reference, in_dim, &input);
+        let got = attempt(&mut s, name, &input).unwrap().unwrap();
+        assert_eq!(got, want, "{name}: post-soak service not bit-exact");
+    }
+    h.shutdown();
+}
+
+#[test]
+fn cache_eviction_storms_keep_results_bit_exact() {
+    let _s = serial();
+    let model = small_model("evict", 40, 32, 12, 0xE);
+    let mode = ArithMode::posit_plam(PositFormat::P16E1);
+    // Reference prepared with injection off…
+    let reference = PreparedModel::new(&model, mode.clone());
+    let input = request_input(7, 3, 40);
+    let want = reference_output(&reference, 40, &input);
+    // …then every encode under an eviction storm must still produce
+    // bit-identical planes (misses re-encode; handed-out Arcs survive).
+    let _f = FaultGuard::install("cache_evict=every:1");
+    for round in 0..3 {
+        let stormed = PreparedModel::new(&model, mode.clone());
+        let got = reference_output(&stormed, 40, &input);
+        assert_eq!(got, want, "round {round}: eviction storm changed bits");
+    }
+    let st = faults::installed().unwrap().stats();
+    assert!(st.site(Site::CacheEvict).unwrap().injected >= 1);
+}
+
+#[test]
+fn byzantine_clients_cannot_wedge_healthy_service() {
+    let _s = serial();
+    // No fault plan here: the byzantine *clients* are the fault source.
+    let model = small_model("byz", 24, 16, 5, 0xF);
+    let mode = ArithMode::float32();
+    let reference = PreparedModel::new(&model, mode.clone());
+    let mut router = Router::new();
+    router.register(
+        "byz",
+        Arc::new(NnBackend::new(model, mode)),
+        BatcherConfig::default(),
+    );
+    let h = serve(
+        router,
+        &ServerConfig {
+            idle_timeout: Duration::from_millis(300),
+            ..ServerConfig::default()
+        },
+    )
+    .unwrap();
+
+    use std::io::Write;
+    // Garbage magic: killed at the protocol layer.
+    let mut garbage = TcpStream::connect(h.addr).unwrap();
+    garbage.write_all(b"GET / HTTP/1.1\r\n\r\n").unwrap();
+    // Half a frame, then hangup mid-frame.
+    let mut frame = Vec::new();
+    wire::write_request(
+        &mut frame,
+        &wire::Request {
+            model: "byz".into(),
+            input: request_input(0, 0, 24),
+        },
+    )
+    .unwrap();
+    let mut half = TcpStream::connect(h.addr).unwrap();
+    half.write_all(&frame[..frame.len() / 2]).unwrap();
+    drop(half);
+    // Half a frame, then silence (slow loris): shed by the idle timer.
+    let mut loris = TcpStream::connect(h.addr).unwrap();
+    loris.write_all(&frame[..5]).unwrap();
+
+    // A healthy client gets bit-exact service throughout and after.
+    let input = request_input(1, 1, 24);
+    let want = reference_output(&reference, 24, &input);
+    let mut healthy = connect(h.addr);
+    for _ in 0..5 {
+        let got = attempt(&mut healthy, "byz", &input).unwrap().unwrap();
+        assert_eq!(got, want);
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    drop(loris);
+    drop(garbage);
+    h.shutdown();
+}

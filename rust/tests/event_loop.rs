@@ -1,17 +1,45 @@
 //! Integration tests for the readiness-driven event-loop front-end:
 //! fragmented writes, pipelining, slow-loris shedding, overload
-//! shedding, per-request timeouts, and half-close draining — all over
-//! real TCP against the default `Frontend::EventLoop` server.
+//! shedding, per-request timeouts, half-close draining, and the
+//! exactly-one-response invariant under injected faults — all over real
+//! TCP against the default `Frontend::EventLoop` server.
 
 use std::io::Write;
 use std::net::{Shutdown, TcpStream};
 use std::sync::atomic::Ordering;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 use plam::coordinator::{
-    serve, wire, BatcherConfig, Client, InferenceBackend, Router, ServerConfig,
+    serve, wire, BatcherConfig, Client, InferenceBackend, NnBackend, Router, ServerConfig,
 };
+use plam::faults;
+
+/// Fault plans are process-global, so every test in this binary takes
+/// this lock: a chaos test's plan must never leak into a fault-free
+/// test running on a sibling thread.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Installs a fault plan for one test and uninstalls it on drop (even
+/// on assertion panic), so the next test starts clean.
+struct FaultGuard;
+
+impl FaultGuard {
+    fn install(spec: &str) -> FaultGuard {
+        assert!(faults::install(faults::FaultPlan::parse(spec).unwrap()));
+        FaultGuard
+    }
+}
+
+impl Drop for FaultGuard {
+    fn drop(&mut self) {
+        faults::clear();
+    }
+}
 
 /// Echoes its input, so responses are attributable to requests.
 struct Echo;
@@ -79,6 +107,7 @@ fn request_bytes(model: &str, input: &[f32]) -> Vec<u8> {
 
 #[test]
 fn byte_at_a_time_request_parses_and_answers() {
+    let _s = serial();
     let h = serve(echo_router(), &ServerConfig::default()).unwrap();
     let mut s = TcpStream::connect(h.addr).unwrap();
     s.set_nodelay(true).unwrap();
@@ -97,6 +126,7 @@ fn byte_at_a_time_request_parses_and_answers() {
 
 #[test]
 fn pipelined_requests_answer_in_order() {
+    let _s = serial();
     let h = serve(echo_router(), &ServerConfig::default()).unwrap();
     let mut s = TcpStream::connect(h.addr).unwrap();
     // Ten distinguishable requests in one burst, no reads in between.
@@ -114,6 +144,7 @@ fn pipelined_requests_answer_in_order() {
 
 #[test]
 fn slow_loris_is_shed_without_hurting_healthy_connections() {
+    let _s = serial();
     let h = serve(
         echo_router(),
         &ServerConfig {
@@ -155,6 +186,7 @@ fn slow_loris_is_shed_without_hurting_healthy_connections() {
 
 #[test]
 fn overload_shed_counts_and_answers() {
+    let _s = serial();
     let mut r = Router::new();
     r.register(
         "slow",
@@ -198,6 +230,7 @@ fn overload_shed_counts_and_answers() {
 
 #[test]
 fn request_timeout_expires_queued_requests() {
+    let _s = serial();
     let mut r = Router::new();
     r.register(
         "slow",
@@ -236,6 +269,7 @@ fn request_timeout_expires_queued_requests() {
 
 #[test]
 fn half_close_drains_pending_responses() {
+    let _s = serial();
     let h = serve(echo_router(), &ServerConfig::default()).unwrap();
     let mut s = TcpStream::connect(h.addr).unwrap();
     let mut burst = Vec::new();
@@ -258,5 +292,202 @@ fn half_close_drains_pending_responses() {
     let stats = h.loop_stats().unwrap();
     assert!(stats.accepted.load(Ordering::Relaxed) >= 1);
     assert!(stats.closed.load(Ordering::Relaxed) >= 1);
+    h.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// Exactly-one-response invariant under injected faults: for each fault
+// site, a pipelined client observes either its result or one error
+// frame per request — never silence or duplicates (the framed in-order
+// read below would desync on either) — and requests after the fault
+// window succeed.
+// ---------------------------------------------------------------------
+
+/// Pipeline `n` echo requests, read exactly `n` frames, and return the
+/// error messages observed. Unfaulted responses must be correct and in
+/// order; a lost frame shows up as a read timeout, a duplicated frame
+/// desyncs a later iteration's payload check.
+fn pipeline_echo(addr: std::net::SocketAddr, n: usize) -> Vec<String> {
+    let mut s = TcpStream::connect(addr).unwrap();
+    let mut burst = Vec::new();
+    for i in 0..n {
+        burst.extend_from_slice(&request_bytes("echo", &[i as f32, 0.5]));
+    }
+    s.write_all(&burst).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut errors = Vec::new();
+    for i in 0..n {
+        match wire::read_response(&mut s).unwrap() {
+            Ok(out) => assert_eq!(out, vec![i as f32, 0.5], "request {i}: wrong/reordered frame"),
+            Err(msg) => {
+                assert!(!msg.is_empty(), "error frames carry a message");
+                errors.push(msg);
+            }
+        }
+    }
+    errors
+}
+
+#[test]
+fn injected_backend_errors_answer_exactly_one_frame_each() {
+    let _s = serial();
+    // every:2 guarantees a firing: 12 pipelined requests make at least
+    // two backend calls (the effective batch ceiling is 8).
+    let f = FaultGuard::install("seed=3;backend_error=every:2");
+    let h = serve(echo_router(), &ServerConfig::default()).unwrap();
+    pipeline_echo(h.addr, 12);
+    let st = faults::installed().unwrap().stats();
+    let be = st.site(faults::Site::BackendError).unwrap();
+    assert!(be.injected >= 1, "schedule never fired over 12 requests");
+    assert_eq!(
+        be.injected, be.contained,
+        "every injected backend error must be contained by retry-alone"
+    );
+    // Fresh connection succeeds once the fault window closes.
+    drop(f);
+    let mut c = Client::connect(h.addr).unwrap();
+    assert_eq!(c.infer("echo", &[7.0, 7.0]).unwrap(), vec![7.0, 7.0]);
+    h.shutdown();
+}
+
+#[test]
+fn injected_callback_drops_still_answer_every_request() {
+    let _s = serial();
+    let f = FaultGuard::install("callback_drop=every:3");
+    let h = serve(echo_router(), &ServerConfig::default()).unwrap();
+    let errors = pipeline_echo(h.addr, 9);
+    // every:3 over 9 sends is deterministic: 3 swallowed dispatches,
+    // each rescued by the reply drop guard.
+    assert_eq!(errors.len(), 3, "{errors:?}");
+    assert!(
+        errors.iter().all(|m| m.contains("dropped without a response")),
+        "{errors:?}"
+    );
+    let st = faults::installed().unwrap().stats();
+    let cd = st.site(faults::Site::CallbackDrop).unwrap();
+    assert_eq!((cd.injected, cd.contained), (3, 3));
+    drop(f);
+    let mut c = Client::connect(h.addr).unwrap();
+    assert_eq!(c.infer("echo", &[5.0, 5.0]).unwrap(), vec![5.0, 5.0]);
+    h.shutdown();
+}
+
+#[test]
+fn injected_socket_faults_never_tear_or_lose_frames() {
+    let _s = serial();
+    let _f = FaultGuard::install("seed=5;short_write=every:2;spurious_wake=every:5");
+    let h = serve(echo_router(), &ServerConfig::default()).unwrap();
+    // Both sites are benign by construction: every frame arrives whole,
+    // correct, and in order — just a tick late or a byte at a time.
+    let errors = pipeline_echo(h.addr, 10);
+    assert!(errors.is_empty(), "{errors:?}");
+    let st = faults::installed().unwrap().stats();
+    assert!(st.site(faults::Site::ShortWrite).unwrap().injected >= 1);
+    assert!(st.site(faults::Site::SpuriousWake).unwrap().injected >= 1);
+    h.shutdown();
+}
+
+#[test]
+fn injected_conn_reset_kills_only_that_connection() {
+    let _s = serial();
+    let f = FaultGuard::install("conn_reset=every:1");
+    let h = serve(echo_router(), &ServerConfig::default()).unwrap();
+    // Every readiness event is a reset: the client must see a prompt
+    // clean teardown — EOF, or ECONNRESET if the kernel RSTs because
+    // the request bytes were still unread — never a wedged connection
+    // (the 10s read timeout below turns a wedge into a failure).
+    let mut s = TcpStream::connect(h.addr).unwrap();
+    s.write_all(&request_bytes("echo", &[1.0, 2.0])).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    use std::io::{ErrorKind, Read};
+    let mut buf = [0u8; 64];
+    match s.read(&mut buf) {
+        Ok(n) => assert_eq!(n, 0, "reset must not deliver a frame"),
+        Err(e) => assert!(
+            matches!(e.kind(), ErrorKind::ConnectionReset | ErrorKind::ConnectionAborted),
+            "reset must surface as clean connection death, got: {e}"
+        ),
+    }
+    let stats = h.loop_stats().unwrap();
+    assert!(stats.conn_resets.load(Ordering::Relaxed) >= 1);
+    let st = faults::installed().unwrap().stats();
+    let cr = st.site(faults::Site::ConnReset).unwrap();
+    assert!(cr.injected >= 1);
+    assert_eq!(cr.injected, cr.contained, "every reset must be reaped");
+    // The front-end survived; a fresh connection gets served.
+    drop(f);
+    let mut c = Client::connect(h.addr).unwrap();
+    assert_eq!(c.infer("echo", &[3.0, 3.0]).unwrap(), vec![3.0, 3.0]);
+    h.shutdown();
+}
+
+#[test]
+fn injected_worker_panics_contained_with_pool() {
+    let _s = serial();
+    use plam::nn::{ArithMode, Layer, Model, PreparedModel, Tensor};
+    use plam::prng::Rng;
+    let mut rng = Rng::new(0xEE);
+    let mut t = |shape: &[usize]| {
+        Tensor::from_vec(
+            shape,
+            (0..shape.iter().product::<usize>())
+                .map(|_| rng.normal() as f32 * 0.5)
+                .collect(),
+        )
+    };
+    let model = Model {
+        name: "tiny".into(),
+        input_shape: vec![16],
+        layers: vec![
+            Layer::Dense {
+                w: t(&[12, 16]),
+                b: t(&[12]),
+            },
+            Layer::Relu,
+            Layer::Dense {
+                w: t(&[4, 12]),
+                b: t(&[4]),
+            },
+        ],
+    };
+    let reference = PreparedModel::new(&model, ArithMode::float32());
+    let input: Vec<f32> = (0..16).map(|i| i as f32 * 0.1).collect();
+    let want = reference
+        .forward(&Tensor::from_vec(&[16], input.clone()))
+        .data;
+    let mut r = Router::new();
+    r.register(
+        "tiny",
+        Arc::new(NnBackend::new(model, ArithMode::float32())),
+        BatcherConfig::default(),
+    );
+    let h = serve(
+        r,
+        &ServerConfig {
+            workers: 2,
+            ..ServerConfig::default()
+        },
+    )
+    .unwrap();
+    let f = FaultGuard::install("seed=9;worker_panic=every:5");
+    let mut c = Client::connect(h.addr).unwrap();
+    for _ in 0..20 {
+        match c.infer("tiny", &input) {
+            // Unfaulted (or successfully retried) responses stay
+            // bit-exact despite panics on sibling requests.
+            Ok(out) => assert_eq!(out, want),
+            Err(e) => assert!(e.to_string().contains("panicked"), "{e}"),
+        }
+    }
+    let st = faults::installed().unwrap().stats();
+    let wp = st.site(faults::Site::WorkerPanic).unwrap();
+    assert!(wp.injected >= 1, "pool tasks never hit the seam");
+    assert_eq!(
+        wp.injected, wp.contained,
+        "every injected panic must be caught at the pool"
+    );
+    // The pool is still serviceable once injection stops.
+    drop(f);
+    assert_eq!(c.infer("tiny", &input).unwrap(), want);
     h.shutdown();
 }

@@ -162,6 +162,13 @@ fn sixty_four_clients_two_models_bit_exact_no_drops_no_reorder() {
     assert_eq!(h.admission().inflight(), 0);
     assert!(h.admission().peak() as usize <= 128);
 
+    // No fault plan is installed here, so the summary must stay bare of
+    // fault counters (the chaos soak asserts the inverse under an
+    // installed plan) and no panic was ever contained.
+    let summary = h.router().get("stress-a").unwrap().metrics.summary();
+    assert!(!summary.contains("faults["), "{summary}");
+    assert!(!summary.contains("worker_panics="), "{summary}");
+
     // The pool actually served the batchers (gauges exported).
     let st = h.pool().unwrap().stats();
     assert_eq!(st.queue_depth, 0, "pool queues drained");
