@@ -305,37 +305,43 @@ fn main() {
             }
         }
 
-        // Narrow-vs-wide ablation: the same 256³ P8E0 operands forced
-        // into the wide (6 B/element) scalar layout — the reference
-        // the SIMD narrow-plane series above is measured against
-        // (n ≤ 8 encodes pick 2 B/element narrow planes, AVX2-eligible
-        // under AccPolicy::Auto).
-        for (mname, mk) in muls {
-            let mode = mk(PositFormat::P8E0);
-            let xe = encode_matrix_wide(&mode, m_dim, k_dim, &flat);
-            let we = encode_matrix_wide(&mode, n_dim, k_dim, &wt.data);
-            let mut y = vec![0f32; m_dim * n_dim];
-            let wide_name = format!("gemm {mname} p8e0 256^3 windowed wide");
-            let r = bench
-                .run(&wide_name, || {
-                    gemm_bt_with_policy(
-                        &mode,
-                        &xe,
-                        &we,
-                        Some(&bt.data),
-                        &mut y,
-                        AccPolicy::Auto,
-                    );
-                    black_box(&y);
-                })
-                .clone();
-            let narrow_name = format!("gemm {mname} p8e0 256^3 windowed");
-            let speedup = bench.speedup(&wide_name, &narrow_name).unwrap_or(1.0);
-            println!(
-                "  {mname:<5} p8e0   wide planes {:>12.0} MAC/s   narrow/SIMD speedup \
-                 {speedup:.2}× (soft target ≥ 1.5×)",
-                r.ops_per_sec(macs),
-            );
+        // Sub-wide-vs-wide ablation: the same 256³ operands forced into
+        // the wide (6 B/element) scalar layout — the reference the
+        // SIMD sub-wide series above are measured against (n ≤ 8
+        // encodes pick 2 B/element narrow planes, 16-bit formats pick
+        // 3 B/element mid planes; both are vector-eligible under
+        // AccPolicy::Auto).
+        for (fname, fmt, target) in [
+            ("p8e0", PositFormat::P8E0, "1.5"),
+            ("p16e1", PositFormat::P16E1, "1.3"),
+        ] {
+            for (mname, mk) in muls {
+                let mode = mk(fmt);
+                let xe = encode_matrix_wide(&mode, m_dim, k_dim, &flat);
+                let we = encode_matrix_wide(&mode, n_dim, k_dim, &wt.data);
+                let mut y = vec![0f32; m_dim * n_dim];
+                let wide_name = format!("gemm {mname} {fname} 256^3 windowed wide");
+                let r = bench
+                    .run(&wide_name, || {
+                        gemm_bt_with_policy(
+                            &mode,
+                            &xe,
+                            &we,
+                            Some(&bt.data),
+                            &mut y,
+                            AccPolicy::Auto,
+                        );
+                        black_box(&y);
+                    })
+                    .clone();
+                let subwide_name = format!("gemm {mname} {fname} 256^3 windowed");
+                let speedup = bench.speedup(&wide_name, &subwide_name).unwrap_or(1.0);
+                println!(
+                    "  {mname:<5} {fname:<6} wide planes {:>12.0} MAC/s   sub-wide/SIMD speedup \
+                     {speedup:.2}× (soft target ≥ {target}×)",
+                    r.ops_per_sec(macs),
+                );
+            }
         }
 
         // Skinny GEMV (M=1): the per-request serving shape — the

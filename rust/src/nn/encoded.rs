@@ -9,8 +9,9 @@
 //! [`EncodedTensor`] removes that tax: a whole activation batch lives
 //! as one `[batch, features]` [`EncodedMatrix`] (the same
 //! width-dispatched SoA planes the GEMM consumes — wide `i16` scales +
-//! sign-packed Q30 `u32` fractions, or the 2 B/element narrow
-//! `i8`/`u8` pair that n ≤ 8 formats select — panel metadata folded at
+//! sign-packed Q30 `u32` fractions, the 2 B/element narrow `i8`/`u8`
+//! pair that n ≤ 8 formats select, or the 3 B/element mid `i8`/`u16`
+//! pair for Q15-eligible 16-bit formats — panel metadata folded at
 //! write time), and flows between layers without ever touching `f32`:
 //!
 //! * dense layers feed the batch matrix straight into the GEMM and
@@ -345,6 +346,10 @@ impl<'a> PlaneRowWriter<'a> {
                 &mut mat.scales8[row * cols..(row + 1) * cols],
                 &mut mat.sfracs8[row * cols..(row + 1) * cols],
             ),
+            PlaneWidth::Mid => PlanesMut::Mid(
+                &mut mat.scales8[row * cols..(row + 1) * cols],
+                &mut mat.sfracs16[row * cols..(row + 1) * cols],
+            ),
         };
         PlaneRowWriter {
             planes,
@@ -530,6 +535,12 @@ pub(crate) fn conv2d_encoded(
                 .chunks_mut(feat)
                 .zip(mat.sfracs8.chunks_mut(feat))
                 .map(|(s, f)| PlanesMut::Narrow(s, f))
+                .collect(),
+            PlaneWidth::Mid => mat
+                .scales8
+                .chunks_mut(feat)
+                .zip(mat.sfracs16.chunks_mut(feat))
+                .map(|(s, f)| PlanesMut::Mid(s, f))
                 .collect(),
         };
         let rows = row_planes

@@ -1,0 +1,393 @@
+//! NEON lanes for the narrow- and mid-plane windowed MACs (aarch64).
+//!
+//! Same contract as the AVX2 kernels in `kernel_x86.rs`: every kernel
+//! computes bit-exactly what the scalar windowed loops compute over
+//! one specials-free panel chunk, returning the chunk sum on the
+//! operand grid (`· 2^(lo − 2·W)` exact, `· 2^(lo − W)` PLAM, with
+//! `W = NFW` or `MFW`). All four kernels process eight elements per
+//! step — the natural `vld1_u8` / `vld1q_u16` lane count — splitting
+//! into 4×2 `i64` accumulator lanes, so each lane sees the same
+//! `KB/8 = 64` accumulations as the AVX2 kernels and the same < 2^60
+//! lane bound from the parent module's `SIMD_SPAN_*` gates holds. The
+//! [`hsum`] pairwise folds therefore stay below 2^62 before the final
+//! scalar `i128` add.
+
+use std::arch::aarch64::*;
+
+use crate::posit::tables::{
+    MFW, NFW, SFRAC16_FRAC_MASK, SFRAC16_SIGN, SFRAC8_FRAC_MASK, SFRAC8_SIGN,
+};
+
+/// Runtime gate for every kernel in this module: NEON (ASIMD) is a
+/// mandatory aarch64 feature, so the latch reduces to the env check
+/// the parent module's `simd_enabled()` already performs.
+pub(super) fn available() -> bool {
+    true
+}
+
+/// Sum the signed `i64` lanes of the four accumulators into one
+/// `i128`, entirely in registers: pairwise 128-bit adds (lanes stay
+/// below 2^62 under the span gates), then the final two lanes in
+/// scalar `i128`.
+#[target_feature(enable = "neon")]
+unsafe fn hsum(a: int64x2_t, b: int64x2_t, c: int64x2_t, d: int64x2_t) -> i128 {
+    let s = vaddq_s64(vaddq_s64(a, b), vaddq_s64(c, d));
+    vgetq_lane_s64::<0>(s) as i128 + vgetq_lane_s64::<1>(s) as i128
+}
+
+/// Per-element shift counts of one 8-element step relative to the row
+/// pair's combined minimum scale `lo` (before any PLAM carry):
+/// `xs[k] + ws[k] − lo` in `i16` lanes. Scales live in the i8 sentinel
+/// band, so the arithmetic fits `i16` with room to spare.
+#[target_feature(enable = "neon")]
+unsafe fn shift_base(xs8: int8x8_t, ws8: int8x8_t, lo: i32) -> int16x8_t {
+    vsubq_s16(
+        vaddq_s16(vmovl_s8(xs8), vmovl_s8(ws8)),
+        vdupq_n_s16(lo as i16),
+    )
+}
+
+/// Widen 4 signed `i32` lanes to `i64`, shift each left by its `i32`
+/// lane count, and add into the two accumulators.
+#[target_feature(enable = "neon")]
+unsafe fn shift_accumulate(
+    acc0: int64x2_t,
+    acc1: int64x2_t,
+    signed: int32x4_t,
+    shift: int32x4_t,
+) -> (int64x2_t, int64x2_t) {
+    let v0 = vshlq_s64(
+        vmovl_s32(vget_low_s32(signed)),
+        vmovl_s32(vget_low_s32(shift)),
+    );
+    let v1 = vshlq_s64(
+        vmovl_s32(vget_high_s32(signed)),
+        vmovl_s32(vget_high_s32(shift)),
+    );
+    (vaddq_s64(acc0, v0), vaddq_s64(acc1, v1))
+}
+
+/// Widen 4 *unsigned* `u32` product lanes to `i64`, shift, then apply
+/// the per-lane sign mask in the 64-bit domain — the mid exact rule's
+/// full 32-bit products do not fit a signed `i32` (mirror of the AVX2
+/// `shift_accumulate_u32`).
+#[target_feature(enable = "neon")]
+unsafe fn shift_accumulate_u32(
+    acc0: int64x2_t,
+    acc1: int64x2_t,
+    prod: uint32x4_t,
+    shift: int32x4_t,
+    m32: int32x4_t,
+) -> (int64x2_t, int64x2_t) {
+    let m0 = vmovl_s32(vget_low_s32(m32));
+    let v0 = vshlq_s64(
+        vreinterpretq_s64_u64(vmovl_u32(vget_low_u32(prod))),
+        vmovl_s32(vget_low_s32(shift)),
+    );
+    let s0 = vsubq_s64(veorq_s64(v0, m0), m0);
+    let m1 = vmovl_s32(vget_high_s32(m32));
+    let v1 = vshlq_s64(
+        vreinterpretq_s64_u64(vmovl_u32(vget_high_u32(prod))),
+        vmovl_s32(vget_high_s32(shift)),
+    );
+    let s1 = vsubq_s64(veorq_s64(v1, m1), m1);
+    (vaddq_s64(acc0, s0), vaddq_s64(acc1, s1))
+}
+
+/// Sign masks (0 / −1) for one narrow 8-element step, widened to two
+/// `i32x4` halves: bit 7 of `xf ^ wf` stretched across each lane.
+#[target_feature(enable = "neon")]
+unsafe fn sign_masks8(xf8: uint8x8_t, wf8: uint8x8_t) -> (int32x4_t, int32x4_t) {
+    let sgn8 = vshr_n_s8::<7>(vreinterpret_s8_u8(veor_u8(xf8, wf8)));
+    let m16 = vmovl_s8(sgn8);
+    (vmovl_s16(vget_low_s16(m16)), vmovl_s16(vget_high_s16(m16)))
+}
+
+/// Sign masks (0 / −1) for one mid 8-element step, widened to two
+/// `i32x4` halves: bit 15 of `xf ^ wf` stretched across each lane.
+#[target_feature(enable = "neon")]
+unsafe fn sign_masks16(xf16: uint16x8_t, wf16: uint16x8_t) -> (int32x4_t, int32x4_t) {
+    let sgn16 = vshrq_n_s16::<15>(vreinterpretq_s16_u16(veorq_u16(xf16, wf16)));
+    (
+        vmovl_s16(vget_low_s16(sgn16)),
+        vmovl_s16(vget_high_s16(sgn16)),
+    )
+}
+
+/// Apply a sign mask to 4 unsigned lanes that fit `i32`:
+/// `(v ^ m) − m`.
+#[target_feature(enable = "neon")]
+unsafe fn apply_sign32(v: uint32x4_t, m: int32x4_t) -> int32x4_t {
+    vsubq_s32(veorq_s32(vreinterpretq_s32_u32(v), m), m)
+}
+
+/// Exact-rule dot over one specials-free narrow chunk: the chunk sum
+/// in narrow product units (`· 2^(lo − 2·NFW)`). Bit-equal to the
+/// scalar terms by `sig30a · sig30b = (sig7a · sig7b) << 2·(FW − NFW)`.
+///
+/// # Safety
+/// All four slices must share one length; every element must be a
+/// normal (no sentinels) with
+/// `xs[k] + ws[k] − lo ∈ [0, SIMD_SPAN_NARROW]`.
+#[target_feature(enable = "neon")]
+pub(super) unsafe fn dot_chunk_exact_n8(
+    xs: &[i8],
+    xf: &[u8],
+    ws: &[i8],
+    wf: &[u8],
+    lo: i32,
+) -> i128 {
+    let n = xs.len();
+    let frac = vdup_n_u8(SFRAC8_FRAC_MASK);
+    let hidden = vdup_n_u8(SFRAC8_SIGN);
+    let mut acc0 = vdupq_n_s64(0);
+    let mut acc1 = vdupq_n_s64(0);
+    let mut acc2 = vdupq_n_s64(0);
+    let mut acc3 = vdupq_n_s64(0);
+    let mut k = 0;
+    while k + 8 <= n {
+        let xs8 = vld1_s8(xs.as_ptr().add(k));
+        let ws8 = vld1_s8(ws.as_ptr().add(k));
+        let xf8 = vld1_u8(xf.as_ptr().add(k));
+        let wf8 = vld1_u8(wf.as_ptr().add(k));
+        // The hidden bit shares bit 7 with the sign, so OR-ing it onto
+        // the masked fraction builds the u8 significand directly.
+        let siga = vorr_u8(vand_u8(xf8, frac), hidden);
+        let sigb = vorr_u8(vand_u8(wf8, frac), hidden);
+        let prod16 = vmull_u8(siga, sigb);
+        let (m32lo, m32hi) = sign_masks8(xf8, wf8);
+        let sh16 = shift_base(xs8, ws8, lo);
+        let p32lo = vmovl_u16(vget_low_u16(prod16));
+        let p32hi = vmovl_u16(vget_high_u16(prod16));
+        (acc0, acc1) = shift_accumulate(
+            acc0,
+            acc1,
+            apply_sign32(p32lo, m32lo),
+            vmovl_s16(vget_low_s16(sh16)),
+        );
+        (acc2, acc3) = shift_accumulate(
+            acc2,
+            acc3,
+            apply_sign32(p32hi, m32hi),
+            vmovl_s16(vget_high_s16(sh16)),
+        );
+        k += 8;
+    }
+    let mut sum = hsum(acc0, acc1, acc2, acc3);
+    while k < n {
+        let siga = ((1u32 << NFW) | (xf[k] & SFRAC8_FRAC_MASK) as u32) as i64;
+        let sigb = ((1u32 << NFW) | (wf[k] & SFRAC8_FRAC_MASK) as u32) as i64;
+        let shift = (xs[k] as i32 + ws[k] as i32 - lo) as u32;
+        let v = (siga * sigb) << shift;
+        sum += if (xf[k] ^ wf[k]) & SFRAC8_SIGN != 0 {
+            -(v as i128)
+        } else {
+            v as i128
+        };
+        k += 1;
+    }
+    sum
+}
+
+/// PLAM-rule dot over one specials-free narrow chunk: the chunk sum in
+/// narrow units (`· 2^(lo − NFW)`). Bit-equal to the scalar terms
+/// because `fsum30 = fsum7 << (FW − NFW)` keeps the same carry bit and
+/// the same retained fraction bits in both widths.
+///
+/// # Safety
+/// Same contract as [`dot_chunk_exact_n8`].
+#[target_feature(enable = "neon")]
+pub(super) unsafe fn dot_chunk_plam_n8(
+    xs: &[i8],
+    xf: &[u8],
+    ws: &[i8],
+    wf: &[u8],
+    lo: i32,
+) -> i128 {
+    let n = xs.len();
+    let frac = vdup_n_u8(SFRAC8_FRAC_MASK);
+    let fracq = vdupq_n_u16(SFRAC8_FRAC_MASK as u16);
+    let hiddenq = vdupq_n_u16(SFRAC8_SIGN as u16);
+    let mut acc0 = vdupq_n_s64(0);
+    let mut acc1 = vdupq_n_s64(0);
+    let mut acc2 = vdupq_n_s64(0);
+    let mut acc3 = vdupq_n_s64(0);
+    let mut k = 0;
+    while k + 8 <= n {
+        let xs8 = vld1_s8(xs.as_ptr().add(k));
+        let ws8 = vld1_s8(ws.as_ptr().add(k));
+        let xf8 = vld1_u8(xf.as_ptr().add(k));
+        let wf8 = vld1_u8(wf.as_ptr().add(k));
+        let fsum16 = vaddl_u8(vand_u8(xf8, frac), vand_u8(wf8, frac));
+        let carry16 = vshrq_n_u16::<{ NFW as i32 }>(fsum16);
+        let sig16 = vorrq_u16(vandq_u16(fsum16, fracq), hiddenq);
+        let (m32lo, m32hi) = sign_masks8(xf8, wf8);
+        let sh16 = vaddq_s16(shift_base(xs8, ws8, lo), vreinterpretq_s16_u16(carry16));
+        (acc0, acc1) = shift_accumulate(
+            acc0,
+            acc1,
+            apply_sign32(vmovl_u16(vget_low_u16(sig16)), m32lo),
+            vmovl_s16(vget_low_s16(sh16)),
+        );
+        (acc2, acc3) = shift_accumulate(
+            acc2,
+            acc3,
+            apply_sign32(vmovl_u16(vget_high_u16(sig16)), m32hi),
+            vmovl_s16(vget_high_s16(sh16)),
+        );
+        k += 8;
+    }
+    let mut sum = hsum(acc0, acc1, acc2, acc3);
+    while k < n {
+        let fsum = (xf[k] & SFRAC8_FRAC_MASK) as u32 + (wf[k] & SFRAC8_FRAC_MASK) as u32;
+        let carry = (fsum >> NFW) as i32;
+        let sig = ((1u32 << NFW) | (fsum & SFRAC8_FRAC_MASK as u32)) as i64;
+        let shift = (xs[k] as i32 + ws[k] as i32 + carry - lo) as u32;
+        let v = sig << shift;
+        sum += if (xf[k] ^ wf[k]) & SFRAC8_SIGN != 0 {
+            -(v as i128)
+        } else {
+            v as i128
+        };
+        k += 1;
+    }
+    sum
+}
+
+/// Exact-rule dot over one specials-free mid chunk: the chunk sum in
+/// mid product units (`· 2^(lo − 2·MFW)`). Products are full 32-bit
+/// (`sig16a · sig16b < 2^32`), so they widen zero-extended and take
+/// their sign in the 64-bit domain ([`shift_accumulate_u32`]).
+/// Bit-equal to the scalar terms by
+/// `sig30a · sig30b = (sig15a · sig15b) << 2·(FW − MFW)`.
+///
+/// # Safety
+/// All four slices must share one length; every element must be a
+/// normal (no sentinels) with
+/// `xs[k] + ws[k] − lo ∈ [0, SIMD_SPAN_MID_EXACT]`.
+#[target_feature(enable = "neon")]
+pub(super) unsafe fn dot_chunk_exact_n16(
+    xs: &[i8],
+    xf: &[u16],
+    ws: &[i8],
+    wf: &[u16],
+    lo: i32,
+) -> i128 {
+    let n = xs.len();
+    let frac = vdupq_n_u16(SFRAC16_FRAC_MASK);
+    let hidden = vdupq_n_u16(SFRAC16_SIGN);
+    let mut acc0 = vdupq_n_s64(0);
+    let mut acc1 = vdupq_n_s64(0);
+    let mut acc2 = vdupq_n_s64(0);
+    let mut acc3 = vdupq_n_s64(0);
+    let mut k = 0;
+    while k + 8 <= n {
+        let xs8 = vld1_s8(xs.as_ptr().add(k));
+        let ws8 = vld1_s8(ws.as_ptr().add(k));
+        let xf16 = vld1q_u16(xf.as_ptr().add(k));
+        let wf16 = vld1q_u16(wf.as_ptr().add(k));
+        let siga = vorrq_u16(vandq_u16(xf16, frac), hidden);
+        let sigb = vorrq_u16(vandq_u16(wf16, frac), hidden);
+        let p32lo = vmull_u16(vget_low_u16(siga), vget_low_u16(sigb));
+        let p32hi = vmull_u16(vget_high_u16(siga), vget_high_u16(sigb));
+        let (m32lo, m32hi) = sign_masks16(xf16, wf16);
+        let sh16 = shift_base(xs8, ws8, lo);
+        (acc0, acc1) = shift_accumulate_u32(
+            acc0,
+            acc1,
+            p32lo,
+            vmovl_s16(vget_low_s16(sh16)),
+            m32lo,
+        );
+        (acc2, acc3) = shift_accumulate_u32(
+            acc2,
+            acc3,
+            p32hi,
+            vmovl_s16(vget_high_s16(sh16)),
+            m32hi,
+        );
+        k += 8;
+    }
+    let mut sum = hsum(acc0, acc1, acc2, acc3);
+    while k < n {
+        let siga = ((1u32 << MFW) | (xf[k] & SFRAC16_FRAC_MASK) as u32) as i64;
+        let sigb = ((1u32 << MFW) | (wf[k] & SFRAC16_FRAC_MASK) as u32) as i64;
+        let shift = (xs[k] as i32 + ws[k] as i32 - lo) as u32;
+        let v = (siga * sigb) << shift;
+        sum += if (xf[k] ^ wf[k]) & SFRAC16_SIGN != 0 {
+            -(v as i128)
+        } else {
+            v as i128
+        };
+        k += 1;
+    }
+    sum
+}
+
+/// PLAM-rule dot over one specials-free mid chunk: the chunk sum in
+/// mid units (`· 2^(lo − MFW)`). The 16-bit PLAM significand fits a
+/// signed `i32`, so the sign applies before widening. Bit-equal to the
+/// scalar terms because `fsum30 = fsum15 << (FW − MFW)` keeps the same
+/// carry bit and the same retained fraction bits in both widths.
+///
+/// # Safety
+/// All four slices must share one length; every element must be a
+/// normal (no sentinels) with
+/// `xs[k] + ws[k] − lo ∈ [0, SIMD_SPAN_MID_PLAM]`.
+#[target_feature(enable = "neon")]
+pub(super) unsafe fn dot_chunk_plam_n16(
+    xs: &[i8],
+    xf: &[u16],
+    ws: &[i8],
+    wf: &[u16],
+    lo: i32,
+) -> i128 {
+    let n = xs.len();
+    let frac = vdupq_n_u16(SFRAC16_FRAC_MASK);
+    let hidden = vdupq_n_u16(SFRAC16_SIGN);
+    let mut acc0 = vdupq_n_s64(0);
+    let mut acc1 = vdupq_n_s64(0);
+    let mut acc2 = vdupq_n_s64(0);
+    let mut acc3 = vdupq_n_s64(0);
+    let mut k = 0;
+    while k + 8 <= n {
+        let xs8 = vld1_s8(xs.as_ptr().add(k));
+        let ws8 = vld1_s8(ws.as_ptr().add(k));
+        let xf16 = vld1q_u16(xf.as_ptr().add(k));
+        let wf16 = vld1q_u16(wf.as_ptr().add(k));
+        // Q15 fractions sum to ≤ 2·(2^15 − 1) = 65534: no u16 wrap.
+        let fsum16 = vaddq_u16(vandq_u16(xf16, frac), vandq_u16(wf16, frac));
+        let carry16 = vshrq_n_u16::<{ MFW as i32 }>(fsum16);
+        let sig16 = vorrq_u16(vandq_u16(fsum16, frac), hidden);
+        let (m32lo, m32hi) = sign_masks16(xf16, wf16);
+        let sh16 = vaddq_s16(shift_base(xs8, ws8, lo), vreinterpretq_s16_u16(carry16));
+        (acc0, acc1) = shift_accumulate(
+            acc0,
+            acc1,
+            apply_sign32(vmovl_u16(vget_low_u16(sig16)), m32lo),
+            vmovl_s16(vget_low_s16(sh16)),
+        );
+        (acc2, acc3) = shift_accumulate(
+            acc2,
+            acc3,
+            apply_sign32(vmovl_u16(vget_high_u16(sig16)), m32hi),
+            vmovl_s16(vget_high_s16(sh16)),
+        );
+        k += 8;
+    }
+    let mut sum = hsum(acc0, acc1, acc2, acc3);
+    while k < n {
+        let fsum = (xf[k] & SFRAC16_FRAC_MASK) as u32 + (wf[k] & SFRAC16_FRAC_MASK) as u32;
+        let carry = (fsum >> MFW) as i32;
+        let sig = ((1u32 << MFW) | (fsum & SFRAC16_FRAC_MASK as u32)) as i64;
+        let shift = (xs[k] as i32 + ws[k] as i32 + carry - lo) as u32;
+        let v = sig << shift;
+        sum += if (xf[k] ^ wf[k]) & SFRAC16_SIGN != 0 {
+            -(v as i128)
+        } else {
+            v as i128
+        };
+        k += 1;
+    }
+    sum
+}

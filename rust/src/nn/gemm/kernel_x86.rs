@@ -1,0 +1,415 @@
+//! AVX2 lanes for the narrow- and mid-plane windowed MACs (x86-64).
+//!
+//! Every kernel computes bit-exactly what the scalar windowed loops
+//! compute over one specials-free panel chunk, returning the chunk sum
+//! on the operand grid (`· 2^(lo − 2·W)` for the exact rule,
+//! `· 2^(lo − W)` for PLAM, with `W = NFW` or `MFW`); the caller folds
+//! that sum back to the wide-grid `WindowedAcc` anchor in one shift
+//! (see `NarrowPlanes::simd_dot` / `MidPlanes::simd_dot` in the parent
+//! module). Narrow kernels process eight `u8` elements per step; mid
+//! kernels process sixteen `u16` elements per step as two 8-lane
+//! halves.
+//!
+//! Lane overflow budget: each `i64` lane carries
+//! `±sig_product << shift` with `shift ≤ span (+1 for the PLAM
+//! carry)`, and `KB/8 = 64` per-lane accumulations add 6 bits. The
+//! per-width span gates in the parent module (`SIMD_SPAN_*`) cap every
+//! lane at < 2^60, which is what makes the in-register [`hsum`]
+//! reduction safe (see its doc).
+
+use std::arch::x86_64::*;
+
+use crate::posit::tables::{
+    MFW, NFW, SFRAC16_FRAC_MASK, SFRAC16_SIGN, SFRAC8_FRAC_MASK, SFRAC8_SIGN,
+};
+
+/// Runtime gate for every kernel in this module: latched once by the
+/// parent module's `simd_enabled()`.
+pub(super) fn available() -> bool {
+    std::arch::is_x86_64_feature_detected!("avx2")
+}
+
+/// Sum the signed `i64` lanes of two accumulators into one `i128`,
+/// entirely in registers: one 256-bit add, one 256→128 fold, then the
+/// final two lanes in scalar `i128`. The span gates bound every input
+/// lane below 2^60, so the 256-bit add stays below 2^61 and the
+/// 128-bit fold below 2^62 — no intermediate step can wrap.
+#[target_feature(enable = "avx2")]
+unsafe fn hsum(a: __m256i, b: __m256i) -> i128 {
+    let s = _mm256_add_epi64(a, b);
+    let f = _mm_add_epi64(
+        _mm256_castsi256_si128(s),
+        _mm256_extracti128_si256::<1>(s),
+    );
+    _mm_cvtsi128_si64(f) as i128 + _mm_extract_epi64::<1>(f) as i128
+}
+
+/// Load 8 narrow scales sign-extended to `i32` lanes.
+#[target_feature(enable = "avx2")]
+unsafe fn load_scales(p: *const i8) -> __m256i {
+    _mm256_cvtepi8_epi32(_mm_loadl_epi64(p as *const __m128i))
+}
+
+/// Load 8 narrow sign+frac bytes zero-extended to `u32` lanes.
+#[target_feature(enable = "avx2")]
+unsafe fn load_sfracs(p: *const u8) -> __m256i {
+    _mm256_cvtepu8_epi32(_mm_loadl_epi64(p as *const __m128i))
+}
+
+/// Load 16 mid scales sign-extended to `i32` lanes (two 8-lane
+/// halves).
+#[target_feature(enable = "avx2")]
+unsafe fn load_scales16(p: *const i8) -> (__m256i, __m256i) {
+    let x = _mm_loadu_si128(p as *const __m128i);
+    (
+        _mm256_cvtepi8_epi32(x),
+        _mm256_cvtepi8_epi32(_mm_srli_si128::<8>(x)),
+    )
+}
+
+/// Load 16 mid sign+frac words zero-extended to `u32` lanes (two
+/// 8-lane halves).
+#[target_feature(enable = "avx2")]
+unsafe fn load_sfracs16(p: *const u16) -> (__m256i, __m256i) {
+    let x = _mm256_loadu_si256(p as *const __m256i);
+    (
+        _mm256_cvtepu16_epi32(_mm256_castsi256_si128(x)),
+        _mm256_cvtepu16_epi32(_mm256_extracti128_si256::<1>(x)),
+    )
+}
+
+/// Apply per-lane signs (bit 7 of `xf ^ wf`) to `v` branch-free:
+/// `(v ^ m) − m` with `m` the sign stretched to a full lane mask.
+#[target_feature(enable = "avx2")]
+unsafe fn apply_sign(v: __m256i, xfv: __m256i, wfv: __m256i) -> __m256i {
+    let m = _mm256_srai_epi32::<31>(_mm256_slli_epi32::<24>(_mm256_xor_si256(xfv, wfv)));
+    _mm256_sub_epi32(_mm256_xor_si256(v, m), m)
+}
+
+/// Mid variant of [`apply_sign`]: the sign rides in bit 15 of the
+/// `u16` sign+frac word, so the stretch shifts by 16, not 24. Only
+/// valid when `v`'s lanes fit a signed `i32` (the PLAM significand
+/// does; the exact 32-bit product does not — see [`apply_sign64`]).
+#[target_feature(enable = "avx2")]
+unsafe fn apply_sign16(v: __m256i, xfv: __m256i, wfv: __m256i) -> __m256i {
+    let m = _mm256_srai_epi32::<31>(_mm256_slli_epi32::<16>(_mm256_xor_si256(xfv, wfv)));
+    _mm256_sub_epi32(_mm256_xor_si256(v, m), m)
+}
+
+/// Widen 8 signed `i32` lanes to `i64`, shift each left by its `i32`
+/// lane count, and add into the two accumulators.
+#[target_feature(enable = "avx2")]
+unsafe fn shift_accumulate(
+    acc0: __m256i,
+    acc1: __m256i,
+    signed: __m256i,
+    shift: __m256i,
+) -> (__m256i, __m256i) {
+    let lo = _mm256_sllv_epi64(
+        _mm256_cvtepi32_epi64(_mm256_castsi256_si128(signed)),
+        _mm256_cvtepi32_epi64(_mm256_castsi256_si128(shift)),
+    );
+    let hi = _mm256_sllv_epi64(
+        _mm256_cvtepi32_epi64(_mm256_extracti128_si256::<1>(signed)),
+        _mm256_cvtepi32_epi64(_mm256_extracti128_si256::<1>(shift)),
+    );
+    (_mm256_add_epi64(acc0, lo), _mm256_add_epi64(acc1, hi))
+}
+
+/// Widen 8 *unsigned* `u32` product lanes to `i64`, shift, then apply
+/// the per-lane sign mask in the 64-bit domain. The mid exact rule
+/// needs this: full 32-bit significand products do not fit a signed
+/// `i32`, so sign application must wait until after the zero-extended
+/// widen (`_mm256_cvtepu32_epi64`). The shifted magnitude stays below
+/// 2^(32 + SIMD_SPAN_MID_EXACT) = 2^54, so `(v ^ m) − m` in `i64` is
+/// exact.
+#[target_feature(enable = "avx2")]
+unsafe fn shift_accumulate_u32(
+    acc0: __m256i,
+    acc1: __m256i,
+    prod: __m256i,
+    shift: __m256i,
+    m32: __m256i,
+) -> (__m256i, __m256i) {
+    let v0 = _mm256_sllv_epi64(
+        _mm256_cvtepu32_epi64(_mm256_castsi256_si128(prod)),
+        _mm256_cvtepi32_epi64(_mm256_castsi256_si128(shift)),
+    );
+    let m0 = _mm256_cvtepi32_epi64(_mm256_castsi256_si128(m32));
+    let s0 = _mm256_sub_epi64(_mm256_xor_si256(v0, m0), m0);
+    let v1 = _mm256_sllv_epi64(
+        _mm256_cvtepu32_epi64(_mm256_extracti128_si256::<1>(prod)),
+        _mm256_cvtepi32_epi64(_mm256_extracti128_si256::<1>(shift)),
+    );
+    let m1 = _mm256_cvtepi32_epi64(_mm256_extracti128_si256::<1>(m32));
+    let s1 = _mm256_sub_epi64(_mm256_xor_si256(v1, m1), m1);
+    (_mm256_add_epi64(acc0, s0), _mm256_add_epi64(acc1, s1))
+}
+
+/// Exact-rule dot over one specials-free narrow chunk: the chunk sum
+/// in narrow product units (`· 2^(lo − 2·NFW)`), where `lo` is the row
+/// pair's combined minimum scale. Bit-equal to the scalar terms by
+/// `sig30a · sig30b = (sig7a · sig7b) << 2·(FW − NFW)`.
+///
+/// # Safety
+/// Requires runtime AVX2. All four slices must share one length; every
+/// element must be a normal (no sentinels) with
+/// `xs[k] + ws[k] − lo ∈ [0, SIMD_SPAN_NARROW]`.
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn dot_chunk_exact_n8(
+    xs: &[i8],
+    xf: &[u8],
+    ws: &[i8],
+    wf: &[u8],
+    lo: i32,
+) -> i128 {
+    let n = xs.len();
+    let frac = _mm256_set1_epi32(SFRAC8_FRAC_MASK as i32);
+    let hidden = _mm256_set1_epi32(1 << NFW);
+    let lo_v = _mm256_set1_epi32(lo);
+    let mut acc0 = _mm256_setzero_si256();
+    let mut acc1 = _mm256_setzero_si256();
+    let mut k = 0;
+    while k + 8 <= n {
+        let xsv = load_scales(xs.as_ptr().add(k));
+        let wsv = load_scales(ws.as_ptr().add(k));
+        let xfv = load_sfracs(xf.as_ptr().add(k));
+        let wfv = load_sfracs(wf.as_ptr().add(k));
+        let siga = _mm256_or_si256(_mm256_and_si256(xfv, frac), hidden);
+        let sigb = _mm256_or_si256(_mm256_and_si256(wfv, frac), hidden);
+        let prod = _mm256_mullo_epi32(siga, sigb);
+        let signed = apply_sign(prod, xfv, wfv);
+        let shift = _mm256_sub_epi32(_mm256_add_epi32(xsv, wsv), lo_v);
+        (acc0, acc1) = shift_accumulate(acc0, acc1, signed, shift);
+        k += 8;
+    }
+    let mut sum = hsum(acc0, acc1);
+    while k < n {
+        let siga = ((1u32 << NFW) | (xf[k] & SFRAC8_FRAC_MASK) as u32) as i64;
+        let sigb = ((1u32 << NFW) | (wf[k] & SFRAC8_FRAC_MASK) as u32) as i64;
+        let shift = (xs[k] as i32 + ws[k] as i32 - lo) as u32;
+        let v = (siga * sigb) << shift;
+        sum += if (xf[k] ^ wf[k]) & SFRAC8_SIGN != 0 {
+            -(v as i128)
+        } else {
+            v as i128
+        };
+        k += 1;
+    }
+    sum
+}
+
+/// PLAM-rule dot (paper Eq. 17 with the Eq. 20/21 carry) over one
+/// specials-free narrow chunk: the chunk sum in narrow units
+/// (`· 2^(lo − NFW)`). Bit-equal to the scalar terms because
+/// `fsum30 = fsum7 << (FW − NFW)` keeps the same carry bit and the
+/// same retained fraction bits in both widths.
+///
+/// # Safety
+/// Same contract as [`dot_chunk_exact_n8`].
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn dot_chunk_plam_n8(
+    xs: &[i8],
+    xf: &[u8],
+    ws: &[i8],
+    wf: &[u8],
+    lo: i32,
+) -> i128 {
+    let n = xs.len();
+    let frac = _mm256_set1_epi32(SFRAC8_FRAC_MASK as i32);
+    let hidden = _mm256_set1_epi32(1 << NFW);
+    let lo_v = _mm256_set1_epi32(lo);
+    let mut acc0 = _mm256_setzero_si256();
+    let mut acc1 = _mm256_setzero_si256();
+    let mut k = 0;
+    while k + 8 <= n {
+        let xsv = load_scales(xs.as_ptr().add(k));
+        let wsv = load_scales(ws.as_ptr().add(k));
+        let xfv = load_sfracs(xf.as_ptr().add(k));
+        let wfv = load_sfracs(wf.as_ptr().add(k));
+        let fsum = _mm256_add_epi32(
+            _mm256_and_si256(xfv, frac),
+            _mm256_and_si256(wfv, frac),
+        );
+        let carry = _mm256_srli_epi32::<{ NFW as i32 }>(fsum);
+        let sig = _mm256_or_si256(_mm256_and_si256(fsum, frac), hidden);
+        let signed = apply_sign(sig, xfv, wfv);
+        let shift = _mm256_add_epi32(
+            _mm256_sub_epi32(_mm256_add_epi32(xsv, wsv), lo_v),
+            carry,
+        );
+        (acc0, acc1) = shift_accumulate(acc0, acc1, signed, shift);
+        k += 8;
+    }
+    let mut sum = hsum(acc0, acc1);
+    while k < n {
+        let fsum = (xf[k] & SFRAC8_FRAC_MASK) as u32 + (wf[k] & SFRAC8_FRAC_MASK) as u32;
+        let carry = (fsum >> NFW) as i32;
+        let sig = ((1u32 << NFW) | (fsum & SFRAC8_FRAC_MASK as u32)) as i64;
+        let shift = (xs[k] as i32 + ws[k] as i32 + carry - lo) as u32;
+        let v = sig << shift;
+        sum += if (xf[k] ^ wf[k]) & SFRAC8_SIGN != 0 {
+            -(v as i128)
+        } else {
+            v as i128
+        };
+        k += 1;
+    }
+    sum
+}
+
+/// One 8-lane half of the mid exact rule: `(prod, shift, sign_mask)`
+/// for [`shift_accumulate_u32`]. Products are full 32-bit, so the
+/// lanes read as `u32` downstream and the sign mask applies only after
+/// the zero-extended widen.
+#[target_feature(enable = "avx2")]
+unsafe fn mid_exact_half(
+    xsv: __m256i,
+    wsv: __m256i,
+    xfv: __m256i,
+    wfv: __m256i,
+    frac: __m256i,
+    hidden: __m256i,
+    lo_v: __m256i,
+) -> (__m256i, __m256i, __m256i) {
+    let siga = _mm256_or_si256(_mm256_and_si256(xfv, frac), hidden);
+    let sigb = _mm256_or_si256(_mm256_and_si256(wfv, frac), hidden);
+    let prod = _mm256_mullo_epi32(siga, sigb);
+    let m32 = _mm256_srai_epi32::<31>(_mm256_slli_epi32::<16>(_mm256_xor_si256(xfv, wfv)));
+    let shift = _mm256_sub_epi32(_mm256_add_epi32(xsv, wsv), lo_v);
+    (prod, shift, m32)
+}
+
+/// Exact-rule dot over one specials-free mid chunk: the chunk sum in
+/// mid product units (`· 2^(lo − 2·MFW)`). Sixteen elements per step
+/// as two 8-lane halves; products are full 32-bit
+/// (`sig16a · sig16b < 2^32`), so they widen zero-extended and take
+/// their sign in the 64-bit domain ([`shift_accumulate_u32`]).
+/// Bit-equal to the scalar terms by
+/// `sig30a · sig30b = (sig15a · sig15b) << 2·(FW − MFW)`.
+///
+/// # Safety
+/// Requires runtime AVX2. All four slices must share one length; every
+/// element must be a normal (no sentinels) with
+/// `xs[k] + ws[k] − lo ∈ [0, SIMD_SPAN_MID_EXACT]`.
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn dot_chunk_exact_n16(
+    xs: &[i8],
+    xf: &[u16],
+    ws: &[i8],
+    wf: &[u16],
+    lo: i32,
+) -> i128 {
+    let n = xs.len();
+    let frac = _mm256_set1_epi32(SFRAC16_FRAC_MASK as i32);
+    let hidden = _mm256_set1_epi32(1 << MFW);
+    let lo_v = _mm256_set1_epi32(lo);
+    let mut acc0 = _mm256_setzero_si256();
+    let mut acc1 = _mm256_setzero_si256();
+    let mut acc2 = _mm256_setzero_si256();
+    let mut acc3 = _mm256_setzero_si256();
+    let mut k = 0;
+    while k + 16 <= n {
+        let (xs0, xs1) = load_scales16(xs.as_ptr().add(k));
+        let (ws0, ws1) = load_scales16(ws.as_ptr().add(k));
+        let (xf0, xf1) = load_sfracs16(xf.as_ptr().add(k));
+        let (wf0, wf1) = load_sfracs16(wf.as_ptr().add(k));
+        let (prod, shift, m32) = mid_exact_half(xs0, ws0, xf0, wf0, frac, hidden, lo_v);
+        (acc0, acc1) = shift_accumulate_u32(acc0, acc1, prod, shift, m32);
+        let (prod, shift, m32) = mid_exact_half(xs1, ws1, xf1, wf1, frac, hidden, lo_v);
+        (acc2, acc3) = shift_accumulate_u32(acc2, acc3, prod, shift, m32);
+        k += 16;
+    }
+    let mut sum = hsum(acc0, acc1) + hsum(acc2, acc3);
+    while k < n {
+        let siga = ((1u32 << MFW) | (xf[k] & SFRAC16_FRAC_MASK) as u32) as i64;
+        let sigb = ((1u32 << MFW) | (wf[k] & SFRAC16_FRAC_MASK) as u32) as i64;
+        let shift = (xs[k] as i32 + ws[k] as i32 - lo) as u32;
+        let v = (siga * sigb) << shift;
+        sum += if (xf[k] ^ wf[k]) & SFRAC16_SIGN != 0 {
+            -(v as i128)
+        } else {
+            v as i128
+        };
+        k += 1;
+    }
+    sum
+}
+
+/// One 8-lane half of the mid PLAM rule: `(signed_sig, shift)` for
+/// [`shift_accumulate`]. The 16-bit PLAM significand fits a signed
+/// `i32`, so the sign applies before widening; the shift folds in the
+/// Eq. 20/21 carry.
+#[target_feature(enable = "avx2")]
+unsafe fn mid_plam_half(
+    xsv: __m256i,
+    wsv: __m256i,
+    xfv: __m256i,
+    wfv: __m256i,
+    frac: __m256i,
+    hidden: __m256i,
+    lo_v: __m256i,
+) -> (__m256i, __m256i) {
+    let fsum = _mm256_add_epi32(_mm256_and_si256(xfv, frac), _mm256_and_si256(wfv, frac));
+    let carry = _mm256_srli_epi32::<{ MFW as i32 }>(fsum);
+    let sig = _mm256_or_si256(_mm256_and_si256(fsum, frac), hidden);
+    let signed = apply_sign16(sig, xfv, wfv);
+    let shift = _mm256_add_epi32(_mm256_sub_epi32(_mm256_add_epi32(xsv, wsv), lo_v), carry);
+    (signed, shift)
+}
+
+/// PLAM-rule dot over one specials-free mid chunk: the chunk sum in
+/// mid units (`· 2^(lo − MFW)`). The 16-bit PLAM significand fits a
+/// signed `i32`, so this reuses the narrow kernels' 32-bit sign-apply
+/// and sign-extending widen. Bit-equal to the scalar terms because
+/// `fsum30 = fsum15 << (FW − MFW)` keeps the same carry bit and the
+/// same retained fraction bits in both widths.
+///
+/// # Safety
+/// Requires runtime AVX2. All four slices must share one length; every
+/// element must be a normal (no sentinels) with
+/// `xs[k] + ws[k] − lo ∈ [0, SIMD_SPAN_MID_PLAM]`.
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn dot_chunk_plam_n16(
+    xs: &[i8],
+    xf: &[u16],
+    ws: &[i8],
+    wf: &[u16],
+    lo: i32,
+) -> i128 {
+    let n = xs.len();
+    let frac = _mm256_set1_epi32(SFRAC16_FRAC_MASK as i32);
+    let hidden = _mm256_set1_epi32(1 << MFW);
+    let lo_v = _mm256_set1_epi32(lo);
+    let mut acc0 = _mm256_setzero_si256();
+    let mut acc1 = _mm256_setzero_si256();
+    let mut acc2 = _mm256_setzero_si256();
+    let mut acc3 = _mm256_setzero_si256();
+    let mut k = 0;
+    while k + 16 <= n {
+        let (xs0, xs1) = load_scales16(xs.as_ptr().add(k));
+        let (ws0, ws1) = load_scales16(ws.as_ptr().add(k));
+        let (xf0, xf1) = load_sfracs16(xf.as_ptr().add(k));
+        let (wf0, wf1) = load_sfracs16(wf.as_ptr().add(k));
+        let (signed, shift) = mid_plam_half(xs0, ws0, xf0, wf0, frac, hidden, lo_v);
+        (acc0, acc1) = shift_accumulate(acc0, acc1, signed, shift);
+        let (signed, shift) = mid_plam_half(xs1, ws1, xf1, wf1, frac, hidden, lo_v);
+        (acc2, acc3) = shift_accumulate(acc2, acc3, signed, shift);
+        k += 16;
+    }
+    let mut sum = hsum(acc0, acc1) + hsum(acc2, acc3);
+    while k < n {
+        let fsum = (xf[k] & SFRAC16_FRAC_MASK) as u32 + (wf[k] & SFRAC16_FRAC_MASK) as u32;
+        let carry = (fsum >> MFW) as i32;
+        let sig = ((1u32 << MFW) | (fsum & SFRAC16_FRAC_MASK as u32)) as i64;
+        let shift = (xs[k] as i32 + ws[k] as i32 + carry - lo) as u32;
+        let v = sig << shift;
+        sum += if (xf[k] ^ wf[k]) & SFRAC16_SIGN != 0 {
+            -(v as i128)
+        } else {
+            v as i128
+        };
+        k += 1;
+    }
+    sum
+}

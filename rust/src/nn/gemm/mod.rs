@@ -16,7 +16,12 @@
 //! ([`PlaneWidth::Narrow`]: `i8` scale + `u8` sign-packed Q7 fraction,
 //! 2 bytes/element — see `posit::tables` for the lossless
 //! widen/narrow contract), tripling effective memory bandwidth on the
-//! 8-bit hot path. The inner loop runs cache-blocked over `MB × NB`
+//! 8-bit hot path; 16-bit formats whose scales and fractions fit the
+//! Q15 grid store **mid planes** ([`PlaneWidth::Mid`]: `i8` scale +
+//! `u16` sign-packed Q15 fraction, 3 bytes/element) and halve it for
+//! the paper's headline P16E1. Clean windowed panels at either packed
+//! width vectorize through the arch-specific `kernel` module (AVX2 on
+//! x86-64, NEON on aarch64). The inner loop runs cache-blocked over `MB × NB`
 //! output tiles with either the exact (paper Fig. 3) or the PLAM
 //! (paper Fig. 4, Eq. 17) product rule — exact EMAC semantics, one
 //! rounding per output, whichever accumulator runs:
@@ -63,15 +68,28 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::posit::tables::{
-    decode_entry, narrow_scale, narrow_sfrac, readout_entry, sfrac_sign, sfrac_significand,
-    widen_scale8, widen_sfrac8, DecEntry, DecodeTable, FW, NFW, SCALE8_ZERO, SCALE_NAR,
-    SCALE_ZERO, SFRAC_FRAC_MASK,
+    decode_entry, narrow_scale, narrow_sfrac, narrow_sfrac16, readout_entry, sfrac_sign,
+    sfrac_significand, widen_scale8, widen_sfrac8, widen_sfrac16, DecEntry, DecodeTable, FW, MFW,
+    NFW, SCALE8_NAR, SCALE8_ZERO, SCALE_NAR, SCALE_ZERO, SFRAC_FRAC_MASK,
 };
 use crate::posit::{from_f32, to_f32, window_anchor, FastQuire, PositFormat, WindowedAcc};
 
 use super::layers::{ArithMode, MulKind};
 use super::pool::WorkerPool;
 use super::tensor::Tensor;
+
+/// Arch-specific SIMD lanes for the packed-plane windowed MACs. Both
+/// implementations export the same four `dot_chunk_{exact,plam}_{n8,n16}`
+/// entry points plus `available()`, so the dispatch seam
+/// ([`simd_enabled`] + `PlaneElems::simd_dot`) is identical on every
+/// vector target; hosts that are neither x86-64 nor aarch64 simply
+/// have no `kernel` module and never plan SIMD.
+#[cfg(target_arch = "x86_64")]
+#[path = "kernel_x86.rs"]
+mod kernel;
+#[cfg(target_arch = "aarch64")]
+#[path = "kernel_neon.rs"]
+mod kernel;
 
 /// Output-tile rows (batch direction).
 const MB: usize = 8;
@@ -160,13 +178,22 @@ pub enum PlaneWidth {
     /// n ≤ 8 formats, where scales fit ±24 and fractions carry ≤ 5
     /// bits (see `posit::tables` for the lossless widen/narrow maps).
     Narrow,
+    /// `i8` scales + `u16` sign-packed Q15 fractions, 3 B/element —
+    /// 9 ≤ n ≤ 16 formats whose scales stay inside the `i8` sentinel
+    /// band and whose fractions carry ≤ [`MFW`] bits (P16E1, P16E2;
+    /// not a hypothetical P16E4, whose ±224 scales overflow `i8`).
+    Mid,
 }
 
-/// The plane width a format's encodes select ([`PlaneWidth::Narrow`]
-/// iff `n ≤ 8`).
+/// The plane width a format's encodes select: [`PlaneWidth::Narrow`]
+/// iff `n ≤ 8`, [`PlaneWidth::Mid`] for other n ≤ 16 formats whose
+/// scale range and fraction width fit the packed `i8`/Q15 element,
+/// [`PlaneWidth::Wide`] otherwise.
 pub fn plane_width(fmt: PositFormat) -> PlaneWidth {
     if fmt.n <= 8 {
         PlaneWidth::Narrow
+    } else if fmt.n <= 16 && fmt.max_scale() < SCALE8_NAR as i32 && fmt.max_frac_bits() <= MFW {
+        PlaneWidth::Mid
     } else {
         PlaneWidth::Wide
     }
@@ -181,6 +208,8 @@ pub(crate) enum PlanesMut<'a> {
     Wide(&'a mut [i16], &'a mut [u32]),
     /// `i8` scales + `u8` sign-packed Q7 fractions.
     Narrow(&'a mut [i8], &'a mut [u8]),
+    /// `i8` scales + `u16` sign-packed Q15 fractions.
+    Mid(&'a mut [i8], &'a mut [u16]),
 }
 
 impl PlanesMut<'_> {
@@ -189,6 +218,7 @@ impl PlanesMut<'_> {
         match self {
             PlanesMut::Wide(s, _) => s.len(),
             PlanesMut::Narrow(s, _) => s.len(),
+            PlanesMut::Mid(s, _) => s.len(),
         }
     }
 
@@ -204,6 +234,10 @@ impl PlanesMut<'_> {
                 s[i] = narrow_scale(scale);
                 f[i] = narrow_sfrac(sfrac);
             }
+            PlanesMut::Mid(s, f) => {
+                s[i] = narrow_scale(scale);
+                f[i] = narrow_sfrac16(sfrac);
+            }
         }
     }
 }
@@ -216,6 +250,8 @@ pub(crate) enum PlanesRef<'a> {
     Wide(&'a [i16], &'a [u32]),
     /// `i8` scales + `u8` sign-packed Q7 fractions.
     Narrow(&'a [i8], &'a [u8]),
+    /// `i8` scales + `u16` sign-packed Q15 fractions.
+    Mid(&'a [i8], &'a [u16]),
 }
 
 impl<'a> PlanesRef<'a> {
@@ -224,6 +260,7 @@ impl<'a> PlanesRef<'a> {
         match self {
             PlanesRef::Wide(..) => PlaneWidth::Wide,
             PlanesRef::Narrow(..) => PlaneWidth::Narrow,
+            PlanesRef::Mid(..) => PlaneWidth::Mid,
         }
     }
 
@@ -233,6 +270,7 @@ impl<'a> PlanesRef<'a> {
         match self {
             PlanesRef::Wide(s, f) => (s[i], f[i]),
             PlanesRef::Narrow(s, f) => (widen_scale8(s[i]), widen_sfrac8(f[i])),
+            PlanesRef::Mid(s, f) => (widen_scale8(s[i]), widen_sfrac16(f[i])),
         }
     }
 
@@ -241,6 +279,7 @@ impl<'a> PlanesRef<'a> {
         match self {
             PlanesRef::Wide(s, _) => s.len(),
             PlanesRef::Narrow(s, _) => s.len(),
+            PlanesRef::Mid(s, _) => s.len(),
         }
     }
 
@@ -249,6 +288,7 @@ impl<'a> PlanesRef<'a> {
         match self {
             PlanesRef::Wide(s, f) => PlanesRef::Wide(&s[range.clone()], &f[range]),
             PlanesRef::Narrow(s, f) => PlanesRef::Narrow(&s[range.clone()], &f[range]),
+            PlanesRef::Mid(s, f) => PlanesRef::Mid(&s[range.clone()], &f[range]),
         }
     }
 }
@@ -270,11 +310,15 @@ pub struct EncodedMatrix {
     /// Sign-packed Q30 fractions ([`DecEntry::sfrac`] layout). Empty
     /// when `width` is `Narrow`.
     pub(crate) sfracs: Vec<u32>,
-    /// Narrow scale plane (`SCALE8_ZERO`/`SCALE8_NAR` sentinels).
+    /// Packed scale plane (`SCALE8_ZERO`/`SCALE8_NAR` sentinels),
+    /// shared by the narrow and mid layouts (identical `i8` maps).
     /// Empty when `width` is `Wide`.
     pub(crate) scales8: Vec<i8>,
-    /// Narrow sign-packed Q7 fractions. Empty when `width` is `Wide`.
+    /// Narrow sign-packed Q7 fractions. Empty unless `width` is
+    /// `Narrow`.
     pub(crate) sfracs8: Vec<u8>,
+    /// Mid sign-packed Q15 fractions. Empty unless `width` is `Mid`.
+    pub(crate) sfracs16: Vec<u16>,
     /// Which plane pair carries this matrix's elements.
     pub(crate) width: PlaneWidth,
     /// Per `row × KB-chunk` summaries, `rows × cols.div_ceil(KB)`
@@ -298,6 +342,7 @@ impl EncodedMatrix {
             sfracs: Vec::new(),
             scales8: Vec::new(),
             sfracs8: Vec::new(),
+            sfracs16: Vec::new(),
             width: PlaneWidth::Wide,
             panels: Vec::new(),
             row_meta: Vec::new(),
@@ -318,6 +363,7 @@ impl EncodedMatrix {
         self.sfracs.clear();
         self.scales8.clear();
         self.sfracs8.clear();
+        self.sfracs16.clear();
         match width {
             PlaneWidth::Wide => {
                 self.scales.resize(rows * cols, SCALE_ZERO);
@@ -327,6 +373,10 @@ impl EncodedMatrix {
                 self.scales8.resize(rows * cols, SCALE8_ZERO);
                 self.sfracs8.resize(rows * cols, 0);
             }
+            PlaneWidth::Mid => {
+                self.scales8.resize(rows * cols, SCALE8_ZERO);
+                self.sfracs16.resize(rows * cols, 0);
+            }
         }
         let kc = if cols == 0 { 0 } else { cols.div_ceil(KB) };
         self.panels.clear();
@@ -335,14 +385,15 @@ impl EncodedMatrix {
         self.row_meta.resize(rows, PanelMeta::EMPTY);
     }
     /// Heap footprint of the encoded plane including panel metadata
-    /// (cache accounting). Narrow planes report 2 B/element against
-    /// the wide layout's 6.
+    /// (cache accounting). Narrow planes report 2 B/element and mid
+    /// planes 3 against the wide layout's 6.
     pub fn bytes(&self) -> usize {
         self.f32s.len() * std::mem::size_of::<f32>()
             + self.scales.len() * std::mem::size_of::<i16>()
             + self.sfracs.len() * std::mem::size_of::<u32>()
             + self.scales8.len() * std::mem::size_of::<i8>()
             + self.sfracs8.len() * std::mem::size_of::<u8>()
+            + self.sfracs16.len() * std::mem::size_of::<u16>()
             + (self.panels.len() + self.row_meta.len()) * std::mem::size_of::<PanelMeta>()
     }
 
@@ -366,6 +417,7 @@ impl EncodedMatrix {
         match self.width {
             PlaneWidth::Wide => PlanesRef::Wide(&self.scales, &self.sfracs),
             PlaneWidth::Narrow => PlanesRef::Narrow(&self.scales8, &self.sfracs8),
+            PlaneWidth::Mid => PlanesRef::Mid(&self.scales8, &self.sfracs16),
         }
     }
 
@@ -375,11 +427,12 @@ impl EncodedMatrix {
         match self.width {
             PlaneWidth::Wide => (self.scales[i], self.sfracs[i]),
             PlaneWidth::Narrow => (widen_scale8(self.scales8[i]), widen_sfrac8(self.sfracs8[i])),
+            PlaneWidth::Mid => (widen_scale8(self.scales8[i]), widen_sfrac16(self.sfracs16[i])),
         }
     }
 
     /// Write posit plane element `i` from a wide `(scale, sfrac)` pair
-    /// (narrowed losslessly when this matrix stores narrow planes).
+    /// (narrowed losslessly when this matrix stores packed planes).
     #[inline(always)]
     pub(crate) fn set_elem(&mut self, i: usize, scale: i16, sfrac: u32) {
         match self.width {
@@ -391,6 +444,10 @@ impl EncodedMatrix {
                 self.scales8[i] = narrow_scale(scale);
                 self.sfracs8[i] = narrow_sfrac(sfrac);
             }
+            PlaneWidth::Mid => {
+                self.scales8[i] = narrow_scale(scale);
+                self.sfracs16[i] = narrow_sfrac16(sfrac);
+            }
         }
     }
 
@@ -400,6 +457,7 @@ impl EncodedMatrix {
         let planes = match self.width {
             PlaneWidth::Wide => PlanesMut::Wide(&mut self.scales, &mut self.sfracs),
             PlaneWidth::Narrow => PlanesMut::Narrow(&mut self.scales8, &mut self.sfracs8),
+            PlaneWidth::Mid => PlanesMut::Mid(&mut self.scales8, &mut self.sfracs16),
         };
         (planes, &mut self.panels, &mut self.row_meta)
     }
@@ -444,6 +502,7 @@ pub fn encode_matrix_into(
     out.sfracs.clear();
     out.scales8.clear();
     out.sfracs8.clear();
+    out.sfracs16.clear();
     out.width = PlaneWidth::Wide;
     out.panels.clear();
     out.row_meta.clear();
@@ -486,10 +545,10 @@ pub fn encode_matrix_wide(
     out
 }
 
-/// Shared posit-plane encode at an explicit width. The narrow branch
-/// stores elements through the lossless `tables::narrow_*` maps; panel
-/// metadata folds identically either way (wide-scale domain), so the
-/// accumulator planner is width-blind.
+/// Shared posit-plane encode at an explicit width. The narrow and mid
+/// branches store elements through the lossless `tables::narrow_*`
+/// maps; panel metadata folds identically at every width (wide-scale
+/// domain), so the accumulator planner is width-blind.
 fn encode_posit_planes(
     fmt: PositFormat,
     table: Option<&DecodeTable>,
@@ -516,6 +575,10 @@ fn encode_posit_planes(
             out.scales8.reserve(rows * cols);
             out.sfracs8.reserve(rows * cols);
         }
+        PlaneWidth::Mid => {
+            out.scales8.reserve(rows * cols);
+            out.sfracs16.reserve(rows * cols);
+        }
     }
     out.panels.reserve(rows * kc);
     out.row_meta.reserve(rows);
@@ -533,6 +596,10 @@ fn encode_posit_planes(
                     PlaneWidth::Narrow => {
                         out.scales8.push(narrow_scale(e.scale));
                         out.sfracs8.push(narrow_sfrac(e.sfrac()));
+                    }
+                    PlaneWidth::Mid => {
+                        out.scales8.push(narrow_scale(e.scale));
+                        out.sfracs16.push(narrow_sfrac16(e.sfrac()));
                     }
                 }
                 pm.fold(&e);
@@ -1036,6 +1103,12 @@ pub fn gemm_bt_planes_pool(
             .zip(out.sfracs8.chunks_mut(rows_per * n_dim))
             .map(|(s, f)| PlanesMut::Narrow(s, f))
             .collect(),
+        PlaneWidth::Mid => out
+            .scales8
+            .chunks_mut(rows_per * n_dim)
+            .zip(out.sfracs16.chunks_mut(rows_per * n_dim))
+            .map(|(s, f)| PlanesMut::Mid(s, f))
+            .collect(),
     };
     let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = band_planes
         .into_iter()
@@ -1162,51 +1235,68 @@ const PLAN_WINDOWED: u8 = 1;
 /// Windowed output that hit NaR: remaining chunks are skipped (NaR is
 /// absorbing) and read-out emits NaR directly.
 const PLAN_NAR: u8 = 2;
-/// Windowed output whose specials-free chunks run the narrow-plane
-/// AVX2 kernel (specials chunks still take the scalar sentinel loop
-/// into the same accumulator). Planned only for narrow operands under
-/// [`AccPolicy::Auto`] when [`simd_enabled`] and the row pair passes
-/// [`simd_window_fits`].
+/// Windowed output whose specials-free chunks run the packed-plane
+/// vector kernel (specials chunks still take the scalar sentinel loop
+/// into the same accumulator). Planned only for narrow/mid operands
+/// under [`AccPolicy::Auto`] when [`simd_enabled`] and the row pair
+/// passes [`simd_window_fits`] at the width's rule-specific span cap.
 const PLAN_WINDOWED_SIMD: u8 = 3;
 
-/// Largest combined row-pair scale span the SIMD lanes accept. Each
-/// lane carries `signed_product << (sa + sb − lo)` in an `i64`: exact
-/// products are ≤ 16 bits, the shift is ≤ span, and `KB/8 = 64`
-/// per-lane accumulations add 6 bits — `16 + 38 + 6 = 60` keeps two
-/// bits of headroom below the sign (the PLAM rule is smaller still:
+/// Largest combined row-pair scale span the narrow SIMD lanes accept
+/// (both product rules). Each lane carries
+/// `signed_product << (sa + sb − lo)` in an `i64`: exact products are
+/// ≤ 16 bits, the shift is ≤ span, and `KB/8 = 64` per-lane
+/// accumulations add 6 bits — `16 + 38 + 6 = 60` keeps two bits of
+/// headroom below the sign (the PLAM rule is smaller still:
 /// `8 + 39 + 6`). Every P8E0 row pair fits (span ≤ 24); adversarial
-/// P8E2 spreads fall back to the portable windowed loop.
-const SIMD_MAX_SPAN: i32 = 38;
+/// P8E2 spreads fall back to the portable windowed loop. That 2^60
+/// lane bound is also what licenses the kernels' in-register `hsum`
+/// reduction, so the mid caps below preserve it exactly.
+const SIMD_SPAN_NARROW: i32 = 38;
+
+/// Mid-plane span cap for the exact rule: Q15 significand products
+/// are full 32-bit, so `32 + 22 + 6 = 60` — the same lane bound with
+/// a 16-bit-wider product term. Typical inference rows fit easily;
+/// adversarial spreads fall back to the portable windowed loop.
+const SIMD_SPAN_MID_EXACT: i32 = 22;
+
+/// Mid-plane span cap for the PLAM rule: the approximate significand
+/// stays ≤ 16 bits but the Eq. 20/21 carry can add one to the shift,
+/// so `16 + (37 + 1) + 6 = 60`.
+const SIMD_SPAN_MID_PLAM: i32 = 37;
 
 /// Lane-budget gate for [`PLAN_WINDOWED_SIMD`]: per-element vector
 /// shifts are bounded by the row pair's combined scale span relative
-/// to its minimum. Inverted (no-normals) metas never vectorize — all
-/// their chunks are specials anyway.
+/// to its minimum, capped per width and product rule
+/// (`PlaneElems::simd_max_span`). Inverted (no-normals) metas never
+/// vectorize — all their chunks are specials anyway.
 #[inline(always)]
-fn simd_window_fits(xm: &PanelMeta, wm: &PanelMeta) -> bool {
+fn simd_window_fits(xm: &PanelMeta, wm: &PanelMeta, max_span: i32) -> bool {
     if xm.min_scale > xm.max_scale || wm.min_scale > wm.max_scale {
         return false;
     }
     let span = (xm.max_scale as i32 + wm.max_scale as i32)
         - (xm.min_scale as i32 + wm.min_scale as i32);
-    span <= SIMD_MAX_SPAN
+    span <= max_span
 }
 
-/// Runtime gate for the narrow-plane vector kernel: true when the host
-/// has AVX2 and `PLAM_FORCE_SCALAR` is unset in the environment. Both
-/// are latched on first use (the CI matrix sets the env to pin the
-/// portable loop for a whole process; in-process tests use
-/// [`AccPolicy::ForcePortable`] instead). Always false off x86_64.
+/// Runtime gate for the packed-plane vector kernels: true when the
+/// arch kernel module reports its lanes usable (AVX2 detection on
+/// x86-64; always on aarch64, where NEON is mandatory) and
+/// `PLAM_FORCE_SCALAR` is unset in the environment. Both are latched
+/// on first use (the CI matrix sets the env to pin the portable loop
+/// for a whole process; in-process tests use
+/// [`AccPolicy::ForcePortable`] instead). Always false on targets
+/// without a kernel module.
 fn simd_enabled() -> bool {
-    #[cfg(target_arch = "x86_64")]
+    #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
     {
         static ENABLED: OnceLock<bool> = OnceLock::new();
         *ENABLED.get_or_init(|| {
-            std::env::var_os("PLAM_FORCE_SCALAR").is_none()
-                && std::arch::is_x86_64_feature_detected!("avx2")
+            std::env::var_os("PLAM_FORCE_SCALAR").is_none() && kernel::available()
         })
     }
-    #[cfg(not(target_arch = "x86_64"))]
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
     {
         false
     }
@@ -1374,6 +1464,9 @@ fn gemm_posit_band_sink<S: ReadoutSink>(
         PlaneWidth::Narrow => gemm_posit_band_impl::<NarrowPlanes, S>(
             fmt, mul, x, w, bias, sink, row0, rows, k_dim, n_dim, policy,
         ),
+        PlaneWidth::Mid => gemm_posit_band_impl::<MidPlanes, S>(
+            fmt, mul, x, w, bias, sink, row0, rows, k_dim, n_dim, policy,
+        ),
     }
 }
 
@@ -1398,10 +1491,12 @@ fn gemm_posit_band_impl<P: PlaneElems, S: ReadoutSink>(
     let w_kc = w.cols.div_ceil(KB);
     let (x_scales, x_sfracs) = (P::scales(x), P::fracs(x));
     let (w_scales, w_sfracs) = (P::scales(w), P::fracs(w));
-    // One latch per band: narrow operands on an AVX2 host vectorize
-    // their clean chunks unless the policy (or the env knob) pins the
-    // portable loop.
+    // One latch per band: narrow/mid operands on a vector-capable host
+    // vectorize their clean chunks unless the policy (or the env knob)
+    // pins the portable loop. The span cap is width- and rule-specific
+    // (the mid exact rule's 32-bit products leave less shift room).
     let simd = P::SIMD && policy == AccPolicy::Auto && simd_enabled();
+    let max_span = P::simd_max_span(mul);
     // Scratch sized to the rows actually used: an M=1 per-sample call
     // touches one tile row, not the full MB×NB panel.
     let scratch = rows.min(MB) * NB;
@@ -1431,7 +1526,7 @@ fn gemm_posit_band_impl<P: PlaneElems, S: ReadoutSink>(
                         match anchor {
                             Some(a) => {
                                 winds[idx].reset(a);
-                                plans[idx] = if simd && simd_window_fits(xm, wm) {
+                                plans[idx] = if simd && simd_window_fits(xm, wm, max_span) {
                                     PLAN_WINDOWED_SIMD
                                 } else {
                                     PLAN_WINDOWED
@@ -1598,9 +1693,14 @@ trait PlaneElems {
     fn fracs(m: &EncodedMatrix) -> &[Self::Frac];
     /// Widen one element to the wide `(scale, sfrac)` pair.
     fn widen(s: Self::Scale, f: Self::Frac) -> (i16, u32);
+    /// Largest combined row-pair scale span [`simd_window_fits`] may
+    /// accept for this width under `mul` — the kernels' `i64` lane
+    /// budget. Never consulted for widths with `SIMD = false`.
+    fn simd_max_span(mul: MulKind) -> i32;
     /// Vector dot over one specials-free chunk at the windowed anchor.
     /// Only reachable through [`PLAN_WINDOWED_SIMD`], which the planner
-    /// emits solely for narrow operands after runtime AVX2 detection.
+    /// emits solely for narrow/mid operands after runtime feature
+    /// detection.
     fn simd_dot(
         mul: MulKind,
         wa: &mut WindowedAcc,
@@ -1634,6 +1734,10 @@ impl PlaneElems for WidePlanes {
         (s, f)
     }
 
+    fn simd_max_span(_mul: MulKind) -> i32 {
+        unreachable!("wide planes never plan SIMD")
+    }
+
     fn simd_dot(
         _mul: MulKind,
         _wa: &mut WindowedAcc,
@@ -1642,18 +1746,18 @@ impl PlaneElems for WidePlanes {
         _ws: &[i16],
         _wf: &[u32],
     ) {
-        unreachable!("SIMD plan requires narrow planes")
+        unreachable!("SIMD plan requires packed planes")
     }
 }
 
 /// Narrow (`i8`/`u8`) plane access: scalar loops widen per element;
-/// clean windowed chunks may take the AVX2 kernel.
+/// clean windowed chunks may take the arch vector kernel.
 struct NarrowPlanes;
 
 impl PlaneElems for NarrowPlanes {
     type Scale = i8;
     type Frac = u8;
-    const SIMD: bool = cfg!(target_arch = "x86_64");
+    const SIMD: bool = cfg!(any(target_arch = "x86_64", target_arch = "aarch64"));
 
     #[inline(always)]
     fn scales(m: &EncodedMatrix) -> &[i8] {
@@ -1670,7 +1774,12 @@ impl PlaneElems for NarrowPlanes {
         (widen_scale8(s), widen_sfrac8(f))
     }
 
-    #[cfg(target_arch = "x86_64")]
+    #[inline(always)]
+    fn simd_max_span(_mul: MulKind) -> i32 {
+        SIMD_SPAN_NARROW
+    }
+
+    #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
     fn simd_dot(
         mul: MulKind,
         wa: &mut WindowedAcc,
@@ -1687,22 +1796,22 @@ impl PlaneElems for NarrowPlanes {
         // encodes `lo` per product rule ([`product_window`]).
         //
         // SAFETY: the planner emits PLAN_WINDOWED_SIMD only after
-        // `simd_enabled()` confirmed runtime AVX2 support.
+        // `simd_enabled()` confirmed the kernel module's lanes usable.
         match mul {
             MulKind::Exact => {
                 let lo = wa.anchor() + 2 * FW as i32;
-                let s = unsafe { simd::dot_chunk_exact(xs, xf, ws, wf, lo) };
+                let s = unsafe { kernel::dot_chunk_exact_n8(xs, xf, ws, wf, lo) };
                 wa.accumulate(s << (2 * (FW - NFW)));
             }
             MulKind::Plam => {
                 let lo = wa.anchor() + FW as i32;
-                let s = unsafe { simd::dot_chunk_plam(xs, xf, ws, wf, lo) };
+                let s = unsafe { kernel::dot_chunk_plam_n8(xs, xf, ws, wf, lo) };
                 wa.accumulate(s << (FW - NFW));
             }
         }
     }
 
-    #[cfg(not(target_arch = "x86_64"))]
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
     fn simd_dot(
         _mul: MulKind,
         _wa: &mut WindowedAcc,
@@ -1711,7 +1820,81 @@ impl PlaneElems for NarrowPlanes {
         _ws: &[i8],
         _wf: &[u8],
     ) {
-        unreachable!("SIMD plan requires an x86_64 AVX2 host")
+        unreachable!("SIMD plan requires a vector-capable host")
+    }
+}
+
+/// Mid (`i8`/`u16`) plane access: scalar loops widen per element;
+/// clean windowed chunks may take the arch vector kernel.
+struct MidPlanes;
+
+impl PlaneElems for MidPlanes {
+    type Scale = i8;
+    type Frac = u16;
+    const SIMD: bool = cfg!(any(target_arch = "x86_64", target_arch = "aarch64"));
+
+    #[inline(always)]
+    fn scales(m: &EncodedMatrix) -> &[i8] {
+        &m.scales8
+    }
+
+    #[inline(always)]
+    fn fracs(m: &EncodedMatrix) -> &[u16] {
+        &m.sfracs16
+    }
+
+    #[inline(always)]
+    fn widen(s: i8, f: u16) -> (i16, u32) {
+        (widen_scale8(s), widen_sfrac16(f))
+    }
+
+    #[inline(always)]
+    fn simd_max_span(mul: MulKind) -> i32 {
+        match mul {
+            MulKind::Exact => SIMD_SPAN_MID_EXACT,
+            MulKind::Plam => SIMD_SPAN_MID_PLAM,
+        }
+    }
+
+    #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+    fn simd_dot(
+        mul: MulKind,
+        wa: &mut WindowedAcc,
+        xs: &[i8],
+        xf: &[u16],
+        ws: &[i8],
+        wf: &[u16],
+    ) {
+        // Same fold-back identity as the narrow kernels, one notch
+        // wider: `sig30 = sig15 << (FW − MFW)`, so exact chunk sums
+        // widen by 2·(FW − MFW) = 30 and PLAM sums by FW − MFW = 15.
+        //
+        // SAFETY: the planner emits PLAN_WINDOWED_SIMD only after
+        // `simd_enabled()` confirmed the kernel module's lanes usable.
+        match mul {
+            MulKind::Exact => {
+                let lo = wa.anchor() + 2 * FW as i32;
+                let s = unsafe { kernel::dot_chunk_exact_n16(xs, xf, ws, wf, lo) };
+                wa.accumulate(s << (2 * (FW - MFW)));
+            }
+            MulKind::Plam => {
+                let lo = wa.anchor() + FW as i32;
+                let s = unsafe { kernel::dot_chunk_plam_n16(xs, xf, ws, wf, lo) };
+                wa.accumulate(s << (FW - MFW));
+            }
+        }
+    }
+
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    fn simd_dot(
+        _mul: MulKind,
+        _wa: &mut WindowedAcc,
+        _xs: &[i8],
+        _xf: &[u16],
+        _ws: &[i8],
+        _wf: &[u16],
+    ) {
+        unreachable!("SIMD plan requires a vector-capable host")
     }
 }
 
@@ -1850,181 +2033,6 @@ fn windowed_dot_specials_with<P: PlaneElems>(
     false
 }
 
-/// AVX2 lanes for the narrow-plane windowed MAC. Both kernels compute
-/// bit-exactly what the scalar loops compute — eight elements per
-/// step, each lane holding `±sig · 2^(shift)` on the narrow grid; the
-/// caller folds the chunk sum back to the wide anchor (see
-/// [`NarrowPlanes::simd_dot`]).
-#[cfg(target_arch = "x86_64")]
-mod simd {
-    use std::arch::x86_64::*;
-
-    use crate::posit::tables::{NFW, SFRAC8_FRAC_MASK, SFRAC8_SIGN};
-
-    /// Sum the signed `i64` lanes of two accumulators into one `i128`.
-    #[target_feature(enable = "avx2")]
-    unsafe fn hsum(a: __m256i, b: __m256i) -> i128 {
-        let mut buf = [0i64; 4];
-        _mm256_storeu_si256(buf.as_mut_ptr() as *mut __m256i, a);
-        let mut s: i128 = buf.iter().map(|&v| v as i128).sum();
-        _mm256_storeu_si256(buf.as_mut_ptr() as *mut __m256i, b);
-        s += buf.iter().map(|&v| v as i128).sum::<i128>();
-        s
-    }
-
-    /// Load 8 narrow scales sign-extended to `i32` lanes.
-    #[target_feature(enable = "avx2")]
-    unsafe fn load_scales(p: *const i8) -> __m256i {
-        _mm256_cvtepi8_epi32(_mm_loadl_epi64(p as *const __m128i))
-    }
-
-    /// Load 8 narrow sign+frac bytes zero-extended to `u32` lanes.
-    #[target_feature(enable = "avx2")]
-    unsafe fn load_sfracs(p: *const u8) -> __m256i {
-        _mm256_cvtepu8_epi32(_mm_loadl_epi64(p as *const __m128i))
-    }
-
-    /// Apply per-lane signs (bit 7 of `xf ^ wf`) to `v` branch-free:
-    /// `(v ^ m) − m` with `m` the sign stretched to a full lane mask.
-    #[target_feature(enable = "avx2")]
-    unsafe fn apply_sign(v: __m256i, xfv: __m256i, wfv: __m256i) -> __m256i {
-        let m = _mm256_srai_epi32::<31>(_mm256_slli_epi32::<24>(_mm256_xor_si256(xfv, wfv)));
-        _mm256_sub_epi32(_mm256_xor_si256(v, m), m)
-    }
-
-    /// Widen 8 signed `i32` lanes to `i64`, shift each left by its
-    /// `i32` lane count, and add into the two accumulators.
-    #[target_feature(enable = "avx2")]
-    unsafe fn shift_accumulate(
-        acc0: __m256i,
-        acc1: __m256i,
-        signed: __m256i,
-        shift: __m256i,
-    ) -> (__m256i, __m256i) {
-        let lo = _mm256_sllv_epi64(
-            _mm256_cvtepi32_epi64(_mm256_castsi256_si128(signed)),
-            _mm256_cvtepi32_epi64(_mm256_castsi256_si128(shift)),
-        );
-        let hi = _mm256_sllv_epi64(
-            _mm256_cvtepi32_epi64(_mm256_extracti128_si256::<1>(signed)),
-            _mm256_cvtepi32_epi64(_mm256_extracti128_si256::<1>(shift)),
-        );
-        (_mm256_add_epi64(acc0, lo), _mm256_add_epi64(acc1, hi))
-    }
-
-    /// Exact-rule dot over one specials-free narrow chunk: the chunk
-    /// sum in narrow product units (`· 2^(lo − 2·NFW)`), where `lo` is
-    /// the row pair's combined minimum scale. Bit-equal to the scalar
-    /// terms by `sig30a · sig30b = (sig7a · sig7b) << 2·(FW − NFW)`.
-    ///
-    /// # Safety
-    /// Requires runtime AVX2. All four slices must share one length;
-    /// every element must be a normal (no sentinels) with
-    /// `xs[k] + ws[k] − lo ∈ [0, SIMD_MAX_SPAN]`.
-    #[target_feature(enable = "avx2")]
-    pub(super) unsafe fn dot_chunk_exact(
-        xs: &[i8],
-        xf: &[u8],
-        ws: &[i8],
-        wf: &[u8],
-        lo: i32,
-    ) -> i128 {
-        let n = xs.len();
-        let frac = _mm256_set1_epi32(SFRAC8_FRAC_MASK as i32);
-        let hidden = _mm256_set1_epi32(1 << NFW);
-        let lo_v = _mm256_set1_epi32(lo);
-        let mut acc0 = _mm256_setzero_si256();
-        let mut acc1 = _mm256_setzero_si256();
-        let mut k = 0;
-        while k + 8 <= n {
-            let xsv = load_scales(xs.as_ptr().add(k));
-            let wsv = load_scales(ws.as_ptr().add(k));
-            let xfv = load_sfracs(xf.as_ptr().add(k));
-            let wfv = load_sfracs(wf.as_ptr().add(k));
-            let siga = _mm256_or_si256(_mm256_and_si256(xfv, frac), hidden);
-            let sigb = _mm256_or_si256(_mm256_and_si256(wfv, frac), hidden);
-            let prod = _mm256_mullo_epi32(siga, sigb);
-            let signed = apply_sign(prod, xfv, wfv);
-            let shift = _mm256_sub_epi32(_mm256_add_epi32(xsv, wsv), lo_v);
-            (acc0, acc1) = shift_accumulate(acc0, acc1, signed, shift);
-            k += 8;
-        }
-        let mut sum = hsum(acc0, acc1);
-        while k < n {
-            let siga = ((1u32 << NFW) | (xf[k] & SFRAC8_FRAC_MASK) as u32) as i64;
-            let sigb = ((1u32 << NFW) | (wf[k] & SFRAC8_FRAC_MASK) as u32) as i64;
-            let shift = (xs[k] as i32 + ws[k] as i32 - lo) as u32;
-            let v = (siga * sigb) << shift;
-            sum += if (xf[k] ^ wf[k]) & SFRAC8_SIGN != 0 {
-                -(v as i128)
-            } else {
-                v as i128
-            };
-            k += 1;
-        }
-        sum
-    }
-
-    /// PLAM-rule dot (paper Eq. 17 with the Eq. 20/21 carry) over one
-    /// specials-free narrow chunk: the chunk sum in narrow units
-    /// (`· 2^(lo − NFW)`). Bit-equal to the scalar terms because
-    /// `fsum30 = fsum7 << (FW − NFW)` keeps the same carry bit and the
-    /// same retained fraction bits in both widths.
-    ///
-    /// # Safety
-    /// Same contract as [`dot_chunk_exact`].
-    #[target_feature(enable = "avx2")]
-    pub(super) unsafe fn dot_chunk_plam(
-        xs: &[i8],
-        xf: &[u8],
-        ws: &[i8],
-        wf: &[u8],
-        lo: i32,
-    ) -> i128 {
-        let n = xs.len();
-        let frac = _mm256_set1_epi32(SFRAC8_FRAC_MASK as i32);
-        let hidden = _mm256_set1_epi32(1 << NFW);
-        let lo_v = _mm256_set1_epi32(lo);
-        let mut acc0 = _mm256_setzero_si256();
-        let mut acc1 = _mm256_setzero_si256();
-        let mut k = 0;
-        while k + 8 <= n {
-            let xsv = load_scales(xs.as_ptr().add(k));
-            let wsv = load_scales(ws.as_ptr().add(k));
-            let xfv = load_sfracs(xf.as_ptr().add(k));
-            let wfv = load_sfracs(wf.as_ptr().add(k));
-            let fsum = _mm256_add_epi32(
-                _mm256_and_si256(xfv, frac),
-                _mm256_and_si256(wfv, frac),
-            );
-            let carry = _mm256_srli_epi32::<{ NFW as i32 }>(fsum);
-            let sig = _mm256_or_si256(_mm256_and_si256(fsum, frac), hidden);
-            let signed = apply_sign(sig, xfv, wfv);
-            let shift = _mm256_add_epi32(
-                _mm256_sub_epi32(_mm256_add_epi32(xsv, wsv), lo_v),
-                carry,
-            );
-            (acc0, acc1) = shift_accumulate(acc0, acc1, signed, shift);
-            k += 8;
-        }
-        let mut sum = hsum(acc0, acc1);
-        while k < n {
-            let fsum = (xf[k] & SFRAC8_FRAC_MASK) as u32 + (wf[k] & SFRAC8_FRAC_MASK) as u32;
-            let carry = (fsum >> NFW) as i32;
-            let sig = ((1u32 << NFW) | (fsum & SFRAC8_FRAC_MASK as u32)) as i64;
-            let shift = (xs[k] as i32 + ws[k] as i32 + carry - lo) as u32;
-            let v = sig << shift;
-            sum += if (xf[k] ^ wf[k]) & SFRAC8_SIGN != 0 {
-                -(v as i128)
-            } else {
-                v as i128
-            };
-            k += 1;
-        }
-        sum
-    }
-}
-
 /// im2col: gather `[ic, h, w]` input patches into a row-major
 /// `[oh·ow, ic·kh·kw]` patch matrix so each output pixel is one GEMM
 /// row. Returns `(cols, oh, ow)`.
@@ -2151,8 +2159,9 @@ pub(crate) fn assert_planes_eq(a: &EncodedMatrix, b: &EncodedMatrix, ctx: &str) 
     assert_eq!(a.width, b.width, "{ctx}: plane width");
     assert_eq!(a.scales, b.scales, "{ctx}: scale plane");
     assert_eq!(a.sfracs, b.sfracs, "{ctx}: sfrac plane");
-    assert_eq!(a.scales8, b.scales8, "{ctx}: narrow scale plane");
+    assert_eq!(a.scales8, b.scales8, "{ctx}: packed scale plane");
     assert_eq!(a.sfracs8, b.sfracs8, "{ctx}: narrow sfrac plane");
+    assert_eq!(a.sfracs16, b.sfracs16, "{ctx}: mid sfrac plane");
     assert_eq!(a.panels, b.panels, "{ctx}: panel metadata");
     assert_eq!(a.row_meta, b.row_meta, "{ctx}: row metadata");
 }
@@ -2322,12 +2331,17 @@ mod tests {
         use std::mem::size_of;
         let mode = ArithMode::posit_plam(PositFormat::P16E1);
         let data: Vec<f32> = (0..256).map(|i| i as f32 * 0.25).collect();
+        // P16E1 selects mid planes: 16×16 elements at 3 B (i8 scale +
+        // u16 Q15 fraction) + 16 one-chunk panels + 16 row folds.
         let e = encode_matrix(&mode, 16, 16, &data);
-        // 16×16 elements in two SoA planes + 16 one-chunk panels + 16
-        // row folds.
-        let want = 256 * (size_of::<i16>() + size_of::<u32>())
+        let want_mid = 256 * (size_of::<i8>() + size_of::<u16>())
             + (16 + 16) * size_of::<PanelMeta>();
-        assert_eq!(e.bytes(), want);
+        assert_eq!(e.bytes(), want_mid);
+        // The wide-forced encode of the same data costs 6 B/element.
+        let w = encode_matrix_wide(&mode, 16, 16, &data);
+        let want_wide = 256 * (size_of::<i16>() + size_of::<u32>())
+            + (16 + 16) * size_of::<PanelMeta>();
+        assert_eq!(w.bytes(), want_wide);
         // Float planes carry only the f32 copy.
         let f = encode_matrix(&ArithMode::float32(), 16, 16, &data);
         assert_eq!(f.bytes(), 256 * size_of::<f32>());
@@ -2664,8 +2678,33 @@ mod tests {
             assert_eq!(narrow.bytes(), rows * cols * 2 + meta, "2 B/element narrow");
             assert_eq!(wide.bytes(), rows * cols * 6 + meta, "6 B/element wide");
         }
-        // Wider formats keep the wide layout.
-        let w16 = encode_matrix(&ArithMode::posit_plam(PositFormat::P16E1), 1, 4, &[1.0; 4]);
+        // 9 ≤ n ≤ 16 formats store 3 B/element mid planes under the
+        // same contract: widened elements and panel metadata match the
+        // wide-forced encode bit for bit.
+        for fmt in [PositFormat::P16E1, PositFormat::P16E2] {
+            let mode = ArithMode::posit_plam(fmt);
+            let mut rng = Rng::new(0x16 + fmt.es as u64);
+            let (rows, cols) = (4, 150);
+            let mut data = random_matrix(&mut rng, rows, cols);
+            data[0] = 0.0;
+            data[151] = f32::NAN;
+            let mid = encode_matrix(&mode, rows, cols, &data);
+            assert_eq!(mid.width(), PlaneWidth::Mid);
+            assert!(mid.scales.is_empty() && mid.sfracs.is_empty() && mid.sfracs8.is_empty());
+            let wide = encode_matrix_wide(&mode, rows, cols, &data);
+            assert_eq!(wide.width(), PlaneWidth::Wide);
+            assert_eq!(mid.panels, wide.panels, "panel metadata is width-blind");
+            assert_eq!(mid.row_meta, wide.row_meta);
+            for i in 0..rows * cols {
+                assert_eq!(mid.elem(i), wide.elem(i), "{fmt} elem {i}");
+            }
+            let meta = (mid.panels.len() + mid.row_meta.len()) * size_of::<PanelMeta>();
+            assert_eq!(mid.bytes(), rows * cols * 3 + meta, "3 B/element mid");
+        }
+        // Formats whose scale or fraction range exceeds the mid grid
+        // keep the wide layout (P16E4's max scale of 224 overflows the
+        // i8 scale plane).
+        let w16 = encode_matrix(&ArithMode::posit_plam(PositFormat::new(16, 4)), 1, 4, &[1.0; 4]);
         assert_eq!(w16.width(), PlaneWidth::Wide);
     }
 
@@ -2723,6 +2762,45 @@ mod tests {
             let xe = encode_matrix(&mode, m, k, &x);
             let we = encode_matrix(&mode, n, k, &w);
             assert_eq!(xe.width(), PlaneWidth::Narrow);
+            let mut auto = vec![0f32; m * n];
+            gemm_bt_with_policy(&mode, &xe, &we, Some(&bias), &mut auto, AccPolicy::Auto);
+            for policy in [AccPolicy::ForcePortable, AccPolicy::ForceQuire] {
+                let mut got = vec![0f32; m * n];
+                gemm_bt_with_policy(&mode, &xe, &we, Some(&bias), &mut got, policy);
+                let same = auto.iter().zip(got.iter()).all(|(a, b)| a.to_bits() == b.to_bits());
+                assert!(same, "{} {policy:?}", mode.name());
+            }
+            let xw = encode_matrix_wide(&mode, m, k, &x);
+            let ww = encode_matrix_wide(&mode, n, k, &w);
+            let mut wide = vec![0f32; m * n];
+            gemm_bt(&mode, &xw, &ww, Some(&bias), &mut wide);
+            let same = auto.iter().zip(wide.iter()).all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(same, "{} wide operands", mode.name());
+        }
+    }
+
+    #[test]
+    fn mid_simd_portable_quire_and_wide_agree_bit_for_bit() {
+        // Same contract as the narrow test above, on the 3 B/element
+        // mid planes: the u16 SIMD kernels, the portable scalar loop,
+        // the quire fallback, and the wide-forced encode all round to
+        // identical bits under both multiply rules.
+        for mode in [
+            ArithMode::posit_exact(PositFormat::P16E1),
+            ArithMode::posit_plam(PositFormat::P16E1),
+            ArithMode::posit_exact(PositFormat::P16E2),
+            ArithMode::posit_plam(PositFormat::P16E2),
+        ] {
+            let (m, k, n) = (5, 600, 9);
+            let mut rng = Rng::new(0x16D);
+            let mut x = random_matrix(&mut rng, m, k);
+            x[3] = 0.0;
+            x[k + 7] = f32::NAN;
+            let w = random_matrix(&mut rng, n, k);
+            let bias: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 0.1).collect();
+            let xe = encode_matrix(&mode, m, k, &x);
+            let we = encode_matrix(&mode, n, k, &w);
+            assert_eq!(xe.width(), PlaneWidth::Mid);
             let mut auto = vec![0f32; m * n];
             gemm_bt_with_policy(&mode, &xe, &we, Some(&bias), &mut auto, AccPolicy::Auto);
             for policy in [AccPolicy::ForcePortable, AccPolicy::ForceQuire] {

@@ -864,12 +864,12 @@ mod tests {
                 _ => 0,
             })
             .sum();
-        // Every weight element costs 6 bytes across the two SoA planes
-        // (i16 scale + u32 sign-packed fraction); panel metadata adds
-        // a small amount on top.
+        // P16E1 selects mid planes: every weight element costs 3 bytes
+        // across the two SoA planes (i8 scale + u16 sign-packed Q15
+        // fraction); panel metadata adds a small amount on top.
         let bytes = pm.encoded_bytes();
-        assert!(bytes >= params * 6, "bytes={bytes} params={params}");
-        assert!(bytes <= params * 6 + params, "metadata should be small");
+        assert!(bytes >= params * 3, "bytes={bytes} params={params}");
+        assert!(bytes <= params * 3 + params, "metadata should be small");
     }
 
     #[test]

@@ -111,8 +111,11 @@ pub const SFRAC8_SIGN: u8 = 1 << NFW;
 pub const SFRAC8_FRAC_MASK: u8 = (1 << NFW) - 1;
 
 /// Narrow a wide plane scale to the `i8` plane, sentinel-preserving.
-/// The caller guarantees the element came from an n ≤ 8 format (scales
-/// within ±24); out-of-range normal scales are a contract violation.
+/// Shared by the narrow (n ≤ 8) and mid (9 ≤ n ≤ 16) layouts: the
+/// caller guarantees the element came from a format whose scales stay
+/// strictly inside the sentinel band (narrow: ±24; mid-eligible 16-bit
+/// formats: ±56 for es ≤ 2); out-of-range normal scales are a contract
+/// violation.
 #[inline(always)]
 pub fn narrow_scale(s: i16) -> i8 {
     match s {
@@ -157,6 +160,52 @@ pub fn narrow_sfrac(sf: u32) -> u8 {
 #[inline(always)]
 pub fn widen_sfrac8(sf: u8) -> u32 {
     (((sf & SFRAC8_SIGN) as u32) << 24) | (((sf & SFRAC8_FRAC_MASK) as u32) << (FW - NFW))
+}
+
+// ---------------------------------------------------------------------
+// Mid plane element layout (9 ≤ n ≤ 16 formats)
+// ---------------------------------------------------------------------
+//
+// Every 9 ≤ n ≤ 16 posit format with es small enough that scales stay
+// inside the i8 sentinel band (|scale| ≤ (n−2)·2^es < 127) fits a
+// 3-byte plane element: an `i8` scale (shared with the narrow layout,
+// same sentinels) plus a sign-packed Q15 `u16` fraction. Fractions
+// carry at most n − 3 − es ≤ 13 bits (≤ MFW), so frac30's low
+// FW − MFW = 15 bits are provably zero and the re-alignment is
+// lossless: `sig30 = sig15 << 15`, exactly the PR 7 narrow contract
+// one notch wider.
+
+/// Fraction alignment of mid plane elements: fractions are
+/// left-aligned to 15 bits so significands fit `u16` and products fit
+/// `u32`. Mirrors [`FW`] / [`NFW`] for the wide / narrow layouts.
+pub const MFW: u32 = 15;
+
+/// Sign bit of a mid packed sign+frac word: the MFW-bit fraction
+/// occupies bits `0..MFW`, the sign rides in bit 15.
+pub const SFRAC16_SIGN: u16 = 1 << MFW;
+/// Mask selecting the MFW-bit fraction out of a mid sign+frac word.
+pub const SFRAC16_FRAC_MASK: u16 = (1 << MFW) - 1;
+
+/// Narrow a wide packed sign+frac word to the `u16` plane. Lossless
+/// for mid-eligible formats: their frac30 payload lives entirely in
+/// the top MFW fraction bits (the low `FW − MFW` bits are zero by
+/// construction). Mid scale planes reuse [`narrow_scale`] /
+/// [`widen_scale8`] — the `i8` sentinels are identical.
+#[inline(always)]
+pub fn narrow_sfrac16(sf: u32) -> u16 {
+    debug_assert_eq!(
+        sf & ((1 << (FW - MFW)) - 1),
+        0,
+        "fraction payload below the mid alignment"
+    );
+    (((sf >> 16) & 0x8000) as u16) | ((sf & SFRAC_FRAC_MASK) >> (FW - MFW)) as u16
+}
+
+/// Widen a mid packed sign+frac word back to the `u32` plane. Exact
+/// inverse of [`narrow_sfrac16`].
+#[inline(always)]
+pub fn widen_sfrac16(sf: u16) -> u32 {
+    (((sf & SFRAC16_SIGN) as u32) << 16) | (((sf & SFRAC16_FRAC_MASK) as u32) << (FW - MFW))
 }
 
 /// Decode one bit pattern into a pre-aligned [`DecEntry`] without a
@@ -563,6 +612,41 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn mid_plane_round_trips_every_n16_element() {
+        // Every mid-eligible 16-bit format's decoded (scale, sfrac)
+        // must survive the mid 3-byte plane layout exactly — including
+        // P16E2, whose scales reach ±56 — and the significand must
+        // relate to the wide one by an exact 15-bit shift (the mid
+        // SIMD kernel's fold-in identity).
+        for fmt in [PositFormat::P16E1, PositFormat::P16E2] {
+            assert!(fmt.max_scale() < SCALE8_NAR as i32);
+            assert!(fmt.max_frac_bits() <= MFW);
+            let t = DecodeTable::new(fmt);
+            for bits in 0u64..65536 {
+                let e = t.get(bits);
+                let (s8, f16) = (narrow_scale(e.scale), narrow_sfrac16(e.sfrac()));
+                assert_eq!(widen_scale8(s8), e.scale, "{fmt} bits={bits:#x}");
+                assert_eq!(widen_sfrac16(f16), e.sfrac(), "{fmt} bits={bits:#x}");
+                if !e.is_zero() && !e.is_nar() {
+                    let sig16 = (1u32 << MFW) | (f16 & SFRAC16_FRAC_MASK) as u32;
+                    assert_eq!(sig16 << (FW - MFW), e.significand(), "{fmt} bits={bits:#x}");
+                    assert_eq!(f16 & SFRAC16_SIGN != 0, e.sign);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mid_sentinels_map_both_ways() {
+        // Mid planes reuse the narrow i8 scale sentinels; only the
+        // fraction word is layout-specific.
+        assert_eq!(narrow_sfrac16(SFRAC_SIGN), SFRAC16_SIGN);
+        assert_eq!(widen_sfrac16(SFRAC16_SIGN), SFRAC_SIGN);
+        assert_eq!(narrow_sfrac16(0), 0);
+        assert_eq!(widen_sfrac16(0), 0);
     }
 
     #[test]

@@ -17,11 +17,11 @@
 //!   P⟨8,0⟩ and sampled for P⟨16,1⟩ — proving the batched engine and
 //!   the scalar datapath implement the same multiplier bit for bit.
 //!   Both GEMM checks run under **every accumulator policy** (the
-//!   scale-windowed default — SIMD-eligible on narrow planes — the
-//!   forced portable scalar loop, and the forced-FastQuire fallback),
-//!   and the exhaustive P⟨8,0⟩ sweep additionally re-runs on
-//!   wide-forced planes, so narrow ≡ wide ≡ quire is proven against
-//!   the same oracle that validated the original kernel.
+//!   scale-windowed default — SIMD-eligible on narrow and mid
+//!   planes — the forced portable scalar loop, and the
+//!   forced-FastQuire fallback), and both sweeps additionally re-run
+//!   on wide-forced planes, so narrow/mid ≡ wide ≡ quire is proven
+//!   against the same oracle that validated the original kernel.
 
 use plam::nn::{
     encode_matrix, encode_matrix_wide, gemm_bt_with_policy, AccPolicy, ArithMode, EncodedTensor,
@@ -292,5 +292,17 @@ fn sweep_p16e1_gemm_plam_mac_matches_plam_mul() {
                 "case {case} ({policy:?}): {a:#x} ×̃ {b:#x}"
             );
         }
+        // Wide-forced planes of the same pair: the 3 B/element mid
+        // layout and the wide layout must be interchangeable bit for
+        // bit through the engine.
+        let xw = encode_matrix_wide(&mode, 1, 1, &[to_f32(fmt, a)]);
+        let ww = encode_matrix_wide(&mode, 1, 1, &[to_f32(fmt, b)]);
+        let mut y = [0f32; 1];
+        gemm_bt_with_policy(&mode, &xw, &ww, None, &mut y, AccPolicy::Auto);
+        assert_eq!(
+            y[0].to_bits(),
+            want.to_bits(),
+            "case {case} (wide planes): {a:#x} ×̃ {b:#x}"
+        );
     }
 }

@@ -1,8 +1,9 @@
 //! Property suite pinning the scale-windowed single-limb GEMM
 //! accumulator ([`plam::posit::WindowedAcc`], `AccPolicy::Auto` —
-//! which may take the AVX2 kernel on narrow planes) bit-identical to
-//! the forced portable scalar loop (`AccPolicy::ForcePortable`), the
-//! FastQuire kernel (`AccPolicy::ForceQuire`), and — for n ≤ 8
+//! which may take the AVX2/NEON kernels on narrow or mid planes)
+//! bit-identical to the forced portable scalar loop
+//! (`AccPolicy::ForcePortable`), the FastQuire kernel
+//! (`AccPolicy::ForceQuire`), and — for narrow and mid plane
 //! formats — the wide-forced plane encode, on adversarial inputs:
 //! extreme scale spreads (window-infeasible panels forcing the
 //! per-output fallback), dense zeros, NaR poisoning, and random mixes
@@ -32,10 +33,10 @@ fn all_posit_modes() -> Vec<ArithMode> {
 }
 
 /// Run one GEMM under every policy (Auto — SIMD-eligible on narrow
-/// planes — vs the forced portable scalar loop vs the quire fallback)
-/// and assert bitwise equality; n ≤ 8 formats additionally cross-check
-/// against wide-forced planes of the same data, so narrow ≡ wide ≡
-/// quire holds bit for bit.
+/// and mid planes — vs the forced portable scalar loop vs the quire
+/// fallback) and assert bitwise equality; narrow and mid formats
+/// additionally cross-check against wide-forced planes of the same
+/// data, so narrow/mid ≡ wide ≡ quire holds bit for bit.
 fn assert_policies_agree(
     mode: &ArithMode,
     m: usize,
@@ -62,7 +63,7 @@ fn assert_policies_agree(
             );
         }
     }
-    if xe.width() == PlaneWidth::Narrow {
+    if xe.width() != PlaneWidth::Wide {
         let xw = encode_matrix_wide(mode, m, k, x);
         let ww = encode_matrix_wide(mode, n, k, w);
         let mut wide = vec![0f32; m * n];
@@ -297,6 +298,44 @@ fn specials_dense_narrow_panels_fall_off_the_vector_path() {
             })
             .collect();
         assert_policies_agree(&mode, m, k, n, &x, &w, None, "specials-dense");
+    }
+}
+
+#[test]
+fn specials_dense_mid_panels_fall_off_the_vector_path() {
+    // Same adversarial shape as the narrow test above, on the
+    // 3 B/element mid planes of the 16-bit formats: the u16 SIMD plan
+    // must detect specials per chunk, fall back to the sentinel-checked
+    // scalar loop mid-row, and still match the portable / quire kernels
+    // and the wide-forced encode exactly.
+    for mode in [
+        ArithMode::posit_exact(PositFormat::P16E1),
+        ArithMode::posit_plam(PositFormat::P16E1),
+        ArithMode::posit_exact(PositFormat::P16E2),
+        ArithMode::posit_plam(PositFormat::P16E2),
+    ] {
+        let (m, k, n) = (4usize, 530usize, 11usize);
+        let mut rng = Rng::new(0x16BE);
+        let mut x: Vec<f32> = (0..m * k)
+            .map(|i| {
+                if (i / 64) % 2 == 0 && i % 3 != 0 {
+                    0.0
+                } else {
+                    rng.normal() as f32
+                }
+            })
+            .collect();
+        x[3 * k + 100] = f32::NAN; // output row 3 poisons via NaR
+        let w: Vec<f32> = (0..n * k)
+            .map(|i| {
+                if i % 5 == 0 {
+                    0.0
+                } else {
+                    rng.normal() as f32
+                }
+            })
+            .collect();
+        assert_policies_agree(&mode, m, k, n, &x, &w, None, "specials-dense-mid");
     }
 }
 
