@@ -14,6 +14,19 @@
 //! rate grid is fixed (fast mode shortens duration and connection
 //! count only) so series names stay stable for the baseline.
 //!
+//! Two sweeps run back to back:
+//!
+//! * the original grid against a `loop_shards = 1` server, keeping the
+//!   historical `serving open-loop …` series comparable across PRs;
+//! * a shard sweep (1/2/4 loop shards, fresh server each) exporting
+//!   `serving open-loop p50/p99 @500rps shards={n}` and `serving knee
+//!   period shards={n}`. The knee-period series feed the soft
+//!   4-shards-vs-1 scaling self-check in ci/bench_baseline.json, and a
+//!   self-check series missing from the results is a *hard* guard
+//!   failure — so the knee period is always recorded, falling back to
+//!   the achieved-rate period at the lowest offered rate when no rate
+//!   on the grid was sustained.
+//!
 //! Run: cargo bench --bench serving_latency
 
 use std::net::TcpStream;
@@ -110,17 +123,68 @@ fn open_loop(
     (lats, achieved)
 }
 
-fn main() {
-    let fast = std::env::var("PLAM_BENCH_FAST").is_ok();
-    let (conns, duration) = if fast {
-        (4usize, Duration::from_millis(400))
-    } else {
-        (8usize, Duration::from_secs(2))
-    };
-    // Fixed rate grid in both modes: series names feed the regression
-    // baseline and must not depend on PLAM_BENCH_FAST.
-    let rates: [u32; 4] = [250, 500, 1000, 2000];
+/// One per-rate row of a sweep plus the knee bookkeeping.
+struct SweepPoint {
+    rate: u32,
+    achieved: f64,
+    p50: Duration,
+    p95: Duration,
+    p99: Duration,
+}
 
+/// Drive every rate on the grid and report the per-rate percentiles
+/// plus the knee (highest offered rate with achieved ≥ 0.9× offered).
+fn rate_sweep(
+    addr: std::net::SocketAddr,
+    rates: &[u32],
+    conns: usize,
+    duration: Duration,
+) -> (Vec<SweepPoint>, Option<u32>) {
+    let mut points = Vec::with_capacity(rates.len());
+    let mut knee = None;
+    println!(
+        "{:>10} {:>12} {:>10} {:>10} {:>10}",
+        "offered", "achieved", "p50 µs", "p95 µs", "p99 µs"
+    );
+    for &rate in rates {
+        let (mut lats, achieved) = open_loop(addr, "m", rate, conns, duration);
+        lats.sort();
+        let (p50, p95, p99) = (
+            percentile(&lats, 0.50),
+            percentile(&lats, 0.95),
+            percentile(&lats, 0.99),
+        );
+        println!(
+            "{:>7}rps {:>9.1}rps {:>10} {:>10} {:>10}",
+            rate,
+            achieved,
+            p50.as_micros(),
+            p95.as_micros(),
+            p99.as_micros()
+        );
+        if achieved >= 0.9 * rate as f64 {
+            knee = Some(rate);
+        }
+        points.push(SweepPoint { rate, achieved, p50, p95, p99 });
+    }
+    (points, knee)
+}
+
+/// The knee as a period (ns per request, smaller = better). Always
+/// produces a value: when no rate on the grid was sustained, falls back
+/// to the achieved rate at the lowest offered rate so the self-check
+/// series is never missing from the results.
+fn knee_period(points: &[SweepPoint], knee: Option<u32>) -> Duration {
+    let rps = match knee {
+        Some(k) => k as f64,
+        None => points.first().map_or(1.0, |p| p.achieved).max(1.0),
+    };
+    Duration::from_nanos((1e9 / rps) as u64)
+}
+
+/// Fresh server for one sweep: same model, router, and worker count
+/// every time, only the loop-shard count varies.
+fn start_server(loop_shards: usize) -> plam::coordinator::server::ServerHandle {
     let mut rng = Rng::new(7);
     let model = Model::init(ModelKind::MlpIsolet, &mut rng);
     let mut router = Router::new();
@@ -132,14 +196,31 @@ fn main() {
             max_wait: Duration::from_millis(1),
         },
     );
-    let h = serve(
+    serve(
         router,
         &ServerConfig {
             workers: 2,
+            loop_shards,
             ..ServerConfig::default()
         },
     )
-    .unwrap();
+    .unwrap()
+}
+
+fn main() {
+    let fast = std::env::var("PLAM_BENCH_FAST").is_ok();
+    let (conns, duration) = if fast {
+        (4usize, Duration::from_millis(400))
+    } else {
+        (8usize, Duration::from_secs(2))
+    };
+    // Fixed rate grid in both modes: series names feed the regression
+    // baseline and must not depend on PLAM_BENCH_FAST.
+    let rates: [u32; 4] = [250, 500, 1000, 2000];
+
+    // The historical sweep is pinned to one loop shard so its series
+    // stay comparable with pre-shard baselines.
+    let h = start_server(1);
 
     let mut bench = Bench::new();
 
@@ -153,31 +234,11 @@ fn main() {
     drop(cl);
 
     println!("\nopen-loop sweep ({conns} connections, {duration:?} per rate):");
-    println!(
-        "{:>10} {:>12} {:>10} {:>10} {:>10}",
-        "offered", "achieved", "p50 µs", "p95 µs", "p99 µs"
-    );
-    let mut knee: Option<u32> = None;
-    for rate in rates {
-        let (mut lats, achieved) = open_loop(h.addr, "m", rate, conns, duration);
-        lats.sort();
-        let p50 = percentile(&lats, 0.50);
-        let p95 = percentile(&lats, 0.95);
-        let p99 = percentile(&lats, 0.99);
-        println!(
-            "{:>7}rps {:>9.1}rps {:>10} {:>10} {:>10}",
-            rate,
-            achieved,
-            p50.as_micros(),
-            p95.as_micros(),
-            p99.as_micros()
-        );
-        bench.record(&format!("serving open-loop p50 @{rate}rps"), p50);
-        bench.record(&format!("serving open-loop p95 @{rate}rps"), p95);
-        bench.record(&format!("serving open-loop p99 @{rate}rps"), p99);
-        if achieved >= 0.9 * rate as f64 {
-            knee = Some(rate);
-        }
+    let (points, knee) = rate_sweep(h.addr, &rates, conns, duration);
+    for p in &points {
+        bench.record(&format!("serving open-loop p50 @{}rps", p.rate), p.p50);
+        bench.record(&format!("serving open-loop p95 @{}rps", p.rate), p.p95);
+        bench.record(&format!("serving open-loop p99 @{}rps", p.rate), p.p99);
     }
     // The knee is exported as a *period* (ns per request at the highest
     // sustained rate) so that, like every other series, smaller = better.
@@ -195,6 +256,34 @@ fn main() {
     let m = &h.router().get("m").unwrap().metrics;
     println!("server metrics: {}", m.summary());
     h.shutdown();
+
+    // Shard sweep: same load, fresh server per loop-shard count. The
+    // grid starts where the single-shard knee typically sits so the
+    // scaling shows up as sustained rates, not just latency.
+    let shard_rates: [u32; 4] = [500, 1000, 2000, 4000];
+    for shards in [1usize, 2, 4] {
+        let h = start_server(shards);
+        println!("\nopen-loop shard sweep (shards={shards}, {conns} connections):");
+        let (points, knee) = rate_sweep(h.addr, &shard_rates, conns, duration);
+        let at500 = points.iter().find(|p| p.rate == 500).unwrap();
+        bench.record(&format!("serving open-loop p50 @500rps shards={shards}"), at500.p50);
+        bench.record(&format!("serving open-loop p99 @500rps shards={shards}"), at500.p99);
+        let period = knee_period(&points, knee);
+        match knee {
+            Some(k) => println!("shards={shards}: sustains {k} rps"),
+            None => println!(
+                "shards={shards}: no grid rate sustained; knee period falls back to \
+                 achieved rate at {} rps offered",
+                shard_rates[0]
+            ),
+        }
+        bench.record(&format!("serving knee period shards={shards}"), period);
+        println!(
+            "server metrics: {}",
+            h.router().get("m").unwrap().metrics.summary()
+        );
+        h.shutdown();
+    }
 
     bench.write_json("serving").expect("write BENCH_serving.json");
 }

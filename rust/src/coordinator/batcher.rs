@@ -8,7 +8,12 @@
 //! tests), and [`Batcher::submit`] enqueues with a completion callback
 //! and returns immediately — the event-loop front-end uses it to
 //! coalesce requests from many connections into one batch without ever
-//! blocking the loop. Submitted requests may carry a deadline: if it
+//! blocking the loop. Batchers are **global** under the sharded
+//! front-end: every loop shard submits into the same per-model queue,
+//! so batching coalesces work across shards, and each submission's
+//! callback captures its own shard's completion mailbox (see the shard
+//! ownership contract in [`super`]). Submitted requests may carry a
+//! deadline: if it
 //! passes while the request is still queued (a slow batch ahead of it),
 //! the request is answered with a timeout error instead of occupying
 //! batch capacity.

@@ -8,15 +8,152 @@
 //! requests on one connection may complete out of order (different
 //! models batch independently, batches finish whenever they finish),
 //! finished frames park in [`Conn::ready`] until every earlier sequence
-//! number has been promoted into the write buffer.
+//! number has been promoted into the write queue.
+//!
+//! Write path: promoted frames keep their boundaries in an [`OutQueue`]
+//! (frames are *moved*, never concatenated), and [`Conn::flush`] drains
+//! the whole backlog of a pipelined connection in one `writev(2)` call
+//! on unix — one syscall for N response frames instead of one write per
+//! flush of a copied buffer. A short write (kernel buffer full, or the
+//! injected `short_write` fault) leaves the queue mid-frame; the
+//! event loop keeps write interest and the next writable tick resumes
+//! from the exact byte where the socket stopped. Non-unix builds fall
+//! back to concatenating the remaining bytes into one plain `write`.
 
-use std::collections::BTreeMap;
-use std::io::{ErrorKind, Read, Write};
+use std::collections::{BTreeMap, VecDeque};
+use std::io::{ErrorKind, Write};
 use std::net::TcpStream;
 use std::time::Instant;
 
+#[cfg(unix)]
+use super::event_loop::sys;
 use super::wire::{Request, RequestParser};
 use crate::faults;
+
+/// Most frames handed to one `writev` call. Linux guarantees IOV_MAX
+/// >= 1024; 64 is far past the point of diminishing returns for
+/// response-sized frames and keeps the stack-allocated iovec array
+/// small. Deeper backlogs simply take ceil(n/64) syscalls.
+#[cfg(unix)]
+const MAX_IOV: usize = 64;
+
+/// Outgoing response frames not yet accepted by the socket, with frame
+/// boundaries preserved so a flush can hand the backlog to `writev` as
+/// an iovec array. `push` takes ownership of each frame (zero copy);
+/// `consume` advances the front cursor across however many frame
+/// boundaries a short write landed between.
+#[derive(Default)]
+pub(crate) struct OutQueue {
+    frames: VecDeque<Vec<u8>>,
+    /// Bytes of the front frame already accepted by the socket.
+    front_pos: usize,
+    /// Total unsent bytes across all frames.
+    pending: usize,
+}
+
+impl OutQueue {
+    /// Queue one finished frame. Empty frames are dropped (nothing to
+    /// write, and a zero-length iovec would waste a slot).
+    pub fn push(&mut self, frame: Vec<u8>) {
+        if frame.is_empty() {
+            return;
+        }
+        self.pending += frame.len();
+        self.frames.push_back(frame);
+    }
+
+    /// Unsent bytes across all queued frames.
+    pub fn pending(&self) -> usize {
+        self.pending
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending == 0
+    }
+
+    /// The unsent remainder of the front frame.
+    fn front_slice(&self) -> &[u8] {
+        &self.frames[0][self.front_pos..]
+    }
+
+    /// Mark `n` bytes as accepted by the socket, popping every frame
+    /// the cursor fully crosses (a vectored write can complete many
+    /// frames and stop in the middle of the next one).
+    pub fn consume(&mut self, mut n: usize) {
+        debug_assert!(n <= self.pending);
+        self.pending -= n;
+        while n > 0 {
+            let left = self.frames[0].len() - self.front_pos;
+            if n < left {
+                self.front_pos += n;
+                return;
+            }
+            n -= left;
+            self.frames.pop_front();
+            self.front_pos = 0;
+        }
+    }
+
+    /// Remaining slices in write order (front frame offset by the
+    /// cursor), capped at `max` entries.
+    fn slices(&self, max: usize) -> impl Iterator<Item = &[u8]> {
+        self.frames
+            .iter()
+            .enumerate()
+            .take(max)
+            .map(|(i, f)| if i == 0 { &f[self.front_pos..] } else { &f[..] })
+    }
+
+    /// Flat copy of every unsent byte (portable fallback + tests).
+    fn remaining_bytes(&self) -> Vec<u8> {
+        let mut v = Vec::with_capacity(self.pending);
+        for s in self.slices(usize::MAX) {
+            v.extend_from_slice(s);
+        }
+        v
+    }
+}
+
+/// One vectored write of the queue's backlog: `writev(2)` over up to
+/// [`MAX_IOV`] frame slices. Returns `(written, attempted)` so the
+/// caller can tell a genuinely short write (kernel buffer full — stop
+/// flushing) from a complete write of an iovec-capped batch (keep
+/// going: more frames remain past the cap).
+#[cfg(unix)]
+fn write_queue(stream: &TcpStream, out: &OutQueue) -> std::io::Result<(usize, usize)> {
+    use std::os::unix::io::AsRawFd;
+    let iovs: Vec<sys::iovec> = out
+        .slices(MAX_IOV)
+        .map(|s| sys::iovec {
+            iov_base: s.as_ptr() as *mut std::os::raw::c_void,
+            iov_len: s.len(),
+        })
+        .collect();
+    let attempted: usize = iovs.iter().map(|v| v.iov_len).sum();
+    // Safety: each iovec points into a frame owned by `out`, which
+    // outlives the call; writev only reads the buffers.
+    let n = unsafe {
+        sys::writev(
+            stream.as_raw_fd(),
+            iovs.as_ptr(),
+            iovs.len() as std::os::raw::c_int,
+        )
+    };
+    if n < 0 {
+        Err(std::io::Error::last_os_error())
+    } else {
+        Ok((n as usize, attempted))
+    }
+}
+
+/// Portable concatenating fallback: one `write` of the flattened
+/// backlog. Costs a copy per flush, but stays a single syscall and
+/// resumes short writes through the same `consume` cursor.
+#[cfg(not(unix))]
+fn write_queue(stream: &TcpStream, out: &OutQueue) -> std::io::Result<(usize, usize)> {
+    let bytes = out.remaining_bytes();
+    (&*stream).write(&bytes).map(|n| (n, bytes.len()))
+}
 
 /// What one readiness-driven read pass produced.
 pub(crate) struct ReadOutcome {
@@ -28,7 +165,7 @@ pub(crate) struct ReadOutcome {
     pub eof: bool,
 }
 
-/// One nonblocking connection owned by the event loop.
+/// One nonblocking connection owned by an event-loop shard.
 pub(crate) struct Conn {
     pub stream: TcpStream,
     /// Generation stamp: completions carry (slot, gen) so a response
@@ -36,12 +173,11 @@ pub(crate) struct Conn {
     /// reused its slot.
     pub gen: u64,
     parser: RequestParser,
-    /// Outgoing bytes not yet accepted by the socket.
-    out: Vec<u8>,
-    out_pos: usize,
+    /// Response frames not yet accepted by the socket.
+    out: OutQueue,
     /// Next request sequence number to assign.
     next_seq: u64,
-    /// Next sequence number eligible to enter the write buffer.
+    /// Next sequence number eligible to enter the write queue.
     next_write: u64,
     /// Finished frames waiting for earlier responses (seq → frame).
     ready: BTreeMap<u64, Vec<u8>>,
@@ -63,8 +199,7 @@ impl Conn {
             stream,
             gen,
             parser: RequestParser::new(),
-            out: Vec::new(),
-            out_pos: 0,
+            out: OutQueue::default(),
             next_seq: 0,
             next_write: 0,
             ready: BTreeMap::new(),
@@ -126,42 +261,56 @@ impl Conn {
     }
 
     /// Deliver the finished frame for `seq`, promoting every in-order
-    /// frame into the write buffer.
+    /// frame into the write queue (moved, not copied — the queue keeps
+    /// frame boundaries for the vectored flush).
     pub fn push_response(&mut self, seq: u64, frame: Vec<u8>) {
         self.ready.insert(seq, frame);
         while let Some(f) = self.ready.remove(&self.next_write) {
-            self.out.extend_from_slice(&f);
+            self.out.push(f);
             self.next_write += 1;
         }
     }
 
     /// True when buffered response bytes are waiting on the socket.
     pub fn wants_write(&self) -> bool {
-        self.out_pos < self.out.len()
+        !self.out.is_empty()
     }
 
-    /// Write buffered bytes until `WouldBlock` or empty.
+    /// Drain the write queue until `WouldBlock` or empty: every queued
+    /// response frame goes to the socket in one `writev` per loop turn
+    /// (portable fallback: one concatenated `write`).
     pub fn flush(&mut self) {
-        while self.out_pos < self.out.len() {
+        while !self.out.is_empty() {
             // Fault seam: the socket "accepts" one byte of the pending
-            // frame and stalls. `wants_write` stays true, so the event
-            // loop keeps write interest and resumes the flush on the
-            // next writable tick — no bytes lost, no frame torn.
-            let cap = if faults::fire(faults::Site::ShortWrite) {
-                self.out_pos + 1
-            } else {
-                self.out.len()
-            };
-            let short = cap < self.out.len();
-            match self.stream.write(&self.out[self.out_pos..cap]) {
-                Ok(0) => {
+            // backlog and stalls. `wants_write` stays true, so the
+            // event loop keeps write interest and resumes the flush on
+            // the next writable tick — no bytes lost, no frame torn.
+            // Firing on every tick walks the cursor across every frame
+            // boundary of a multi-frame iovec, one byte at a time.
+            if faults::fire(faults::Site::ShortWrite) {
+                match (&self.stream).write(&self.out.front_slice()[..1]) {
+                    Ok(0) => self.dead = true,
+                    Ok(n) => {
+                        self.out.consume(n);
+                        self.last_activity = Instant::now();
+                    }
+                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => {}
+                    Err(_) => self.dead = true,
+                }
+                break;
+            }
+            match write_queue(&self.stream, &self.out) {
+                Ok((0, _)) => {
                     self.dead = true;
                     break;
                 }
-                Ok(n) => {
-                    self.out_pos += n;
+                Ok((n, attempted)) => {
+                    self.out.consume(n);
                     self.last_activity = Instant::now();
-                    if short {
+                    if n < attempted {
+                        // Kernel buffer full mid-backlog: stop here,
+                        // the writable tick resumes from the cursor.
                         break;
                     }
                 }
@@ -172,10 +321,6 @@ impl Conn {
                     break;
                 }
             }
-        }
-        if self.out_pos == self.out.len() {
-            self.out.clear();
-            self.out_pos = 0;
         }
     }
 
@@ -206,6 +351,70 @@ mod tests {
         let (server, _) = l.accept().unwrap();
         server.set_nonblocking(true).unwrap();
         (server, client)
+    }
+
+    #[test]
+    fn out_queue_consume_resumes_at_every_split_boundary() {
+        // Three frames of different lengths; consuming the backlog in
+        // two chunks split at EVERY byte position must always leave
+        // exactly the flat suffix — including splits landing exactly on
+        // a frame boundary, where the cursor pops one frame and the
+        // next slice starts at offset 0.
+        let frames: [&[u8]; 3] = [b"aaaaa", b"bb", b"cccccccc"];
+        let flat: Vec<u8> = frames.concat();
+        for split in 0..=flat.len() {
+            let mut q = OutQueue::default();
+            for f in frames {
+                q.push(f.to_vec());
+            }
+            assert_eq!(q.pending(), flat.len());
+            q.consume(split);
+            assert_eq!(q.pending(), flat.len() - split);
+            assert_eq!(q.remaining_bytes(), flat[split..], "split at {split}");
+            q.consume(flat.len() - split);
+            assert!(q.is_empty());
+            assert_eq!(q.remaining_bytes(), b"");
+        }
+    }
+
+    #[test]
+    fn out_queue_byte_at_a_time_walks_all_boundaries() {
+        let mut q = OutQueue::default();
+        q.push(vec![1, 2, 3]);
+        q.push(vec![4]);
+        q.push(Vec::new()); // dropped: nothing to write
+        q.push(vec![5, 6]);
+        let mut seen = Vec::new();
+        while !q.is_empty() {
+            seen.push(q.front_slice()[0]);
+            q.consume(1);
+        }
+        assert_eq!(seen, vec![1, 2, 3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn multi_frame_backlog_flushes_vectored_in_one_pass() {
+        // Queue several frames before the first flush: the vectored
+        // path must deliver all of them whole and in order.
+        let (server, client) = pair();
+        let mut c = Conn::new(server, 1);
+        let enc = |v: f32| {
+            let mut f = Vec::new();
+            wire::write_ok(&mut f, &[v]).unwrap();
+            f
+        };
+        for i in 0..5 {
+            let s = c.alloc_seq();
+            c.push_response(s, enc(i as f32));
+        }
+        assert!(c.wants_write());
+        c.flush();
+        assert!(!c.wants_write(), "loopback buffer fits 5 small frames");
+        let mut r = client;
+        for want in 0..5 {
+            let got = wire::read_response(&mut r).unwrap().unwrap();
+            assert_eq!(got, vec![want as f32]);
+        }
     }
 
     #[test]

@@ -1,8 +1,10 @@
 //! Service metrics: request counters + latency reservoir.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
+
+use super::event_loop::LoopStats;
 
 /// Lock-light metrics registry shared across worker threads.
 #[derive(Default)]
@@ -48,6 +50,11 @@ pub struct Metrics {
     pub plane_cache_evictions: AtomicU64,
     /// Process-wide plane-cache resident payload bytes.
     pub plane_cache_bytes: AtomicU64,
+    /// Per-shard event-loop counters (index = shard id), installed by
+    /// `serve()` so the summary can render the `shards[n]` breakdown.
+    /// Empty under the threaded front-end. Like the pool gauges, these
+    /// are front-end-global, not per-model.
+    shard_stats: Mutex<Vec<Arc<LoopStats>>>,
     /// Latency samples (µs), bounded reservoir.
     latencies_us: Mutex<Vec<u64>>,
     /// Monotone tick driving reservoir slot selection once full. The
@@ -124,6 +131,13 @@ impl Metrics {
         self.plane_cache_bytes.store(bytes, Ordering::Relaxed);
     }
 
+    /// Install the per-shard event-loop counters rendered by
+    /// [`Metrics::summary`]. An empty vec clears the fragment (threaded
+    /// front-end).
+    pub fn set_shard_stats(&self, stats: Vec<Arc<LoopStats>>) {
+        *self.shard_stats.lock().unwrap() = stats;
+    }
+
     /// Peak pool utilization in `[0, 1]` (busy workers / pool size), or
     /// 0 when no pool serves this batcher.
     pub fn pool_utilization(&self) -> f64 {
@@ -192,6 +206,30 @@ impl Metrics {
                 self.plane_cache_bytes.load(Ordering::Relaxed),
             ));
         }
+        let shards = self.shard_stats.lock().unwrap();
+        if !shards.is_empty() {
+            let join = |f: &dyn Fn(&LoopStats) -> u64| {
+                shards
+                    .iter()
+                    .map(|st| f(st).to_string())
+                    .collect::<Vec<_>>()
+                    .join("/")
+            };
+            s.push_str(&format!(
+                " shards[{}] conns={} shed={} resets={}",
+                shards.len(),
+                join(&|st| st.accepted.load(Ordering::Relaxed)),
+                shards
+                    .iter()
+                    .map(|st| st.shed_overload.load(Ordering::Relaxed))
+                    .sum::<u64>(),
+                shards
+                    .iter()
+                    .map(|st| st.conn_resets.load(Ordering::Relaxed))
+                    .sum::<u64>(),
+            ));
+        }
+        drop(shards);
         if let Some(frag) = crate::faults::summary_fragment() {
             s.push(' ');
             s.push_str(&frag);
@@ -299,6 +337,26 @@ mod tests {
             s.contains("plane_cache[hits=10 misses=4 evictions=1 bytes=123456]"),
             "{s}"
         );
+    }
+
+    #[test]
+    fn shard_stats_surface_in_summary() {
+        let m = Metrics::new();
+        assert!(
+            !m.summary().contains("shards["),
+            "threaded front-end keeps the summary bare"
+        );
+        let shards: Vec<Arc<LoopStats>> = (0..3).map(|_| Arc::new(LoopStats::default())).collect();
+        shards[0].accepted.store(5, Ordering::Relaxed);
+        shards[1].accepted.store(2, Ordering::Relaxed);
+        shards[1].shed_overload.store(1, Ordering::Relaxed);
+        shards[2].accepted.store(4, Ordering::Relaxed);
+        shards[2].conn_resets.store(2, Ordering::Relaxed);
+        m.set_shard_stats(shards);
+        let s = m.summary();
+        assert!(s.contains("shards[3] conns=5/2/4 shed=1 resets=2"), "{s}");
+        m.set_shard_stats(Vec::new());
+        assert!(!m.summary().contains("shards["), "empty vec clears it");
     }
 
     #[test]

@@ -21,13 +21,30 @@
 //! a slot, then get a clean "server overloaded" error frame.
 //!
 //! Front-ends: the default [`server::Frontend::EventLoop`] multiplexes
-//! every connection on one readiness-driven thread (`event_loop` +
-//! `conn` modules: nonblocking sockets behind a poll(2) shim,
-//! incremental frame parsing, in-order response assembly, parked
-//! admission with deadline shedding, idle-connection timeouts), so
-//! connection count is decoupled from thread count. The original
-//! thread-per-connection front-end remains as
-//! [`server::Frontend::Threaded`].
+//! connections over `ServerConfig::loop_shards` readiness-driven
+//! threads (`event_loop` + `conn` modules: nonblocking sockets behind a
+//! poll(2) shim, incremental frame parsing, in-order response assembly
+//! with a vectored `writev` flush, parked admission with deadline
+//! shedding, idle-connection timeouts), so connection count is
+//! decoupled from thread count. The original thread-per-connection
+//! front-end remains as [`server::Frontend::Threaded`].
+//!
+//! # Shard ownership contract
+//!
+//! With `loop_shards` ≥ 2 a dedicated acceptor fans connections out to
+//! the least-loaded shard, and from that moment the connection is
+//! **shard-local**: its parser state, response queue, admission
+//! parking, batcher submission, completion drain, and flush all happen
+//! on the owning shard's thread. A batcher callback captures exactly
+//! one shard's completion mailbox, so a finished request can only ever
+//! wake the loop that owns its connection. What stays **global**:
+//! per-model [`Batcher`]s (batching coalesces work from every shard),
+//! the [`Admission`] valve, the worker pool, and [`Metrics`] (which
+//! renders a per-shard `shards[n]` breakdown). One semantic note:
+//! parked-admission FIFO order is per shard — arrival-order dispatch
+//! holds within a shard, not across shards. `loop_shards = 1` is the
+//! identity point: the single shard polls the listener itself (no
+//! acceptor thread), byte-for-byte the pre-shard front-end.
 //!
 //! # Failure containment
 //!

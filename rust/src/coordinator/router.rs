@@ -66,6 +66,15 @@ impl Router {
         }
     }
 
+    /// Hand every registered batcher's metrics the per-shard event-loop
+    /// counters, so `Metrics::summary` can render the `shards[n]` line.
+    /// An empty vec (threaded front-end) clears the fragment.
+    pub fn set_shard_stats(&self, stats: Vec<Arc<crate::coordinator::LoopStats>>) {
+        for b in self.routes.values() {
+            b.metrics.set_shard_stats(stats.clone());
+        }
+    }
+
     /// Shut down all batchers.
     pub fn shutdown(&self) {
         for b in self.routes.values() {

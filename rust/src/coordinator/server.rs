@@ -3,22 +3,26 @@
 //! Two front-ends share the router/batcher stack behind one
 //! [`ServerConfig`]:
 //!
-//! * [`Frontend::EventLoop`] (default) — a readiness-driven event loop
-//!   over nonblocking sockets (see [`super::event_loop`]): one thread
-//!   multiplexes every connection, coalesces requests from all of them
-//!   into the per-model batchers, sheds overload at the admission
-//!   deadline without blocking, and times out stalled (slow-loris)
-//!   connections. This is the "millions of users" front-end: connection
-//!   count no longer implies thread count.
+//! * [`Frontend::EventLoop`] (default) — `loop_shards` readiness-driven
+//!   event loops over nonblocking sockets (see [`super::event_loop`]):
+//!   each shard thread multiplexes its own connections end to end,
+//!   while a dedicated acceptor (when shards ≥ 2) fans new connections
+//!   out to the least-loaded shard. Requests from every shard coalesce
+//!   into the global per-model batchers, overload is shed at the
+//!   admission deadline without blocking, and stalled (slow-loris)
+//!   connections time out. This is the "millions of users" front-end:
+//!   connection count no longer implies thread count, and front-end
+//!   CPU scales with shard count.
 //! * [`Frontend::Threaded`] — the original thread-per-connection
 //!   front-end (std::net + blocking IO), kept as the simple reference
 //!   implementation and for platforms where the poll shim's fallback
 //!   path is undesirable.
 //!
 //! Scaling controls ([`ServerConfig`]): `workers` sizes one shared
-//! [`WorkerPool`] that every batcher shards its GEMMs across, and
-//! `max_inflight` is the admission valve — over-limit requests wait up
-//! to `admission_timeout` for a slot (parked in the event loop, blocked
+//! [`WorkerPool`] that every batcher shards its GEMMs across,
+//! `loop_shards` sizes the event-loop front-end, and `max_inflight` is
+//! the admission valve — over-limit requests wait up to
+//! `admission_timeout` for a slot (parked in the event loop, blocked
 //! in the threaded front-end) and are then rejected with a clean
 //! "server overloaded" error response instead of piling onto the batch
 //! queues.
@@ -26,12 +30,12 @@
 use std::io;
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use super::event_loop::{self, LoopStats, Waker};
+use super::event_loop::{self, LoopStats, Shard};
 use super::router::Router;
 use super::wire;
 use crate::nn::pool::WorkerPool;
@@ -39,13 +43,25 @@ use crate::nn::pool::WorkerPool;
 /// Which front-end accepts and parses connections.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum Frontend {
-    /// Readiness-driven event loop over nonblocking sockets (default):
-    /// one thread, any number of connections, non-blocking admission
-    /// with deadline shedding.
+    /// Readiness-driven event loops over nonblocking sockets (default):
+    /// `loop_shards` threads, any number of connections, non-blocking
+    /// admission with deadline shedding.
     #[default]
     EventLoop,
     /// Thread-per-connection with blocking IO (the original front-end).
     Threaded,
+}
+
+/// Default event-loop shard count: the `PLAM_LOOP_SHARDS` env override
+/// when set (lets CI sweep every existing test unmodified at a given
+/// shard count), else 1 — the pre-shard front-end. The CLI picks its
+/// own default (`min(4, cores)`); library users opt in explicitly.
+fn default_loop_shards() -> usize {
+    std::env::var("PLAM_LOOP_SHARDS")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(1)
 }
 
 /// Server configuration.
@@ -65,6 +81,13 @@ pub struct ServerConfig {
     pub admission_timeout: Duration,
     /// Which front-end to run.
     pub frontend: Frontend,
+    /// Event-loop shard count (ignored by the threaded front-end).
+    /// `1` = the single-loop front-end, listener polled in-loop; ≥ 2 =
+    /// a dedicated acceptor fans connections out across this many
+    /// independent loops. Defaults to 1, overridable via the
+    /// `PLAM_LOOP_SHARDS` env var; `plam serve` defaults to
+    /// `min(4, cores)`.
+    pub loop_shards: usize,
     /// Optional per-request deadline covering queue wait + execution
     /// start: a request still waiting in the batch queue when it
     /// expires gets a timeout error. `None` disables. (Event-loop
@@ -85,6 +108,7 @@ impl Default for ServerConfig {
             max_inflight: 0,
             admission_timeout: Duration::from_secs(10),
             frontend: Frontend::default(),
+            loop_shards: default_loop_shards(),
             request_timeout: None,
             idle_timeout: Duration::from_secs(30),
         }
@@ -102,6 +126,12 @@ pub struct Admission {
     peak: AtomicU64,
     rejected: AtomicU64,
     abandoned: AtomicU64,
+    /// Called after every slot release (outside the inflight lock).
+    /// The sharded front-end installs a hook that nudges shards with
+    /// parked requests, so a freed slot dispatches parked work
+    /// immediately instead of waiting for the owning loop's next poll
+    /// tick. Unset (a no-op) for shards = 1 and the threaded front-end.
+    release_hook: OnceLock<Box<dyn Fn() + Send + Sync>>,
 }
 
 impl Admission {
@@ -114,7 +144,13 @@ impl Admission {
             peak: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
             abandoned: AtomicU64::new(0),
+            release_hook: OnceLock::new(),
         }
+    }
+
+    /// Install the slot-freed notification hook (once, at serve time).
+    pub(crate) fn set_release_hook(&self, f: impl Fn() + Send + Sync + 'static) {
+        let _ = self.release_hook.set(Box::new(f));
     }
 
     /// Acquire an inflight slot, waiting up to the admission timeout.
@@ -219,6 +255,9 @@ impl Admission {
         *n -= 1;
         drop(n);
         self.freed.notify_one();
+        if let Some(hook) = self.release_hook.get() {
+            hook();
+        }
     }
 }
 
@@ -265,27 +304,30 @@ pub struct ServerHandle {
     /// The actually bound address (resolves port 0).
     pub addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
-    accept_thread: Option<std::thread::JoinHandle<()>>,
+    /// Event-loop shard threads plus the acceptor (sharded mode), or
+    /// the single threaded-front-end acceptor.
+    frontend_threads: Vec<std::thread::JoinHandle<()>>,
     router: Arc<Router>,
     pool: Option<Arc<WorkerPool>>,
     admission: Arc<Admission>,
-    waker: Option<Arc<Waker>>,
-    loop_stats: Option<Arc<LoopStats>>,
+    /// Cross-thread shard faces; empty under the threaded front-end.
+    shards: Vec<Arc<Shard>>,
 }
 
 impl ServerHandle {
-    /// Request shutdown and join the front-end thread.
+    /// Request shutdown and join the front-end threads.
     pub fn shutdown(mut self) {
         self.stop.store(true, Ordering::SeqCst);
-        match &self.waker {
-            // Event loop: wake poll() directly.
-            Some(w) => w.wake(),
-            // Threaded: poke the acceptor loose from accept().
-            None => {
-                let _ = TcpStream::connect(self.addr);
-            }
+        // Event loops: wake each shard's poll() directly.
+        for s in &self.shards {
+            s.mailbox.wake();
         }
-        if let Some(h) = self.accept_thread.take() {
+        // A blocking acceptor (threaded front-end, or sharded fan-out)
+        // needs a connection poke to fall out of accept().
+        if self.shards.len() != 1 {
+            let _ = TcpStream::connect(self.addr);
+        }
+        for h in self.frontend_threads.drain(..) {
             let _ = h.join();
         }
         self.router.shutdown();
@@ -309,10 +351,26 @@ impl ServerHandle {
         &self.admission
     }
 
-    /// Event-loop counters (connections accepted/closed, idle sheds…);
-    /// `None` under the threaded front-end.
-    pub fn loop_stats(&self) -> Option<&Arc<LoopStats>> {
-        self.loop_stats.as_ref()
+    /// Event-loop counters summed across shards (connections
+    /// accepted/closed, idle sheds…); `None` under the threaded
+    /// front-end. The returned snapshot is freshly aggregated — hold it
+    /// rather than re-calling in a tight loop.
+    pub fn loop_stats(&self) -> Option<Arc<LoopStats>> {
+        if self.shards.is_empty() {
+            return None;
+        }
+        let agg = LoopStats::default();
+        for s in &self.shards {
+            agg.absorb(&s.stats);
+        }
+        Some(Arc::new(agg))
+    }
+
+    /// Per-shard event-loop counters (empty under the threaded
+    /// front-end). Index = shard id, matching the `shards[n]` line in
+    /// `Metrics::summary`.
+    pub fn shard_stats(&self) -> Vec<Arc<LoopStats>> {
+        self.shards.iter().map(|s| s.stats.clone()).collect()
     }
 }
 
@@ -328,7 +386,7 @@ pub fn serve(router: Router, cfg: &ServerConfig) -> Result<ServerHandle> {
     let admission = Arc::new(Admission::new(cfg.max_inflight, cfg.admission_timeout));
     let router = Arc::new(router);
 
-    let (accept_thread, waker, loop_stats) = match cfg.frontend {
+    let (frontend_threads, shards) = match cfg.frontend {
         Frontend::EventLoop => {
             let handle = event_loop::spawn(
                 listener,
@@ -337,24 +395,41 @@ pub fn serve(router: Router, cfg: &ServerConfig) -> Result<ServerHandle> {
                 stop.clone(),
                 cfg,
             )?;
-            (handle.thread, Some(handle.waker), Some(handle.stats))
+            (handle.threads, handle.shards)
         }
         Frontend::Threaded => {
             let thread =
                 spawn_threaded_acceptor(listener, router.clone(), admission.clone(), stop.clone());
-            (thread, None, None)
+            (vec![thread], Vec::new())
         }
     };
+
+    // Per-shard counters surface in every model's `Metrics::summary`.
+    router.set_shard_stats(shards.iter().map(|s| s.stats.clone()).collect());
+
+    // Sharded mode only: a freed admission slot nudges shards holding
+    // parked requests so dispatch doesn't wait for their next poll
+    // tick. With one shard this is skipped — the single loop already
+    // re-checks parked work every tick, exactly the pre-shard behavior.
+    if shards.len() > 1 {
+        let hook_shards = shards.clone();
+        admission.set_release_hook(move || {
+            for s in &hook_shards {
+                if s.parked_hint.load(Ordering::Relaxed) > 0 {
+                    s.mailbox.wake();
+                }
+            }
+        });
+    }
 
     Ok(ServerHandle {
         addr,
         stop,
-        accept_thread: Some(accept_thread),
+        frontend_threads,
         router,
         pool,
         admission,
-        waker,
-        loop_stats,
+        shards,
     })
 }
 
@@ -573,6 +648,59 @@ mod tests {
             m.pool_workers.load(std::sync::atomic::Ordering::Relaxed),
             2,
             "batcher must export the pool gauges"
+        );
+        h.shutdown();
+    }
+
+    #[test]
+    fn sharded_frontend_round_trips_and_reports_per_shard() {
+        let h = serve(
+            test_router(),
+            &ServerConfig {
+                loop_shards: 3,
+                ..ServerConfig::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(h.shard_stats().len(), 3);
+        let addr = h.addr;
+        let mut joins = vec![];
+        for _ in 0..6 {
+            joins.push(std::thread::spawn(move || {
+                let mut c = Client::connect(addr).unwrap();
+                for _ in 0..4 {
+                    assert_eq!(c.infer("isolet", &vec![0.1; 617]).unwrap().len(), 26);
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        let agg = h.loop_stats().expect("event-loop front-end has stats");
+        assert_eq!(agg.accepted.load(Ordering::Relaxed), 6);
+        let per_shard: u64 = h
+            .shard_stats()
+            .iter()
+            .map(|s| s.accepted.load(Ordering::Relaxed))
+            .sum();
+        assert_eq!(per_shard, 6, "aggregate equals the per-shard sum");
+        // Least-connections fan-out with 6 concurrent conns over 3
+        // shards: no shard can have taken all of them... unless the
+        // clients connected strictly serially, so only assert spread
+        // when more than one shard was touched at all — the hard
+        // balance guarantees are covered by the unit test on the
+        // fan-out choice. What MUST hold: per-shard counters surface
+        // in the metrics summary.
+        let m = &h.router().get("isolet").unwrap().metrics;
+        let summary = m.summary();
+        assert!(
+            summary.contains("shards[3]"),
+            "per-shard counters missing from summary: {summary}"
+        );
+        assert_eq!(
+            m.completed.load(std::sync::atomic::Ordering::Relaxed),
+            24,
+            "global batcher served every shard's requests"
         );
         h.shutdown();
     }

@@ -16,7 +16,7 @@
 //! | `worker_panic`  | GEMM shard start in the worker pool                | pool catches per task; batcher → error frames |
 //! | `backend_error` | `InferenceBackend::infer_batch_pooled`             | batcher retry-alone → per-request errors     |
 //! | `callback_drop` | batcher reply dispatch                             | reply drop-guard answers an error frame      |
-//! | `short_write`   | connection flush (socket accepts 1 byte)           | write-interest re-poll resumes the flush     |
+//! | `short_write`   | vectored connection flush (caps it at 1 byte)      | write-interest re-poll resumes the flush     |
 //! | `spurious_wake` | event-loop readable tick (read skipped once)       | level-triggered poll re-reports next tick    |
 //! | `conn_reset`    | event-loop readable tick (connection torn down)    | loop reaps the slot; peers unaffected        |
 //! | `cache_evict`   | plane-cache encode (full eviction storm)           | misses re-encode; results stay bit-exact     |
@@ -78,7 +78,9 @@ pub enum Site {
     BackendError,
     /// The batcher "loses" a reply instead of dispatching it.
     CallbackDrop,
-    /// The socket accepts a single byte of a response flush.
+    /// A response flush delivers a single byte instead of the whole
+    /// vectored (`writev`) backlog; the next writable wakeup resumes
+    /// from the exact byte offset, across frame boundaries.
     ShortWrite,
     /// A readable event is reported but the read is skipped this tick.
     SpuriousWake,

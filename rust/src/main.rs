@@ -48,9 +48,10 @@ USAGE: plam <command> [flags]
 
 COMMANDS:
   serve      [--addr HOST:PORT] [--workers N] [--max-inflight N]
-             [--frontend event-loop|threaded] [--request-timeout-ms N]
-             [--idle-timeout-ms N] [--admission-timeout-ms N]
-             [--format-plan SPEC] [--fault-plan SPEC]
+             [--frontend event-loop|threaded] [--loop-shards N]
+             [--request-timeout-ms N] [--idle-timeout-ms N]
+             [--admission-timeout-ms N] [--format-plan SPEC]
+             [--fault-plan SPEC]
              [--artifact PATH --batch N --in N --out N]
              Start the batched inference server. Registers the Table I
              models in float32 / posit<16,1> / posit<16,1>+PLAM modes;
@@ -64,8 +65,12 @@ COMMANDS:
              machine's parallelism; 0 disables it); --max-inflight is
              the admission-control bound (default 256, 0 = unlimited).
              --frontend picks the connection front-end: 'event-loop'
-             (default; one readiness-driven thread multiplexes every
+             (default; readiness-driven loops multiplex every
              connection) or 'threaded' (one thread per connection).
+             --loop-shards sizes the event-loop front-end (default
+             min(4, cores)): 1 = a single loop owning the listener,
+             N>=2 = a dedicated acceptor fanning connections out to N
+             independent loops (least-connections, round-robin ties).
              --request-timeout-ms bounds a request's batch-queue wait
              (0 = none, default 0; event-loop only); --idle-timeout-ms
              sheds silent idle connections (default 30000);
@@ -265,6 +270,20 @@ fn cmd_serve(args: &[String]) -> i32 {
             return 2;
         }
     };
+    // Event-loop shard count: min(4, cores) spreads front-end CPU
+    // without oversubscribing small machines; 1 is the single-loop
+    // front-end.
+    let default_shards = default_workers.clamp(1, 4);
+    let loop_shards: usize = match flag_value(args, "--loop-shards") {
+        None => default_shards,
+        Some(v) => match v.parse() {
+            Ok(n) if n >= 1 => n,
+            _ => {
+                eprintln!("bad --loop-shards '{v}' (expected an integer >= 1)");
+                return 2;
+            }
+        },
+    };
     let ms_flag = |flag: &str, default: u64| -> u64 {
         flag_value(args, flag)
             .and_then(|v| v.parse().ok())
@@ -288,14 +307,15 @@ fn cmd_serve(args: &[String]) -> i32 {
             max_inflight,
             admission_timeout,
             frontend,
+            loop_shards,
             request_timeout,
             idle_timeout,
         },
     ) {
         Ok(h) => {
             println!(
-                "plam server listening on {} (frontend={frontend:?}, workers={workers}, \
-                 max_inflight={max_inflight})",
+                "plam server listening on {} (frontend={frontend:?}, loop_shards={loop_shards}, \
+                 workers={workers}, max_inflight={max_inflight})",
                 h.addr
             );
             loop {

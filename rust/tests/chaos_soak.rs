@@ -26,6 +26,12 @@
 //! job runs three fixed seeds) and falls back to a default that fires
 //! every site. Schedules should use `every:N` so firing is guaranteed
 //! regardless of timing.
+//!
+//! The soak runs against the sharded front-end: event-loop shard count
+//! defaults to 2 and can be pinned via `PLAM_STRESS_SHARDS`, so every
+//! fault site — including short writes on the vectored flush and
+//! connection resets reaped by the owning shard — is exercised with the
+//! acceptor fanning connections out across loops.
 
 use std::io::ErrorKind;
 use std::net::{SocketAddr, TcpStream};
@@ -57,6 +63,14 @@ const TRACKED: [Site; 4] = [
     Site::CallbackDrop,
     Site::ConnReset,
 ];
+
+fn stress_shards() -> usize {
+    std::env::var("PLAM_STRESS_SHARDS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(2)
+}
 
 /// Fault plans are process-global: tests in this binary serialize.
 static SERIAL: Mutex<()> = Mutex::new(());
@@ -239,15 +253,18 @@ fn chaos_soak_contains_every_injected_fault() {
     router.register("chaos-a", Arc::new(NnBackend::new(model_a, mode_a)), cfg);
     router.register("chaos-b", Arc::new(NnBackend::new(model_b, mode_b)), cfg);
 
+    let loop_shards = stress_shards();
     let h = serve(
         router,
         &ServerConfig {
             workers: 4,
             max_inflight: 256,
+            loop_shards,
             ..ServerConfig::default()
         },
     )
     .unwrap();
+    assert_eq!(h.shard_stats().len(), loop_shards);
     let addr = h.addr;
 
     let mut joins = vec![];
@@ -339,6 +356,24 @@ fn chaos_soak_contains_every_injected_fault() {
             assert!(stats.conn_resets.load(Ordering::Relaxed) >= 1);
         }
     }
+    // Shard accounting stays consistent under faults: every connection
+    // (including reconnects after injected resets) was owned by exactly
+    // one shard, so the per-shard counters sum to at least the client
+    // count and match the aggregated view.
+    let accepted_total: u64 = h
+        .shard_stats()
+        .iter()
+        .map(|s| s.accepted.load(Ordering::Relaxed))
+        .sum();
+    assert!(
+        accepted_total >= CLIENTS as u64,
+        "shards accepted {accepted_total} connections for {CLIENTS} clients"
+    );
+    assert_eq!(
+        accepted_total,
+        h.loop_stats().unwrap().accepted.load(Ordering::Relaxed),
+        "aggregated loop stats disagree with per-shard counters"
+    );
 
     // The server drained: no stuck admissions, no stuck pool shards.
     assert_eq!(h.admission().inflight(), 0, "admission valve not drained");

@@ -9,12 +9,17 @@
 //! matter how requests are batched together or how the batch is
 //! sharded across pool workers, every response must equal the
 //! sequential reference to the last bit. Worker count defaults to 8
-//! and can be pinned via `PLAM_STRESS_WORKERS` (CI runs 2 and 4).
+//! and can be pinned via `PLAM_STRESS_WORKERS` (CI runs 2 and 4);
+//! event-loop shard count defaults to 2 and can be pinned via
+//! `PLAM_STRESS_SHARDS` (CI runs 1 and 4 — the 4×4 shards×workers cell
+//! is the acceptance bar for sharded bit-exactness).
 //!
 //! The server comes up with the default front-end — since PR 6 that is
 //! the readiness-driven event loop (`coordinator::event_loop`), so this
-//! harness doubles as the conformance bar for the single-threaded
-//! multiplexed I/O path: 64 blocking clients against one loop thread.
+//! harness doubles as the conformance bar for the multiplexed I/O
+//! path: 64 blocking clients against a handful of loop shards, with
+//! the acceptor fanning connections out and every shard feeding the
+//! same global batchers.
 
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
@@ -33,6 +38,14 @@ fn stress_workers() -> usize {
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(8)
+}
+
+fn stress_shards() -> usize {
+    std::env::var("PLAM_STRESS_SHARDS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(2)
 }
 
 fn random_tensor(rng: &mut Rng, shape: &[usize]) -> Tensor {
@@ -95,16 +108,19 @@ fn sixty_four_clients_two_models_bit_exact_no_drops_no_reorder() {
     router.register("stress-b", Arc::new(NnBackend::new(model_b, mode_b)), cfg);
 
     let workers = stress_workers();
+    let loop_shards = stress_shards();
     let h = serve(
         router,
         &ServerConfig {
             workers,
             max_inflight: 128,
+            loop_shards,
             ..ServerConfig::default()
         },
     )
     .unwrap();
     assert_eq!(h.pool().unwrap().workers(), workers);
+    assert_eq!(h.shard_stats().len(), loop_shards);
     let addr = h.addr;
 
     let mut joins = vec![];
@@ -161,6 +177,25 @@ fn sixty_four_clients_two_models_bit_exact_no_drops_no_reorder() {
     assert_eq!(total, (CLIENTS * REQUESTS_PER_CLIENT) as u64);
     assert_eq!(h.admission().inflight(), 0);
     assert!(h.admission().peak() as usize <= 128);
+
+    // Shard accounting: every client connection was owned by exactly
+    // one shard, and the acceptor spread them (with 64 concurrent
+    // connections over ≤ a handful of shards, least-connections cannot
+    // leave a shard empty).
+    let accepted_total: u64 = h
+        .shard_stats()
+        .iter()
+        .map(|s| s.accepted.load(Ordering::Relaxed))
+        .sum();
+    assert_eq!(accepted_total, CLIENTS as u64);
+    if loop_shards > 1 {
+        assert!(
+            h.shard_stats()
+                .iter()
+                .all(|s| s.accepted.load(Ordering::Relaxed) >= 1),
+            "acceptor left a shard idle under 64 concurrent connections"
+        );
+    }
 
     // No fault plan is installed here, so the summary must stay bare of
     // fault counters (the chaos soak asserts the inverse under an
